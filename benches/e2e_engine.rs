@@ -1,0 +1,91 @@
+//! End-to-end engine benchmark (§Perf): opt-micro decode through the
+//! full three-layer stack — PJRT attention + Pallas-derived sparse FFN +
+//! RIPPLE I/O pipeline — plus isolated hot-path micro-benchmarks
+//! (placement search, per-token planning, flash-sim overhead).
+//! Skips gracefully when artifacts/ is absent.
+
+use ripple::bench::{banner, time_fn};
+use ripple::bench::workloads::{bench_workload, System};
+use ripple::engine::{Engine, EngineOptions};
+use ripple::runtime::{artifacts_available, default_artifacts_dir};
+use ripple::trace::DatasetProfile;
+
+fn main() {
+    banner("E2E", "opt-micro serving + hot-path micro-benchmarks");
+
+    // --- hot path: per-token I/O planning (no engine needed) ---------
+    let w = bench_workload("OPT-6.7B", 0, DatasetProfile::alpaca());
+    let calib = w.calibration_trace();
+    let (layouts, place_secs) =
+        ripple::bench::workloads::layouts_for(System::Ripple, &calib, w.knn, w.threads);
+    println!("placement search (2 layers, {} neurons): {place_secs:.2}s", calib.per_layer);
+
+    let eval = w.eval_trace(&w.dataset);
+    let bundle_bytes = w.model.bundle_bytes(w.precision);
+    let space = ripple::neuron::NeuronSpace::new(
+        w.sim_layers,
+        w.model.neurons_per_layer,
+        bundle_bytes,
+    );
+    let cache = ripple::cache::NeuronCache::from_config(
+        "linking",
+        (space.total() as f64 * 0.1) as usize,
+        7,
+    )
+    .unwrap();
+    let mut pipeline = ripple::pipeline::IoPipeline::new(
+        ripple::pipeline::PipelineConfig {
+            bundle_bytes,
+            collapse: true,
+            initial_threshold: 4,
+            max_threshold: 16,
+            window: 16,
+            sub_reads_per_run: 1,
+        },
+        space.clone(),
+        layouts,
+        cache,
+    );
+    let mut sim = ripple::flash::UfsSim::new(w.device.clone(), space.image_bytes());
+    let mut it = 0usize;
+    let (mean, min, _max) = time_fn(4, 32, || {
+        let tok = &eval.tokens[it % eval.tokens.len()];
+        it += 1;
+        pipeline.step_token(&mut sim, tok)
+    });
+    println!(
+        "per-token planning+sim (OPT-6.7B, {} active/layer): mean {:.1}us min {:.1}us",
+        w.model.activated_per_layer(),
+        mean / 1e3,
+        min / 1e3
+    );
+
+    // --- end to end on the real engine --------------------------------
+    let dir = default_artifacts_dir();
+    if !artifacts_available(&dir) {
+        println!("artifacts/ not built — skipping engine benchmark");
+        return;
+    }
+    for batch in [1usize, 4] {
+        let opts = EngineOptions { batch, ..Default::default() };
+        let mut engine = Engine::load(&dir, opts).unwrap();
+        let prompts: Vec<Vec<u8>> = (0..batch).map(|i| {
+            format!("request {i}: the quick brown ").into_bytes()
+        }).collect();
+        let t0 = std::time::Instant::now();
+        let n_tokens = 32;
+        let outs = engine.generate(&prompts, n_tokens, false).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        let total: usize = outs.iter().map(Vec::len).sum();
+        println!(
+            "engine batch={batch}: {total} tokens in {dt:.2}s -> {:.1} tok/s wall, \
+             sim I/O {:.3} ms/token, IOPS {:.0}, eff bw {:.1} MB/s, cache hit {:.0}%",
+            total as f64 / dt,
+            engine.io_metrics.mean_latency_ns() / 1e6,
+            engine.io_metrics.iops(),
+            engine.io_metrics.effective_bandwidth() / 1e6,
+            100.0 * engine.io_metrics.totals.cached_bundles as f64
+                / engine.io_metrics.totals.demanded_bundles.max(1) as f64,
+        );
+    }
+}

@@ -1,0 +1,71 @@
+//! Figure 10: overall performance — I/O latency per token (a) and
+//! effective bandwidth (b) for RIPPLE vs Llama.cpp vs LLMFlash across
+//! all five models and three datasets on the OnePlus 12, DRAM cache
+//! ratio 0.1, S3-FIFO in every system.
+//!
+//! Paper headline shape: RIPPLE up to 5.93x over llama.cpp and 3.23x
+//! over LLMFlash on latency; up to 4.32x / 2.13x on bandwidth; large
+//! wins on sparse OPTs, modest (~10-14%) on dense Mistral.
+
+use ripple::bench::banner;
+use ripple::bench::workloads::{bench_workload, run_experiment, System};
+use ripple::trace::DatasetProfile;
+use ripple::util::stats::Table;
+
+fn main() {
+    banner("Figure 10", "overall latency + effective bandwidth (OnePlus 12, cache 0.1)");
+    let models = ["OPT-350M", "OPT-1.3B", "OPT-6.7B", "Llama2-7B", "Mistral-7B"];
+    let mut lat = Table::new(&[
+        "model", "dataset", "llama.cpp ms", "LLMFlash ms", "RIPPLE ms",
+        "vs cpp", "vs flash",
+    ]);
+    let mut bw = Table::new(&[
+        "model", "dataset", "llama.cpp MB/s", "LLMFlash MB/s", "RIPPLE MB/s",
+        "vs cpp", "vs flash",
+    ]);
+    let mut max_cpp = 0.0f64;
+    let mut max_flash = 0.0f64;
+    for m in models {
+        for ds in DatasetProfile::all() {
+            let w = bench_workload(m, 0, ds.clone());
+            let cpp = run_experiment(&w, System::LlamaCpp).unwrap();
+            let flash = run_experiment(&w, System::LlmFlash).unwrap();
+            let rip = run_experiment(&w, System::Ripple).unwrap();
+            let s_cpp = cpp.latency_ms() / rip.latency_ms();
+            let s_flash = flash.latency_ms() / rip.latency_ms();
+            max_cpp = max_cpp.max(s_cpp);
+            max_flash = max_flash.max(s_flash);
+            lat.row(&[
+                m.into(),
+                ds.name.into(),
+                format!("{:.1}", cpp.latency_ms()),
+                format!("{:.1}", flash.latency_ms()),
+                format!("{:.1}", rip.latency_ms()),
+                format!("{s_cpp:.2}x"),
+                format!("{s_flash:.2}x"),
+            ]);
+            let (bc, bf, br) = (
+                cpp.metrics.effective_bandwidth() / 1e6,
+                flash.metrics.effective_bandwidth() / 1e6,
+                rip.metrics.effective_bandwidth() / 1e6,
+            );
+            bw.row(&[
+                m.into(),
+                ds.name.into(),
+                format!("{bc:.0}"),
+                format!("{bf:.0}"),
+                format!("{br:.0}"),
+                format!("{:.2}x", br / bc),
+                format!("{:.2}x", br / bf),
+            ]);
+        }
+    }
+    println!("\n(a) I/O latency per token");
+    lat.print();
+    println!("\n(b) effective bandwidth");
+    bw.print();
+    println!(
+        "\nmax speedup: {max_cpp:.2}x vs llama.cpp, {max_flash:.2}x vs LLMFlash \
+         (paper: up to 5.93x / 3.23x)"
+    );
+}

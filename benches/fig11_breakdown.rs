@@ -1,0 +1,46 @@
+//! Figure 11: performance breakdown — starting from LLMFlash, add the
+//! offline stage (co-activation placement), then the online stage
+//! (access collapse + linking-aligned cache). Paper: offline ~1.30x,
+//! online ~1.26x, combined ~1.68x on average.
+
+use ripple::bench::banner;
+use ripple::bench::workloads::{bench_workload, run_experiment, System};
+use ripple::trace::DatasetProfile;
+use ripple::util::stats::Table;
+
+fn main() {
+    banner("Figure 11", "breakdown: LLMFlash -> +offline -> +online (alpaca)");
+    let models = ["OPT-350M", "OPT-1.3B", "OPT-6.7B", "Llama2-7B", "Mistral-7B"];
+    let mut t = Table::new(&[
+        "model", "LLMFlash ms", "+offline ms", "+online ms", "offline x", "online x", "total x",
+    ]);
+    let mut geo_off = 1.0f64;
+    let mut geo_on = 1.0f64;
+    let mut n = 0u32;
+    for m in models {
+        let w = bench_workload(m, 0, DatasetProfile::alpaca());
+        let base = run_experiment(&w, System::LlmFlash).unwrap();
+        let off = run_experiment(&w, System::RippleOffline).unwrap();
+        let full = run_experiment(&w, System::Ripple).unwrap();
+        let x_off = base.latency_ms() / off.latency_ms();
+        let x_on = off.latency_ms() / full.latency_ms();
+        geo_off *= x_off;
+        geo_on *= x_on;
+        n += 1;
+        t.row(&[
+            m.into(),
+            format!("{:.1}", base.latency_ms()),
+            format!("{:.1}", off.latency_ms()),
+            format!("{:.1}", full.latency_ms()),
+            format!("{x_off:.2}x"),
+            format!("{x_on:.2}x"),
+            format!("{:.2}x", base.latency_ms() / full.latency_ms()),
+        ]);
+    }
+    t.print();
+    println!(
+        "geomean: offline {:.2}x, online {:.2}x (paper avg: 1.30x / 1.26x, 1.68x combined)",
+        geo_off.powf(1.0 / n as f64),
+        geo_on.powf(1.0 / n as f64)
+    );
+}

@@ -1,0 +1,54 @@
+//! Figure 13: access-collapse ablation on OPT-6.7B and Llama2-7B —
+//! transfer volume (rises slightly), commands/IOPS (drop), effective
+//! bandwidth (rises ~1.21x / 1.09x in the paper). Placement and cache
+//! policy are held identical on both sides; ONLY collapse toggles.
+
+use ripple::bench::banner;
+use ripple::bench::workloads::{bench_workload, run_spec, SystemSpec};
+use ripple::trace::DatasetProfile;
+use ripple::util::stats::Table;
+
+fn main() {
+    banner("Figure 13", "access collapse ablation (alpaca; placement+cache fixed)");
+    let mut t = Table::new(&[
+        "model", "collapse", "volume MB/token", "cmds/token", "eff bw MB/s", "gain",
+    ]);
+    for m in ["OPT-6.7B", "Llama2-7B"] {
+        let w = bench_workload(m, 0, DatasetProfile::alpaca());
+        let spec_off = SystemSpec {
+            ripple_placement: true,
+            collapse: false,
+            cache_policy: "linking",
+            dense: false,
+            sub_reads: 1,
+        };
+        let spec_on = SystemSpec { collapse: true, ..spec_off };
+        let off = run_spec(&w, spec_off, &w.dataset).unwrap();
+        let on = run_spec(&w, spec_on, &w.dataset).unwrap();
+        let vol = |r: &ripple::bench::workloads::ExperimentResult| {
+            r.metrics.totals.bytes as f64 / r.metrics.tokens as f64 / 1e6 * r.layer_scale
+        };
+        let cmds = |r: &ripple::bench::workloads::ExperimentResult| {
+            r.metrics.totals.commands as f64 / r.metrics.tokens as f64 * r.layer_scale
+        };
+        let gain = on.metrics.effective_bandwidth() / off.metrics.effective_bandwidth();
+        t.row(&[
+            m.into(),
+            "off".into(),
+            format!("{:.2}", vol(&off)),
+            format!("{:.0}", cmds(&off)),
+            format!("{:.0}", off.metrics.effective_bandwidth() / 1e6),
+            String::new(),
+        ]);
+        t.row(&[
+            m.into(),
+            "on".into(),
+            format!("{:.2}", vol(&on)),
+            format!("{:.0}", cmds(&on)),
+            format!("{:.0}", on.metrics.effective_bandwidth() / 1e6),
+            format!("{gain:.2}x"),
+        ]);
+    }
+    t.print();
+    println!("paper: +1.21x (OPT-6.7B) and +1.09x (Llama2-7B) effective bandwidth");
+}

@@ -1,0 +1,44 @@
+//! Figure 14: per-token I/O latency at varying DRAM cache ratios —
+//! RIPPLE vs LLMFlash. Paper: RIPPLE at ratio r matches the baseline at
+//! ~1.36-1.50x the DRAM budget (memory savings).
+
+use ripple::bench::banner;
+use ripple::bench::workloads::{bench_workload, run_experiment, System};
+use ripple::trace::DatasetProfile;
+use ripple::util::stats::Table;
+
+fn main() {
+    banner("Figure 14", "latency vs DRAM cache ratio (alpaca)");
+    let ratios = [0.0, 0.05, 0.1, 0.2, 0.3, 0.4];
+    for m in ["OPT-1.3B", "Llama2-7B"] {
+        println!("\n{m}");
+        let mut t = Table::new(&["cache ratio", "LLMFlash ms", "RIPPLE ms", "speedup"]);
+        let mut flash_at: Vec<(f64, f64)> = Vec::new();
+        let mut ripple_at: Vec<(f64, f64)> = Vec::new();
+        for r in ratios {
+            let mut w = bench_workload(m, 0, DatasetProfile::alpaca());
+            w.cache_ratio = r;
+            let f = run_experiment(&w, System::LlmFlash).unwrap();
+            let p = run_experiment(&w, System::Ripple).unwrap();
+            flash_at.push((r, f.latency_ms()));
+            ripple_at.push((r, p.latency_ms()));
+            t.row(&[
+                format!("{r:.2}"),
+                format!("{:.1}", f.latency_ms()),
+                format!("{:.1}", p.latency_ms()),
+                format!("{:.2}x", f.latency_ms() / p.latency_ms()),
+            ]);
+        }
+        t.print();
+        // memory saving: smallest ripple ratio that beats the baseline at 0.2
+        let base = flash_at.iter().find(|(r, _)| *r == 0.2).unwrap().1;
+        if let Some((r, _)) = ripple_at.iter().find(|(_, l)| *l <= base) {
+            if *r > 0.0 {
+                println!("RIPPLE@{r:.2} <= LLMFlash@0.20 -> {:.2}x DRAM saving", 0.2 / r);
+            } else {
+                println!("RIPPLE needs no cache to beat LLMFlash@0.20");
+            }
+        }
+    }
+    println!("\npaper: DRAM savings up to 1.50x / 1.36x on the two models");
+}

@@ -1,0 +1,39 @@
+//! Figure 15: input sensitivity — a placement optimized on dataset X
+//! evaluated on dataset Y (3x3 matrix). Paper: off-diagonal performance
+//! stays close to diagonal, suggesting co-activation is model-intrinsic.
+
+use ripple::bench::banner;
+use ripple::bench::workloads::{bench_workload, run_experiment_eval, System};
+use ripple::trace::DatasetProfile;
+use ripple::util::stats::Table;
+
+fn main() {
+    banner("Figure 15", "cross-dataset placement transfer (OPT-350M)");
+    let datasets = DatasetProfile::all();
+    let mut t = Table::new(&["placed on \\ eval on", "alpaca", "openwebtext", "wikitext"]);
+    let mut diag = Vec::new();
+    let mut off = Vec::new();
+    for place_ds in &datasets {
+        let mut row = vec![place_ds.name.to_string()];
+        for eval_ds in &datasets {
+            let w = bench_workload("OPT-350M", 0, place_ds.clone());
+            let r = run_experiment_eval(&w, System::Ripple, eval_ds).unwrap();
+            row.push(format!("{:.1} ms", r.latency_ms()));
+            if place_ds.name == eval_ds.name {
+                diag.push(r.latency_ms());
+            } else {
+                off.push(r.latency_ms());
+            }
+        }
+        t.row(&row);
+    }
+    t.print();
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    println!(
+        "diagonal mean {:.1} ms, off-diagonal mean {:.1} ms ({:+.1}%)",
+        mean(&diag),
+        mean(&off),
+        100.0 * (mean(&off) / mean(&diag) - 1.0)
+    );
+    println!("paper: placements transfer across datasets with limited degradation");
+}

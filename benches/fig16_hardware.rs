@@ -1,0 +1,31 @@
+//! Figure 16: per-token I/O latency of RIPPLE on the three phones.
+//! Paper: OP12 ~ Ace3 (same UFS 4.0; storage dominates, not SoC),
+//! Ace2 roughly half the performance (UFS 3.1).
+
+use ripple::bench::banner;
+use ripple::bench::workloads::{bench_workload, run_experiment, System};
+use ripple::trace::DatasetProfile;
+use ripple::util::stats::Table;
+
+fn main() {
+    banner("Figure 16", "per-token I/O latency across devices (alpaca)");
+    let devices = ripple::config::devices();
+    let mut t = Table::new(&["model", "OnePlus 12", "OnePlus Ace 3", "OnePlus Ace 2"]);
+    for m in ["OPT-1.3B", "OPT-6.7B", "Llama2-7B"] {
+        let mut row = vec![m.to_string()];
+        let mut lat = Vec::new();
+        for di in 0..devices.len() {
+            let w = bench_workload(m, di, DatasetProfile::alpaca());
+            let r = run_experiment(&w, System::Ripple).unwrap();
+            lat.push(r.latency_ms());
+            row.push(format!("{:.1} ms", r.latency_ms()));
+        }
+        t.row(&row);
+        println!(
+            "  {m}: Ace2/OP12 = {:.2}x (paper: ~2x), Ace3/OP12 = {:.2}x (paper: ~1x)",
+            lat[2] / lat[0],
+            lat[1] / lat[0]
+        );
+    }
+    t.print();
+}

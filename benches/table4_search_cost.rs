@@ -1,0 +1,40 @@
+//! Table 4: wall-clock cost of the offline placement search per model
+//! and dataset. The paper reports seconds-to-~2-minutes for full models
+//! with layer-parallel search; we measure `sim_layers` representative
+//! layers in parallel and report both the measured time and the
+//! estimated full-model time at 8-way layer parallelism.
+
+use ripple::bench::banner;
+use ripple::bench::workloads::bench_workload;
+use ripple::placement::{place_model, GreedyParams};
+use ripple::trace::DatasetProfile;
+use ripple::util::stats::Table;
+
+fn main() {
+    banner("Table 4", "offline search cost (seconds)");
+    let models = ["OPT-350M", "OPT-1.3B", "OPT-6.7B", "Llama2-7B", "Mistral-7B"];
+    let mut t = Table::new(&[
+        "dataset", "model", "neurons/layer", "measured (2 layers)", "est. full model",
+    ]);
+    for ds in DatasetProfile::all() {
+        for m in models {
+            let w = bench_workload(m, 0, ds.clone());
+            let calib = w.calibration_trace();
+            let t0 = std::time::Instant::now();
+            let layouts = place_model(&calib, GreedyParams { knn: w.knn, ..Default::default() }, w.threads);
+            let secs = t0.elapsed().as_secs_f64();
+            assert_eq!(layouts.len(), w.sim_layers);
+            let per_layer = secs / w.sim_layers as f64 * w.threads.min(w.sim_layers) as f64;
+            let full = per_layer * w.model.n_layers as f64 / 8.0;
+            t.row(&[
+                ds.name.into(),
+                m.into(),
+                w.model.neurons_per_layer.to_string(),
+                format!("{secs:.2}"),
+                format!("{full:.1}"),
+            ]);
+        }
+    }
+    t.print();
+    println!("paper: 5.3s (OPT-350M) .. 105s (Mistral-7B), one-time cost");
+}

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every compiled computation.
+
+These are the correctness ground truth: pytest + hypothesis compare the
+Pallas kernel and the full model blocks against these, and the rust
+integration tests compare PJRT execution results against values generated
+from these (via golden files emitted by aot.py).
+"""
+
+import jax.numpy as jnp
+
+
+def sparse_ffn_ref(x, u, b, d):
+    """y = relu(x @ U_act^T + b_act) @ D_act   — see sparse_ffn.py."""
+    h = jnp.maximum(x @ u.T + b[None, :], 0.0)
+    return h @ d
+
+
+def layer_norm_ref(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def ffn_dense_ref(x, ln_g, ln_b, u, bu, d, bd):
+    """Full (pre-LN) dense FFN block with residual: the exact computation
+    the sparse path approximates when K < N."""
+    xn = layer_norm_ref(x, ln_g, ln_b)
+    h = jnp.maximum(xn @ u.T + bu[None, :], 0.0)
+    return x + h @ d + bd[None, :]
+
+
+def attn_ref(x, ln_g, ln_b, wq, bq, wk, bk, wv, bv, wo, bo,
+             k_cache, v_cache, pos, n_heads):
+    """Pre-LN causal self-attention decode step with an in-place KV cache.
+
+    x:        (B, D)
+    k_cache:  (B, S, D)  — rows [0, pos) are valid history
+    pos:      scalar int32 — the index this token writes
+    returns:  (y, k_cache', v_cache') with the residual already added.
+    """
+    bsz, dim = x.shape
+    seq = k_cache.shape[1]
+    hd = dim // n_heads
+    xn = layer_norm_ref(x, ln_g, ln_b)
+    q = xn @ wq + bq
+    k = xn @ wk + bk
+    v = xn @ wv + bv
+    k_cache = k_cache.at[:, pos, :].set(k)
+    v_cache = v_cache.at[:, pos, :].set(v)
+    qh = q.reshape(bsz, n_heads, hd)
+    kh = k_cache.reshape(bsz, seq, n_heads, hd)
+    vh = v_cache.reshape(bsz, seq, n_heads, hd)
+    scores = jnp.einsum("bhd,bshd->bhs", qh, kh) / jnp.sqrt(hd).astype(x.dtype)
+    mask = jnp.arange(seq) <= pos  # causal: history plus self
+    scores = jnp.where(mask[None, None, :], scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    ctx = jnp.einsum("bhs,bshd->bhd", probs, vh).reshape(bsz, dim)
+    y = x + ctx @ wo + bo
+    return y, k_cache, v_cache
+
+
+def predictor_ref(x, ln_g, ln_b, p1, p2):
+    """Deja-Vu-style low-rank activation predictor.
+
+    scores = ln(x) @ P1 @ P2 approximates the FFN pre-activation
+    ln(x) @ U^T; score > 0 predicts the neuron activates.
+    """
+    xn = layer_norm_ref(x, ln_g, ln_b)
+    return (xn @ p1) @ p2
+
+
+def head_ref(x, ln_g, ln_b, emb):
+    """Final layernorm + tied-embedding logits head."""
+    xn = layer_norm_ref(x, ln_g, ln_b)
+    return xn @ emb.T
+
+
+def sparse_ffn_q8_ref(x, u_q8, u_scale, b, d_q8, d_scale):
+    """Dequantize-then-compute oracle for the int8 kernel."""
+    u = u_q8.astype(jnp.float32) * u_scale[:, None]
+    d = d_q8.astype(jnp.float32) * d_scale[:, None]
+    return sparse_ffn_ref(x, u, b, d)

@@ -1,0 +1,186 @@
+"""L1 Pallas kernel: gathered sparse-FFN bundle matmul.
+
+This is RIPPLE's compute hot-spot.  The L3 coordinator predicts the
+activated FFN neurons for a token, fetches their *bundles* (up-projection
+row, up bias, down-projection column) from flash into DRAM, gathers them
+into fixed top-K slot buffers, and executes
+
+    y = relu(x @ U_act^T + b_act) @ D_act
+
+over the K gathered slots.  Padding slots carry zero weights and therefore
+contribute exactly zero (relu(0 + 0) @ 0 == 0), so a union-of-batch
+activation set can always be padded up to K without affecting numerics.
+
+Hardware adaptation (paper targets smartphone CPU + UFS flash, see
+DESIGN.md §Hardware-Adaptation): the K slot axis is the streamed axis —
+each grid step keeps one (BLOCK_K x D) tile of U and D resident in VMEM
+and feeds the MXU with two (B x D) @ (D x BLOCK_K)-shaped matmuls,
+accumulating into the (B x D) output tile that stays in VMEM across the
+whole grid.  This mirrors the paper's bundle granularity: the unit of
+I/O (a neuron bundle) is also the unit of compute scheduling.
+
+interpret=True is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO so the same
+artifact runs under the rust PJRT CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile over the slot axis.  K is always padded to a multiple of
+# BLOCK_K by the caller (aot.py / the L3 gather path).
+DEFAULT_BLOCK_K = 64
+
+
+def _kernel(x_ref, u_ref, b_ref, d_ref, o_ref):
+    """One grid step: accumulate one BLOCK_K slice of slots into o_ref.
+
+    x_ref: (B, D)        input activations (resident for every step)
+    u_ref: (BLOCK_K, D)  up-projection rows for this slot tile
+    b_ref: (1, BLOCK_K)  up biases for this slot tile
+    d_ref: (BLOCK_K, D)  down-projection rows (transposed columns)
+    o_ref: (B, D)        output accumulator (lives in VMEM across steps)
+    """
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (B, D) @ (D, BLOCK_K) -> (B, BLOCK_K): MXU-shaped contraction.
+    h = jnp.dot(x_ref[...], u_ref[...].T, preferred_element_type=jnp.float32)
+    h = jnp.maximum(h + b_ref[...], 0.0)
+    # (B, BLOCK_K) @ (BLOCK_K, D) -> (B, D)
+    o_ref[...] += jnp.dot(h, d_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def sparse_ffn(x, u, b, d, *, block_k=DEFAULT_BLOCK_K):
+    """Gathered sparse FFN over K activated-neuron slots.
+
+    Args:
+      x: (B, D) float32 — pre-normalized token activations.
+      u: (K, D) float32 — gathered up-projection rows.
+      b: (K,)   float32 — gathered up biases.
+      d: (K, D) float32 — gathered down-projection rows.
+      block_k: tile size along the slot axis; K % block_k must be 0.
+
+    Returns:
+      (B, D) float32 — FFN output (before the residual add).
+    """
+    bsz, dim = x.shape
+    k = u.shape[0]
+    if k % block_k != 0:
+        raise ValueError(f"K={k} not a multiple of block_k={block_k}")
+    b2 = b.reshape(1, k)  # keep blocks 2-D: TPU tiling dislikes 1-D refs
+    grid = (k // block_k,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bsz, dim), lambda i: (0, 0)),
+            pl.BlockSpec((block_k, dim), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_k), lambda i: (0, i)),
+            pl.BlockSpec((block_k, dim), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bsz, dim), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, dim), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, u, b2, d)
+
+
+def vmem_footprint_bytes(bsz, dim, block_k):
+    """Estimated VMEM working set of one grid step, in bytes (fp32).
+
+    Used by DESIGN.md / EXPERIMENTS.md §Perf to pick BLOCK_K such that the
+    working set fits a 16 MiB TPU VMEM with double-buffering headroom.
+    """
+    x_tile = bsz * dim
+    u_tile = block_k * dim
+    b_tile = block_k
+    d_tile = block_k * dim
+    o_tile = bsz * dim
+    # double-buffer the streamed operands (u, b, d)
+    return 4 * (x_tile + o_tile + 2 * (u_tile + b_tile + d_tile))
+
+
+def mxu_utilization_estimate(bsz, dim, block_k):
+    """Fraction of MXU 128x128 systolic-array lanes fed per step.
+
+    Both matmuls have shapes (B, D, BLOCK_K): the MXU dimension coverage
+    is min(dim,128)/128 * min(block_k,128)/128, with B as the streaming
+    axis.  Purely structural — interpret mode gives no TPU wallclock.
+    """
+    return min(dim, 128) / 128.0 * min(block_k, 128) / 128.0
+
+
+# ---------------------------------------------------------------------------
+# int8 variant (Figure 17's precision story at the kernel level)
+# ---------------------------------------------------------------------------
+
+def _kernel_q8(x_ref, u_ref, us_ref, b_ref, d_ref, ds_ref, o_ref):
+    """Like _kernel, but U and D arrive as int8 with per-slot scales.
+
+    Dequantization happens in VMEM right before the MXU contraction —
+    the HBM->VMEM stream moves 4x fewer weight bytes, which is exactly
+    the paper's motivation for low-precision bundles (smaller flash
+    reads), mirrored here as a smaller memory-traffic footprint.
+    u_ref/d_ref: (BLOCK_K, D) int8; us_ref/ds_ref: (1, BLOCK_K) f32.
+    """
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    u = u_ref[...].astype(jnp.float32) * us_ref[...].T  # (BLOCK_K, D)
+    d = d_ref[...].astype(jnp.float32) * ds_ref[...].T
+    h = jnp.dot(x_ref[...], u.T, preferred_element_type=jnp.float32)
+    h = jnp.maximum(h + b_ref[...], 0.0)
+    o_ref[...] += jnp.dot(h, d, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def sparse_ffn_q8(x, u_q8, u_scale, b, d_q8, d_scale, *, block_k=DEFAULT_BLOCK_K):
+    """Gathered sparse FFN over int8-quantized bundle slots.
+
+    Args:
+      x:       (B, D) float32
+      u_q8:    (K, D) int8   — quantized up rows
+      u_scale: (K,)   float32 — per-slot dequant scale for U
+      b:       (K,)   float32 — up biases (kept fp32; negligible bytes)
+      d_q8:    (K, D) int8
+      d_scale: (K,)   float32
+    """
+    bsz, dim = x.shape
+    k = u_q8.shape[0]
+    if k % block_k != 0:
+        raise ValueError(f"K={k} not a multiple of block_k={block_k}")
+    grid = (k // block_k,)
+    b2 = b.reshape(1, k)
+    us2 = u_scale.reshape(1, k)
+    ds2 = d_scale.reshape(1, k)
+    return pl.pallas_call(
+        _kernel_q8,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bsz, dim), lambda i: (0, 0)),
+            pl.BlockSpec((block_k, dim), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_k), lambda i: (0, i)),
+            pl.BlockSpec((1, block_k), lambda i: (0, i)),
+            pl.BlockSpec((block_k, dim), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_k), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bsz, dim), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, dim), jnp.float32),
+        interpret=True,
+    )(x, u_q8, us2, b2, d_q8, ds2)
+
+
+def quantize_rows(w):
+    """Symmetric per-row int8 quantization: returns (q8, scale)."""
+    amax = jnp.maximum(jnp.abs(w).max(axis=-1), 1e-8)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(w / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)

@@ -1,0 +1,280 @@
+"""L2: the opt-micro JAX model.
+
+An OPT-style pre-LN ReLU transformer small enough to AOT-compile and serve
+on the CPU PJRT client, yet structurally identical to the Table-3 models:
+every FFN neuron is a *bundle* (up-projection row, up bias, down-projection
+row) that RIPPLE's L3 coordinator stores in simulated flash, predicts,
+fetches and gathers.
+
+The model is split into per-block jittable functions — one compiled PJRT
+executable each — because the L3 request path interleaves I/O between
+blocks (predict layer l+1 while computing layer l is future work; today the
+pipeline is predict -> fetch -> compute per layer):
+
+  * ``attn_block``   dense attention + residual (always DRAM-resident)
+  * ``ffn_sparse_block``  gathered top-K sparse FFN (weights from flash),
+                          calls the L1 Pallas kernel
+  * ``ffn_dense_block``   exact dense FFN (baseline / oracle)
+  * ``predictor_block``   low-rank activation predictor (Deja-Vu style)
+  * ``head_block``        final LN + tied-embedding logits
+
+Weights never travel inside the HLO: every executable takes them as
+runtime parameters so one artifact serves all layers.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.sparse_ffn import sparse_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """opt-micro geometry. Mirrors rust/src/config/model.rs::opt_micro()."""
+
+    vocab: int = 256          # byte-level
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ffn: int = 512          # neurons (bundles) per FFN block
+    max_seq: int = 128
+    top_k: int = 128          # gathered sparse-FFN slots (25% of d_ffn)
+    pred_rank: int = 32       # low-rank predictor bottleneck (d_model/2)
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+CFG = ModelConfig()
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig = CFG, seed: int = 0):
+    """Deterministic init. Layout mirrors artifacts/weights manifest."""
+    key = jax.random.PRNGKey(seed)
+    ks = iter(jax.random.split(key, 8 + 16 * cfg.n_layers))
+
+    def dense(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale)
+
+    d = cfg.d_model
+    params = {
+        "embed": dense(next(ks), (cfg.vocab, d), 0.02),
+        "pos_embed": dense(next(ks), (cfg.max_seq, d), 0.02),
+        "ln_f_g": jnp.ones((d,), jnp.float32),
+        "ln_f_b": jnp.zeros((d,), jnp.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        lp = {
+            "ln1_g": jnp.ones((d,), jnp.float32),
+            "ln1_b": jnp.zeros((d,), jnp.float32),
+            "wq": dense(next(ks), (d, d), d ** -0.5),
+            "bq": jnp.zeros((d,), jnp.float32),
+            "wk": dense(next(ks), (d, d), d ** -0.5),
+            "bk": jnp.zeros((d,), jnp.float32),
+            "wv": dense(next(ks), (d, d), d ** -0.5),
+            "bv": jnp.zeros((d,), jnp.float32),
+            "wo": dense(next(ks), (d, d), d ** -0.5),
+            "bo": jnp.zeros((d,), jnp.float32),
+            "ln2_g": jnp.ones((d,), jnp.float32),
+            "ln2_b": jnp.zeros((d,), jnp.float32),
+            # FFN bundles: U rows (d_ffn, d), up bias (d_ffn), D rows (d_ffn, d)
+            "u": dense(next(ks), (cfg.d_ffn, d), d ** -0.5),
+            "bu": jnp.zeros((cfg.d_ffn,), jnp.float32),
+            "dn": dense(next(ks), (cfg.d_ffn, d), cfg.d_ffn ** -0.5),
+            "bd": jnp.zeros((d,), jnp.float32),
+        }
+        params["layers"].append(lp)
+    return params
+
+
+def predictor_params(params, cfg: ModelConfig = CFG):
+    """Fit the low-rank predictor P1 @ P2 ~= U^T per layer via SVD.
+
+    Rank-r truncated SVD of U^T gives the best rank-r approximation of the
+    pre-activation map; sign(ln(x) @ P1 @ P2) then predicts activation with
+    high-but-imperfect recall — matching the paper's trained predictors.
+    """
+    preds = []
+    for lp in params["layers"]:
+        ut = lp["u"].T  # (d, d_ffn)
+        u_svd, s, vt = jnp.linalg.svd(ut, full_matrices=False)
+        r = cfg.pred_rank
+        p1 = u_svd[:, :r] * s[:r][None, :]   # (d, r)
+        p2 = vt[:r, :]                        # (r, d_ffn)
+        preds.append({"p1": p1, "p2": p2})
+    return preds
+
+
+# --------------------------------------------------------------------------
+# Blocks (these are the AOT compilation units)
+# --------------------------------------------------------------------------
+
+def attn_block(x, ln_g, ln_b, wq, bq, wk, bk, wv, bv, wo, bo,
+               k_cache, v_cache, pos, *, n_heads=CFG.n_heads):
+    return ref.attn_ref(x, ln_g, ln_b, wq, bq, wk, bk, wv, bv, wo, bo,
+                        k_cache, v_cache, pos, n_heads)
+
+
+def ffn_sparse_block(x, ln_g, ln_b, u_act, bu_act, d_act, bd):
+    """Pre-LN sparse FFN with residual. u_act/bu_act/d_act are the gathered
+    top-K bundle slots (padding slots are all-zero)."""
+    xn = ref.layer_norm_ref(x, ln_g, ln_b)
+    y = sparse_ffn(xn, u_act, bu_act, d_act)
+    return x + y + bd[None, :]
+
+
+def ffn_dense_block(x, ln_g, ln_b, u, bu, d, bd):
+    return ref.ffn_dense_ref(x, ln_g, ln_b, u, bu, d, bd)
+
+
+def predictor_block(x, ln_g, ln_b, p1, p2):
+    return ref.predictor_ref(x, ln_g, ln_b, p1, p2)
+
+
+def head_block(x, ln_g, ln_b, emb):
+    return ref.head_ref(x, ln_g, ln_b, emb)
+
+
+# --------------------------------------------------------------------------
+# Full-model reference paths (testing / training only, never compiled)
+# --------------------------------------------------------------------------
+
+def embed(params, ids, pos):
+    return params["embed"][ids] + params["pos_embed"][pos]
+
+
+def decode_step_dense(params, ids, k_caches, v_caches, pos,
+                      cfg: ModelConfig = CFG):
+    """One dense decode step over the whole model; the oracle the sparse
+    engine path is compared against (with K = d_ffn they agree exactly)."""
+    x = embed(params, ids, pos)
+    new_k, new_v = [], []
+    for li, lp in enumerate(params["layers"]):
+        x, kc, vc = attn_block(
+            x, lp["ln1_g"], lp["ln1_b"], lp["wq"], lp["bq"], lp["wk"],
+            lp["bk"], lp["wv"], lp["bv"], lp["wo"], lp["bo"],
+            k_caches[li], v_caches[li], pos, n_heads=cfg.n_heads)
+        new_k.append(kc)
+        new_v.append(vc)
+        x = ffn_dense_block(x, lp["ln2_g"], lp["ln2_b"],
+                            lp["u"], lp["bu"], lp["dn"], lp["bd"])
+    logits = head_block(x, params["ln_f_g"], params["ln_f_b"], params["embed"])
+    return logits, new_k, new_v
+
+
+def ffn_activations(params, x, layer, cfg: ModelConfig = CFG):
+    """Ground-truth activation mask for one layer: which neurons have
+    positive pre-activation.  Used to record *real* co-activation traces."""
+    lp = params["layers"][layer]
+    xn = ref.layer_norm_ref(x, lp["ln2_g"], lp["ln2_b"])
+    pre = xn @ lp["u"].T + lp["bu"][None, :]
+    return pre > 0.0
+
+
+# --------------------------------------------------------------------------
+# Tiny training loop (build-time only) — gives opt-micro real, non-random
+# weights so served generations are structured, and gives the activation
+# traces realistic correlation.
+# --------------------------------------------------------------------------
+
+def synth_corpus(n_tokens=65536, seed=1):
+    """Byte corpus with heavy local structure: repeated key-value-ish
+    phrases from a small template set. Cheap stand-in for Alpaca-style
+    calibration text (see DESIGN.md substitutions)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    templates = [
+        b"the quick brown fox jumps over the lazy dog. ",
+        b"pack my box with five dozen liquor jugs. ",
+        b"llm inference on smartphones is bound by iops. ",
+        b"neuron co-activation linking reduces io operations. ",
+        b"flash reads should be as continuous as possible. ",
+        b"0123456789 9876543210 0123456789. ",
+    ]
+    out = bytearray()
+    while len(out) < n_tokens:
+        out += templates[rng.integers(len(templates))]
+    return jnp.asarray(list(out[:n_tokens]), jnp.int32)
+
+
+def _loss_fn(params, batch, cfg: ModelConfig):
+    """Teacher-forced next-byte cross-entropy over full sequences."""
+    ids = batch[:, :-1]
+    tgt = batch[:, 1:]
+    bsz, seq = ids.shape
+    x = params["embed"][ids] + params["pos_embed"][jnp.arange(seq)][None]
+    hd = cfg.head_dim
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+    for lp in params["layers"]:
+        xn = ref.layer_norm_ref(x, lp["ln1_g"], lp["ln1_b"])
+        q = xn @ lp["wq"] + lp["bq"]
+        k = xn @ lp["wk"] + lp["bk"]
+        v = xn @ lp["wv"] + lp["bv"]
+        qh = q.reshape(bsz, seq, cfg.n_heads, hd)
+        kh = k.reshape(bsz, seq, cfg.n_heads, hd)
+        vh = v.reshape(bsz, seq, cfg.n_heads, hd)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", qh, kh) / jnp.sqrt(hd)
+        sc = jnp.where(mask[None, None], sc, -1e30)
+        pr = jax.nn.softmax(sc, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", pr, vh).reshape(bsz, seq, -1)
+        x = x + ctx @ lp["wo"] + lp["bo"]
+        xn = ref.layer_norm_ref(x, lp["ln2_g"], lp["ln2_b"])
+        h = jnp.maximum(xn @ lp["u"].T + lp["bu"], 0.0)
+        x = x + h @ lp["dn"] + lp["bd"]
+    xn = ref.layer_norm_ref(x, params["ln_f_g"], params["ln_f_b"])
+    logits = xn @ params["embed"].T
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1).mean()
+    return nll
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _adam_step(params, opt_state, batch, lr, step, cfg: ModelConfig):
+    """One Adam step (b1=0.9, b2=0.999) — plain SGD oscillates on this
+    loss surface past a few hundred steps."""
+    loss, grads = jax.value_and_grad(_loss_fn)(params, batch, cfg)
+    m, v = opt_state
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    t = step + 1.0
+    def upd(p, mi, vi):
+        mh = mi / (1 - b1 ** t)
+        vh = vi / (1 - b2 ** t)
+        return p - lr * mh / (jnp.sqrt(vh) + eps)
+    params = jax.tree_util.tree_map(upd, params, m, v)
+    return params, (m, v), loss
+
+
+def train(params, cfg: ModelConfig = CFG, steps=200, bsz=16, seq=64,
+          lr=2e-3, seed=2, log=print):
+    """A few hundred Adam steps on the synthetic corpus (~seconds)."""
+    import numpy as np
+
+    corpus = np.asarray(synth_corpus())
+    rng = np.random.default_rng(seed)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    opt_state = (zeros, jax.tree_util.tree_map(jnp.zeros_like, params))
+    losses = []
+    for step in range(steps):
+        starts = rng.integers(0, len(corpus) - seq - 1, size=bsz)
+        batch = jnp.stack([
+            jnp.asarray(corpus[s:s + seq + 1], jnp.int32) for s in starts
+        ])
+        params, opt_state, loss = _adam_step(
+            params, opt_state, batch, jnp.float32(lr), jnp.float32(step), cfg)
+        losses.append(float(loss))
+        if log and (step % 50 == 0 or step == steps - 1):
+            log(f"  train step {step:4d}  loss {float(loss):.4f}")
+    return params, losses

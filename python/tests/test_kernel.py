@@ -1,0 +1,174 @@
+"""L1 correctness: the Pallas sparse-FFN kernel vs the pure-jnp oracle.
+
+hypothesis sweeps shapes and block sizes; every case asserts allclose.
+This is the CORE correctness signal for the compute hot-spot.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import sparse_ffn_ref
+from compile.kernels.sparse_ffn import (
+    sparse_ffn, vmem_footprint_bytes, mxu_utilization_estimate,
+)
+
+
+def _mk(seed, bsz, k, d):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((bsz, d), np.float32)
+    u = rng.standard_normal((k, d), np.float32) * 0.1
+    b = rng.standard_normal((k,), np.float32) * 0.1
+    dn = rng.standard_normal((k, d), np.float32) * 0.1
+    return map(jnp.asarray, (x, u, b, dn))
+
+
+def _check(bsz, k, d, block_k, seed=0):
+    x, u, b, dn = _mk(seed, bsz, k, d)
+    got = sparse_ffn(x, u, b, dn, block_k=block_k)
+    want = sparse_ffn_ref(x, u, b, dn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_basic():
+    _check(bsz=4, k=128, d=64, block_k=64)
+
+
+def test_single_block():
+    _check(bsz=1, k=64, d=64, block_k=64)
+
+
+def test_many_blocks():
+    _check(bsz=2, k=512, d=64, block_k=64)
+
+
+def test_block_k_one():
+    _check(bsz=1, k=4, d=8, block_k=1)
+
+
+def test_rejects_misaligned_k():
+    x, u, b, dn = _mk(0, 1, 100, 16)
+    with pytest.raises(ValueError):
+        sparse_ffn(x, u, b, dn, block_k=64)
+
+
+def test_zero_padding_slots_are_inert():
+    """Core gather-path invariant: all-zero bundle slots contribute 0."""
+    x, u, b, dn = _mk(3, 2, 64, 32)
+    pad = 64
+    u_p = jnp.concatenate([u, jnp.zeros((pad, 32))])
+    b_p = jnp.concatenate([b, jnp.zeros((pad,))])
+    d_p = jnp.concatenate([dn, jnp.zeros((pad, 32))])
+    got = sparse_ffn(x, u_p, b_p, d_p, block_k=32)
+    want = sparse_ffn_ref(x, u, b, dn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_slot_permutation_invariance():
+    """Slot order never matters: the FFN sum is commutative over slots."""
+    x, u, b, dn = _mk(4, 2, 128, 64)
+    perm = np.random.default_rng(5).permutation(128)
+    got = sparse_ffn(x, u[perm], b[perm], dn[perm], block_k=64)
+    want = sparse_ffn(x, u, b, dn, block_k=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bsz=st.integers(1, 8),
+    d=st.sampled_from([8, 16, 64, 128]),
+    blocks=st.integers(1, 6),
+    block_k=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_hypothesis_shape_sweep(bsz, d, blocks, block_k, seed):
+    _check(bsz=bsz, k=blocks * block_k, d=d, block_k=block_k, seed=seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_hypothesis_matches_dense_when_k_equals_n(seed):
+    """With every neuron gathered, sparse == dense by construction."""
+    _check(bsz=4, k=256, d=64, block_k=64, seed=seed)
+
+
+def test_vmem_footprint_fits_budget():
+    """opt-micro tile config must fit a 16MiB VMEM with wide margin, and
+    the Table-3 geometries (d=4096) must still fit with block_k=64."""
+    assert vmem_footprint_bytes(4, 64, 64) < 16 * 2 ** 20
+    assert vmem_footprint_bytes(1, 4096, 64) < 16 * 2 ** 20
+
+
+def test_mxu_estimate_monotone():
+    assert mxu_utilization_estimate(1, 128, 128) == 1.0
+    assert mxu_utilization_estimate(1, 64, 64) == 0.25
+    assert (mxu_utilization_estimate(1, 64, 32)
+            < mxu_utilization_estimate(1, 64, 64))
+
+
+# ---------------------------------------------------------------------------
+# int8 kernel variant
+# ---------------------------------------------------------------------------
+
+from compile.kernels.ref import sparse_ffn_q8_ref
+from compile.kernels.sparse_ffn import quantize_rows, sparse_ffn_q8
+
+
+def _mk_q8(seed, bsz, k, d):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((bsz, d), np.float32))
+    u = jnp.asarray(rng.standard_normal((k, d), np.float32) * 0.1)
+    b = jnp.asarray(rng.standard_normal((k,), np.float32) * 0.1)
+    dn = jnp.asarray(rng.standard_normal((k, d), np.float32) * 0.1)
+    uq, us = quantize_rows(u)
+    dq, ds = quantize_rows(dn)
+    return x, uq, us, b, dq, ds, u, dn
+
+
+def test_q8_matches_dequant_oracle():
+    x, uq, us, b, dq, ds, _, _ = _mk_q8(0, 4, 128, 64)
+    got = sparse_ffn_q8(x, uq, us, b, dq, ds, block_k=64)
+    want = sparse_ffn_q8_ref(x, uq, us, b, dq, ds)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_q8_close_to_fp32():
+    """Quantization error is bounded: int8 output tracks fp32 output."""
+    x, uq, us, b, dq, ds, u, dn = _mk_q8(1, 2, 128, 64)
+    q = np.asarray(sparse_ffn_q8(x, uq, us, b, dq, ds, block_k=64))
+    f = np.asarray(sparse_ffn_ref(x, u, b, dn))
+    denom = np.abs(f).mean() + 1e-6
+    rel = np.abs(q - f).mean() / denom
+    assert rel < 0.05, f"relative error {rel:.4f}"
+
+
+def test_quantize_rows_bounds():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.standard_normal((16, 32), np.float32))
+    q, s = quantize_rows(w)
+    assert q.dtype == jnp.int8
+    assert np.abs(np.asarray(q)).max() <= 127
+    back = np.asarray(q, np.float32) * np.asarray(s)[:, None]
+    np.testing.assert_allclose(back, np.asarray(w), atol=np.asarray(s).max())
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bsz=st.integers(1, 4),
+    blocks=st.integers(1, 4),
+    block_k=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_hypothesis_q8_shape_sweep(bsz, blocks, block_k, seed):
+    x, uq, us, b, dq, ds, _, _ = _mk_q8(seed, bsz, blocks * block_k, 32)
+    got = sparse_ffn_q8(x, uq, us, b, dq, ds, block_k=block_k)
+    want = sparse_ffn_q8_ref(x, uq, us, b, dq, ds)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,156 @@
+"""L2 correctness: opt-micro blocks, decode path, predictor quality."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.ModelConfig(vocab=64, d_model=32, n_heads=4, n_layers=2,
+                    d_ffn=128, max_seq=32, top_k=64, pred_rank=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=7)
+
+
+def test_param_shapes(params):
+    assert params["embed"].shape == (CFG.vocab, CFG.d_model)
+    assert len(params["layers"]) == CFG.n_layers
+    lp = params["layers"][0]
+    assert lp["u"].shape == (CFG.d_ffn, CFG.d_model)
+    assert lp["dn"].shape == (CFG.d_ffn, CFG.d_model)
+
+
+def test_sparse_block_equals_dense_when_full(params):
+    """ffn_sparse_block over ALL neurons == ffn_dense_block exactly."""
+    lp = params["layers"][0]
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, CFG.d_model))
+    got = M.ffn_sparse_block(x, lp["ln2_g"], lp["ln2_b"],
+                             lp["u"], lp["bu"], lp["dn"], lp["bd"])
+    want = M.ffn_dense_block(x, lp["ln2_g"], lp["ln2_b"],
+                             lp["u"], lp["bu"], lp["dn"], lp["bd"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_block_with_true_active_set_is_exact(params):
+    """Gathering exactly the ReLU-active neurons loses nothing."""
+    lp = params["layers"][1]
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, CFG.d_model))
+    mask = np.asarray(M.ffn_activations(params, x, 1, CFG)).any(axis=0)
+    idx = np.nonzero(mask)[0]
+    pad = (-len(idx)) % 64
+    u = jnp.concatenate([lp["u"][idx], jnp.zeros((pad, CFG.d_model))])
+    bu = jnp.concatenate([lp["bu"][idx], jnp.zeros((pad,))])
+    dn = jnp.concatenate([lp["dn"][idx], jnp.zeros((pad, CFG.d_model))])
+    got = M.ffn_sparse_block(x, lp["ln2_g"], lp["ln2_b"], u, bu, dn, lp["bd"])
+    want = M.ffn_dense_block(x, lp["ln2_g"], lp["ln2_b"],
+                             lp["u"], lp["bu"], lp["dn"], lp["bd"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attn_block_updates_cache(params):
+    lp = params["layers"][0]
+    bsz = 2
+    x = jax.random.normal(jax.random.PRNGKey(2), (bsz, CFG.d_model))
+    kc = jnp.zeros((bsz, CFG.max_seq, CFG.d_model))
+    vc = jnp.zeros((bsz, CFG.max_seq, CFG.d_model))
+    y, kc2, vc2 = M.attn_block(
+        x, lp["ln1_g"], lp["ln1_b"], lp["wq"], lp["bq"], lp["wk"], lp["bk"],
+        lp["wv"], lp["bv"], lp["wo"], lp["bo"], kc, vc, 3,
+        n_heads=CFG.n_heads)
+    assert y.shape == (bsz, CFG.d_model)
+    assert np.abs(np.asarray(kc2[:, 3])).sum() > 0
+    np.testing.assert_array_equal(np.asarray(kc2[:, 4:]), 0.0)
+
+
+def test_attn_pos0_attends_only_self(params):
+    """At pos=0 the context is exactly v(x): softmax over one element."""
+    lp = params["layers"][0]
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, CFG.d_model))
+    kc = vc = jnp.zeros((1, CFG.max_seq, CFG.d_model))
+    y, _, vc2 = M.attn_block(
+        x, lp["ln1_g"], lp["ln1_b"], lp["wq"], lp["bq"], lp["wk"], lp["bk"],
+        lp["wv"], lp["bv"], lp["wo"], lp["bo"], kc, vc, 0,
+        n_heads=CFG.n_heads)
+    want = x + np.asarray(vc2[:, 0]) @ np.asarray(lp["wo"]) + np.asarray(lp["bo"])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_decode_step_shapes(params):
+    bsz = 1
+    kc = [jnp.zeros((bsz, CFG.max_seq, CFG.d_model))] * CFG.n_layers
+    vc = [jnp.zeros((bsz, CFG.max_seq, CFG.d_model))] * CFG.n_layers
+    logits, kc, vc = M.decode_step_dense(
+        params, jnp.asarray([5], jnp.int32), kc, vc, 0, CFG)
+    assert logits.shape == (bsz, CFG.vocab)
+    assert len(kc) == CFG.n_layers
+
+
+def test_decode_deterministic(params):
+    bsz = 1
+    ids = jnp.asarray([1], jnp.int32)
+    outs = []
+    for _ in range(2):
+        kc = [jnp.zeros((bsz, CFG.max_seq, CFG.d_model))] * CFG.n_layers
+        vc = [jnp.zeros((bsz, CFG.max_seq, CFG.d_model))] * CFG.n_layers
+        logits, _, _ = M.decode_step_dense(params, ids, kc, vc, 0, CFG)
+        outs.append(np.asarray(logits))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_predictor_recall(params):
+    """The SVD predictor must catch nearly all truly-active neurons when
+    thresholded at 0 (high recall is what the serving path relies on)."""
+    preds = M.predictor_params(params, CFG)
+    x = jax.random.normal(jax.random.PRNGKey(4), (16, CFG.d_model))
+    lp = params["layers"][0]
+    truth = np.asarray(M.ffn_activations(params, x, 0, CFG))
+    scores = np.asarray(M.predictor_block(
+        x, lp["ln2_g"], lp["ln2_b"], preds[0]["p1"], preds[0]["p2"]))
+    predicted = scores > -0.1  # slack threshold, as the engine uses
+    recall = (predicted & truth).sum() / max(truth.sum(), 1)
+    assert recall > 0.85, f"predictor recall too low: {recall:.3f}"
+
+
+def test_activation_sparsity_reasonable(params):
+    """ReLU produces real sparsity (not ~0%, not ~100% active)."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (32, CFG.d_model))
+    act = np.asarray(M.ffn_activations(params, x, 0, CFG))
+    frac = act.mean()
+    assert 0.05 < frac < 0.95
+
+
+def test_train_reduces_loss():
+    cfg = M.ModelConfig(vocab=256, d_model=32, n_heads=4, n_layers=2,
+                        d_ffn=64, max_seq=64, top_k=32, pred_rank=4)
+    p = M.init_params(cfg, seed=0)
+    p, losses = M.train(p, cfg, steps=30, bsz=8, seq=32, log=None)
+    assert losses[-1] < losses[0]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), pos=st.integers(0, 30))
+def test_hypothesis_attn_matches_ref(params, seed, pos):
+    lp = params["layers"][0]
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, CFG.d_model))
+    kc = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                           (1, CFG.max_seq, CFG.d_model)) * 0.1
+    vc = jax.random.normal(jax.random.PRNGKey(seed + 2),
+                           (1, CFG.max_seq, CFG.d_model)) * 0.1
+    y1, k1, v1 = M.attn_block(
+        x, lp["ln1_g"], lp["ln1_b"], lp["wq"], lp["bq"], lp["wk"], lp["bk"],
+        lp["wv"], lp["bv"], lp["wo"], lp["bo"], kc, vc, pos,
+        n_heads=CFG.n_heads)
+    y2, k2, v2 = ref.attn_ref(
+        x, lp["ln1_g"], lp["ln1_b"], lp["wq"], lp["bq"], lp["wk"], lp["bk"],
+        lp["wv"], lp["bv"], lp["wo"], lp["bo"], kc, vc, pos, CFG.n_heads)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5)

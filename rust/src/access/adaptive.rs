@@ -1,0 +1,178 @@
+//! Runtime governance of access collapse (paper §5.1):
+//!
+//! 1. **Extra-bandwidth trade-off** — the gap threshold is adjusted
+//!    online by hill climbing on *effective* bandwidth (demanded bytes /
+//!    elapsed time): after each observation window the controller keeps
+//!    moving the threshold in the current direction while effective
+//!    bandwidth improves, and reverses direction when it regresses.
+//! 2. **Storage-bottleneck detection** — if achieved raw bandwidth is
+//!    within `SATURATION_FRACTION` of the device's sustained rate, the
+//!    device is bandwidth-bound, speculative reads can only hurt, and
+//!    collapse is disabled until utilization drops again.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BottleneckState {
+    IopsBound,
+    BandwidthBound,
+}
+
+#[derive(Clone, Debug)]
+pub struct AdaptiveCollapse {
+    threshold: u32,
+    min_threshold: u32,
+    max_threshold: u32,
+    /// +1 or -1: current hill-climbing direction.
+    direction: i32,
+    /// Effective bandwidth of the previous window (bytes/sec).
+    prev_effective_bw: f64,
+    /// Tokens per observation window.
+    window: usize,
+    seen_in_window: usize,
+    /// Window accumulators.
+    acc_demand_bytes: f64,
+    acc_total_bytes: f64,
+    acc_elapsed_ns: f64,
+    state: BottleneckState,
+}
+
+/// Raw bandwidth above this fraction of saturation = bandwidth-bound.
+const SATURATION_FRACTION: f64 = 0.90;
+
+impl AdaptiveCollapse {
+    pub fn new(initial_threshold: u32, max_threshold: u32, window: usize) -> Self {
+        Self {
+            threshold: initial_threshold.min(max_threshold),
+            min_threshold: 0,
+            max_threshold,
+            direction: 1,
+            prev_effective_bw: 0.0,
+            window: window.max(1),
+            seen_in_window: 0,
+            acc_demand_bytes: 0.0,
+            acc_total_bytes: 0.0,
+            acc_elapsed_ns: 0.0,
+            state: BottleneckState::IopsBound,
+        }
+    }
+
+    /// Threshold the planner should use right now (0 when disabled).
+    pub fn threshold(&self) -> u32 {
+        match self.state {
+            BottleneckState::IopsBound => self.threshold,
+            BottleneckState::BandwidthBound => 0,
+        }
+    }
+
+    pub fn state(&self) -> BottleneckState {
+        self.state
+    }
+
+    /// Record one token's I/O outcome.
+    ///
+    /// `demand_bytes` — bytes of activated (useful) neurons;
+    /// `total_bytes` — bytes actually transferred (incl. speculative);
+    /// `elapsed_ns` — simulated flash time for the token's batch;
+    /// `sat_bandwidth` — device sustained rate (bytes/sec).
+    pub fn observe(
+        &mut self,
+        demand_bytes: f64,
+        total_bytes: f64,
+        elapsed_ns: f64,
+        sat_bandwidth: f64,
+    ) {
+        self.acc_demand_bytes += demand_bytes;
+        self.acc_total_bytes += total_bytes;
+        self.acc_elapsed_ns += elapsed_ns;
+        self.seen_in_window += 1;
+        if self.seen_in_window < self.window {
+            return;
+        }
+
+        let secs = (self.acc_elapsed_ns / 1e9).max(1e-12);
+        let raw_bw = self.acc_total_bytes / secs;
+        let effective_bw = self.acc_demand_bytes / secs;
+
+        // (2) bottleneck detector
+        self.state = if raw_bw >= SATURATION_FRACTION * sat_bandwidth {
+            BottleneckState::BandwidthBound
+        } else {
+            BottleneckState::IopsBound
+        };
+
+        // (1) hill-climb the threshold on effective bandwidth
+        if self.state == BottleneckState::IopsBound {
+            if effective_bw + 1.0 < self.prev_effective_bw {
+                self.direction = -self.direction;
+            }
+            let next = self.threshold as i64 + self.direction as i64;
+            self.threshold =
+                next.clamp(self.min_threshold as i64, self.max_threshold as i64) as u32;
+        }
+        self.prev_effective_bw = effective_bw;
+
+        self.seen_in_window = 0;
+        self.acc_demand_bytes = 0.0;
+        self.acc_total_bytes = 0.0;
+        self.acc_elapsed_ns = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_iops_bound_with_initial_threshold() {
+        let a = AdaptiveCollapse::new(4, 16, 8);
+        assert_eq!(a.threshold(), 4);
+        assert_eq!(a.state(), BottleneckState::IopsBound);
+    }
+
+    #[test]
+    fn detects_bandwidth_bound_and_disables() {
+        let mut a = AdaptiveCollapse::new(4, 16, 2);
+        // raw bandwidth ~= saturation (1e9 B/s device, 1ms for 1MB)
+        for _ in 0..2 {
+            a.observe(900_000.0, 1_000_000.0, 1e6, 1e9);
+        }
+        assert_eq!(a.state(), BottleneckState::BandwidthBound);
+        assert_eq!(a.threshold(), 0);
+        // utilization drops -> re-enables
+        for _ in 0..2 {
+            a.observe(10_000.0, 12_000.0, 1e6, 1e9);
+        }
+        assert_eq!(a.state(), BottleneckState::IopsBound);
+        assert!(a.threshold() > 0);
+    }
+
+    #[test]
+    fn climbs_up_while_improving() {
+        let mut a = AdaptiveCollapse::new(2, 16, 1);
+        // effective bandwidth keeps improving -> threshold keeps rising
+        for i in 0..5 {
+            a.observe(1_000.0 * (i + 1) as f64, 2_000.0, 1e6, 1e12);
+        }
+        assert!(a.threshold() > 2, "threshold={}", a.threshold());
+    }
+
+    #[test]
+    fn reverses_on_regression() {
+        let mut a = AdaptiveCollapse::new(8, 16, 1);
+        a.observe(10_000.0, 11_000.0, 1e6, 1e12); // establish baseline
+        let up = a.threshold();
+        a.observe(1_000.0, 11_000.0, 1e6, 1e12); // big regression
+        let down = a.threshold();
+        assert!(down < up, "up={up} down={down}");
+    }
+
+    #[test]
+    fn threshold_stays_in_bounds() {
+        let mut a = AdaptiveCollapse::new(0, 4, 1);
+        for i in 0..50 {
+            // alternate improvement/regression to wander
+            let d = if i % 2 == 0 { 1_000.0 } else { 100_000.0 };
+            a.observe(d, 120_000.0, 1e6, 1e12);
+            assert!(a.threshold() <= 4);
+        }
+    }
+}

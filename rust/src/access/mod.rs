@@ -1,0 +1,214 @@
+//! Online read planning: runs, access collapse (paper §5.1) and the
+//! adaptive threshold / bottleneck controller.
+
+mod adaptive;
+
+pub use adaptive::{AdaptiveCollapse, BottleneckState};
+
+use crate::neuron::Slot;
+
+/// A contiguous run of flash slots to read with ONE command.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotRun {
+    pub start: Slot,
+    /// Total slots read (demanded + speculative gap fill).
+    pub len: u32,
+    /// Speculative slots included by collapse (len - demanded).
+    pub extra: u32,
+}
+
+impl SlotRun {
+    pub fn end(&self) -> Slot {
+        self.start + self.len
+    }
+
+    pub fn demanded(&self) -> u32 {
+        self.len - self.extra
+    }
+}
+
+/// Group sorted, deduplicated slots into maximal contiguous runs.
+pub fn plan_runs(sorted_slots: &[Slot]) -> Vec<SlotRun> {
+    debug_assert!(sorted_slots.windows(2).all(|w| w[0] < w[1]), "slots must be sorted+unique");
+    let mut runs = Vec::new();
+    let mut it = sorted_slots.iter().copied();
+    let Some(first) = it.next() else {
+        return runs;
+    };
+    let mut start = first;
+    let mut len = 1u32;
+    for s in it {
+        if s == start + len {
+            len += 1;
+        } else {
+            runs.push(SlotRun { start, len, extra: 0 });
+            start = s;
+            len = 1;
+        }
+    }
+    runs.push(SlotRun { start, len, extra: 0 });
+    runs
+}
+
+/// Access collapse: merge adjacent runs whose gap is at most `threshold`
+/// slots, speculatively reading the `gap` slots in between (paper §5.1).
+/// One merge trades `gap * bundle_bytes` extra transfer for one fewer
+/// command — a win whenever the device is IOPS-bound.
+pub fn collapse_runs(runs: &[SlotRun], threshold: u32) -> Vec<SlotRun> {
+    if threshold == 0 || runs.len() < 2 {
+        return runs.to_vec();
+    }
+    let mut out: Vec<SlotRun> = Vec::with_capacity(runs.len());
+    out.push(runs[0]);
+    for &r in &runs[1..] {
+        let last = out.last_mut().unwrap();
+        debug_assert!(r.start >= last.end(), "runs must be sorted and disjoint");
+        let gap = r.start - last.end();
+        if gap <= threshold {
+            last.extra += gap + r.extra;
+            last.len += gap + r.len;
+        } else {
+            out.push(r);
+        }
+    }
+    out
+}
+
+/// Total slots and extra slots across a plan.
+pub fn plan_volume(runs: &[SlotRun]) -> (u64, u64) {
+    let total: u64 = runs.iter().map(|r| r.len as u64).sum();
+    let extra: u64 = runs.iter().map(|r| r.extra as u64).sum();
+    (total, extra)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn slots(v: &[u32]) -> Vec<Slot> {
+        v.to_vec()
+    }
+
+    #[test]
+    fn runs_from_scattered_slots() {
+        let r = plan_runs(&slots(&[1, 2, 3, 7, 9, 10]));
+        assert_eq!(
+            r,
+            vec![
+                SlotRun { start: 1, len: 3, extra: 0 },
+                SlotRun { start: 7, len: 1, extra: 0 },
+                SlotRun { start: 9, len: 2, extra: 0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(plan_runs(&[]).is_empty());
+        assert_eq!(plan_runs(&[5]), vec![SlotRun { start: 5, len: 1, extra: 0 }]);
+    }
+
+    #[test]
+    fn collapse_merges_small_gaps() {
+        // paper's Figure 9: n1,n2 .. n4 with n3 missing -> one read
+        let runs = plan_runs(&slots(&[0, 1, 3]));
+        let merged = collapse_runs(&runs, 1);
+        assert_eq!(merged, vec![SlotRun { start: 0, len: 4, extra: 1 }]);
+        // threshold 0 keeps them separate
+        assert_eq!(collapse_runs(&runs, 0).len(), 2);
+    }
+
+    #[test]
+    fn collapse_respects_threshold() {
+        let runs = plan_runs(&slots(&[0, 5])); // gap of 4
+        assert_eq!(collapse_runs(&runs, 3).len(), 2);
+        let m = collapse_runs(&runs, 4);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].len, 6);
+        assert_eq!(m[0].extra, 4);
+    }
+
+    #[test]
+    fn collapse_chains_multiple_merges() {
+        let runs = plan_runs(&slots(&[0, 2, 4, 6]));
+        let m = collapse_runs(&runs, 1);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].len, 7);
+        assert_eq!(m[0].extra, 3);
+    }
+
+    #[test]
+    fn volume_accounting() {
+        let runs = collapse_runs(&plan_runs(&slots(&[0, 1, 3, 10])), 1);
+        let (total, extra) = plan_volume(&runs);
+        assert_eq!(total, 5); // 0..4 (4 slots incl gap) + 10
+        assert_eq!(extra, 1);
+    }
+
+    #[test]
+    fn prop_plans_cover_all_demanded_slots() {
+        prop::run_bool(
+            "collapse-covers",
+            prop::Config { cases: 60, max_size: 200, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let n = size.max(4) * 4;
+                let k = rng.range(1, size.max(2));
+                let mut s: Vec<u32> = rng
+                    .sample_indices(n, k.min(n))
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect();
+                s.sort_unstable();
+                let threshold = rng.below(8) as u32;
+                (s, threshold)
+            },
+            |(s, threshold)| {
+                let merged = collapse_runs(&plan_runs(s), *threshold);
+                // every demanded slot inside some run
+                s.iter().all(|&slot| {
+                    merged.iter().any(|r| slot >= r.start && slot < r.end())
+                })
+                // runs sorted and disjoint
+                && merged.windows(2).all(|w| w[0].end() < w[1].start)
+                // extra accounting consistent: total - extra == demanded
+                && {
+                    let (total, extra) = plan_volume(&merged);
+                    total - extra == s.len() as u64
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_collapse_never_increases_commands() {
+        prop::run_bool(
+            "collapse-monotone",
+            prop::Config { cases: 40, max_size: 128, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let n = size.max(4) * 4;
+                let k = rng.range(1, size.max(2));
+                let mut s: Vec<u32> = rng
+                    .sample_indices(n, k.min(n))
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect();
+                s.sort_unstable();
+                s
+            },
+            |s| {
+                let base = plan_runs(s);
+                let mut prev = base.len();
+                for t in 0..6 {
+                    let m = collapse_runs(&base, t);
+                    if m.len() > prev {
+                        return false;
+                    }
+                    prev = m.len();
+                }
+                true
+            },
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! Shared harness for the paper-reproduction benches (benches/*.rs).
+//!
+//! The offline registry has no criterion; each bench is a
+//! `harness = false` binary that uses `time_fn` for wall-clock loops and
+//! `workloads::run_experiment` for the trace-driven simulation studies,
+//! then prints the paper's rows via `util::stats::Table`.
+
+pub mod workloads;
+
+use std::time::Instant;
+
+/// Wall-clock a closure: warmup, then `iters` timed runs; returns
+/// (mean_ns, min_ns, max_ns).
+pub fn time_fn<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_nanos() as f64);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0f64, f64::max);
+    (mean, min, max)
+}
+
+/// Standard bench banner so bench_output.txt is self-describing.
+pub fn banner(id: &str, title: &str) {
+    println!("\n=== {id}: {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures() {
+        let (mean, min, max) = time_fn(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>())
+        });
+        assert!(min <= mean && mean <= max);
+        assert!(mean > 0.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Classic LRU cache over u64 keys (baseline policy + building block).
+//! Intrusive doubly-linked list over a slab, O(1) touch/insert/evict.
+
+use std::collections::HashMap;
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Clone, Debug)]
+struct Node {
+    key: u64,
+    prev: u32,
+    next: u32,
+}
+
+#[derive(Debug)]
+pub struct Lru {
+    map: HashMap<u64, u32>,
+    nodes: Vec<Node>,
+    free: Vec<u32>,
+    head: u32, // most recent
+    tail: u32, // least recent
+    capacity: usize,
+}
+
+impl Lru {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            map: HashMap::with_capacity(capacity.min(1 << 20)),
+            nodes: Vec::with_capacity(capacity.min(1 << 20)),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    fn unlink(&mut self, idx: u32) {
+        let (p, n) = {
+            let node = &self.nodes[idx as usize];
+            (node.prev, node.next)
+        };
+        if p != NIL {
+            self.nodes[p as usize].next = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.nodes[n as usize].prev = p;
+        } else {
+            self.tail = p;
+        }
+    }
+
+    fn push_front(&mut self, idx: u32) {
+        self.nodes[idx as usize].prev = NIL;
+        self.nodes[idx as usize].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head as usize].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    /// Lookup; a hit refreshes recency.
+    pub fn touch(&mut self, key: u64) -> bool {
+        if let Some(&idx) = self.map.get(&key) {
+            self.unlink(idx);
+            self.push_front(idx);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn contains_untouched(&self, key: u64) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    /// Insert a key, evicting the LRU entry if full.
+    /// Returns the evicted key, if any.
+    pub fn insert(&mut self, key: u64) -> Option<u64> {
+        if self.capacity == 0 {
+            return None;
+        }
+        if self.touch(key) {
+            return None;
+        }
+        let mut evicted = None;
+        if self.map.len() >= self.capacity {
+            let tail = self.tail;
+            debug_assert_ne!(tail, NIL);
+            let old_key = self.nodes[tail as usize].key;
+            self.unlink(tail);
+            self.map.remove(&old_key);
+            self.free.push(tail);
+            evicted = Some(old_key);
+        }
+        let idx = if let Some(i) = self.free.pop() {
+            self.nodes[i as usize] = Node { key, prev: NIL, next: NIL };
+            i
+        } else {
+            self.nodes.push(Node { key, prev: NIL, next: NIL });
+            (self.nodes.len() - 1) as u32
+        };
+        self.push_front(idx);
+        self.map.insert(key, idx);
+        evicted
+    }
+
+    pub fn remove(&mut self, key: u64) -> bool {
+        if let Some(idx) = self.map.remove(&key) {
+            self.unlink(idx);
+            self.free.push(idx);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_touch_evict() {
+        let mut c = Lru::new(2);
+        assert_eq!(c.insert(1), None);
+        assert_eq!(c.insert(2), None);
+        assert!(c.touch(1)); // 1 now MRU; 2 is LRU
+        assert_eq!(c.insert(3), Some(2));
+        assert!(c.touch(1));
+        assert!(!c.touch(2));
+        assert!(c.touch(3));
+    }
+
+    #[test]
+    fn reinsert_is_touch() {
+        let mut c = Lru::new(2);
+        c.insert(1);
+        c.insert(2);
+        assert_eq!(c.insert(1), None); // refresh, no eviction
+        assert_eq!(c.insert(3), Some(2));
+    }
+
+    #[test]
+    fn zero_capacity_never_stores() {
+        let mut c = Lru::new(0);
+        assert_eq!(c.insert(1), None);
+        assert!(!c.touch(1));
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn remove_frees_slot() {
+        let mut c = Lru::new(2);
+        c.insert(1);
+        c.insert(2);
+        assert!(c.remove(1));
+        assert!(!c.remove(1));
+        c.insert(3);
+        assert_eq!(c.len(), 2);
+        assert!(c.touch(2) && c.touch(3));
+    }
+
+    #[test]
+    fn capacity_never_exceeded_under_churn() {
+        let mut c = Lru::new(16);
+        for i in 0..1000u64 {
+            c.insert(i % 37);
+            assert!(c.len() <= 16);
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! DRAM neuron cache: policy trait, S3-FIFO and LRU implementations, and
+//! RIPPLE's linking-aligned admission layer (paper §5.2).
+
+mod lru;
+mod s3fifo;
+
+pub use lru::Lru;
+pub use s3fifo::S3Fifo;
+
+use crate::access::SlotRun;
+use crate::neuron::Slot;
+use crate::util::rng::Rng;
+
+/// Uniform policy interface over (layer, slot) keys.
+pub trait CachePolicy: Send {
+    /// Lookup; a hit refreshes the entry's standing.
+    fn touch(&mut self, key: u64) -> bool;
+    /// Insert after a miss (may evict).
+    fn insert(&mut self, key: u64);
+    fn len(&self) -> usize;
+    fn capacity(&self) -> usize;
+}
+
+impl CachePolicy for Lru {
+    fn touch(&mut self, key: u64) -> bool {
+        Lru::touch(self, key)
+    }
+    fn insert(&mut self, key: u64) {
+        Lru::insert(self, key);
+    }
+    fn len(&self) -> usize {
+        Lru::len(self)
+    }
+    fn capacity(&self) -> usize {
+        Lru::capacity(self)
+    }
+}
+
+impl CachePolicy for S3Fifo {
+    fn touch(&mut self, key: u64) -> bool {
+        S3Fifo::touch(self, key)
+    }
+    fn insert(&mut self, key: u64) {
+        S3Fifo::insert(self, key);
+    }
+    fn len(&self) -> usize {
+        S3Fifo::len(self)
+    }
+    fn capacity(&self) -> usize {
+        S3Fifo::capacity(self)
+    }
+}
+
+/// No-op cache (cache_ratio = 0 configurations).
+pub struct NullCache;
+
+impl CachePolicy for NullCache {
+    fn touch(&mut self, _key: u64) -> bool {
+        false
+    }
+    fn insert(&mut self, _key: u64) {}
+    fn len(&self) -> usize {
+        0
+    }
+    fn capacity(&self) -> usize {
+        0
+    }
+}
+
+#[inline]
+pub fn key(layer: usize, slot: Slot) -> u64 {
+    ((layer as u64) << 32) | slot as u64
+}
+
+/// How insertions are admitted (paper §5.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Admission {
+    /// Admit everything (plain S3-FIFO / LRU baselines).
+    All,
+    /// RIPPLE linking-aligned: *sporadic* slots (read runs shorter than
+    /// `segment_min`) admit as usual; *continuous segments* admit
+    /// all-or-nothing with probability `segment_p` — caching a partial
+    /// segment would fragment an optimized flash extent into
+    /// discontinuous residue reads while burning DRAM on it.
+    Linking { segment_min: u32, segment_p: f64 },
+}
+
+/// The neuron cache used by the pipeline: a policy + admission layer.
+pub struct NeuronCache {
+    policy: Box<dyn CachePolicy>,
+    admission: Admission,
+    rng: Rng,
+    /// statistics
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl NeuronCache {
+    pub fn new(policy: Box<dyn CachePolicy>, admission: Admission, seed: u64) -> Self {
+        Self { policy, admission, rng: Rng::new(seed), hits: 0, misses: 0 }
+    }
+
+    /// Build from a RunConfig policy name.
+    pub fn from_config(
+        policy: &str,
+        capacity: usize,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        // segment_p tuned by benches/ablations.rs (Ablation C)
+        let linking = Admission::Linking { segment_min: 4, segment_p: 0.5 };
+        Ok(match policy {
+            "linking" => Self::new(Box::new(S3Fifo::new(capacity)), linking, seed),
+            "s3fifo" => Self::new(Box::new(S3Fifo::new(capacity)), Admission::All, seed),
+            "lru" => Self::new(Box::new(Lru::new(capacity)), Admission::All, seed),
+            "none" => Self::new(Box::new(NullCache), Admission::All, seed),
+            _ => anyhow::bail!("unknown cache policy `{policy}` (linking|s3fifo|lru|none)"),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.policy.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.policy.capacity()
+    }
+
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 { 0.0 } else { self.hits as f64 / total as f64 }
+    }
+
+    /// Partition activated slots into (cached, must-read). Slots must be
+    /// sorted; the returned vectors preserve order.
+    pub fn filter(&mut self, layer: usize, slots: &[Slot]) -> (Vec<Slot>, Vec<Slot>) {
+        let mut hit = Vec::new();
+        let mut miss = Vec::with_capacity(slots.len());
+        for &s in slots {
+            if self.policy.touch(key(layer, s)) {
+                self.hits += 1;
+                hit.push(s);
+            } else {
+                self.misses += 1;
+                miss.push(s);
+            }
+        }
+        (hit, miss)
+    }
+
+    /// Admit freshly-read runs according to the admission policy.
+    /// `runs` are the *demanded* read runs (post-collapse is fine: the
+    /// speculative gap slots arrived in DRAM too and are admitted with
+    /// their segment).
+    pub fn admit(&mut self, layer: usize, runs: &[SlotRun]) {
+        for r in runs {
+            match self.admission {
+                Admission::All => {
+                    for s in r.start..r.end() {
+                        self.policy.insert(key(layer, s));
+                    }
+                }
+                Admission::Linking { segment_min, segment_p } => {
+                    if r.len < segment_min {
+                        for s in r.start..r.end() {
+                            self.policy.insert(key(layer, s));
+                        }
+                    } else if self.rng.chance(segment_p) {
+                        // all-or-nothing segment admission
+                        for s in r.start..r.end() {
+                            self.policy.insert(key(layer, s));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::access::plan_runs;
+
+    fn runs(slots: &[Slot]) -> Vec<SlotRun> {
+        plan_runs(slots)
+    }
+
+    #[test]
+    fn filter_partitions() {
+        let mut c = NeuronCache::new(Box::new(Lru::new(8)), Admission::All, 1);
+        c.admit(0, &runs(&[1, 2, 3]));
+        let (hit, miss) = c.filter(0, &[1, 2, 5]);
+        assert_eq!(hit, vec![1, 2]);
+        assert_eq!(miss, vec![5]);
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn layers_are_disjoint() {
+        let mut c = NeuronCache::new(Box::new(Lru::new(8)), Admission::All, 1);
+        c.admit(0, &runs(&[1]));
+        let (hit, _) = c.filter(1, &[1]);
+        assert!(hit.is_empty());
+    }
+
+    #[test]
+    fn linking_admits_sporadic_always() {
+        let mut c = NeuronCache::new(
+            Box::new(Lru::new(64)),
+            Admission::Linking { segment_min: 4, segment_p: 0.0 },
+            3,
+        );
+        c.admit(0, &runs(&[10, 20, 30])); // three 1-runs: sporadic
+        let (hit, _) = c.filter(0, &[10, 20, 30]);
+        assert_eq!(hit.len(), 3);
+    }
+
+    #[test]
+    fn linking_segment_all_or_nothing() {
+        // segment_p = 0 -> long runs never admitted
+        let mut c = NeuronCache::new(
+            Box::new(Lru::new(64)),
+            Admission::Linking { segment_min: 4, segment_p: 0.0 },
+            3,
+        );
+        c.admit(0, &runs(&[0, 1, 2, 3, 4]));
+        let (hit, _) = c.filter(0, &[0, 1, 2, 3, 4]);
+        assert!(hit.is_empty());
+
+        // segment_p = 1 -> whole segment admitted
+        let mut c = NeuronCache::new(
+            Box::new(Lru::new(64)),
+            Admission::Linking { segment_min: 4, segment_p: 1.0 },
+            3,
+        );
+        c.admit(0, &runs(&[0, 1, 2, 3, 4]));
+        let (hit, _) = c.filter(0, &[0, 1, 2, 3, 4]);
+        assert_eq!(hit.len(), 5);
+    }
+
+    #[test]
+    fn from_config_names() {
+        for p in ["linking", "s3fifo", "lru", "none"] {
+            assert!(NeuronCache::from_config(p, 16, 0).is_ok(), "{p}");
+        }
+        assert!(NeuronCache::from_config("arc", 16, 0).is_err());
+    }
+
+    #[test]
+    fn null_cache_never_hits() {
+        let mut c = NeuronCache::from_config("none", 0, 0).unwrap();
+        c.admit(0, &runs(&[1, 2, 3]));
+        let (hit, miss) = c.filter(0, &[1, 2, 3]);
+        assert!(hit.is_empty());
+        assert_eq!(miss.len(), 3);
+    }
+
+    #[test]
+    fn hit_ratio_tracks() {
+        let mut c = NeuronCache::from_config("s3fifo", 16, 0).unwrap();
+        c.admit(0, &runs(&[1]));
+        c.filter(0, &[1]);
+        c.filter(0, &[2]);
+        assert!((c.hit_ratio() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,251 @@
+//! S3-FIFO (Yang et al., SOSP'23) — "FIFO queues are all you need".
+//!
+//! The paper integrates S3-FIFO into every baseline and into RIPPLE
+//! itself (§6.1); RIPPLE only changes the *admission* layer on top
+//! (cache/mod.rs). Structure:
+//!
+//! * small FIFO (~10% of capacity) absorbs new keys,
+//! * main FIFO (~90%) holds promoted keys,
+//! * ghost FIFO remembers keys recently evicted from small.
+//!
+//! Eviction from small promotes keys that were re-referenced
+//! (freq > 0) to main, otherwise demotes them to ghost. Eviction from
+//! main lazily reinserts keys with freq > 0 (decremented). A miss whose
+//! key sits in ghost is inserted directly into main ("quick demotion
+//! was wrong" signal). Frequencies are capped at 3 as in the paper.
+
+use std::collections::{HashMap, VecDeque};
+
+#[derive(Debug)]
+pub struct S3Fifo {
+    capacity: usize,
+    small_cap: usize,
+    small: VecDeque<u64>,
+    main: VecDeque<u64>,
+    ghost: VecDeque<u64>,
+    ghost_cap: usize,
+    /// key -> (freq, where): where: 0=small, 1=main, 2=ghost
+    table: HashMap<u64, (u8, u8)>,
+}
+
+const IN_SMALL: u8 = 0;
+const IN_MAIN: u8 = 1;
+const IN_GHOST: u8 = 2;
+const FREQ_CAP: u8 = 3;
+
+impl S3Fifo {
+    pub fn new(capacity: usize) -> Self {
+        let small_cap = (capacity / 10).max(1).min(capacity);
+        Self {
+            capacity,
+            small_cap,
+            small: VecDeque::new(),
+            main: VecDeque::new(),
+            ghost: VecDeque::new(),
+            ghost_cap: capacity, // ghost remembers ~1x capacity of keys
+            table: HashMap::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Resident entries (small + main, not ghost).
+    pub fn len(&self) -> usize {
+        self.small.len() + self.main.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookup; a hit bumps the frequency counter.
+    pub fn touch(&mut self, key: u64) -> bool {
+        match self.table.get_mut(&key) {
+            Some((freq, loc)) if *loc != IN_GHOST => {
+                *freq = (*freq + 1).min(FREQ_CAP);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub fn contains_untouched(&self, key: u64) -> bool {
+        matches!(self.table.get(&key), Some((_, loc)) if *loc != IN_GHOST)
+    }
+
+    /// Insert after a miss (no-op if already resident).
+    pub fn insert(&mut self, key: u64) {
+        if self.capacity == 0 {
+            return;
+        }
+        match self.table.get(&key) {
+            Some((_, loc)) if *loc != IN_GHOST => return, // already resident
+            Some((_, _ghost)) => {
+                // ghost hit: admit straight to main
+                self.remove_from_ghost(key);
+                self.ensure_room();
+                self.main.push_back(key);
+                self.table.insert(key, (0, IN_MAIN));
+            }
+            None => {
+                self.ensure_room();
+                self.small.push_back(key);
+                self.table.insert(key, (0, IN_SMALL));
+            }
+        }
+    }
+
+    fn remove_from_ghost(&mut self, key: u64) {
+        // lazy: mark removed in table; ghost queue entries are validated
+        // against the table when they rotate out.
+        self.table.remove(&key);
+    }
+
+    fn ensure_room(&mut self) {
+        while self.len() >= self.capacity {
+            if self.small.len() >= self.small_cap || self.main.is_empty() {
+                self.evict_small();
+            } else {
+                self.evict_main();
+            }
+        }
+    }
+
+    fn evict_small(&mut self) {
+        while let Some(key) = self.small.pop_front() {
+            let Some(&(freq, loc)) = self.table.get(&key) else { continue };
+            if loc != IN_SMALL {
+                continue; // stale queue entry
+            }
+            if freq > 0 {
+                // re-referenced while in small: promote to main
+                self.table.insert(key, (0, IN_MAIN));
+                self.main.push_back(key);
+                if self.len() < self.capacity {
+                    return;
+                }
+                continue;
+            }
+            // demote to ghost
+            self.table.insert(key, (0, IN_GHOST));
+            self.ghost.push_back(key);
+            self.trim_ghost();
+            return;
+        }
+    }
+
+    fn evict_main(&mut self) {
+        while let Some(key) = self.main.pop_front() {
+            let Some(&(freq, loc)) = self.table.get(&key) else { continue };
+            if loc != IN_MAIN {
+                continue;
+            }
+            if freq > 0 {
+                // lazy promotion: second chance with decayed freq
+                self.table.insert(key, (freq - 1, IN_MAIN));
+                self.main.push_back(key);
+                continue;
+            }
+            self.table.remove(&key);
+            return;
+        }
+    }
+
+    fn trim_ghost(&mut self) {
+        while self.ghost.len() > self.ghost_cap {
+            if let Some(old) = self.ghost.pop_front() {
+                if matches!(self.table.get(&old), Some((_, loc)) if *loc == IN_GHOST) {
+                    self.table.remove(&old);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_hit_miss() {
+        let mut c = S3Fifo::new(10);
+        assert!(!c.touch(1));
+        c.insert(1);
+        assert!(c.touch(1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn one_hit_wonders_dont_pollute_main() {
+        // Scan 100 cold keys through a small cache while key 7 is hot:
+        // 7 must survive (the signature S3-FIFO property).
+        let mut c = S3Fifo::new(10);
+        c.insert(7);
+        c.touch(7);
+        for i in 100..200u64 {
+            c.insert(i);
+            c.touch(7); // keep 7 hot
+        }
+        assert!(c.touch(7), "hot key evicted by scan");
+        assert!(c.len() <= 10);
+    }
+
+    #[test]
+    fn ghost_hit_promotes_to_main() {
+        let mut c = S3Fifo::new(10);
+        c.insert(42); // into small
+        // push it out of small with cold keys (42 never re-referenced)
+        for i in 0..10u64 {
+            c.insert(i);
+        }
+        assert!(!c.touch(42), "42 should be ghosted");
+        c.insert(42); // ghost hit -> main
+        assert!(c.touch(42));
+    }
+
+    #[test]
+    fn capacity_respected_under_churn() {
+        let mut c = S3Fifo::new(32);
+        for i in 0..10_000u64 {
+            c.insert(i % 97);
+            if i % 3 == 0 {
+                c.touch(i % 7);
+            }
+            assert!(c.len() <= 32, "len={} at i={i}", c.len());
+        }
+    }
+
+    #[test]
+    fn zero_capacity() {
+        let mut c = S3Fifo::new(0);
+        c.insert(1);
+        assert!(!c.touch(1));
+    }
+
+    #[test]
+    fn skewed_workload_beats_fifo_pollution() {
+        // hit ratio on a Zipf-ish loop should be decent: hot 8 keys fit.
+        let mut c = S3Fifo::new(16);
+        let mut hits = 0;
+        let mut total = 0;
+        for round in 0..400u64 {
+            for hot in 0..8u64 {
+                total += 1;
+                if c.touch(hot) {
+                    hits += 1;
+                } else {
+                    c.insert(hot);
+                }
+            }
+            // occasional cold scan
+            let cold = 1000 + round;
+            if !c.touch(cold) {
+                c.insert(cold);
+            }
+        }
+        let ratio = hits as f64 / total as f64;
+        assert!(ratio > 0.9, "hit ratio {ratio}");
+    }
+}

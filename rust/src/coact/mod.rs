@@ -1,0 +1,297 @@
+//! Co-activation pattern extraction (paper §4.1, Step 1).
+//!
+//! For each neuron we keep a per-token activation *bitset* (one bit per
+//! calibration token). Activation frequency f(i) is a popcount; the
+//! co-activation count f(i,j) is the popcount of the AND of two rows —
+//! 16 word-ops for a 1000-token calibration set. This makes the full
+//! pairwise scan the offline greedy needs (`O(n²)` popcounts) cheap
+//! enough to match the paper's Table-4 search times without ever
+//! materializing an n×n matrix (Mistral's 14k-bundle layers would need
+//! ~800 MB/layer dense).
+//!
+//! Distances: the paper defines dist(i,j) = 1 − P(ij) and always compares
+//! distances, so any monotone-decreasing transform of f(i,j) induces the
+//! same order; internally we rank by raw co-count and expose P(i)/P(ij)
+//! for reporting and tests.
+
+use crate::neuron::BundleId;
+use crate::trace::Trace;
+
+#[derive(Clone, Debug)]
+pub struct CoactStats {
+    n_neurons: usize,
+    n_tokens: usize,
+    words_per_neuron: usize,
+    /// Row-major: neuron i's token bitset at
+    /// `bits[i*words_per_neuron .. (i+1)*words_per_neuron]`.
+    bits: Vec<u64>,
+}
+
+impl CoactStats {
+    /// Accumulate from one layer of a trace.
+    pub fn from_trace_layer(trace: &Trace, layer: usize) -> Self {
+        Self::from_sets(trace.per_layer, trace.layer(layer))
+    }
+
+    /// Accumulate from an iterator of per-token activation sets.
+    pub fn from_sets<'a, I>(n_neurons: usize, tokens: I) -> Self
+    where
+        I: IntoIterator<Item = &'a [BundleId]>,
+    {
+        let sets: Vec<&[BundleId]> = tokens.into_iter().collect();
+        let n_tokens = sets.len();
+        let words = n_tokens.div_ceil(64).max(1);
+        let mut bits = vec![0u64; n_neurons * words];
+        for (t, set) in sets.iter().enumerate() {
+            let (w, b) = (t / 64, t % 64);
+            for &i in set.iter() {
+                bits[i as usize * words + w] |= 1u64 << b;
+            }
+        }
+        Self { n_neurons, n_tokens, words_per_neuron: words, bits }
+    }
+
+    pub fn n_neurons(&self) -> usize {
+        self.n_neurons
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.n_tokens
+    }
+
+    #[inline]
+    fn row(&self, i: usize) -> &[u64] {
+        &self.bits[i * self.words_per_neuron..(i + 1) * self.words_per_neuron]
+    }
+
+    /// Activation count of neuron `i` over the calibration tokens.
+    #[inline]
+    pub fn freq(&self, i: BundleId) -> u32 {
+        self.row(i as usize).iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Co-activation count of the pair (i, j).
+    #[inline]
+    pub fn co_count(&self, i: BundleId, j: BundleId) -> u32 {
+        let (a, b) = (self.row(i as usize), self.row(j as usize));
+        a.iter().zip(b).map(|(x, y)| (x & y).count_ones()).sum()
+    }
+
+    /// P(i) per Eq. 1 (frequency normalized over all neurons).
+    pub fn p_i(&self, i: BundleId) -> f64 {
+        let total: u64 = (0..self.n_neurons).map(|k| self.freq(k as u32) as u64).sum();
+        if total == 0 { 0.0 } else { self.freq(i) as f64 / total as f64 }
+    }
+
+    /// Empirical pairwise activation probability (per-token), used by
+    /// tests; Eq. 3's dist(i,j) = 1 − P(ij) ranks identically to
+    /// ranking by co_count descending.
+    pub fn p_ij(&self, i: BundleId, j: BundleId) -> f64 {
+        if self.n_tokens == 0 {
+            0.0
+        } else {
+            self.co_count(i, j) as f64 / self.n_tokens as f64
+        }
+    }
+
+    /// dist(i,j) := 1 − P(ij) (paper Eq. 3, with P(ij) per-token).
+    pub fn dist(&self, i: BundleId, j: BundleId) -> f64 {
+        1.0 - self.p_ij(i, j)
+    }
+
+    /// The `m` strongest partners of neuron `i` (by co-count, desc),
+    /// excluding zero-co-count pairs and `i` itself. Uses partial
+    /// selection so memory/time stay O(n) + O(m log m) even for dense
+    /// co-activation (Mistral-scale layers).
+    pub fn top_partners(&self, i: BundleId, m: usize) -> Vec<(BundleId, u32)> {
+        let mut all: Vec<(BundleId, u32)> = (0..self.n_neurons as u32)
+            .filter(|&j| j != i)
+            .map(|j| (j, self.co_count(i, j)))
+            .filter(|&(_, c)| c > 0)
+            .collect();
+        let cmp = |a: &(BundleId, u32), b: &(BundleId, u32)| {
+            b.1.cmp(&a.1).then(a.0.cmp(&b.0))
+        };
+        if all.len() > m {
+            all.select_nth_unstable_by(m - 1, cmp);
+            all.truncate(m);
+        }
+        all.sort_unstable_by(cmp);
+        all
+    }
+
+    /// All candidate pairs for the greedy search: for each neuron its
+    /// top-`m` partners, deduped (i<j), sorted by co-count descending.
+    /// This is the kNN sparsification described in DESIGN.md — pairs
+    /// outside every neuron's top-m are nearly-always-zero co-count and
+    /// tie at dist≈1, so they cannot beat any retained pair.
+    pub fn candidate_pairs(&self, m: usize) -> Vec<(BundleId, BundleId, u32)> {
+        self.candidate_pairs_parallel(m, 1)
+    }
+
+    /// `candidate_pairs` with the O(n²) co-count scan sharded over
+    /// `threads` workers (§Perf: this scan dominates the offline search;
+    /// sharding by neuron range is deterministic — results are merged and
+    /// globally re-sorted, so the output is identical to the serial path).
+    pub fn candidate_pairs_parallel(
+        &self,
+        m: usize,
+        threads: usize,
+    ) -> Vec<(BundleId, BundleId, u32)> {
+        let n = self.n_neurons as u32;
+        let threads = threads.clamp(1, n.max(1) as usize);
+        let shard = |lo: u32, hi: u32| -> Vec<(BundleId, BundleId, u32)> {
+            let mut out = Vec::with_capacity(((hi - lo) as usize) * m);
+            // §Perf: reuse one scratch buffer across neurons (the naive
+            // per-neuron Vec allocation dominated the scan at 16k-neuron
+            // layers) and hoist row(i) out of the j loop.
+            let mut scratch: Vec<(BundleId, u32)> = Vec::with_capacity(self.n_neurons);
+            let cmp = |a: &(BundleId, u32), b: &(BundleId, u32)| {
+                b.1.cmp(&a.1).then(a.0.cmp(&b.0))
+            };
+            for i in lo..hi {
+                scratch.clear();
+                let row_i = self.row(i as usize);
+                for j in 0..n {
+                    if j == i {
+                        continue;
+                    }
+                    let row_j = self.row(j as usize);
+                    let mut c = 0u32;
+                    for (x, y) in row_i.iter().zip(row_j) {
+                        c += (x & y).count_ones();
+                    }
+                    if c > 0 {
+                        scratch.push((j, c));
+                    }
+                }
+                if scratch.len() > m {
+                    scratch.select_nth_unstable_by(m - 1, cmp);
+                    scratch.truncate(m);
+                }
+                for &(j, c) in scratch.iter() {
+                    let (a, b) = if i < j { (i, j) } else { (j, i) };
+                    out.push((a, b, c));
+                }
+            }
+            out
+        };
+        let mut pairs: Vec<(BundleId, BundleId, u32)> = if threads == 1 {
+            shard(0, n)
+        } else {
+            let chunk = n.div_ceil(threads as u32).max(1);
+            let shards: Vec<Vec<_>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..threads as u32)
+                    .map(|t| {
+                        let lo = t * chunk;
+                        let hi = ((t + 1) * chunk).min(n);
+                        scope.spawn(move || if lo < hi { shard(lo, hi) } else { Vec::new() })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            shards.into_iter().flatten().collect()
+        };
+        pairs.sort_unstable();
+        pairs.dedup();
+        pairs.sort_unstable_by(|a, b| b.2.cmp(&a.2).then((a.0, a.1).cmp(&(b.0, b.1))));
+        pairs
+    }
+
+    /// Figure-6 statistic: mean co-activation "contrast" — the ratio of
+    /// the average top-partner co-count to the average random-pair
+    /// co-count. >> 1 means strong visible block structure.
+    pub fn contrast(&self, sample: usize, seed: u64) -> f64 {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let mut top = 0.0;
+        let mut rnd = 0.0;
+        let mut cnt = 0.0;
+        for _ in 0..sample {
+            let i = rng.below(self.n_neurons) as u32;
+            let partners = self.top_partners(i, 1);
+            if let Some(&(_, c)) = partners.first() {
+                top += c as f64;
+                let j = rng.below(self.n_neurons) as u32;
+                rnd += self.co_count(i, j) as f64;
+                cnt += 1.0;
+            }
+        }
+        if cnt == 0.0 || rnd == 0.0 { f64::INFINITY } else { top / rnd }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(sets: &[&[u32]]) -> CoactStats {
+        CoactStats::from_sets(8, sets.iter().copied())
+    }
+
+    #[test]
+    fn freq_and_cocount() {
+        let s = stats(&[&[0, 1, 2], &[0, 1], &[3]]);
+        assert_eq!(s.freq(0), 2);
+        assert_eq!(s.freq(1), 2);
+        assert_eq!(s.freq(3), 1);
+        assert_eq!(s.co_count(0, 1), 2);
+        assert_eq!(s.co_count(0, 3), 0);
+        assert_eq!(s.co_count(2, 1), 1);
+    }
+
+    #[test]
+    fn probabilities() {
+        let s = stats(&[&[0, 1], &[0]]);
+        // total freq = 3; P(0) = 2/3
+        assert!((s.p_i(0) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((s.p_ij(0, 1) - 0.5).abs() < 1e-12);
+        assert!((s.dist(0, 1) - 0.5).abs() < 1e-12);
+        assert_eq!(s.dist(0, 3), 1.0);
+    }
+
+    #[test]
+    fn top_partners_ordering() {
+        let s = stats(&[&[0, 1, 2], &[0, 1], &[0, 2], &[0, 1]]);
+        let p = s.top_partners(0, 2);
+        assert_eq!(p[0], (1, 3));
+        assert_eq!(p[1], (2, 2));
+    }
+
+    #[test]
+    fn candidate_pairs_dedup_and_order() {
+        let s = stats(&[&[0, 1, 2], &[0, 1], &[1, 2]]);
+        let pairs = s.candidate_pairs(4);
+        // each unordered pair appears once
+        let mut seen = std::collections::HashSet::new();
+        for &(a, b, _) in &pairs {
+            assert!(a < b);
+            assert!(seen.insert((a, b)));
+        }
+        // sorted by count desc
+        assert!(pairs.windows(2).all(|w| w[0].2 >= w[1].2));
+    }
+
+    #[test]
+    fn more_than_64_tokens() {
+        // exercise multi-word bitsets
+        let sets: Vec<Vec<u32>> = (0..130).map(|t| vec![(t % 8) as u32, 7]).collect();
+        let refs: Vec<&[u32]> = sets.iter().map(|s| s.as_slice()).collect();
+        let s = CoactStats::from_sets(8, refs.iter().copied());
+        assert_eq!(s.n_tokens(), 130);
+        assert_eq!(s.freq(7), 130);
+        // neuron 0 fires on tokens 0,8,16,... => 17 times; 7 always co-fires
+        assert_eq!(s.co_count(0, 7), s.freq(0));
+    }
+
+    #[test]
+    fn contrast_high_for_correlated_trace() {
+        use crate::trace::generator::{DatasetProfile, LayerTraceGen};
+        let mut g = LayerTraceGen::new(1024, 100, &DatasetProfile::alpaca(), 3, 0, 11);
+        let sets: Vec<Vec<u32>> = (0..256).map(|_| g.sample()).collect();
+        let refs: Vec<&[u32]> = sets.iter().map(|s| s.as_slice()).collect();
+        let s = CoactStats::from_sets(1024, refs.iter().copied());
+        let c = s.contrast(64, 1);
+        assert!(c > 3.0, "contrast={c}");
+    }
+}

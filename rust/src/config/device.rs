@@ -1,0 +1,165 @@
+//! Smartphone device models — paper Table 2.
+//!
+//! The UFS parameters are calibrated so that the simulated
+//! bandwidth-vs-I/O-size curve reproduces the paper's Figure 4:
+//! throughput is near-linear in continuous read size below ~24 KB
+//! (IOPS-bound: each command costs a fixed service slot on the device)
+//! and saturates at the interface's sustained rate beyond that.
+//!
+//! The service model (see flash::UfsSim) is
+//! `t(cmd of s bytes) = cmd_latency + s / sat_bandwidth`, executed
+//! serially by the device with a `queue_depth`-entry command queue that
+//! pipelines host submission. The IOPS/bandwidth crossover point is
+//! `cmd_latency * sat_bandwidth` ≈ 24 KB for UFS 4.0.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UfsGeneration {
+    Ufs31,
+    Ufs40,
+}
+
+#[derive(Clone, Debug)]
+pub struct DeviceConfig {
+    pub name: &'static str,
+    pub soc: &'static str,
+    pub dram_gb: usize,
+    pub flash_gb: usize,
+    pub ufs: UfsGeneration,
+    /// Sustained (saturated) read bandwidth, bytes/sec.
+    pub sat_bandwidth: f64,
+    /// Fixed per-command device service latency, nanoseconds.
+    pub cmd_latency_ns: f64,
+    /// Host-side submission overhead per command, nanoseconds (pipelined
+    /// across the command queue; scales inversely with SoC speed).
+    pub submit_overhead_ns: f64,
+    /// Synchronous (queue-depth-1) read latency, nanoseconds: the cost of
+    /// an mmap page-fault style read that cannot overlap in the command
+    /// queue. llama.cpp's offload path reads through mmap and pays this
+    /// per fault — the paper's Table 1 / Figure 10 llama.cpp numbers are
+    /// only explicable at this latency, not at queued-command cost.
+    pub sync_latency_ns: f64,
+    /// UFS command queue entries (the paper stresses this is only 32).
+    pub queue_depth: usize,
+    /// Relative SoC compute speed (OnePlus 12 = 1.0); scales compute
+    /// latency estimates in Table-1-style breakdowns.
+    pub soc_speed: f64,
+}
+
+impl DeviceConfig {
+    /// Steady-state bandwidth for continuous reads of `io_bytes`
+    /// (closed form of the flash sim; used for calibration tests).
+    pub fn bandwidth_at(&self, io_bytes: usize) -> f64 {
+        let t = self.cmd_latency_ns / 1e9 + io_bytes as f64 / self.sat_bandwidth;
+        io_bytes as f64 / t
+    }
+
+    /// I/O size where IOPS-bound turns bandwidth-bound (Figure 4's knee).
+    pub fn knee_bytes(&self) -> f64 {
+        self.cmd_latency_ns / 1e9 * self.sat_bandwidth
+    }
+
+    /// Max small-read IOPS (device-serialized).
+    pub fn max_iops(&self) -> f64 {
+        1e9 / self.cmd_latency_ns
+    }
+}
+
+/// Paper Table 2.
+pub fn devices() -> Vec<DeviceConfig> {
+    vec![
+        DeviceConfig {
+            name: "OnePlus 12",
+            soc: "Snapdragon 8 Gen 3",
+            dram_gb: 24,
+            flash_gb: 1024,
+            ufs: UfsGeneration::Ufs40,
+            sat_bandwidth: 2.9e9,
+            cmd_latency_ns: 8_500.0, // knee ~= 24.6 KB
+            submit_overhead_ns: 1_200.0,
+            sync_latency_ns: 110_000.0,
+            queue_depth: 32,
+            soc_speed: 1.0,
+        },
+        DeviceConfig {
+            name: "OnePlus Ace 3",
+            soc: "Snapdragon 8 Gen 2",
+            dram_gb: 16,
+            flash_gb: 512,
+            ufs: UfsGeneration::Ufs40,
+            sat_bandwidth: 2.9e9,
+            cmd_latency_ns: 8_500.0,
+            submit_overhead_ns: 1_450.0,
+            sync_latency_ns: 118_000.0,
+            queue_depth: 32,
+            soc_speed: 0.88,
+        },
+        DeviceConfig {
+            name: "OnePlus Ace 2",
+            soc: "Snapdragon 8+ Gen 1",
+            dram_gb: 16,
+            flash_gb: 512,
+            ufs: UfsGeneration::Ufs31,
+            sat_bandwidth: 1.45e9, // ~half of UFS 4.0, per paper Fig 16
+            cmd_latency_ns: 17_000.0,
+            submit_overhead_ns: 1_700.0,
+            sync_latency_ns: 160_000.0,
+            queue_depth: 32,
+            soc_speed: 0.78,
+        },
+    ]
+}
+
+pub fn device_by_name(name: &str) -> anyhow::Result<DeviceConfig> {
+    devices()
+        .into_iter()
+        .find(|d| d.name.eq_ignore_ascii_case(name))
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown device `{name}` (OnePlus 12|OnePlus Ace 3|OnePlus Ace 2)")
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_devices() {
+        let ds = devices();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds[0].dram_gb, 24);
+        assert_eq!(ds[2].ufs, UfsGeneration::Ufs31);
+        assert!(ds.iter().all(|d| d.queue_depth == 32));
+    }
+
+    #[test]
+    fn figure4_knee_near_24kb() {
+        let op12 = &devices()[0];
+        let knee = op12.knee_bytes();
+        assert!((20_000.0..30_000.0).contains(&knee), "knee={knee}");
+    }
+
+    #[test]
+    fn figure4_linear_region() {
+        // Below the knee, doubling I/O size ~doubles bandwidth.
+        let op12 = &devices()[0];
+        let b4 = op12.bandwidth_at(4 * 1024);
+        let b8 = op12.bandwidth_at(8 * 1024);
+        let ratio = b8 / b4;
+        assert!((1.6..2.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn figure4_saturation() {
+        let op12 = &devices()[0];
+        let b = op12.bandwidth_at(4 * 1024 * 1024);
+        assert!(b > 0.95 * op12.sat_bandwidth);
+    }
+
+    #[test]
+    fn ace2_roughly_half_of_op12() {
+        // Figure 16: OP Ace2 ~half the performance of OP12 on small reads.
+        let ds = devices();
+        let r = ds[0].bandwidth_at(8 * 1024) / ds[2].bandwidth_at(8 * 1024);
+        assert!((1.7..2.4).contains(&r), "ratio={r}");
+    }
+}

@@ -1,0 +1,57 @@
+//! Model geometries (paper Table 3), smartphone device models (Table 2),
+//! precision settings (Figure 17) and run configuration.
+
+mod device;
+mod model;
+mod run;
+
+pub use device::{DeviceConfig, UfsGeneration, devices, device_by_name};
+pub use model::{ModelConfig, models, model_by_name, opt_micro};
+pub use run::RunConfig;
+
+/// Floating-point precision of stored neurons (Figure 17 sweeps this).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    Fp32,
+    Fp16,
+    Int8,
+}
+
+impl Precision {
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            Precision::Fp32 => 4,
+            Precision::Fp16 => 2,
+            Precision::Int8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Fp16 => "fp16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "fp32" | "f32" => Ok(Precision::Fp32),
+            "fp16" | "f16" => Ok(Precision::Fp16),
+            "int8" | "i8" => Ok(Precision::Int8),
+            _ => anyhow::bail!("unknown precision `{s}` (fp32|fp16|int8)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_sizes() {
+        assert_eq!(Precision::Fp16.bytes_per_elem(), 2);
+        assert_eq!(Precision::parse("int8").unwrap(), Precision::Int8);
+        assert!(Precision::parse("fp64").is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Model geometries — paper Table 3 plus the AOT-served `opt-micro`.
+//!
+//! Only *geometry* matters for the I/O experiments (neuron count, neuron
+//! dimension, layer count, FFN linear-layer count, sparsity); weight
+//! values never influence read patterns. opt-micro additionally has real
+//! trained weights in `artifacts/` and runs through PJRT.
+
+use super::Precision;
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    /// Total parameter count (reporting only).
+    pub n_params: u64,
+    pub n_layers: usize,
+    /// FFN neurons (= bundles) per FFN block.
+    pub neurons_per_layer: usize,
+    /// Neuron (hidden) dimension.
+    pub neuron_dim: usize,
+    /// Linear layers bound into one neuron bundle: 2 for OPT (up+down),
+    /// 3 for Llama2/Mistral (gate+up+down).
+    pub ffn_linears: usize,
+    /// Average fraction of neurons activated per token (Table 3).
+    pub sparsity: f64,
+}
+
+impl ModelConfig {
+    /// Bytes of one neuron *bundle* at the given precision:
+    /// `ffn_linears` vectors of `neuron_dim` elements (+1 bias element).
+    pub fn bundle_bytes(&self, prec: Precision) -> usize {
+        (self.ffn_linears * self.neuron_dim + 1) * prec.bytes_per_elem()
+    }
+
+    /// Expected activated neurons per layer per token.
+    pub fn activated_per_layer(&self) -> usize {
+        ((self.neurons_per_layer as f64) * self.sparsity).round().max(1.0) as usize
+    }
+
+    /// Total FFN bundles across all layers.
+    pub fn total_neurons(&self) -> usize {
+        self.n_layers * self.neurons_per_layer
+    }
+
+    /// FFN FLOPs per token (dense): 2 * linears * neurons * dim per layer.
+    pub fn ffn_flops_dense(&self) -> f64 {
+        2.0 * self.ffn_linears as f64
+            * self.neurons_per_layer as f64
+            * self.neuron_dim as f64
+            * self.n_layers as f64
+    }
+
+    /// Non-FFN (attention etc.) FLOPs per token, crude transformer
+    /// estimate: 4 d² per layer projections x2 matmuls.
+    pub fn attn_flops(&self) -> f64 {
+        8.0 * (self.neuron_dim as f64).powi(2) * self.n_layers as f64
+    }
+}
+
+/// Paper Table 3.
+pub fn models() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig {
+            name: "OPT-350M",
+            n_params: 350_000_000,
+            n_layers: 24,
+            neurons_per_layer: 8_192 / 2, // 8192 total rows+cols = 4096 bundles
+            neuron_dim: 1024,
+            ffn_linears: 2,
+            sparsity: 0.0949,
+        },
+        ModelConfig {
+            name: "OPT-1.3B",
+            n_params: 1_300_000_000,
+            n_layers: 24,
+            neurons_per_layer: 16_384 / 2,
+            neuron_dim: 2048,
+            ffn_linears: 2,
+            sparsity: 0.0409,
+        },
+        ModelConfig {
+            name: "OPT-6.7B",
+            n_params: 6_700_000_000,
+            n_layers: 32,
+            neurons_per_layer: 32_768 / 2,
+            neuron_dim: 4096,
+            ffn_linears: 2,
+            sparsity: 0.0328,
+        },
+        ModelConfig {
+            name: "Llama2-7B",
+            n_params: 7_000_000_000,
+            n_layers: 32,
+            neurons_per_layer: 33_024 / 3,
+            neuron_dim: 4096,
+            ffn_linears: 3,
+            sparsity: 0.1388,
+        },
+        ModelConfig {
+            name: "Mistral-7B",
+            n_params: 7_300_000_000,
+            n_layers: 32,
+            neurons_per_layer: 43_008 / 3,
+            neuron_dim: 4096,
+            ffn_linears: 3,
+            sparsity: 0.6052,
+        },
+    ]
+}
+
+/// The PJRT-served end-to-end model (see python/compile/model.py).
+pub fn opt_micro() -> ModelConfig {
+    ModelConfig {
+        name: "opt-micro",
+        n_params: 600_000,
+        n_layers: 4,
+        neurons_per_layer: 512,
+        neuron_dim: 64,
+        ffn_linears: 2,
+        sparsity: 0.25,
+    }
+}
+
+pub fn model_by_name(name: &str) -> anyhow::Result<ModelConfig> {
+    if name == "opt-micro" {
+        return Ok(opt_micro());
+    }
+    models()
+        .into_iter()
+        .find(|m| m.name.eq_ignore_ascii_case(name))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown model `{name}` (OPT-350M|OPT-1.3B|OPT-6.7B|Llama2-7B|Mistral-7B|opt-micro)"
+            )
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+
+    #[test]
+    fn table3_geometries() {
+        let ms = models();
+        assert_eq!(ms.len(), 5);
+        let opt350 = &ms[0];
+        assert_eq!(opt350.n_layers, 24);
+        assert_eq!(opt350.neuron_dim, 1024);
+        // fp16 bundle ~ 4KB for OPT-350M (2 linears x 1024 dims x 2B)
+        let b = opt350.bundle_bytes(Precision::Fp16);
+        assert!((4_000..4_200).contains(&b), "bundle={b}");
+    }
+
+    #[test]
+    fn activated_counts() {
+        let m = model_by_name("Mistral-7B").unwrap();
+        let a = m.activated_per_layer();
+        assert!((8_600..8_700).contains(&a), "activated={a}");
+    }
+
+    #[test]
+    fn lookup_case_insensitive() {
+        assert!(model_by_name("opt-6.7b").is_ok());
+        assert!(model_by_name("gpt-5").is_err());
+    }
+
+    #[test]
+    fn opt_micro_matches_python_config() {
+        // Mirrors python/compile/model.py::ModelConfig defaults.
+        let m = opt_micro();
+        assert_eq!(m.n_layers, 4);
+        assert_eq!(m.neurons_per_layer, 512);
+        assert_eq!(m.neuron_dim, 64);
+    }
+}

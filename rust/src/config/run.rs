@@ -1,0 +1,126 @@
+//! Run configuration: ties a model geometry, device, precision, cache and
+//! pipeline knobs together. Loadable from JSON (examples/ and the CLI).
+
+use crate::util::json::Json;
+
+use super::{DeviceConfig, ModelConfig, Precision, device_by_name, model_by_name};
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: ModelConfig,
+    pub device: DeviceConfig,
+    pub precision: Precision,
+    /// Fraction of all FFN bundles that fit the DRAM cache (paper: 0.1).
+    pub cache_ratio: f64,
+    /// Access-collapse initial gap threshold in bundles (adapted online).
+    pub collapse_threshold: usize,
+    /// Enable RIPPLE's access collapse.
+    pub collapse: bool,
+    /// Cache admission policy: "linking" (RIPPLE), "s3fifo", "lru", "none".
+    pub cache_policy: String,
+    /// Placement policy: "ripple", "structural", "frequency", "llmflash".
+    pub placement: String,
+    /// RNG seed for workload generation.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            model: model_by_name("OPT-350M").unwrap(),
+            device: device_by_name("OnePlus 12").unwrap(),
+            precision: Precision::Fp16,
+            cache_ratio: 0.1,
+            collapse_threshold: 4,
+            collapse: true,
+            cache_policy: "linking".to_string(),
+            placement: "ripple".to_string(),
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let mut cfg = RunConfig::default();
+        if let Some(m) = j.get("model").and_then(Json::as_str) {
+            cfg.model = model_by_name(m)?;
+        }
+        if let Some(d) = j.get("device").and_then(Json::as_str) {
+            cfg.device = device_by_name(d)?;
+        }
+        if let Some(p) = j.get("precision").and_then(Json::as_str) {
+            cfg.precision = Precision::parse(p)?;
+        }
+        if let Some(v) = j.get("cache_ratio").and_then(Json::as_f64) {
+            anyhow::ensure!((0.0..=1.0).contains(&v), "cache_ratio out of [0,1]");
+            cfg.cache_ratio = v;
+        }
+        if let Some(v) = j.get("collapse_threshold").and_then(Json::as_usize) {
+            cfg.collapse_threshold = v;
+        }
+        if let Some(Json::Bool(b)) = j.get("collapse") {
+            cfg.collapse = *b;
+        }
+        if let Some(v) = j.get("cache_policy").and_then(Json::as_str) {
+            cfg.cache_policy = v.to_string();
+        }
+        if let Some(v) = j.get("placement").and_then(Json::as_str) {
+            cfg.placement = v.to_string();
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_f64) {
+            cfg.seed = v as u64;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_json_str(s: &str) -> anyhow::Result<Self> {
+        Self::from_json(&Json::parse(s)?)
+    }
+
+    /// DRAM cache capacity in bundles for this model.
+    pub fn cache_capacity_bundles(&self) -> usize {
+        (self.model.total_neurons() as f64 * self.cache_ratio) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.model.name, "OPT-350M");
+        assert!(c.collapse);
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let c = RunConfig::from_json_str(
+            r#"{"model": "Llama2-7B", "device": "OnePlus Ace 2",
+                "precision": "int8", "cache_ratio": 0.2,
+                "collapse": false, "placement": "structural", "seed": 7}"#,
+        )
+        .unwrap();
+        assert_eq!(c.model.name, "Llama2-7B");
+        assert_eq!(c.device.name, "OnePlus Ace 2");
+        assert_eq!(c.precision, Precision::Int8);
+        assert!(!c.collapse);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(RunConfig::from_json_str(r#"{"model": "nope"}"#).is_err());
+        assert!(RunConfig::from_json_str(r#"{"cache_ratio": 3.0}"#).is_err());
+    }
+
+    #[test]
+    fn cache_capacity() {
+        let mut c = RunConfig::default();
+        c.cache_ratio = 0.1;
+        let cap = c.cache_capacity_bundles();
+        assert_eq!(cap, (c.model.total_neurons() as f64 * 0.1) as usize);
+    }
+}

@@ -1,0 +1,133 @@
+//! Dynamic batcher: groups queued requests into engine-sized batches,
+//! dispatching when the batch fills or the oldest request has waited the
+//! deadline (vLLM-style size-or-timeout policy).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Engine batch capacity.
+    pub max_batch: usize,
+    /// Max time the oldest request may wait before dispatch.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 4, max_wait: Duration::from_millis(20) }
+    }
+}
+
+#[derive(Debug)]
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    queue: VecDeque<(T, Instant)>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch > 0);
+        Self { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, item: T, now: Instant) {
+        self.queue.push_back((item, now));
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Time the worker may sleep before a deadline dispatch is due.
+    pub fn next_deadline_in(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|(_, t)| {
+            let deadline = *t + self.cfg.max_wait;
+            deadline.saturating_duration_since(now)
+        })
+    }
+
+    /// Dispatch a batch if full or if the oldest request timed out.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Vec<T>> {
+        let full = self.queue.len() >= self.cfg.max_batch;
+        let due = self
+            .queue
+            .front()
+            .is_some_and(|(_, t)| now.duration_since(*t) >= self.cfg.max_wait);
+        if !full && !due {
+            return None;
+        }
+        let n = self.queue.len().min(self.cfg.max_batch);
+        Some(self.queue.drain(..n).map(|(x, _)| x).collect())
+    }
+
+    /// Drain everything (shutdown).
+    pub fn drain_all(&mut self) -> Vec<T> {
+        self.queue.drain(..).map(|(x, _)| x).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, ms: u64) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn dispatches_when_full() {
+        let now = Instant::now();
+        let mut b = Batcher::new(cfg(2, 1000));
+        b.push(1, now);
+        assert!(b.pop_ready(now).is_none());
+        b.push(2, now);
+        assert_eq!(b.pop_ready(now).unwrap(), vec![1, 2]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn dispatches_on_deadline() {
+        let now = Instant::now();
+        let mut b = Batcher::new(cfg(4, 10));
+        b.push(7, now);
+        assert!(b.pop_ready(now).is_none());
+        let later = now + Duration::from_millis(11);
+        assert_eq!(b.pop_ready(later).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn batch_caps_at_max() {
+        let now = Instant::now();
+        let mut b = Batcher::new(cfg(2, 0));
+        for i in 0..5 {
+            b.push(i, now);
+        }
+        assert_eq!(b.pop_ready(now).unwrap(), vec![0, 1]);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn deadline_hint() {
+        let now = Instant::now();
+        let mut b: Batcher<u32> = Batcher::new(cfg(4, 10));
+        assert!(b.next_deadline_in(now).is_none());
+        b.push(1, now);
+        let d = b.next_deadline_in(now + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let now = Instant::now();
+        let mut b = Batcher::new(cfg(8, 1000));
+        b.push(1, now);
+        b.push(2, now);
+        assert_eq!(b.drain_all(), vec![1, 2]);
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,319 @@
+//! L3 serving coordinator: request types, dynamic batcher, replica
+//! router, and the threaded serving loop.
+//!
+//! Topology: a single dispatcher thread runs the `Batcher` and `Router`;
+//! each worker thread owns one `Engine` (PJRT handles are not `Send`, so
+//! engines are constructed inside their threads). Requests enter through
+//! `Server::submit`, which returns a oneshot-style receiver for the
+//! response. Channels are std `mpsc` — the offline environment has no
+//! tokio, and the serving loop is CPU-bound on PJRT compute anyway.
+//!
+//! Batching note: batched sequences share the decode position (the AOT
+//! attention artifact takes one `pos` per batch), so shorter prompts are
+//! right-padded with spaces during the longer prompts' prefill. Padding
+//! only feeds a slot's *own* sequence; slots never attend to each other.
+
+mod batcher;
+mod router;
+pub mod tcp;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use router::Router;
+pub use tcp::{TcpClient, TcpFrontend};
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::engine::{Engine, EngineOptions};
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u8>,
+    pub max_new: usize,
+}
+
+/// A completed generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub generated: Vec<u8>,
+    /// Wall-clock time inside the engine (compute; CPU-PJRT).
+    pub engine_ms: f64,
+    /// Queueing delay before the batch started.
+    pub queue_ms: f64,
+    /// Simulated flash I/O time attributed to this batch, ms.
+    pub sim_io_ms: f64,
+    /// Which worker served it.
+    pub worker: usize,
+    /// Batch size it was served in.
+    pub batch_size: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServerOptions {
+    pub engine: EngineOptions,
+    pub batcher: BatcherConfig,
+    pub n_workers: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        let engine = EngineOptions { batch: 4, ..Default::default() };
+        Self { engine, batcher: BatcherConfig::default(), n_workers: 1 }
+    }
+}
+
+struct Pending {
+    req: Request,
+    enqueued: Instant,
+    reply: mpsc::Sender<Response>,
+}
+
+enum Ctl {
+    Submit(Pending),
+    Shutdown,
+}
+
+struct WorkerMsg {
+    batch: Vec<Pending>,
+}
+
+/// Aggregate serving statistics (filled at shutdown).
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub tokens: u64,
+    pub wall_s: f64,
+}
+
+impl ServerStats {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_s == 0.0 { 0.0 } else { self.tokens as f64 / self.wall_s }
+    }
+}
+
+pub struct Server {
+    ctl: mpsc::Sender<Ctl>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+    started: Instant,
+    counters: std::sync::Arc<Counters>,
+}
+
+#[derive(Default)]
+struct Counters {
+    requests: std::sync::atomic::AtomicU64,
+    tokens: std::sync::atomic::AtomicU64,
+}
+
+impl Server {
+    /// Start the dispatcher + `n_workers` engine workers. Fails fast if
+    /// any worker cannot load the artifacts.
+    pub fn start(artifacts_dir: std::path::PathBuf, opts: ServerOptions) -> Result<Self> {
+        anyhow::ensure!(opts.n_workers > 0, "need at least one worker");
+        let (ctl_tx, ctl_rx) = mpsc::channel::<Ctl>();
+        let counters = std::sync::Arc::new(Counters::default());
+
+        // spawn workers; each confirms engine load via a ready channel
+        let mut worker_txs = Vec::new();
+        let mut readies = Vec::new();
+        for wid in 0..opts.n_workers {
+            let (wtx, wrx) = mpsc::channel::<WorkerMsg>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let dir = artifacts_dir.clone();
+            let eopts = opts.engine.clone();
+            let ctrs = counters.clone();
+            std::thread::Builder::new()
+                .name(format!("ripple-worker-{wid}"))
+                .spawn(move || worker_loop(wid, dir, eopts, wrx, ready_tx, ctrs))
+                .context("spawning worker")?;
+            readies.push(ready_rx);
+            worker_txs.push(wtx);
+        }
+        for (wid, r) in readies.into_iter().enumerate() {
+            r.recv()
+                .with_context(|| format!("worker {wid} died during startup"))??;
+        }
+
+        // dispatcher thread: batcher + router
+        let bcfg = opts.batcher.clone();
+        let dispatcher = std::thread::Builder::new()
+            .name("ripple-dispatch".into())
+            .spawn(move || dispatcher_loop(ctl_rx, worker_txs, bcfg))
+            .context("spawning dispatcher")?;
+
+        Ok(Self {
+            ctl: ctl_tx,
+            dispatcher: Some(dispatcher),
+            next_id: std::sync::atomic::AtomicU64::new(1),
+            started: Instant::now(),
+            counters,
+        })
+    }
+
+    /// Submit a prompt; returns a receiver that yields the Response.
+    pub fn submit(&self, prompt: Vec<u8>, max_new: usize) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let pending = Pending {
+            req: Request { id, prompt, max_new },
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        // If the dispatcher is gone the receiver will simply see EOF.
+        let _ = self.ctl.send(Ctl::Submit(pending));
+        rx
+    }
+
+    /// Stop accepting work, flush the queue, join all threads.
+    pub fn shutdown(mut self) -> ServerStats {
+        let _ = self.ctl.send(Ctl::Shutdown);
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        ServerStats {
+            requests: self
+                .counters
+                .requests
+                .load(std::sync::atomic::Ordering::Relaxed),
+            tokens: self.counters.tokens.load(std::sync::atomic::Ordering::Relaxed),
+            wall_s: self.started.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+fn dispatcher_loop(
+    ctl: mpsc::Receiver<Ctl>,
+    workers: Vec<mpsc::Sender<WorkerMsg>>,
+    bcfg: BatcherConfig,
+) {
+    let max_batch = bcfg.max_batch;
+    let mut batcher: Batcher<Pending> = Batcher::new(bcfg);
+    let mut router = Router::new(workers.len());
+    loop {
+        // Sleep until either new work or the oldest request's deadline.
+        let timeout = batcher
+            .next_deadline_in(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match ctl.recv_timeout(timeout) {
+            Ok(Ctl::Submit(p)) => batcher.push(p, Instant::now()),
+            Ok(Ctl::Shutdown) => break,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        while let Some(batch) = batcher.pop_ready(Instant::now()) {
+            let w = router.dispatch();
+            if workers[w].send(WorkerMsg { batch }).is_err() {
+                // worker died; drop its requests (receivers see EOF)
+            }
+            router.complete(w); // synchronous send: account immediately
+        }
+    }
+    // flush remaining queue on shutdown
+    let mut rest = batcher.drain_all();
+    while !rest.is_empty() {
+        let take = rest.len().min(max_batch);
+        let batch: Vec<Pending> = rest.drain(..take).collect();
+        let w = router.dispatch();
+        let _ = workers[w].send(WorkerMsg { batch });
+        router.complete(w);
+    }
+    // dropping worker_txs closes the workers
+}
+
+fn worker_loop(
+    wid: usize,
+    dir: std::path::PathBuf,
+    opts: EngineOptions,
+    rx: mpsc::Receiver<WorkerMsg>,
+    ready: mpsc::Sender<Result<()>>,
+    counters: std::sync::Arc<Counters>,
+) {
+    let mut engine = match Engine::load(&dir, opts) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(WorkerMsg { batch }) = rx.recv() {
+        let started = Instant::now();
+        let max_new = batch.iter().map(|p| p.req.max_new).max().unwrap_or(0);
+        let prompts: Vec<Vec<u8>> = batch.iter().map(|p| p.req.prompt.clone()).collect();
+        let io_before = engine.sim.clock_ns();
+        let result = engine.generate(&prompts, max_new, false);
+        let engine_ms = started.elapsed().as_secs_f64() * 1e3;
+        let sim_io_ms = (engine.sim.clock_ns() - io_before) / 1e6;
+        match result {
+            Ok(outs) => {
+                for (p, out) in batch.into_iter().zip(outs) {
+                    let mut generated = out;
+                    generated.truncate(p.req.max_new);
+                    counters
+                        .requests
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    counters
+                        .tokens
+                        .fetch_add(generated.len() as u64, std::sync::atomic::Ordering::Relaxed);
+                    let _ = p.reply.send(Response {
+                        id: p.req.id,
+                        generated,
+                        engine_ms,
+                        queue_ms: started.duration_since(p.enqueued).as_secs_f64() * 1e3,
+                        sim_io_ms,
+                        worker: wid,
+                        batch_size: prompts.len(),
+                    });
+                }
+            }
+            Err(err) => {
+                log::error!("worker {wid}: generation failed: {err:#}");
+                // receivers see EOF
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifacts_dir};
+
+    #[test]
+    fn serves_concurrent_requests() {
+        let dir = default_artifacts_dir();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let server = Server::start(dir, ServerOptions::default()).unwrap();
+        let rxs: Vec<_> = (0..6)
+            .map(|i| server.submit(format!("req {i} the quick").into_bytes(), 4))
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            assert_eq!(resp.generated.len(), 4);
+            assert!(resp.engine_ms > 0.0);
+            assert!(resp.sim_io_ms >= 0.0);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 6);
+        assert_eq!(stats.tokens, 24);
+        assert!(stats.tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn startup_fails_without_artifacts() {
+        let err = Server::start("/nonexistent".into(), ServerOptions::default());
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! Replica router: least-loaded dispatch across engine workers, with
+//! round-robin tie-breaking. Each worker owns one Engine (PJRT handles
+//! are not Send, so engines live inside their worker threads).
+
+/// Tracks outstanding batches per worker and picks the next target.
+#[derive(Clone, Debug)]
+pub struct Router {
+    inflight: Vec<usize>,
+    rr: usize,
+}
+
+impl Router {
+    pub fn new(n_workers: usize) -> Self {
+        assert!(n_workers > 0);
+        Self { inflight: vec![0; n_workers], rr: 0 }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Pick the least-loaded worker (round-robin among ties) and account
+    /// one in-flight batch against it.
+    pub fn dispatch(&mut self) -> usize {
+        let n = self.inflight.len();
+        let mut best = self.rr % n;
+        for k in 0..n {
+            let i = (self.rr + k) % n;
+            if self.inflight[i] < self.inflight[best] {
+                best = i;
+            }
+        }
+        self.rr = (best + 1) % n;
+        self.inflight[best] += 1;
+        best
+    }
+
+    /// Mark one batch done on `worker`.
+    pub fn complete(&mut self, worker: usize) {
+        assert!(self.inflight[worker] > 0, "completion without dispatch");
+        self.inflight[worker] -= 1;
+    }
+
+    pub fn inflight(&self, worker: usize) -> usize {
+        self.inflight[worker]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robins_when_balanced() {
+        let mut r = Router::new(3);
+        let picks: Vec<usize> = (0..3).map(|_| r.dispatch()).collect();
+        let mut sorted = picks.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn prefers_least_loaded() {
+        let mut r = Router::new(2);
+        let a = r.dispatch();
+        let _b = r.dispatch();
+        r.complete(a); // a now has 0 in flight, other has 1
+        assert_eq!(r.dispatch(), a);
+    }
+
+    #[test]
+    fn inflight_accounting() {
+        let mut r = Router::new(2);
+        let w = r.dispatch();
+        assert_eq!(r.inflight(w), 1);
+        r.complete(w);
+        assert_eq!(r.inflight(w), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "completion without dispatch")]
+    fn complete_requires_dispatch() {
+        let mut r = Router::new(1);
+        r.complete(0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Tiny f32 host-side linear algebra for the coordinator's *selection*
+//! work (layernorm + score matmuls + argmax). All FLOP-heavy model math
+//! runs in the PJRT artifacts; these helpers only size with the neuron
+//! count, mirroring how serving stacks keep routing math on the host.
+
+/// y = layernorm(x) * g + b, row-wise over a (rows, d) matrix.
+pub fn layer_norm(x: &[f32], rows: usize, d: usize, g: &[f32], b: &[f32], eps: f32) -> Vec<f32> {
+    assert_eq!(x.len(), rows * d);
+    assert_eq!(g.len(), d);
+    assert_eq!(b.len(), d);
+    let mut out = vec![0f32; rows * d];
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for i in 0..d {
+            out[r * d + i] = (row[i] - mean) * inv * g[i] + b[i];
+        }
+    }
+    out
+}
+
+/// C(rows, n) = A(rows, d) @ B(n, d)^T (+ bias[n] if given).
+pub fn matmul_nt(a: &[f32], rows: usize, d: usize, b: &[f32], n: usize, bias: Option<&[f32]>) -> Vec<f32> {
+    assert_eq!(a.len(), rows * d);
+    assert_eq!(b.len(), n * d);
+    let mut out = vec![0f32; rows * n];
+    for r in 0..rows {
+        let arow = &a[r * d..(r + 1) * d];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * d..(j + 1) * d];
+            let mut acc = 0f32;
+            for k in 0..d {
+                acc += arow[k] * brow[k];
+            }
+            orow[j] = acc + bias.map_or(0.0, |bb| bb[j]);
+        }
+    }
+    out
+}
+
+/// C(rows, n) = A(rows, d) @ B(d, n) — row-major B.
+pub fn matmul_nn(a: &[f32], rows: usize, d: usize, b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), rows * d);
+    assert_eq!(b.len(), d * n);
+    let mut out = vec![0f32; rows * n];
+    for r in 0..rows {
+        let arow = &a[r * d..(r + 1) * d];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for k in 0..d {
+            let av = arow[k];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[k * n..(k + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_norm_normalizes() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        let y = layer_norm(&x, 1, 4, &g, &b, 1e-5);
+        let mean: f32 = y.iter().sum::<f32>() / 4.0;
+        let var: f32 = y.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn matmul_nt_small() {
+        // A = [[1,2]], B = [[3,4],[5,6]] -> [1*3+2*4, 1*5+2*6] = [11, 17]
+        let c = matmul_nt(&[1.0, 2.0], 1, 2, &[3.0, 4.0, 5.0, 6.0], 2, None);
+        assert_eq!(c, vec![11.0, 17.0]);
+        let cb = matmul_nt(&[1.0, 2.0], 1, 2, &[3.0, 4.0, 5.0, 6.0], 2, Some(&[1.0, -1.0]));
+        assert_eq!(cb, vec![12.0, 16.0]);
+    }
+
+    #[test]
+    fn matmul_nn_matches_nt_via_transpose() {
+        // B(d,n) vs Bt(n,d)
+        let a = [0.5, -1.0, 2.0]; // 1x3
+        let b_nn = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3x2 row-major
+        let b_nt = [1.0, 3.0, 5.0, 2.0, 4.0, 6.0]; // 2x3 (transposed)
+        let c1 = matmul_nn(&a, 1, 3, &b_nn, 2);
+        let c2 = matmul_nt(&a, 1, 3, &b_nt, 2, None);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

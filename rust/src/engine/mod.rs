@@ -1,0 +1,720 @@
+//! The opt-micro inference engine: real weights in simulated flash, real
+//! compute through PJRT artifacts, RIPPLE's I/O pipeline in between.
+//!
+//! Per decode step and layer:
+//!   1. attention block        -> PJRT `attn_b{B}` artifact
+//!   2. activation selection   -> host (oracle scores) or PJRT
+//!                                `predictor_b{B}` (Deja-Vu low-rank)
+//!   3. I/O                    -> IoPipeline: cache filter, run planning,
+//!                                access collapse, UfsSim read of the
+//!                                *actual bundle bytes*
+//!   4. gather + sparse FFN    -> PJRT `ffn_sparse_b{B}` artifact over
+//!                                the gathered top-K bundle slots
+//!   5. final head             -> PJRT `head_b{B}`
+//!
+//! Bytes for missed bundles come from the flash image read-back (so the
+//! placement/planner/reader path is on the numerical path); cached
+//! bundles come from the DRAM-resident copy, which is what a cache *is*.
+
+mod linalg;
+mod weights;
+
+pub use linalg::{argmax, layer_norm, matmul_nn, matmul_nt};
+pub use weights::{Golden, ModelMeta, Tensor, Weights};
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::cache::NeuronCache;
+use crate::config::{DeviceConfig, Precision};
+use crate::flash::UfsSim;
+use crate::metrics::RunMetrics;
+use crate::neuron::{BundleId, Layout, NeuronSpace, Slot};
+use crate::pipeline::{IoPipeline, PipelineConfig};
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Executable, Runtime};
+use crate::trace::Trace;
+
+/// How activated neurons are chosen per token.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Selection {
+    /// Ground truth: sign of the true FFN pre-activation (host-computed).
+    Oracle,
+    /// Low-rank predictor artifact; scores above `threshold` activate.
+    Predictor { threshold: f32 },
+}
+
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    pub batch: usize,
+    pub selection: Selection,
+    pub device: DeviceConfig,
+    pub cache_ratio: f64,
+    pub cache_policy: String,
+    pub collapse: bool,
+    pub seed: u64,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self {
+            batch: 1,
+            selection: Selection::Oracle,
+            device: crate::config::devices()[0].clone(),
+            cache_ratio: 0.1,
+            cache_policy: "linking".to_string(),
+            collapse: true,
+            seed: 42,
+        }
+    }
+}
+
+struct LayerParams {
+    // attention-side literals (DRAM-resident, prefetched — paper §4.1)
+    ln1_g: xla::Literal,
+    ln1_b: xla::Literal,
+    wq: xla::Literal,
+    bq: xla::Literal,
+    wk: xla::Literal,
+    bk: xla::Literal,
+    wv: xla::Literal,
+    bv: xla::Literal,
+    wo: xla::Literal,
+    bo: xla::Literal,
+    ln2_g: xla::Literal,
+    ln2_b: xla::Literal,
+    bd: xla::Literal,
+    // host copies for selection + canonical bundle source
+    ln2_g_h: Vec<f32>,
+    ln2_b_h: Vec<f32>,
+    u: Vec<f32>,  // (N, D)
+    bu: Vec<f32>, // (N,)
+    dn: Vec<f32>, // (N, D)
+    p1: xla::Literal,
+    p2: xla::Literal,
+}
+
+pub struct Engine {
+    pub meta: ModelMeta,
+    opts: EngineOptions,
+    attn: Rc<Executable>,
+    ffn_sparse: Rc<Executable>,
+    ffn_dense: Rc<Executable>,
+    predictor: Rc<Executable>,
+    head: Rc<Executable>,
+    layers: Vec<LayerParams>,
+    embed: Vec<f32>,     // (V, D)
+    pos_embed: Vec<f32>, // (S, D)
+    ln_f_g: xla::Literal,
+    ln_f_b: xla::Literal,
+    embed_lit: xla::Literal,
+    // serving state
+    kv: Vec<(xla::Literal, xla::Literal)>,
+    pos: usize,
+    // I/O state
+    space: NeuronSpace,
+    pub sim: UfsSim,
+    pipeline: IoPipeline,
+    pub io_metrics: RunMetrics,
+    /// When set, true activation sets are recorded per decode step.
+    recorder: Option<Trace>,
+    scratch: Vec<u8>,
+}
+
+impl Engine {
+    pub fn load(artifacts_dir: impl AsRef<Path>, opts: EngineOptions) -> Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        let mut rt = Runtime::cpu(dir)?;
+        let meta = ModelMeta::load(dir)?;
+        let w = Weights::load(dir)?;
+        anyhow::ensure!(
+            meta.batch_variants.contains(&opts.batch),
+            "batch {} not among compiled variants {:?}",
+            opts.batch,
+            meta.batch_variants
+        );
+        let b = opts.batch;
+        let attn = rt.load(&format!("attn_b{b}"))?;
+        let ffn_sparse = rt.load(&format!("ffn_sparse_b{b}"))?;
+        let ffn_dense = rt.load(&format!("ffn_dense_b{b}"))?;
+        let predictor = rt.load(&format!("predictor_b{b}"))?;
+        let head = rt.load(&format!("head_b{b}"))?;
+
+        let d = meta.d_model as i64;
+        let n = meta.d_ffn;
+        let r = meta.pred_rank as i64;
+        let vecl = |t: &Tensor| lit_f32(&t.data, &[t.numel() as i64]);
+        let matl = |t: &Tensor, dims: &[i64]| lit_f32(&t.data, dims);
+
+        let mut layers = Vec::with_capacity(meta.n_layers);
+        for li in 0..meta.n_layers {
+            let g = |name: &str| w.get(&format!("layer{li}.{name}"));
+            layers.push(LayerParams {
+                ln1_g: vecl(g("ln1_g")?)?,
+                ln1_b: vecl(g("ln1_b")?)?,
+                wq: matl(g("wq")?, &[d, d])?,
+                bq: vecl(g("bq")?)?,
+                wk: matl(g("wk")?, &[d, d])?,
+                bk: vecl(g("bk")?)?,
+                wv: matl(g("wv")?, &[d, d])?,
+                bv: vecl(g("bv")?)?,
+                wo: matl(g("wo")?, &[d, d])?,
+                bo: vecl(g("bo")?)?,
+                ln2_g: vecl(g("ln2_g")?)?,
+                ln2_b: vecl(g("ln2_b")?)?,
+                bd: vecl(g("bd")?)?,
+                ln2_g_h: g("ln2_g")?.data.clone(),
+                ln2_b_h: g("ln2_b")?.data.clone(),
+                u: g("u")?.data.clone(),
+                bu: g("bu")?.data.clone(),
+                dn: g("dn")?.data.clone(),
+                p1: matl(g("p1")?, &[d, r])?,
+                p2: matl(g("p2")?, &[r, n as i64])?,
+            });
+        }
+
+        let bundle_bytes = (2 * meta.d_model + 1) * Precision::Fp32.bytes_per_elem();
+        let space = NeuronSpace::new(meta.n_layers, n, bundle_bytes);
+        let layouts = vec![Layout::identity(n); meta.n_layers];
+        let image = build_flash_image(&space, &layouts, &layers);
+        let sim = UfsSim::with_image(opts.device.clone(), image);
+
+        let cache_cap = (space.total() as f64 * opts.cache_ratio) as usize;
+        let cache = NeuronCache::from_config(&opts.cache_policy, cache_cap, opts.seed)?;
+        let pcfg = PipelineConfig {
+            bundle_bytes,
+            collapse: opts.collapse,
+            initial_threshold: 4,
+            max_threshold: ((opts.device.knee_bytes() / bundle_bytes as f64) as u32).max(1),
+            window: 16,
+            sub_reads_per_run: 1,
+        };
+        let pipeline = IoPipeline::new(pcfg, space.clone(), layouts, cache);
+
+        let kv = Self::fresh_kv(&meta, b)?;
+        Ok(Self {
+            attn,
+            ffn_sparse,
+            ffn_dense,
+            predictor,
+            head,
+            embed: w.get("embed")?.data.clone(),
+            pos_embed: w.get("pos_embed")?.data.clone(),
+            ln_f_g: vecl(w.get("ln_f_g")?)?,
+            ln_f_b: vecl(w.get("ln_f_b")?)?,
+            embed_lit: matl(w.get("embed")?, &[meta.vocab as i64, d])?,
+            layers,
+            kv,
+            pos: 0,
+            space,
+            sim,
+            pipeline,
+            io_metrics: RunMetrics::new(),
+            recorder: None,
+            scratch: Vec::new(),
+            meta,
+            opts,
+        })
+    }
+
+    fn fresh_kv(meta: &ModelMeta, b: usize) -> Result<Vec<(xla::Literal, xla::Literal)>> {
+        let zeros = vec![0f32; b * meta.max_seq * meta.d_model];
+        let dims = [b as i64, meta.max_seq as i64, meta.d_model as i64];
+        (0..meta.n_layers)
+            .map(|_| Ok((lit_f32(&zeros, &dims)?, lit_f32(&zeros, &dims)?)))
+            .collect()
+    }
+
+    pub fn batch(&self) -> usize {
+        self.opts.batch
+    }
+
+    pub fn options(&self) -> &EngineOptions {
+        &self.opts
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn layouts(&self) -> &[Layout] {
+        self.pipeline.layouts()
+    }
+
+    /// Reset the KV cache / position for a new request batch.
+    pub fn reset_sequence(&mut self) -> Result<()> {
+        self.kv = Self::fresh_kv(&self.meta, self.opts.batch)?;
+        self.pos = 0;
+        Ok(())
+    }
+
+    /// Install new flash layouts (the offline stage's output): rewrites
+    /// the flash image and rebuilds the pipeline (cache is cold after a
+    /// re-placement, as in the paper's offline->online handoff).
+    pub fn set_layouts(&mut self, layouts: Vec<Layout>) -> Result<()> {
+        anyhow::ensure!(layouts.len() == self.meta.n_layers, "layout count mismatch");
+        let image = build_flash_image(&self.space, &layouts, &self.layers);
+        self.sim = UfsSim::with_image(self.opts.device.clone(), image);
+        let cache_cap = (self.space.total() as f64 * self.opts.cache_ratio) as usize;
+        let cache =
+            NeuronCache::from_config(&self.opts.cache_policy, cache_cap, self.opts.seed)?;
+        let pcfg = self.pipeline.config().clone();
+        self.pipeline = IoPipeline::new(pcfg, self.space.clone(), layouts, cache);
+        self.io_metrics = RunMetrics::new();
+        Ok(())
+    }
+
+    /// Start/stop recording ground-truth activation traces.
+    pub fn record_traces(&mut self, on: bool) {
+        self.recorder = if on {
+            Some(Trace::new(self.meta.n_layers, self.meta.d_ffn))
+        } else {
+            None
+        };
+    }
+
+    pub fn take_trace(&mut self) -> Option<Trace> {
+        self.recorder.take()
+    }
+
+    fn embed_ids(&self, ids: &[u8]) -> Vec<f32> {
+        let d = self.meta.d_model;
+        let mut x = vec![0f32; ids.len() * d];
+        for (r, &id) in ids.iter().enumerate() {
+            let e = &self.embed[id as usize * d..(id as usize + 1) * d];
+            let p = &self.pos_embed[self.pos * d..(self.pos + 1) * d];
+            for i in 0..d {
+                x[r * d + i] = e[i] + p[i];
+            }
+        }
+        x
+    }
+
+    /// Oracle pre-activation scores for one layer: ln(x) @ U^T + bu.
+    fn oracle_scores(&self, layer: usize, x: &[f32]) -> Vec<f32> {
+        let (b, d, n) = (self.opts.batch, self.meta.d_model, self.meta.d_ffn);
+        let lp = &self.layers[layer];
+        let xn = layer_norm(x, b, d, &lp.ln2_g_h, &lp.ln2_b_h, 1e-5);
+        matmul_nt(&xn, b, d, &lp.u, n, Some(&lp.bu))
+    }
+
+    /// Select activated bundles from per-batch scores (union over batch,
+    /// capped at top_k by best score).
+    fn select(&self, scores: &[f32], threshold: f32) -> Vec<BundleId> {
+        let (b, n, k) = (self.opts.batch, self.meta.d_ffn, self.meta.top_k);
+        let mut best = vec![f32::NEG_INFINITY; n];
+        for r in 0..b {
+            for j in 0..n {
+                let s = scores[r * n + j];
+                if s > best[j] {
+                    best[j] = s;
+                }
+            }
+        }
+        let mut act: Vec<BundleId> =
+            (0..n as u32).filter(|&j| best[j as usize] > threshold).collect();
+        if act.len() > k {
+            act.sort_by(|&a, &bb| {
+                best[bb as usize].partial_cmp(&best[a as usize]).unwrap()
+            });
+            act.truncate(k);
+        }
+        act.sort_unstable();
+        act
+    }
+
+    /// One decode step over the whole batch; returns (B * vocab) logits.
+    /// Token ids beyond the batch are an error; caller pads.
+    pub fn decode_step(&mut self, ids: &[u8]) -> Result<Vec<f32>> {
+        anyhow::ensure!(ids.len() == self.opts.batch, "ids len != batch");
+        anyhow::ensure!(self.pos < self.meta.max_seq, "sequence full (max_seq)");
+        let (b, d) = (self.opts.batch, self.meta.d_model);
+        let mut x = self.embed_ids(ids);
+        let mut recorded: Vec<Vec<BundleId>> = Vec::new();
+
+        for li in 0..self.meta.n_layers {
+            // 1. attention (PJRT)
+            let x_lit = lit_f32(&x, &[b as i64, d as i64])?;
+            let lp = &self.layers[li];
+            let (kc, vc) = &self.kv[li];
+            let outs = self.attn.run(&[
+                x_lit.clone(),
+                lp.ln1_g.clone(),
+                lp.ln1_b.clone(),
+                lp.wq.clone(),
+                lp.bq.clone(),
+                lp.wk.clone(),
+                lp.bk.clone(),
+                lp.wv.clone(),
+                lp.bv.clone(),
+                lp.wo.clone(),
+                lp.bo.clone(),
+                kc.clone(),
+                vc.clone(),
+                lit_i32(self.pos as i32),
+            ])?;
+            anyhow::ensure!(outs.len() == 3, "attn artifact must return (y, k, v)");
+            let mut it = outs.into_iter();
+            let y_lit = it.next().unwrap();
+            self.kv[li] = (it.next().unwrap(), it.next().unwrap());
+            let y = to_vec_f32(&y_lit)?;
+
+            // 2. selection
+            let oracle = matches!(self.opts.selection, Selection::Oracle)
+                || self.recorder.is_some();
+            let oracle_scores = if oracle { Some(self.oracle_scores(li, &y)) } else { None };
+            let active = match self.opts.selection {
+                Selection::Oracle => self.select(oracle_scores.as_ref().unwrap(), 0.0),
+                Selection::Predictor { threshold } => {
+                    let lp = &self.layers[li];
+                    let outs = self.predictor.run(&[
+                        y_lit.clone(),
+                        lp.ln2_g.clone(),
+                        lp.ln2_b.clone(),
+                        lp.p1.clone(),
+                        lp.p2.clone(),
+                    ])?;
+                    let scores = to_vec_f32(&outs[0])?;
+                    self.select(&scores, threshold)
+                }
+            };
+            if let Some(sc) = &oracle_scores {
+                if self.recorder.is_some() {
+                    recorded.push(self.select(sc, 0.0));
+                }
+            }
+
+            // 3. I/O through the RIPPLE pipeline (real bytes)
+            self.scratch.clear();
+            let plan = self.pipeline.plan_layer(li, &active);
+            let mut buf = std::mem::take(&mut self.scratch);
+            let io = self.pipeline.commit_layer_read(&plan, &mut self.sim, &mut buf);
+            self.io_metrics.record(&io, self.space.bundle_bytes);
+
+            // 4. gather + sparse FFN (PJRT)
+            let (u_act, bu_act, d_act) = self.gather(li, &active, &plan, &buf)?;
+            self.scratch = buf;
+            let lp = &self.layers[li];
+            let k = self.meta.top_k as i64;
+            let outs = self.ffn_sparse.run(&[
+                y_lit,
+                lp.ln2_g.clone(),
+                lp.ln2_b.clone(),
+                lit_f32(&u_act, &[k, d as i64])?,
+                lit_f32(&bu_act, &[k])?,
+                lit_f32(&d_act, &[k, d as i64])?,
+                lp.bd.clone(),
+            ])?;
+            x = to_vec_f32(&outs[0])?;
+        }
+
+        if let Some(tr) = &mut self.recorder {
+            tr.push_token(recorded);
+        }
+
+        // 5. head (PJRT)
+        let x_lit = lit_f32(&x, &[b as i64, d as i64])?;
+        let outs = self.head.run(&[
+            x_lit,
+            self.ln_f_g.clone(),
+            self.ln_f_b.clone(),
+            self.embed_lit.clone(),
+        ])?;
+        self.pos += 1;
+        to_vec_f32(&outs[0])
+    }
+
+    /// Gather the activated bundles into top-K slot buffers. Missed slots
+    /// come from the flash read-back `buf`; cached slots from the
+    /// DRAM-resident canonical weights.
+    fn gather(
+        &self,
+        layer: usize,
+        active: &[BundleId],
+        plan: &crate::pipeline::LayerPlan,
+        buf: &[u8],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let (d, k) = (self.meta.d_model, self.meta.top_k);
+        anyhow::ensure!(active.len() <= k, "active exceeds top_k");
+        let bb = self.space.bundle_bytes;
+        // slot -> byte offset in buf (runs are concatenated in order)
+        let mut run_bases = Vec::with_capacity(plan.runs.len());
+        let mut base = 0usize;
+        for r in &plan.runs {
+            run_bases.push((r.start, r.end(), base));
+            base += r.len as usize * bb;
+        }
+        anyhow::ensure!(base == buf.len(), "read buffer size mismatch");
+        let locate = |slot: Slot| -> Option<usize> {
+            run_bases
+                .iter()
+                .find(|&&(s, e, _)| slot >= s && slot < e)
+                .map(|&(s, _, b0)| b0 + (slot - s) as usize * bb)
+        };
+
+        let layout = &self.pipeline.layouts()[layer];
+        let lp = &self.layers[layer];
+        let mut u_act = vec![0f32; k * d];
+        let mut bu_act = vec![0f32; k];
+        let mut d_act = vec![0f32; k * d];
+        for (si, &bid) in active.iter().enumerate() {
+            let slot = layout.slot_of(bid);
+            if let Some(off) = locate(slot) {
+                // bundle bytes: u_row (d f32) | bu (1 f32) | d_row (d f32)
+                let words = &buf[off..off + bb];
+                for i in 0..d {
+                    u_act[si * d + i] =
+                        f32::from_le_bytes(words[i * 4..i * 4 + 4].try_into().unwrap());
+                }
+                bu_act[si] =
+                    f32::from_le_bytes(words[d * 4..d * 4 + 4].try_into().unwrap());
+                for i in 0..d {
+                    let o = (d + 1 + i) * 4;
+                    d_act[si * d + i] =
+                        f32::from_le_bytes(words[o..o + 4].try_into().unwrap());
+                }
+            } else {
+                // cache hit: DRAM-resident copy
+                let b = bid as usize;
+                u_act[si * d..(si + 1) * d].copy_from_slice(&lp.u[b * d..(b + 1) * d]);
+                bu_act[si] = lp.bu[b];
+                d_act[si * d..(si + 1) * d].copy_from_slice(&lp.dn[b * d..(b + 1) * d]);
+            }
+        }
+        Ok((u_act, bu_act, d_act))
+    }
+
+    /// Exact dense decode step (no sparsity, no I/O) — oracle/baseline.
+    pub fn decode_step_dense(&mut self, ids: &[u8]) -> Result<Vec<f32>> {
+        anyhow::ensure!(ids.len() == self.opts.batch, "ids len != batch");
+        let (b, d, n) = (self.opts.batch, self.meta.d_model, self.meta.d_ffn);
+        let mut x = self.embed_ids(ids);
+        for li in 0..self.meta.n_layers {
+            let x_lit = lit_f32(&x, &[b as i64, d as i64])?;
+            let lp = &self.layers[li];
+            let (kc, vc) = &self.kv[li];
+            let outs = self.attn.run(&[
+                x_lit,
+                lp.ln1_g.clone(),
+                lp.ln1_b.clone(),
+                lp.wq.clone(),
+                lp.bq.clone(),
+                lp.wk.clone(),
+                lp.bk.clone(),
+                lp.wv.clone(),
+                lp.bv.clone(),
+                lp.wo.clone(),
+                lp.bo.clone(),
+                kc.clone(),
+                vc.clone(),
+                lit_i32(self.pos as i32),
+            ])?;
+            let mut it = outs.into_iter();
+            let y_lit = it.next().unwrap();
+            self.kv[li] = (it.next().unwrap(), it.next().unwrap());
+            let outs = self.ffn_dense.run(&[
+                y_lit,
+                lp.ln2_g.clone(),
+                lp.ln2_b.clone(),
+                lit_f32(&lp.u, &[n as i64, d as i64])?,
+                lit_f32(&lp.bu, &[n as i64])?,
+                lit_f32(&lp.dn, &[n as i64, d as i64])?,
+                lp.bd.clone(),
+            ])?;
+            x = to_vec_f32(&outs[0])?;
+        }
+        let x_lit = lit_f32(&x, &[b as i64, d as i64])?;
+        let outs = self.head.run(&[
+            x_lit,
+            self.ln_f_g.clone(),
+            self.ln_f_b.clone(),
+            self.embed_lit.clone(),
+        ])?;
+        self.pos += 1;
+        to_vec_f32(&outs[0])
+    }
+
+    /// Greedy generation for a batch of prompts (right-padded with 0x20).
+    /// Returns one generated byte-vector per prompt slot.
+    pub fn generate(
+        &mut self,
+        prompts: &[Vec<u8>],
+        max_new: usize,
+        dense: bool,
+    ) -> Result<Vec<Vec<u8>>> {
+        let b = self.opts.batch;
+        anyhow::ensure!(!prompts.is_empty() && prompts.len() <= b, "bad prompt count");
+        let plen = prompts.iter().map(Vec::len).max().unwrap();
+        anyhow::ensure!(plen + max_new <= self.meta.max_seq, "exceeds max_seq");
+        self.reset_sequence()?;
+
+        let step = |ids: &[u8], this: &mut Self| -> Result<Vec<f32>> {
+            if dense { this.decode_step_dense(ids) } else { this.decode_step(ids) }
+        };
+
+        let mut logits = vec![0f32; b * self.meta.vocab];
+        for t in 0..plen {
+            let ids: Vec<u8> = (0..b)
+                .map(|r| {
+                    prompts
+                        .get(r)
+                        .and_then(|p| p.get(t).copied())
+                        .unwrap_or(b' ')
+                })
+                .collect();
+            logits = step(&ids, self)?;
+        }
+        let mut outs = vec![Vec::with_capacity(max_new); prompts.len()];
+        let v = self.meta.vocab;
+        let mut cur: Vec<u8> =
+            (0..b).map(|r| argmax(&logits[r * v..(r + 1) * v]) as u8).collect();
+        for _ in 0..max_new {
+            for (r, o) in outs.iter_mut().enumerate() {
+                o.push(cur[r]);
+            }
+            if outs[0].len() == max_new {
+                break;
+            }
+            logits = step(&cur.clone(), self)?;
+            cur = (0..b).map(|r| argmax(&logits[r * v..(r + 1) * v]) as u8).collect();
+        }
+        Ok(outs)
+    }
+
+    /// Calibration helper: generate with trace recording from a prompt,
+    /// then return the recorded ground-truth activation trace.
+    pub fn calibrate(&mut self, prompt: &[u8], tokens: usize) -> Result<Trace> {
+        self.record_traces(true);
+        let prompts = vec![prompt.to_vec(); self.opts.batch.min(1).max(1)];
+        let mut batch_prompts = Vec::new();
+        for _ in 0..self.opts.batch {
+            batch_prompts.push(prompts[0].clone());
+        }
+        self.generate(&batch_prompts, tokens, false)?;
+        self.take_trace()
+            .context("recorder vanished")
+    }
+}
+
+fn build_flash_image(
+    space: &NeuronSpace,
+    layouts: &[Layout],
+    layers: &[LayerParams],
+) -> Vec<u8> {
+    let d = layers[0].u.len() / layers[0].bu.len();
+    let mut image = vec![0u8; space.image_bytes() as usize];
+    for (li, layout) in layouts.iter().enumerate() {
+        let lp = &layers[li];
+        for slot in 0..space.per_layer as u32 {
+            let b = layout.bundle_at(slot) as usize;
+            let (off, _) = space.slot_range(li, slot);
+            let mut o = off as usize;
+            for i in 0..d {
+                image[o..o + 4].copy_from_slice(&lp.u[b * d + i].to_le_bytes());
+                o += 4;
+            }
+            image[o..o + 4].copy_from_slice(&lp.bu[b].to_le_bytes());
+            o += 4;
+            for i in 0..d {
+                image[o..o + 4].copy_from_slice(&lp.dn[b * d + i].to_le_bytes());
+                o += 4;
+            }
+        }
+    }
+    image
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifacts_dir};
+
+    fn engine(opts: EngineOptions) -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: artifacts/ not built");
+            return None;
+        }
+        Some(Engine::load(dir, opts).unwrap())
+    }
+
+    #[test]
+    fn sparse_oracle_matches_golden_prefix() {
+        // With oracle selection and enough top-K slots, the sparse path
+        // must reproduce the dense golden decode bit-for-bit tokens.
+        let Some(mut e) = engine(EngineOptions::default()) else { return };
+        let golden = Golden::load(default_artifacts_dir()).unwrap();
+        let out = e
+            .generate(&[golden.prompt.clone()], golden.generated.len(), false)
+            .unwrap();
+        assert_eq!(out[0], golden.generated, "sparse decode diverged from golden");
+    }
+
+    #[test]
+    fn dense_matches_golden_logits() {
+        let Some(mut e) = engine(EngineOptions::default()) else { return };
+        let golden = Golden::load(default_artifacts_dir()).unwrap();
+        e.reset_sequence().unwrap();
+        let mut logits = Vec::new();
+        for t in 0..golden.prompt.len() {
+            logits = e.decode_step_dense(&[golden.prompt[t]]).unwrap();
+        }
+        for (a, b) in logits.iter().zip(&golden.first_logits) {
+            assert!((a - b).abs() < 1e-3, "dense logits diverge: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn io_metrics_flow() {
+        let Some(mut e) = engine(EngineOptions::default()) else { return };
+        e.generate(&[b"hello".to_vec()], 4, false).unwrap();
+        assert!(e.io_metrics.tokens >= 8);
+        assert!(e.io_metrics.totals.commands > 0);
+        assert!(e.sim.stats().total_bytes > 0);
+    }
+
+    #[test]
+    fn replacement_preserves_numerics() {
+        // Re-placing neurons permutes flash but must not change outputs.
+        let Some(mut e) = engine(EngineOptions::default()) else { return };
+        let prompt = b"the quick".to_vec();
+        let base = e.generate(&[prompt.clone()], 6, false).unwrap();
+
+        let trace = e.calibrate(b"the quick brown fox", 24).unwrap();
+        let layouts = crate::placement::place_model(
+            &trace,
+            crate::placement::GreedyParams::default(),
+            2,
+        );
+        e.set_layouts(layouts).unwrap();
+        let after = e.generate(&[prompt], 6, false).unwrap();
+        assert_eq!(base, after, "re-placement changed model outputs");
+    }
+
+    #[test]
+    fn predictor_mode_runs() {
+        let opts = EngineOptions {
+            selection: Selection::Predictor { threshold: -0.1 },
+            ..Default::default()
+        };
+        let Some(mut e) = engine(opts) else { return };
+        let out = e.generate(&[b"abc".to_vec()], 4, false).unwrap();
+        assert_eq!(out[0].len(), 4);
+    }
+
+    #[test]
+    fn batch4_generates_per_slot() {
+        let opts = EngineOptions { batch: 4, ..Default::default() };
+        let Some(mut e) = engine(opts) else { return };
+        let prompts = vec![
+            b"aaa".to_vec(),
+            b"the quick".to_vec(),
+            b"012".to_vec(),
+            b"llm".to_vec(),
+        ];
+        let outs = e.generate(&prompts, 3, false).unwrap();
+        assert_eq!(outs.len(), 4);
+        assert!(outs.iter().all(|o| o.len() == 3));
+    }
+}

@@ -1,0 +1,197 @@
+//! Loader for the AOT weight export (artifacts/weights.bin + manifest.json)
+//! and the model/golden metadata emitted by python/compile/aot.py.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug)]
+pub struct Weights {
+    tensors: HashMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .context("reading manifest.json")?;
+        let manifest = Json::parse(&manifest_text).context("parsing manifest.json")?;
+        anyhow::ensure!(manifest.req_str("dtype")? == "f32", "expected f32 weights");
+        let raw = std::fs::read(dir.join("weights.bin")).context("reading weights.bin")?;
+        anyhow::ensure!(
+            raw.len() == manifest.req_usize("total_bytes")?,
+            "weights.bin size mismatch"
+        );
+        let mut tensors = HashMap::new();
+        let entries = manifest
+            .req("tensors")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest `tensors` is not an object"))?;
+        for (name, meta) in entries {
+            let shape: Vec<usize> = meta
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("bad shape for {name}"))?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            let offset = meta.req_usize("offset_bytes")?;
+            let n = meta.req_usize("num_elems")?;
+            anyhow::ensure!(
+                shape.iter().product::<usize>() == n,
+                "shape/numel mismatch for {name}"
+            );
+            anyhow::ensure!(offset + n * 4 <= raw.len(), "tensor {name} out of bounds");
+            let mut data = vec![0f32; n];
+            for (i, chunk) in raw[offset..offset + n * 4].chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            tensors.insert(name.clone(), Tensor { shape, data });
+        }
+        Ok(Self { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("weight tensor `{name}` missing from manifest"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+/// model_config.json — must mirror python/compile/model.py::ModelConfig.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ffn: usize,
+    pub max_seq: usize,
+    pub top_k: usize,
+    pub pred_rank: usize,
+    pub batch_variants: Vec<usize>,
+}
+
+impl ModelMeta {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.as_ref().join("model_config.json"))
+            .context("reading model_config.json")?;
+        let j = Json::parse(&text)?;
+        Ok(Self {
+            vocab: j.req_usize("vocab")?,
+            d_model: j.req_usize("d_model")?,
+            n_heads: j.req_usize("n_heads")?,
+            n_layers: j.req_usize("n_layers")?,
+            d_ffn: j.req_usize("d_ffn")?,
+            max_seq: j.req_usize("max_seq")?,
+            top_k: j.req_usize("top_k")?,
+            pred_rank: j.req_usize("pred_rank")?,
+            batch_variants: j
+                .req("batch_variants")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("batch_variants not a list"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+        })
+    }
+}
+
+/// golden.json — dense-decode test vectors.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub prompt: Vec<u8>,
+    pub generated: Vec<u8>,
+    pub first_logits: Vec<f32>,
+    pub last_logits: Vec<f32>,
+}
+
+impl Golden {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.as_ref().join("golden.json"))
+            .context("reading golden.json")?;
+        let j = Json::parse(&text)?;
+        let bytes = |key: &str| -> Result<Vec<u8>> {
+            Ok(j.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{key} not a list"))?
+                .iter()
+                .filter_map(|v| v.as_usize().map(|u| u as u8))
+                .collect())
+        };
+        let floats = |key: &str| -> Result<Vec<f32>> {
+            Ok(j.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{key} not a list"))?
+                .iter()
+                .filter_map(|v| v.as_f64().map(|f| f as f32))
+                .collect())
+        };
+        Ok(Self {
+            prompt: bytes("prompt")?,
+            generated: bytes("generated")?,
+            first_logits: floats("first_logits")?,
+            last_logits: floats("last_logits")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifacts_dir};
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = default_artifacts_dir();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let w = Weights::load(&dir).unwrap();
+        let meta = ModelMeta::load(&dir).unwrap();
+        assert_eq!(meta.d_model, 64);
+        let emb = w.get("embed").unwrap();
+        assert_eq!(emb.shape, vec![meta.vocab, meta.d_model]);
+        let u0 = w.get("layer0.u").unwrap();
+        assert_eq!(u0.shape, vec![meta.d_ffn, meta.d_model]);
+        assert!(w.get("layer0.p1").is_ok());
+        assert!(w.get("nope").is_err());
+    }
+
+    #[test]
+    fn loads_golden() {
+        let dir = default_artifacts_dir();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let g = Golden::load(&dir).unwrap();
+        assert!(!g.prompt.is_empty());
+        assert_eq!(g.first_logits.len(), 256);
+        assert_eq!(g.generated.len(), 8);
+    }
+}

@@ -1,0 +1,296 @@
+//! UFS flash simulator.
+//!
+//! Substitute for the phones' physical UFS 3.1/4.0 storage (see DESIGN.md
+//! §Substitutions). It holds a *real* backing image (the engine stores
+//! actual neuron-bundle bytes in it and computes on what it reads back)
+//! and charges simulated time per command batch:
+//!
+//!   t(batch) = submit_overhead            (first-command queue fill)
+//!            + Σ_cmd (cmd_latency + len / sat_bandwidth)
+//!
+//! The device executes queued commands serially — this is exactly what
+//! makes small scattered reads IOPS-bound on a 32-entry queue: per-command
+//! cost dominates until reads are ~knee_bytes long (Figure 4). Host
+//! submission (1–2 µs/cmd) is always faster than device service
+//! (8–17 µs/cmd), so with a 32-deep queue the host never starves the
+//! device and the serial-service model is exact; `queue_depth` still
+//! bounds how many commands one submission window may carry (the sim
+//! charges one extra `submit_overhead` per window refill).
+//!
+//! Determinism: no wall clock anywhere; the simulated clock advances only
+//! through `read_batch`, so every experiment replays bit-identically.
+
+use crate::config::DeviceConfig;
+
+/// One read command: a contiguous byte extent in the flash image.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReadCmd {
+    pub offset: u64,
+    pub len: usize,
+}
+
+/// Timing + volume outcome of one submitted batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchResult {
+    pub elapsed_ns: f64,
+    pub commands: usize,
+    pub bytes: usize,
+}
+
+/// Cumulative flash statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FlashStats {
+    pub total_commands: u64,
+    pub total_bytes: u64,
+    pub total_busy_ns: f64,
+    pub total_batches: u64,
+}
+
+impl FlashStats {
+    /// Achieved bandwidth over all traffic so far (bytes/sec).
+    pub fn bandwidth(&self) -> f64 {
+        if self.total_busy_ns == 0.0 {
+            0.0
+        } else {
+            self.total_bytes as f64 / (self.total_busy_ns / 1e9)
+        }
+    }
+
+    /// Achieved IOPS over all traffic so far.
+    pub fn iops(&self) -> f64 {
+        if self.total_busy_ns == 0.0 {
+            0.0
+        } else {
+            self.total_commands as f64 / (self.total_busy_ns / 1e9)
+        }
+    }
+}
+
+pub struct UfsSim {
+    dev: DeviceConfig,
+    image: Vec<u8>,
+    clock_ns: f64,
+    stats: FlashStats,
+    /// Synchronous (mmap page-fault) mode: each command pays the full
+    /// QD-1 round-trip latency and nothing overlaps. Models llama.cpp's
+    /// mmap offload path; async (queued) mode models a proper io
+    /// submission path (LLMFlash, RIPPLE).
+    sync: bool,
+}
+
+impl UfsSim {
+    /// Create with a zeroed image of `image_bytes`.
+    pub fn new(dev: DeviceConfig, image_bytes: u64) -> Self {
+        Self::with_image(dev, vec![0u8; image_bytes as usize])
+    }
+
+    /// Create around an existing flash image (real model weights).
+    pub fn with_image(dev: DeviceConfig, image: Vec<u8>) -> Self {
+        Self { dev, image, clock_ns: 0.0, stats: FlashStats::default(), sync: false }
+    }
+
+    /// Switch to synchronous (queue-depth-1, mmap-fault) timing.
+    pub fn set_sync(&mut self, sync: bool) {
+        self.sync = sync;
+    }
+
+    pub fn is_sync(&self) -> bool {
+        self.sync
+    }
+
+    pub fn device(&self) -> &DeviceConfig {
+        &self.dev
+    }
+
+    pub fn image_len(&self) -> u64 {
+        self.image.len() as u64
+    }
+
+    /// Setup-time write (placement tool / engine load). Free of charge:
+    /// the paper's offline stage rewrites flash once, off the request path.
+    pub fn write_image(&mut self, offset: u64, bytes: &[u8]) {
+        let o = offset as usize;
+        self.image[o..o + bytes.len()].copy_from_slice(bytes);
+    }
+
+    /// Pure timing model for a batch (no data movement). Used by the
+    /// trace-driven benches where bundle *contents* are irrelevant.
+    pub fn time_batch(&self, cmds: &[ReadCmd]) -> BatchResult {
+        if cmds.is_empty() {
+            return BatchResult::default();
+        }
+        let per_cmd = if self.sync {
+            self.dev.sync_latency_ns
+        } else {
+            self.dev.cmd_latency_ns
+        };
+        let mut ns = if self.sync {
+            0.0 // no submission pipelining to account for
+        } else {
+            cmds.len().div_ceil(self.dev.queue_depth) as f64 * self.dev.submit_overhead_ns
+        };
+        let mut bytes = 0usize;
+        for c in cmds {
+            ns += per_cmd + c.len as f64 / self.dev.sat_bandwidth * 1e9;
+            bytes += c.len;
+        }
+        BatchResult { elapsed_ns: ns, commands: cmds.len(), bytes }
+    }
+
+    /// Submit a batch: advances the simulated clock, updates statistics,
+    /// and copies each command's bytes into `out` (appended back-to-back
+    /// in command order). Returns the batch timing.
+    pub fn read_batch(&mut self, cmds: &[ReadCmd], out: &mut Vec<u8>) -> BatchResult {
+        for c in cmds {
+            let o = c.offset as usize;
+            assert!(
+                o + c.len <= self.image.len(),
+                "read past end of flash image: off={o} len={} image={}",
+                c.len,
+                self.image.len()
+            );
+            out.extend_from_slice(&self.image[o..o + c.len]);
+        }
+        self.charge(cmds)
+    }
+
+    /// Advance the clock for a batch without copying data (metrics-only
+    /// callers). Identical accounting to `read_batch`.
+    pub fn charge(&mut self, cmds: &[ReadCmd]) -> BatchResult {
+        let r = self.time_batch(cmds);
+        self.clock_ns += r.elapsed_ns;
+        self.stats.total_commands += r.commands as u64;
+        self.stats.total_bytes += r.bytes as u64;
+        self.stats.total_busy_ns += r.elapsed_ns;
+        self.stats.total_batches += 1;
+        r
+    }
+
+    pub fn clock_ns(&self) -> f64 {
+        self.clock_ns
+    }
+
+    pub fn stats(&self) -> FlashStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = FlashStats::default();
+        self.clock_ns = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::devices;
+
+    fn op12() -> DeviceConfig {
+        devices()[0].clone()
+    }
+
+    #[test]
+    fn reads_return_written_bytes() {
+        let mut sim = UfsSim::new(op12(), 1024);
+        sim.write_image(100, &[1, 2, 3, 4]);
+        let mut out = Vec::new();
+        let r = sim.read_batch(&[ReadCmd { offset: 100, len: 4 }], &mut out);
+        assert_eq!(out, vec![1, 2, 3, 4]);
+        assert_eq!(r.commands, 1);
+        assert_eq!(r.bytes, 4);
+        assert!(r.elapsed_ns > 0.0);
+    }
+
+    #[test]
+    fn one_big_read_beats_many_small() {
+        // The paper's core premise: same bytes, fewer commands -> faster.
+        let sim = UfsSim::new(op12(), 1 << 20);
+        let small: Vec<ReadCmd> = (0..64)
+            .map(|i| ReadCmd { offset: i * 2048, len: 2048 })
+            .collect();
+        let big = [ReadCmd { offset: 0, len: 64 * 2048 }];
+        let t_small = sim.time_batch(&small).elapsed_ns;
+        let t_big = sim.time_batch(&big).elapsed_ns;
+        assert!(
+            t_big < t_small / 10.0,
+            "big={t_big} small={t_small}: continuity should dominate"
+        );
+    }
+
+    #[test]
+    fn figure4_bandwidth_curve_matches_closed_form() {
+        let dev = op12();
+        let sim = UfsSim::new(dev.clone(), 16 << 20);
+        for &sz in &[4096usize, 8192, 24576, 262_144, 1 << 20] {
+            let n = (4 << 20) / sz;
+            let cmds: Vec<ReadCmd> = (0..n)
+                .map(|i| ReadCmd { offset: (i * sz) as u64, len: sz })
+                .collect();
+            let r = sim.time_batch(&cmds);
+            let bw = r.bytes as f64 / (r.elapsed_ns / 1e9);
+            let want = dev.bandwidth_at(sz);
+            let err = (bw - want).abs() / want;
+            assert!(err < 0.05, "size={sz} bw={bw:.3e} want={want:.3e}");
+        }
+    }
+
+    #[test]
+    fn clock_and_stats_accumulate() {
+        let mut sim = UfsSim::new(op12(), 4096);
+        let mut out = Vec::new();
+        sim.read_batch(&[ReadCmd { offset: 0, len: 512 }], &mut out);
+        sim.read_batch(
+            &[ReadCmd { offset: 512, len: 512 }, ReadCmd { offset: 2048, len: 128 }],
+            &mut out,
+        );
+        let s = sim.stats();
+        assert_eq!(s.total_commands, 3);
+        assert_eq!(s.total_bytes, 1152);
+        assert_eq!(s.total_batches, 2);
+        assert!((sim.clock_ns() - s.total_busy_ns).abs() < 1e-9);
+        assert!(s.iops() > 0.0 && s.bandwidth() > 0.0);
+    }
+
+    #[test]
+    fn queue_window_refills_charged() {
+        let dev = op12();
+        let sim = UfsSim::new(dev.clone(), 1 << 20);
+        let c33: Vec<ReadCmd> =
+            (0..33).map(|i| ReadCmd { offset: i * 64, len: 64 }).collect();
+        let c32: Vec<ReadCmd> =
+            (0..32).map(|i| ReadCmd { offset: i * 64, len: 64 }).collect();
+        let t33 = sim.time_batch(&c33).elapsed_ns;
+        let t32 = sim.time_batch(&c32).elapsed_ns;
+        let per_cmd = dev.cmd_latency_ns + 64.0 / dev.sat_bandwidth * 1e9;
+        // 33rd command costs one service slot plus one extra window refill
+        let extra = t33 - t32;
+        assert!((extra - per_cmd - dev.submit_overhead_ns).abs() < 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "read past end")]
+    fn oob_read_panics() {
+        let mut sim = UfsSim::new(op12(), 128);
+        let mut out = Vec::new();
+        sim.read_batch(&[ReadCmd { offset: 100, len: 64 }], &mut out);
+    }
+
+    #[test]
+    fn sync_mode_is_much_slower_per_command() {
+        let mut sim = UfsSim::new(op12(), 1 << 20);
+        let cmds: Vec<ReadCmd> =
+            (0..16).map(|i| ReadCmd { offset: i * 4096, len: 4096 }).collect();
+        let fast = sim.time_batch(&cmds).elapsed_ns;
+        sim.set_sync(true);
+        let slow = sim.time_batch(&cmds).elapsed_ns;
+        assert!(slow > 8.0 * fast, "sync={slow} async={fast}");
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        let mut sim = UfsSim::new(op12(), 128);
+        let r = sim.charge(&[]);
+        assert_eq!(r.elapsed_ns, 0.0);
+        assert_eq!(sim.stats().total_commands, 0);
+    }
+}

@@ -1,0 +1,25 @@
+//! RIPPLE: correlation-aware neuron management for LLM inference on
+//! smartphones — a full reproduction of the paper's system.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - L3 (this crate): coordinator — flash simulator, neuron placement,
+//!   access collapse, linking-aligned caching, batching/serving.
+//! - L2: JAX model blocks AOT-lowered to HLO text (python/compile).
+//! - L1: Pallas sparse-FFN kernel inside those artifacts.
+
+pub mod access;
+pub mod bench;
+pub mod cache;
+pub mod coact;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod flash;
+pub mod metrics;
+pub mod neuron;
+pub mod persist;
+pub mod pipeline;
+pub mod placement;
+pub mod runtime;
+pub mod trace;
+pub mod util;

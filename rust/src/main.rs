@@ -1,0 +1,216 @@
+//! `ripple` CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   serve      start the serving coordinator on opt-micro and run a
+//!              demo request stream (alias for examples/serve_llm)
+//!   generate   one-shot generation from a prompt
+//!   place      run the offline placement search on a synthetic workload
+//!              and report continuity statistics
+//!   simulate   trace-driven I/O simulation for one (model, device,
+//!              dataset, system) point
+//!   devices / models
+//!              list the Table-2 / Table-3 configurations
+//!
+//! Examples:
+//!   ripple generate --prompt "the quick" --tokens 16
+//!   ripple simulate --model OPT-6.7B --system ripple --dataset wikitext
+//!   ripple place --model OPT-350M --dataset alpaca
+
+use anyhow::Result;
+
+use ripple::bench::workloads::{self, System, Workload};
+use ripple::config::{device_by_name, devices, model_by_name, models};
+use ripple::coordinator::{Server, ServerOptions};
+use ripple::engine::{Engine, EngineOptions};
+use ripple::runtime::default_artifacts_dir;
+use ripple::trace::DatasetProfile;
+use ripple::util::cli::Args;
+use ripple::util::stats::Table;
+
+fn main() {
+    let args = Args::from_env(&["dense", "help", "no-collapse"]);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "serve" => serve(&args),
+        "generate" => generate(&args),
+        "place" => place(&args),
+        "simulate" => simulate(&args),
+        "devices" => list_devices(),
+        "models" => list_models(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "ripple — correlation-aware neuron management (paper reproduction)\n\n\
+         usage: ripple <serve|generate|place|simulate|devices|models> [options]\n\n\
+         generate: --prompt <str> --tokens <n> [--dense]\n\
+         serve:    --requests <n> --tokens <n> --workers <n>\n\
+         place:    --model <name> --dataset <alpaca|openwebtext|wikitext> [--knn <m>]\n\
+         simulate: --model <name> --device <name> --dataset <name>\n\
+                   --system <llamacpp|llmflash|ripple-offline|ripple>\n\
+                   [--cache-ratio <f>] [--tokens <n>] [--no-collapse]"
+    );
+}
+
+fn system_by_name(s: &str) -> Result<System> {
+    Ok(match s {
+        "llamacpp" | "llama.cpp" => System::LlamaCpp,
+        "llmflash" => System::LlmFlash,
+        "ripple-offline" => System::RippleOffline,
+        "ripple" => System::Ripple,
+        _ => anyhow::bail!("unknown system `{s}`"),
+    })
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let prompt = args.get_or("prompt", "the quick brown ").as_bytes().to_vec();
+    let tokens = args.get_usize("tokens", 16)?;
+    let mut engine = Engine::load(default_artifacts_dir(), EngineOptions::default())?;
+    let t0 = std::time::Instant::now();
+    let out = engine.generate(&[prompt.clone()], tokens, args.flag("dense"))?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("prompt:    {:?}", String::from_utf8_lossy(&prompt));
+    println!("generated: {:?}", String::from_utf8_lossy(&out[0]));
+    println!(
+        "{} tokens in {:.2}s wall ({:.1} tok/s), simulated I/O {:.2} ms/token, \
+         {:.0} IOPS, effective bw {:.1} MB/s, cache hit {:.1}%",
+        out[0].len(),
+        dt,
+        out[0].len() as f64 / dt,
+        engine.io_metrics.mean_latency_ns() / 1e6,
+        engine.io_metrics.iops(),
+        engine.io_metrics.effective_bandwidth() / 1e6,
+        100.0 * engine.io_metrics.totals.cached_bundles as f64
+            / engine.io_metrics.totals.demanded_bundles.max(1) as f64,
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let n_requests = args.get_usize("requests", 8)?;
+    let tokens = args.get_usize("tokens", 8)?;
+    let workers = args.get_usize("workers", 1)?;
+    let opts = ServerOptions { n_workers: workers, ..Default::default() };
+    let server = Server::start(default_artifacts_dir(), opts)?;
+    println!("serving {n_requests} requests x {tokens} tokens on {workers} worker(s)");
+    let prompts = [
+        "the quick brown ",
+        "pack my box with ",
+        "llm inference on ",
+        "neuron co-activation ",
+    ];
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|i| server.submit(prompts[i % prompts.len()].into(), tokens))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv()?;
+        println!(
+            "  req {i}: {:?} (worker {}, batch {}, queue {:.1} ms, engine {:.1} ms, sim I/O {:.2} ms)",
+            String::from_utf8_lossy(&r.generated),
+            r.worker,
+            r.batch_size,
+            r.queue_ms,
+            r.engine_ms,
+            r.sim_io_ms,
+        );
+    }
+    let stats = server.shutdown();
+    println!(
+        "served {} requests / {} tokens in {:.2}s -> {:.1} tok/s",
+        stats.requests,
+        stats.tokens,
+        stats.wall_s,
+        stats.tokens_per_sec()
+    );
+    Ok(())
+}
+
+fn place(args: &Args) -> Result<()> {
+    let model = model_by_name(args.get_or("model", "OPT-350M"))?;
+    let dataset = DatasetProfile::by_name(args.get_or("dataset", "alpaca"))?;
+    let mut w = Workload::new(model, devices()[0].clone(), dataset);
+    w.knn = args.get_usize("knn", w.knn)?;
+    let calib = w.calibration_trace();
+    let t0 = std::time::Instant::now();
+    let stats = ripple::coact::CoactStats::from_trace_layer(&calib, 0);
+    let r = ripple::placement::search(&stats, ripple::placement::GreedyParams { knn: w.knn, ..Default::default() });
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "model {} layer 0: {} neurons, search {:.2}s, {} links, {} fragments",
+        w.model.name,
+        r.layout.len(),
+        secs,
+        r.links_made,
+        r.fragments
+    );
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let model = model_by_name(args.get_or("model", "OPT-350M"))?;
+    let device = device_by_name(args.get_or("device", "OnePlus 12"))?;
+    let dataset = DatasetProfile::by_name(args.get_or("dataset", "alpaca"))?;
+    let system = system_by_name(args.get_or("system", "ripple"))?;
+    let mut w = Workload::new(model, device, dataset);
+    w.cache_ratio = args.get_f64("cache-ratio", w.cache_ratio)?;
+    w.eval_tokens = args.get_usize("tokens", w.eval_tokens)?;
+    let r = workloads::run_experiment(&w, system)?;
+    let mut t = Table::new(&[
+        "system", "io ms/token", "IOPS", "eff bw MB/s", "mean access len", "place s",
+    ]);
+    t.row(&[
+        r.system.name().into(),
+        format!("{:.2}", r.latency_ms()),
+        format!("{:.0}", r.metrics.iops()),
+        format!("{:.1}", r.metrics.effective_bandwidth() / 1e6),
+        format!("{:.2}", r.metrics.mean_access_len()),
+        format!("{:.2}", r.placement_secs),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn list_devices() -> Result<()> {
+    let mut t = Table::new(&["device", "soc", "dram", "flash", "ufs", "sat bw", "max iops"]);
+    for d in devices() {
+        t.row(&[
+            d.name.into(),
+            d.soc.into(),
+            format!("{}GB", d.dram_gb),
+            format!("{}GB", d.flash_gb),
+            format!("{:?}", d.ufs),
+            format!("{:.1}GB/s", d.sat_bandwidth / 1e9),
+            format!("{:.0}k", d.max_iops() / 1e3),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn list_models() -> Result<()> {
+    let mut t = Table::new(&[
+        "model", "params", "layers", "bundles/layer", "dim", "linears", "sparsity",
+    ]);
+    for m in models().into_iter().chain([ripple::config::opt_micro()]) {
+        t.row(&[
+            m.name.into(),
+            format!("{:.1}M", m.n_params as f64 / 1e6),
+            m.n_layers.to_string(),
+            m.neurons_per_layer.to_string(),
+            m.neuron_dim.to_string(),
+            m.ffn_linears.to_string(),
+            format!("{:.1}%", m.sparsity * 100.0),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

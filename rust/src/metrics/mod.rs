@@ -1,0 +1,143 @@
+//! I/O metrics: per-token and aggregated counters the paper reports
+//! (I/O latency per token, IOPS, effective bandwidth, transfer volume).
+
+use crate::util::stats::{Percentiles, Summary};
+
+/// One token's I/O outcome across all layers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TokenIo {
+    /// Activated (demanded) bundles this token.
+    pub demanded_bundles: u64,
+    /// Bundles actually transferred from flash (demanded misses + speculative).
+    pub read_bundles: u64,
+    /// Speculative bundles read by access collapse.
+    pub extra_bundles: u64,
+    /// Bundles served from the DRAM cache.
+    pub cached_bundles: u64,
+    /// Read commands issued.
+    pub commands: u64,
+    /// Bytes transferred.
+    pub bytes: u64,
+    /// Simulated flash time, nanoseconds.
+    pub elapsed_ns: f64,
+}
+
+impl TokenIo {
+    pub fn add(&mut self, other: &TokenIo) {
+        self.demanded_bundles += other.demanded_bundles;
+        self.read_bundles += other.read_bundles;
+        self.extra_bundles += other.extra_bundles;
+        self.cached_bundles += other.cached_bundles;
+        self.commands += other.commands;
+        self.bytes += other.bytes;
+        self.elapsed_ns += other.elapsed_ns;
+    }
+}
+
+/// Aggregation over a run of tokens.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub tokens: u64,
+    pub totals: TokenIo,
+    pub latency_ns: Percentiles,
+    pub commands_per_token: Summary,
+    /// Demanded bytes (useful traffic) per token — the numerator of the
+    /// paper's *effective bandwidth*.
+    pub demanded_bytes: u64,
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, t: &TokenIo, bundle_bytes: usize) {
+        self.tokens += 1;
+        self.totals.add(t);
+        self.latency_ns.add(t.elapsed_ns);
+        self.commands_per_token.add(t.commands as f64);
+        self.demanded_bytes += t.demanded_bundles * bundle_bytes as u64;
+    }
+
+    /// Mean I/O latency per token, ns.
+    pub fn mean_latency_ns(&self) -> f64 {
+        if self.tokens == 0 { 0.0 } else { self.totals.elapsed_ns / self.tokens as f64 }
+    }
+
+    /// Achieved IOPS.
+    pub fn iops(&self) -> f64 {
+        if self.totals.elapsed_ns == 0.0 {
+            0.0
+        } else {
+            self.totals.commands as f64 / (self.totals.elapsed_ns / 1e9)
+        }
+    }
+
+    /// Raw bandwidth (all transferred bytes / busy time), bytes/sec.
+    pub fn raw_bandwidth(&self) -> f64 {
+        if self.totals.elapsed_ns == 0.0 {
+            0.0
+        } else {
+            self.totals.bytes as f64 / (self.totals.elapsed_ns / 1e9)
+        }
+    }
+
+    /// *Effective* bandwidth (paper §6.1: only activated neurons count),
+    /// bytes/sec. Cache hits don't add time, so serving more from cache
+    /// raises this metric — exactly as in the paper.
+    pub fn effective_bandwidth(&self) -> f64 {
+        if self.totals.elapsed_ns == 0.0 {
+            0.0
+        } else {
+            self.demanded_bytes as f64 / (self.totals.elapsed_ns / 1e9)
+        }
+    }
+
+    /// Mean contiguous read length in bundles (Figure 12's metric).
+    pub fn mean_access_len(&self) -> f64 {
+        if self.totals.commands == 0 {
+            0.0
+        } else {
+            self.totals.read_bundles as f64 / self.totals.commands as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok(demand: u64, read: u64, extra: u64, cmds: u64, bytes: u64, ns: f64) -> TokenIo {
+        TokenIo {
+            demanded_bundles: demand,
+            read_bundles: read,
+            extra_bundles: extra,
+            cached_bundles: demand - (read - extra),
+            commands: cmds,
+            bytes,
+            elapsed_ns: ns,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut m = RunMetrics::new();
+        m.record(&tok(10, 8, 2, 4, 8 * 100, 1e6), 100);
+        m.record(&tok(10, 10, 0, 5, 10 * 100, 1e6), 100);
+        assert_eq!(m.tokens, 2);
+        assert_eq!(m.totals.commands, 9);
+        assert!((m.mean_latency_ns() - 1e6).abs() < 1.0);
+        assert!((m.iops() - 9.0 / 2e-3).abs() < 1.0);
+        // effective bandwidth counts demanded bytes (20*100) over 2ms
+        assert!((m.effective_bandwidth() - 2_000.0 * 100.0 / 2e-3 / 100.0).abs() < 1e-6);
+        assert!((m.mean_access_len() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let m = RunMetrics::new();
+        assert_eq!(m.mean_latency_ns(), 0.0);
+        assert_eq!(m.iops(), 0.0);
+        assert_eq!(m.effective_bandwidth(), 0.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Flash layout: a bundle->slot permutation with its inverse.
+//!
+//! The permutation is the artifact RIPPLE's offline stage produces
+//! (Algorithm 1's Hamiltonian path, linearized into flash order). All
+//! online read planning works in slot space so that co-located bundles
+//! turn into adjacent slots and hence continuous reads.
+
+use super::{BundleId, Slot};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Layout {
+    /// bundle id -> flash slot
+    to_slot: Vec<Slot>,
+    /// flash slot -> bundle id
+    to_bundle: Vec<BundleId>,
+}
+
+impl Layout {
+    /// Identity layout (the model-structure order llama.cpp uses).
+    pub fn identity(n: usize) -> Self {
+        Self {
+            to_slot: (0..n as u32).collect(),
+            to_bundle: (0..n as u32).collect(),
+        }
+    }
+
+    /// Build from an *order*: `order[s]` is the bundle placed at slot `s`.
+    /// Validates that `order` is a permutation of `0..n`.
+    pub fn from_order(order: &[BundleId]) -> anyhow::Result<Self> {
+        let n = order.len();
+        let mut to_slot = vec![u32::MAX; n];
+        for (slot, &b) in order.iter().enumerate() {
+            anyhow::ensure!((b as usize) < n, "bundle {b} out of range {n}");
+            anyhow::ensure!(
+                to_slot[b as usize] == u32::MAX,
+                "bundle {b} appears twice in order"
+            );
+            to_slot[b as usize] = slot as u32;
+        }
+        Ok(Self { to_slot, to_bundle: order.to_vec() })
+    }
+
+    pub fn len(&self) -> usize {
+        self.to_slot.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.to_slot.is_empty()
+    }
+
+    #[inline]
+    pub fn slot_of(&self, b: BundleId) -> Slot {
+        self.to_slot[b as usize]
+    }
+
+    #[inline]
+    pub fn bundle_at(&self, s: Slot) -> BundleId {
+        self.to_bundle[s as usize]
+    }
+
+    pub fn order(&self) -> &[BundleId] {
+        &self.to_bundle
+    }
+
+    /// Map a set of activated bundles to sorted flash slots.
+    pub fn slots_for(&self, bundles: &[BundleId]) -> Vec<Slot> {
+        let mut slots: Vec<Slot> = bundles.iter().map(|&b| self.slot_of(b)).collect();
+        slots.sort_unstable();
+        slots
+    }
+
+    /// Verify internal consistency (used by property tests).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.to_slot.len() == self.to_bundle.len());
+        for b in 0..self.to_slot.len() {
+            let s = self.to_slot[b];
+            anyhow::ensure!(
+                self.to_bundle[s as usize] as usize == b,
+                "layout inverse broken at bundle {b}"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_roundtrip() {
+        let l = Layout::identity(16);
+        for b in 0..16u32 {
+            assert_eq!(l.slot_of(b), b);
+            assert_eq!(l.bundle_at(b), b);
+        }
+        l.validate().unwrap();
+    }
+
+    #[test]
+    fn from_order_inverse() {
+        let l = Layout::from_order(&[2, 0, 1, 3]).unwrap();
+        assert_eq!(l.bundle_at(0), 2);
+        assert_eq!(l.slot_of(2), 0);
+        assert_eq!(l.slot_of(0), 1);
+        l.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_non_permutations() {
+        assert!(Layout::from_order(&[0, 0, 1]).is_err());
+        assert!(Layout::from_order(&[0, 5]).is_err());
+    }
+
+    #[test]
+    fn slots_sorted() {
+        let l = Layout::from_order(&[3, 1, 0, 2]).unwrap();
+        let s = l.slots_for(&[0, 3]);
+        assert_eq!(s, vec![0, 2]);
+    }
+
+    #[test]
+    fn prop_random_permutation_roundtrips() {
+        prop::run_bool(
+            "layout-roundtrip",
+            prop::Config { cases: 32, max_size: 256, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let mut order: Vec<u32> = (0..size as u32).collect();
+                rng.shuffle(&mut order);
+                order
+            },
+            |order| {
+                let l = Layout::from_order(order).unwrap();
+                l.validate().is_ok()
+                    && (0..order.len() as u32)
+                        .all(|b| l.bundle_at(l.slot_of(b)) == b)
+            },
+        );
+    }
+}

@@ -1,0 +1,80 @@
+//! Neuron-bundle identity and flash layout.
+//!
+//! A *bundle* is the paper's unit of neuron storage: the bound rows/columns
+//! of the FFN matrices whose activation is decided by the same intermediate
+//! value (up row + down column for OPT; gate+up+down for Llama-style).
+//! A *layout* is a permutation mapping bundle id -> flash slot; RIPPLE's
+//! offline stage produces this permutation, the baselines use others.
+
+pub mod layout;
+
+pub use layout::Layout;
+
+/// A bundle id within one FFN block (layer-local, `0..neurons_per_layer`).
+pub type BundleId = u32;
+
+/// A flash slot index (layer-local; slot `s` occupies bytes
+/// `[region_base + s*bundle_bytes, +bundle_bytes)` of the flash image).
+pub type Slot = u32;
+
+/// Per-layer neuron addressing for one model.
+#[derive(Clone, Debug)]
+pub struct NeuronSpace {
+    pub n_layers: usize,
+    pub per_layer: usize,
+    pub bundle_bytes: usize,
+}
+
+impl NeuronSpace {
+    pub fn new(n_layers: usize, per_layer: usize, bundle_bytes: usize) -> Self {
+        assert!(n_layers > 0 && per_layer > 0 && bundle_bytes > 0);
+        Self { n_layers, per_layer, bundle_bytes }
+    }
+
+    pub fn total(&self) -> usize {
+        self.n_layers * self.per_layer
+    }
+
+    /// Byte offset of a layer's slot region within the flash image.
+    pub fn layer_base(&self, layer: usize) -> u64 {
+        assert!(layer < self.n_layers);
+        (layer * self.per_layer * self.bundle_bytes) as u64
+    }
+
+    /// Byte range of `slot` in `layer`.
+    pub fn slot_range(&self, layer: usize, slot: Slot) -> (u64, usize) {
+        assert!((slot as usize) < self.per_layer, "slot out of range");
+        (
+            self.layer_base(layer) + slot as u64 * self.bundle_bytes as u64,
+            self.bundle_bytes,
+        )
+    }
+
+    pub fn image_bytes(&self) -> u64 {
+        self.total() as u64 * self.bundle_bytes as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addressing() {
+        let s = NeuronSpace::new(4, 512, 2064);
+        assert_eq!(s.total(), 2048);
+        assert_eq!(s.layer_base(0), 0);
+        assert_eq!(s.layer_base(1), 512 * 2064);
+        let (off, len) = s.slot_range(2, 3);
+        assert_eq!(off, (2 * 512 + 3) as u64 * 2064);
+        assert_eq!(len, 2064);
+        assert_eq!(s.image_bytes(), 2048 * 2064);
+    }
+
+    #[test]
+    #[should_panic]
+    fn slot_bounds_checked() {
+        let s = NeuronSpace::new(1, 8, 16);
+        s.slot_range(0, 8);
+    }
+}

@@ -1,0 +1,183 @@
+//! Persistence for offline-stage artifacts: placement layouts and
+//! activation traces.
+//!
+//! The offline stage is run once per (model, calibration set); serving
+//! processes then load the resulting layouts at startup — exactly how
+//! the paper deploys (flash is rewritten once, off the request path).
+//! Format: a small self-describing binary container (magic, version,
+//! section of u32-LE arrays) — no serde in the offline registry.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::neuron::Layout;
+use crate::trace::Trace;
+
+const LAYOUT_MAGIC: &[u8; 8] = b"RIPLAY01";
+const TRACE_MAGIC: &[u8; 8] = b"RIPTRC01";
+
+fn write_u32s(w: &mut impl Write, xs: &[u32]) -> Result<()> {
+    w.write_all(&(xs.len() as u64).to_le_bytes())?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u32s(r: &mut impl Read) -> Result<Vec<u32>> {
+    let mut len8 = [0u8; 8];
+    r.read_exact(&mut len8)?;
+    let n = u64::from_le_bytes(len8) as usize;
+    anyhow::ensure!(n <= 1 << 28, "unreasonable array length {n}");
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Save per-layer layouts (the offline stage's product).
+pub fn save_layouts(path: impl AsRef<Path>, layouts: &[Layout]) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    f.write_all(LAYOUT_MAGIC)?;
+    f.write_all(&(layouts.len() as u64).to_le_bytes())?;
+    for l in layouts {
+        write_u32s(&mut f, l.order())?;
+    }
+    Ok(())
+}
+
+pub fn load_layouts(path: impl AsRef<Path>) -> Result<Vec<Layout>> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == LAYOUT_MAGIC, "not a RIPPLE layout file");
+    let mut n8 = [0u8; 8];
+    f.read_exact(&mut n8)?;
+    let n = u64::from_le_bytes(n8) as usize;
+    anyhow::ensure!(n <= 4096, "unreasonable layer count {n}");
+    (0..n)
+        .map(|i| {
+            let order = read_u32s(&mut f)?;
+            Layout::from_order(&order)
+                .with_context(|| format!("layer {i}: corrupt permutation"))
+        })
+        .collect()
+}
+
+/// Save an activation trace (calibration reuse / sharing across runs).
+pub fn save_trace(path: impl AsRef<Path>, trace: &Trace) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())?;
+    f.write_all(TRACE_MAGIC)?;
+    for v in [trace.n_layers as u64, trace.per_layer as u64, trace.tokens.len() as u64] {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    for tok in &trace.tokens {
+        for layer in tok {
+            write_u32s(&mut f, layer)?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load_trace(path: impl AsRef<Path>) -> Result<Trace> {
+    let mut f = std::fs::File::open(path.as_ref())?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == TRACE_MAGIC, "not a RIPPLE trace file");
+    let mut u64buf = [0u8; 8];
+    let mut next = || -> Result<u64> {
+        f.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let n_layers = next()? as usize;
+    let per_layer = next()? as usize;
+    let n_tokens = next()? as usize;
+    anyhow::ensure!(n_layers <= 4096 && n_tokens <= 1 << 24, "corrupt header");
+    let mut trace = Trace::new(n_layers, per_layer);
+    for _ in 0..n_tokens {
+        let mut tok = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let v = read_u32s(&mut f)?;
+            anyhow::ensure!(
+                v.iter().all(|&b| (b as usize) < per_layer),
+                "bundle id out of range"
+            );
+            tok.push(v);
+        }
+        trace.push_token(tok);
+    }
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{DatasetProfile, TraceGen};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ripple-persist-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn layouts_roundtrip() {
+        let layouts = vec![
+            Layout::from_order(&[2, 0, 1, 3]).unwrap(),
+            Layout::identity(4),
+        ];
+        let p = tmp("layouts.bin");
+        save_layouts(&p, &layouts).unwrap();
+        let back = load_layouts(&p).unwrap();
+        assert_eq!(back, layouts);
+    }
+
+    #[test]
+    fn trace_roundtrip() {
+        let mut tg = TraceGen::new(3, 64, 10, &DatasetProfile::alpaca(), 1, 2);
+        let trace = tg.generate(20);
+        let p = tmp("trace.bin");
+        save_trace(&p, &trace).unwrap();
+        let back = load_trace(&p).unwrap();
+        assert_eq!(back.n_layers, 3);
+        assert_eq!(back.per_layer, 64);
+        assert_eq!(back.tokens, trace.tokens);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage.bin");
+        std::fs::write(&p, b"not a ripple file at all").unwrap();
+        assert!(load_layouts(&p).is_err());
+        assert!(load_trace(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_cross_format() {
+        let p = tmp("cross.bin");
+        save_layouts(&p, &[Layout::identity(4)]).unwrap();
+        assert!(load_trace(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt_permutation() {
+        // hand-craft a layout file with a duplicate entry
+        let p = tmp("corrupt.bin");
+        let mut f = std::fs::File::create(&p).unwrap();
+        use std::io::Write;
+        f.write_all(LAYOUT_MAGIC).unwrap();
+        f.write_all(&1u64.to_le_bytes()).unwrap();
+        f.write_all(&3u64.to_le_bytes()).unwrap();
+        for x in [0u32, 0, 1] {
+            f.write_all(&x.to_le_bytes()).unwrap();
+        }
+        drop(f);
+        assert!(load_layouts(&p).is_err());
+    }
+}

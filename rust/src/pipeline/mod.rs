@@ -1,0 +1,310 @@
+//! The per-token I/O pipeline (paper Figure 7, online half):
+//!
+//!   activated bundles -> layout (bundle->slot) -> cache filter
+//!     -> run planning -> access collapse -> flash batch
+//!     -> cache admission -> adaptive-controller feedback
+//!
+//! The same pipeline object serves both the trace-driven paper benches
+//! (timing-only `step_token`) and the real PJRT engine (`plan_layer` +
+//! `commit_layer`, which also return the byte-level commands so the
+//! engine can read actual weights).
+
+use crate::access::{collapse_runs, plan_runs, AdaptiveCollapse, SlotRun};
+use crate::cache::NeuronCache;
+use crate::config::RunConfig;
+use crate::flash::{ReadCmd, UfsSim};
+use crate::metrics::TokenIo;
+use crate::neuron::{BundleId, Layout, NeuronSpace, Slot};
+
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub bundle_bytes: usize,
+    /// Access collapse enabled (RIPPLE online stage).
+    pub collapse: bool,
+    pub initial_threshold: u32,
+    /// Cap on the gap threshold, in bundles. Defaults to the device
+    /// knee size / bundle size: beyond that the gap fill costs more
+    /// than the command it saves even in the fully IOPS-bound regime.
+    pub max_threshold: u32,
+    /// Adaptive-controller window, tokens.
+    pub window: usize,
+    /// Commands issued per planned run: 1 when neurons are stored as
+    /// bundles (LLMFlash, RIPPLE); `ffn_linears` for the Llama.cpp
+    /// baseline, whose up/down(/gate) rows live in separate matrix
+    /// regions and need separate reads.
+    pub sub_reads_per_run: usize,
+}
+
+impl PipelineConfig {
+    pub fn from_run(cfg: &RunConfig) -> Self {
+        let bundle_bytes = cfg.model.bundle_bytes(cfg.precision);
+        let knee = cfg.device.knee_bytes();
+        let max_threshold = ((knee / bundle_bytes as f64) as u32).max(1);
+        Self {
+            bundle_bytes,
+            collapse: cfg.collapse,
+            initial_threshold: cfg.collapse_threshold as u32,
+            max_threshold,
+            window: 16,
+            sub_reads_per_run: 1,
+        }
+    }
+}
+
+/// One layer's planned I/O.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub layer: usize,
+    /// Demanded slots served by DRAM cache.
+    pub cached: Vec<Slot>,
+    /// Demanded slots that must be read.
+    pub missed: Vec<Slot>,
+    /// Post-collapse read runs covering all missed slots.
+    pub runs: Vec<SlotRun>,
+    /// Byte-level commands for the flash sim (sub_reads applied).
+    pub commands: Vec<ReadCmd>,
+}
+
+pub struct IoPipeline {
+    cfg: PipelineConfig,
+    space: NeuronSpace,
+    layouts: Vec<Layout>,
+    pub cache: NeuronCache,
+    adaptive: AdaptiveCollapse,
+}
+
+impl IoPipeline {
+    pub fn new(
+        cfg: PipelineConfig,
+        space: NeuronSpace,
+        layouts: Vec<Layout>,
+        cache: NeuronCache,
+    ) -> Self {
+        assert_eq!(layouts.len(), space.n_layers);
+        for l in &layouts {
+            assert_eq!(l.len(), space.per_layer);
+        }
+        let adaptive =
+            AdaptiveCollapse::new(cfg.initial_threshold, cfg.max_threshold, cfg.window);
+        Self { cfg, space, layouts, cache, adaptive }
+    }
+
+    pub fn layouts(&self) -> &[Layout] {
+        &self.layouts
+    }
+
+    pub fn space(&self) -> &NeuronSpace {
+        &self.space
+    }
+
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    pub fn threshold(&self) -> u32 {
+        if self.cfg.collapse { self.adaptive.threshold() } else { 0 }
+    }
+
+    /// Plan one layer: map to slots, filter through cache, plan + collapse
+    /// runs, lower to byte commands.
+    pub fn plan_layer(&mut self, layer: usize, actives: &[BundleId]) -> LayerPlan {
+        let layout = &self.layouts[layer];
+        let slots = layout.slots_for(actives);
+        let (cached, missed) = self.cache.filter(layer, &slots);
+        let base_runs = plan_runs(&missed);
+        let runs = collapse_runs(&base_runs, self.threshold());
+        let commands = self.lower_runs(layer, &runs);
+        LayerPlan { layer, cached, missed, runs, commands }
+    }
+
+    fn lower_runs(&self, layer: usize, runs: &[SlotRun]) -> Vec<ReadCmd> {
+        let bb = self.cfg.bundle_bytes;
+        let sub = self.cfg.sub_reads_per_run.max(1);
+        let mut cmds = Vec::with_capacity(runs.len() * sub);
+        for r in runs {
+            let (offset, _) = self.space.slot_range(layer, r.start);
+            let total = r.len as usize * bb;
+            // sub_reads > 1 models unbundled storage: the run's bytes are
+            // split across `sub` matrix regions read separately.
+            let part = total / sub;
+            for i in 0..sub {
+                let len = if i + 1 == sub { total - part * (sub - 1) } else { part };
+                if len > 0 {
+                    cmds.push(ReadCmd { offset: offset + (i * part) as u64, len });
+                }
+            }
+        }
+        cmds
+    }
+
+    /// Charge a plan to the flash sim, admit into cache, feed the
+    /// adaptive controller, and return the metrics contribution.
+    pub fn commit_layer(&mut self, plan: &LayerPlan, sim: &mut UfsSim) -> TokenIo {
+        let sat = sim.device().sat_bandwidth;
+        let batch = sim.charge(&plan.commands);
+        self.finish_commit(plan, batch.elapsed_ns, sat)
+    }
+
+    /// Like `commit_layer` but also copies real bytes out of the flash
+    /// image (engine path). Bytes are appended run-by-run in order.
+    pub fn commit_layer_read(
+        &mut self,
+        plan: &LayerPlan,
+        sim: &mut UfsSim,
+        out: &mut Vec<u8>,
+    ) -> TokenIo {
+        let sat = sim.device().sat_bandwidth;
+        let batch = sim.read_batch(&plan.commands, out);
+        self.finish_commit(plan, batch.elapsed_ns, sat)
+    }
+
+    fn finish_commit(&mut self, plan: &LayerPlan, elapsed_ns: f64, sat: f64) -> TokenIo {
+        self.cache.admit(plan.layer, &plan.runs);
+        let (total_slots, extra_slots) = crate::access::plan_volume(&plan.runs);
+        let bytes = total_slots * self.cfg.bundle_bytes as u64;
+        let demand_bytes = plan.missed.len() as u64 * self.cfg.bundle_bytes as u64;
+        self.adaptive
+            .observe(demand_bytes as f64, bytes as f64, elapsed_ns, sat);
+        TokenIo {
+            demanded_bundles: (plan.missed.len() + plan.cached.len()) as u64,
+            read_bundles: total_slots,
+            extra_bundles: extra_slots,
+            cached_bundles: plan.cached.len() as u64,
+            commands: plan.commands.len() as u64,
+            bytes,
+            elapsed_ns,
+        }
+    }
+
+    /// Trace-driven step: process all layers of one token against `sim`.
+    pub fn step_token(&mut self, sim: &mut UfsSim, actives: &[Vec<BundleId>]) -> TokenIo {
+        assert_eq!(actives.len(), self.space.n_layers);
+        let mut tok = TokenIo::default();
+        for (layer, act) in actives.iter().enumerate() {
+            let plan = self.plan_layer(layer, act);
+            tok.add(&self.commit_layer(&plan, sim));
+        }
+        tok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{Admission, NeuronCache, S3Fifo};
+    use crate::config::devices;
+
+    fn mk_pipeline(collapse: bool, cache_cap: usize) -> (IoPipeline, UfsSim) {
+        let space = NeuronSpace::new(2, 64, 128);
+        let layouts = vec![Layout::identity(64), Layout::identity(64)];
+        let cache = NeuronCache::new(
+            Box::new(S3Fifo::new(cache_cap)),
+            Admission::All,
+            7,
+        );
+        let cfg = PipelineConfig {
+            bundle_bytes: 128,
+            collapse,
+            initial_threshold: 2,
+            max_threshold: 8,
+            window: 4,
+            sub_reads_per_run: 1,
+        };
+        let sim = UfsSim::new(devices()[0].clone(), space.image_bytes());
+        (IoPipeline::new(cfg, space, layouts, cache), sim)
+    }
+
+    #[test]
+    fn plan_covers_all_misses() {
+        let (mut p, _sim) = mk_pipeline(true, 0);
+        let plan = p.plan_layer(0, &[1, 2, 3, 10, 12]);
+        assert!(plan.cached.is_empty());
+        assert_eq!(plan.missed.len(), 5);
+        for &s in &plan.missed {
+            assert!(plan.runs.iter().any(|r| s >= r.start && s < r.end()));
+        }
+        // collapse with threshold 2 merges 10 and 12
+        assert_eq!(plan.runs.len(), 2);
+    }
+
+    #[test]
+    fn commands_map_to_byte_extents() {
+        let (mut p, _sim) = mk_pipeline(false, 0);
+        let plan = p.plan_layer(1, &[0, 1]);
+        assert_eq!(plan.commands.len(), 1);
+        let c = plan.commands[0];
+        assert_eq!(c.offset, p.space.layer_base(1));
+        assert_eq!(c.len, 2 * 128);
+    }
+
+    #[test]
+    fn sub_reads_split_runs() {
+        let (mut p, _sim) = mk_pipeline(false, 0);
+        p.cfg.sub_reads_per_run = 2;
+        let plan = p.plan_layer(0, &[0, 1, 2, 3]);
+        assert_eq!(plan.commands.len(), 2);
+        let total: usize = plan.commands.iter().map(|c| c.len).sum();
+        assert_eq!(total, 4 * 128);
+    }
+
+    #[test]
+    fn cache_reduces_second_token_reads() {
+        let (mut p, mut sim) = mk_pipeline(false, 64);
+        let t1 = p.step_token(&mut sim, &[vec![1, 2, 3], vec![4, 5]]);
+        assert_eq!(t1.cached_bundles, 0);
+        let t2 = p.step_token(&mut sim, &[vec![1, 2, 3], vec![4, 5]]);
+        assert_eq!(t2.cached_bundles, 5);
+        assert_eq!(t2.commands, 0);
+        assert_eq!(t2.elapsed_ns, 0.0);
+    }
+
+    #[test]
+    fn collapse_reduces_commands_and_reads_extra() {
+        let (mut p, mut sim) = mk_pipeline(true, 0);
+        // gaps of 1: 0,2,4,6 -> one command with threshold >=1
+        let t = p.step_token(&mut sim, &[vec![0, 2, 4, 6], vec![]]);
+        assert_eq!(t.commands, 1);
+        assert_eq!(t.extra_bundles, 3);
+        assert_eq!(t.read_bundles, 7);
+        assert_eq!(t.demanded_bundles, 4);
+
+        let (mut p2, mut sim2) = mk_pipeline(false, 0);
+        let t2 = p2.step_token(&mut sim2, &[vec![0, 2, 4, 6], vec![]]);
+        assert_eq!(t2.commands, 4);
+        assert!(t.elapsed_ns < t2.elapsed_ns, "collapse should be faster");
+    }
+
+    #[test]
+    fn read_path_returns_real_bytes() {
+        let (mut p, mut sim) = mk_pipeline(false, 0);
+        // write a recognizable pattern into slot 3 of layer 0
+        let (off, len) = p.space.slot_range(0, 3);
+        sim.write_image(off, &vec![0xAB; len]);
+        let plan = p.plan_layer(0, &[3]);
+        let mut out = Vec::new();
+        let t = p.commit_layer_read(&plan, &mut sim, &mut out);
+        assert_eq!(out, vec![0xAB; 128]);
+        assert_eq!(t.commands, 1);
+    }
+
+    #[test]
+    fn layouts_redirect_reads() {
+        let space = NeuronSpace::new(1, 8, 16);
+        // bundle 0 lives at slot 7
+        let order: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 0];
+        let layouts = vec![Layout::from_order(&order).unwrap()];
+        let cache = NeuronCache::new(Box::new(S3Fifo::new(0)), Admission::All, 1);
+        let cfg = PipelineConfig {
+            bundle_bytes: 16,
+            collapse: false,
+            initial_threshold: 0,
+            max_threshold: 4,
+            window: 4,
+            sub_reads_per_run: 1,
+        };
+        let mut p = IoPipeline::new(cfg, space, layouts, cache);
+        let plan = p.plan_layer(0, &[0]);
+        assert_eq!(plan.runs[0].start, 7);
+        assert_eq!(plan.commands[0].offset, 7 * 16);
+    }
+}

@@ -1,0 +1,314 @@
+//! Algorithm 1: heuristic-driven greedy neuron-placement search.
+//!
+//! Treat every neuron as a 1-element link; repeatedly take the closest
+//! pair of link *endpoints* (dist(i,j) = 1 − P(ij), i.e. highest
+//! co-count first) and merge their links end-to-end, skipping pairs whose
+//! endpoint is already interior (NbrCnt == 2) or that would close a cycle
+//! (same union-find set). The result is a Hamiltonian path whose order
+//! becomes the flash layout.
+//!
+//! The pair queue is the kNN-sparsified candidate set from
+//! `CoactStats::candidate_pairs` (see coact/mod.rs): pairs outside every
+//! neuron's top-m partners have ~zero co-count, tie at dist≈1, and can
+//! never displace a retained pair — they only matter for the final
+//! fragment stitching, where order among them is irrelevant to expected
+//! I/O (Eq. 5's second term is zero for such pairs). Fragments left after
+//! the queue drains are concatenated hottest-first, which additionally
+//! clusters the hot region of flash (helps the cache's segment policy).
+
+use crate::coact::CoactStats;
+use crate::neuron::{BundleId, Layout};
+
+use super::unionfind::UnionFind;
+
+#[derive(Clone, Copy, Debug)]
+pub struct GreedyParams {
+    /// Top-m co-activation partners per neuron kept in the pair queue.
+    pub knn: usize,
+    /// Worker threads for the pairwise co-count scan (§Perf).
+    pub scan_threads: usize,
+}
+
+impl Default for GreedyParams {
+    fn default() -> Self {
+        Self { knn: 48, scan_threads: 1 }
+    }
+}
+
+/// Outcome of a placement search, with search diagnostics.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub layout: Layout,
+    /// Pairs examined from the queue.
+    pub pairs_scanned: usize,
+    /// Pairs that became links.
+    pub links_made: usize,
+    /// Path fragments stitched in the final pass.
+    pub fragments: usize,
+}
+
+/// Run Algorithm 1 on one layer's co-activation statistics.
+pub fn search(stats: &CoactStats, params: GreedyParams) -> SearchResult {
+    let n = stats.n_neurons();
+    assert!(n > 0);
+    let pairs = stats.candidate_pairs_parallel(params.knn, params.scan_threads.max(1));
+
+    let mut nbr_cnt = vec![0u8; n];
+    let mut uf = UnionFind::new(n);
+    // doubly-linked path structure: up to 2 neighbors per neuron
+    const NONE: u32 = u32::MAX;
+    let mut nbr = vec![[NONE; 2]; n];
+
+    let mut links_made = 0usize;
+    let mut pairs_scanned = 0usize;
+    for &(a, b, _count) in &pairs {
+        pairs_scanned += 1;
+        let (ai, bi) = (a as usize, b as usize);
+        if nbr_cnt[ai] == 2 || nbr_cnt[bi] == 2 {
+            continue; // endpoint already interior to a link
+        }
+        if !uf.union(a, b) {
+            continue; // would close a cycle
+        }
+        let slot_a = nbr_cnt[ai] as usize;
+        let slot_b = nbr_cnt[bi] as usize;
+        nbr[ai][slot_a] = b;
+        nbr[bi][slot_b] = a;
+        nbr_cnt[ai] += 1;
+        nbr_cnt[bi] += 1;
+        links_made += 1;
+    }
+
+    // Walk each fragment from one endpoint to the other.
+    let mut visited = vec![false; n];
+    let mut fragments: Vec<(Vec<BundleId>, u64)> = Vec::new(); // (path, total freq)
+    for start in 0..n as u32 {
+        if visited[start as usize] || nbr_cnt[start as usize] == 2 {
+            continue; // only start walks at endpoints / isolated nodes
+        }
+        let mut path = Vec::new();
+        let mut freq_sum = 0u64;
+        let mut prev = NONE;
+        let mut cur = start;
+        loop {
+            visited[cur as usize] = true;
+            path.push(cur);
+            freq_sum += stats.freq(cur) as u64;
+            let [x, y] = nbr[cur as usize];
+            let next = if x != NONE && x != prev {
+                x
+            } else if y != NONE && y != prev {
+                y
+            } else {
+                break;
+            };
+            prev = cur;
+            cur = next;
+        }
+        fragments.push((path, freq_sum));
+    }
+    debug_assert!(visited.iter().all(|&v| v), "cycle slipped through");
+
+    // Stitch fragments hottest-first (mean per-neuron frequency).
+    fragments.sort_by(|a, b| {
+        let fa = a.1 as f64 / a.0.len() as f64;
+        let fb = b.1 as f64 / b.0.len() as f64;
+        fb.partial_cmp(&fa).unwrap().then(a.0[0].cmp(&b.0[0]))
+    });
+    let n_fragments = fragments.len();
+    let mut order: Vec<BundleId> = Vec::with_capacity(n);
+    for (path, _) in fragments {
+        order.extend(path);
+    }
+
+    let layout = Layout::from_order(&order).expect("greedy produced non-permutation");
+    SearchResult { layout, pairs_scanned, links_made, fragments: n_fragments }
+}
+
+/// Place every layer of a model, optionally in parallel (the paper
+/// parallelizes the offline search across layers, §6.4).
+pub fn place_model(
+    traces: &crate::trace::Trace,
+    params: GreedyParams,
+    threads: usize,
+) -> Vec<Layout> {
+    let n_layers = traces.n_layers;
+    // Two-level parallelism: layers outer, pair-scan shards inner —
+    // spare cores go to the scan when there are few layers (§Perf).
+    let mut params = params;
+    if params.scan_threads <= 1 && threads > n_layers {
+        params.scan_threads = threads / n_layers.max(1);
+    }
+    if threads <= 1 || n_layers == 1 {
+        return (0..n_layers)
+            .map(|l| search(&CoactStats::from_trace_layer(traces, l), params).layout)
+            .collect();
+    }
+    let mut layouts: Vec<Option<Layout>> = vec![None; n_layers];
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<Option<Layout>>> =
+        (0..n_layers).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(n_layers) {
+            scope.spawn(|| loop {
+                let l = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if l >= n_layers {
+                    break;
+                }
+                let stats = CoactStats::from_trace_layer(traces, l);
+                let r = search(&stats, params);
+                *slots[l].lock().unwrap() = Some(r.layout);
+            });
+        }
+    });
+    for (l, slot) in slots.into_iter().enumerate() {
+        layouts[l] = slot.into_inner().unwrap();
+    }
+    layouts.into_iter().map(Option::unwrap).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generator::{DatasetProfile, LayerTraceGen};
+    use crate::trace::Trace;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn stats_from(sets: &[&[u32]], n: usize) -> CoactStats {
+        CoactStats::from_sets(n, sets.iter().copied())
+    }
+
+    #[test]
+    fn hand_checkable_chain() {
+        // tokens: {0,1} x3, {1,2} x2, {3} alone.
+        let s = stats_from(&[&[0, 1], &[0, 1], &[0, 1], &[1, 2], &[1, 2], &[3]], 4);
+        let r = search(&s, GreedyParams::default());
+        let order = r.layout.order().to_vec();
+        // 0-1 strongest link, 1-2 next; 1 must sit between 0 and 2.
+        let pos = |b: u32| order.iter().position(|&x| x == b).unwrap() as isize;
+        assert_eq!((pos(0) - pos(1)).abs(), 1, "order={order:?}");
+        assert_eq!((pos(1) - pos(2)).abs(), 1, "order={order:?}");
+    }
+
+    #[test]
+    fn respects_interior_rule() {
+        // 1 co-fires with 0, 2 AND 3; only two of those can be adjacent.
+        let s = stats_from(
+            &[&[0, 1], &[0, 1], &[0, 1], &[1, 2], &[1, 2], &[1, 3]],
+            4,
+        );
+        let r = search(&s, GreedyParams::default());
+        let order = r.layout.order();
+        let pos1 = order.iter().position(|&x| x == 1).unwrap();
+        let mut adj = 0;
+        if pos1 > 0 { adj += 1; }
+        if pos1 + 1 < order.len() { adj += 1; }
+        assert!(adj <= 2);
+        r.layout.validate().unwrap();
+    }
+
+    #[test]
+    fn output_is_permutation_on_correlated_trace() {
+        let mut g = LayerTraceGen::new(512, 64, &DatasetProfile::alpaca(), 1, 0, 2);
+        let sets: Vec<Vec<u32>> = (0..200).map(|_| g.sample()).collect();
+        let refs: Vec<&[u32]> = sets.iter().map(|v| v.as_slice()).collect();
+        let s = CoactStats::from_sets(512, refs.iter().copied());
+        let r = search(&s, GreedyParams::default());
+        assert_eq!(r.layout.len(), 512);
+        r.layout.validate().unwrap();
+        assert!(r.links_made > 100, "links={}", r.links_made);
+    }
+
+    /// Expected discontiguous runs per token under a layout (lower=better).
+    fn mean_runs(layout: &Layout, sets: &[Vec<u32>]) -> f64 {
+        let mut total = 0usize;
+        for set in sets {
+            let slots = layout.slots_for(set);
+            let mut runs = 1;
+            for w in slots.windows(2) {
+                if w[1] != w[0] + 1 {
+                    runs += 1;
+                }
+            }
+            total += runs;
+        }
+        total as f64 / sets.len() as f64
+    }
+
+    #[test]
+    fn greedy_beats_structural_on_runs() {
+        // The headline offline effect: far fewer discontiguous runs.
+        let mut g = LayerTraceGen::new(1024, 100, &DatasetProfile::alpaca(), 5, 0, 3);
+        let calib: Vec<Vec<u32>> = (0..300).map(|_| g.sample()).collect();
+        let eval: Vec<Vec<u32>> = (0..100).map(|_| g.sample()).collect();
+        let refs: Vec<&[u32]> = calib.iter().map(|v| v.as_slice()).collect();
+        let s = CoactStats::from_sets(1024, refs.iter().copied());
+        let ripple = search(&s, GreedyParams::default()).layout;
+        let structural = Layout::identity(1024);
+        let r_ripple = mean_runs(&ripple, &eval);
+        let r_struct = mean_runs(&structural, &eval);
+        assert!(
+            r_ripple < r_struct * 0.6,
+            "ripple={r_ripple:.1} structural={r_struct:.1}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut g = LayerTraceGen::new(256, 32, &DatasetProfile::wikitext(), 2, 0, 4);
+        let sets: Vec<Vec<u32>> = (0..100).map(|_| g.sample()).collect();
+        let refs: Vec<&[u32]> = sets.iter().map(|v| v.as_slice()).collect();
+        let s = CoactStats::from_sets(256, refs.iter().copied());
+        let a = search(&s, GreedyParams::default());
+        let b = search(&s, GreedyParams::default());
+        assert_eq!(a.layout, b.layout);
+    }
+
+    #[test]
+    fn place_model_parallel_matches_serial() {
+        let mut tg = crate::trace::TraceGen::new(
+            3, 256, 32, &DatasetProfile::alpaca(), 9, 10);
+        let tr: Trace = tg.generate(80);
+        let serial = place_model(&tr, GreedyParams::default(), 1);
+        let parallel = place_model(&tr, GreedyParams::default(), 4);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn prop_always_a_permutation() {
+        prop::run_bool(
+            "greedy-permutation",
+            prop::Config { cases: 24, max_size: 128, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let n = size.max(4);
+                let sets: Vec<Vec<u32>> = (0..40)
+                    .map(|_| {
+                        let k = rng.range(1, (n / 2).max(2));
+                        let mut v: Vec<u32> = rng
+                            .sample_indices(n, k)
+                            .into_iter()
+                            .map(|x| x as u32)
+                            .collect();
+                        v.sort_unstable();
+                        v
+                    })
+                    .collect();
+                (n, sets)
+            },
+            |(n, sets)| {
+                let refs: Vec<&[u32]> = sets.iter().map(|v| v.as_slice()).collect();
+                let s = CoactStats::from_sets(*n, refs.iter().copied());
+                let r = search(&s, GreedyParams { knn: 8, ..Default::default() });
+                r.layout.len() == *n && r.layout.validate().is_ok()
+            },
+        );
+    }
+
+    #[test]
+    fn single_neuron_layer() {
+        let s = stats_from(&[&[0]], 1);
+        let r = search(&s, GreedyParams::default());
+        assert_eq!(r.layout.order(), &[0]);
+    }
+}

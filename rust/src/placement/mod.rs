@@ -1,0 +1,9 @@
+//! Offline correlation-aware clustering (paper §4): the placement search
+//! (Algorithm 1) and the baseline layouts it is evaluated against.
+
+pub mod baselines;
+mod greedy;
+mod unionfind;
+
+pub use greedy::{place_model, search, GreedyParams, SearchResult};
+pub use unionfind::UnionFind;

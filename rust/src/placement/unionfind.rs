@@ -1,0 +1,157 @@
+//! Union-find (disjoint sets) with path halving + union by size.
+//! Used by Algorithm 1 to track which neurons already share a link.
+
+#[derive(Clone, Debug)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+    sets: usize,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        Self {
+            parent: (0..n as u32).collect(),
+            size: vec![1; n],
+            sets: n,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Number of disjoint sets remaining.
+    pub fn n_sets(&self) -> usize {
+        self.sets
+    }
+
+    #[inline]
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        // path halving
+        while self.parent[x as usize] != x {
+            let gp = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+        x
+    }
+
+    /// Union the sets of a and b; returns false if already joined.
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        let (big, small) = if self.size[ra as usize] >= self.size[rb as usize] {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        self.parent[small as usize] = big;
+        self.size[big as usize] += self.size[small as usize];
+        self.sets -= 1;
+        true
+    }
+
+    pub fn same(&mut self, a: u32, b: u32) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    pub fn set_size(&mut self, x: u32) -> u32 {
+        let r = self.find(x);
+        self.size[r as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn basic_union_find() {
+        let mut uf = UnionFind::new(5);
+        assert_eq!(uf.n_sets(), 5);
+        assert!(uf.union(0, 1));
+        assert!(!uf.union(1, 0));
+        assert!(uf.same(0, 1));
+        assert!(!uf.same(0, 2));
+        assert_eq!(uf.n_sets(), 4);
+        assert_eq!(uf.set_size(1), 2);
+    }
+
+    #[test]
+    fn chain_unions_collapse() {
+        let mut uf = UnionFind::new(100);
+        for i in 0..99 {
+            uf.union(i, i + 1);
+        }
+        assert_eq!(uf.n_sets(), 1);
+        assert!(uf.same(0, 99));
+        assert_eq!(uf.set_size(42), 100);
+    }
+
+    #[test]
+    fn prop_union_count_invariant() {
+        // successful unions + remaining sets == n
+        prop::run_bool(
+            "uf-count",
+            prop::Config { cases: 40, max_size: 128, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let n = size.max(2);
+                let ops: Vec<(u32, u32)> = (0..size * 2)
+                    .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+                    .collect();
+                (n, ops)
+            },
+            |(n, ops)| {
+                let mut uf = UnionFind::new(*n);
+                let mut merged = 0;
+                for &(a, b) in ops {
+                    if uf.union(a, b) {
+                        merged += 1;
+                    }
+                }
+                uf.n_sets() + merged == *n
+            },
+        );
+    }
+
+    #[test]
+    fn prop_same_is_transitive() {
+        prop::run_bool(
+            "uf-transitive",
+            prop::Config { cases: 30, max_size: 64, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let n = size.max(3);
+                let ops: Vec<(u32, u32)> = (0..size)
+                    .map(|_| (rng.below(n) as u32, rng.below(n) as u32))
+                    .collect();
+                (n, ops)
+            },
+            |(n, ops)| {
+                let mut uf = UnionFind::new(*n);
+                for &(a, b) in ops {
+                    uf.union(a, b);
+                }
+                for a in 0..*n as u32 {
+                    for b in 0..*n as u32 {
+                        if uf.same(a, b) {
+                            let ra = uf.find(a);
+                            if ra != uf.find(b) {
+                                return false;
+                            }
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+}

@@ -1,0 +1,169 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1 via the PJRT C API).
+//! Artifacts are HLO *text* (see python/compile/aot.py for why), parsed
+//! with `HloModuleProto::from_text_file`, compiled once per process and
+//! cached. Python never runs here — the request path is pure rust+PJRT.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; flattens the single tuple output the
+    /// AOT path always emits (`return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact `{}`", self.name))?;
+        let first = outs
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow::anyhow!("artifact `{}` returned no buffers", self.name))?;
+        let lit = first.to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// PJRT client + executable cache over an artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+impl Runtime {
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        anyhow::ensure!(
+            dir.is_dir(),
+            "artifacts directory `{}` not found — run `make artifacts` first",
+            dir.display()
+        );
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load (or fetch from cache) an artifact by stem, e.g. "attn_b4".
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        anyhow::ensure!(path.is_file(), "artifact `{}` missing", path.display());
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text `{}`", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact `{name}`"))?;
+        let e = std::rc::Rc::new(Executable { exe, name: name.to_string() });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar i32 literal (e.g. the decode position).
+pub fn lit_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// True when the AOT artifacts have been built (tests use this to skip
+/// gracefully instead of failing on a fresh checkout).
+pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+    dir.as_ref().join("manifest.json").is_file()
+}
+
+/// The default artifacts directory relative to the crate root.
+pub fn default_artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt() -> Runtime {
+        Runtime::cpu(default_artifacts_dir()).unwrap()
+    }
+
+    #[test]
+    fn lit_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit_f32(&[1.0], &[2]).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Runtime::cpu("/nonexistent/artifacts").err().expect("must fail");
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn head_artifact_runs() {
+        if !artifacts_available(default_artifacts_dir()) {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let mut rt = rt();
+        let head = rt.load("head_b1").unwrap();
+        // head(x[1,64], ln_g[64], ln_b[64], emb[256,64]) -> logits[1,256]
+        let x = lit_f32(&vec![0.1; 64], &[1, 64]).unwrap();
+        let g = lit_f32(&vec![1.0; 64], &[64]).unwrap();
+        let b = lit_f32(&vec![0.0; 64], &[64]).unwrap();
+        let emb = lit_f32(&vec![0.01; 256 * 64], &[256, 64]).unwrap();
+        let out = head.run(&[x, g, b, emb]).unwrap();
+        assert_eq!(out.len(), 1);
+        let logits = to_vec_f32(&out[0]).unwrap();
+        assert_eq!(logits.len(), 256);
+        // x is constant across dims -> ln(x)=0 -> logits all 0
+        assert!(logits.iter().all(|v| v.abs() < 1e-4));
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        if !artifacts_available(default_artifacts_dir()) {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let mut rt = rt();
+        let a = rt.load("head_b1").unwrap();
+        let b = rt.load("head_b1").unwrap();
+        assert!(std::rc::Rc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,89 @@
+//! Activation traces: which FFN bundles fire for each token.
+//!
+//! Two sources feed the same format:
+//! * `generator` — the synthetic correlated-activation model standing in
+//!   for Alpaca / OpenWebText / WikiText calibration runs (DESIGN.md
+//!   §Substitutions), and
+//! * the engine's recorder — *real* ReLU activations of opt-micro.
+
+pub mod generator;
+
+pub use generator::{DatasetProfile, LayerTraceGen, TraceGen};
+
+use crate::neuron::BundleId;
+
+/// An in-memory trace: `tokens[t][layer]` = sorted activated bundle ids.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub n_layers: usize,
+    pub per_layer: usize,
+    pub tokens: Vec<Vec<Vec<BundleId>>>,
+}
+
+impl Trace {
+    pub fn new(n_layers: usize, per_layer: usize) -> Self {
+        Self { n_layers, per_layer, tokens: Vec::new() }
+    }
+
+    /// Append one token's activations (one sorted vec per layer).
+    pub fn push_token(&mut self, per_layer_actives: Vec<Vec<BundleId>>) {
+        assert_eq!(per_layer_actives.len(), self.n_layers);
+        debug_assert!(per_layer_actives
+            .iter()
+            .all(|v| v.windows(2).all(|w| w[0] < w[1])));
+        self.tokens.push(per_layer_actives);
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Iterator over one layer's activation sets.
+    pub fn layer(&self, layer: usize) -> impl Iterator<Item = &[BundleId]> + '_ {
+        self.tokens.iter().map(move |t| t[layer].as_slice())
+    }
+
+    /// Mean fraction of bundles activated per token (across all layers).
+    pub fn sparsity(&self) -> f64 {
+        if self.tokens.is_empty() {
+            return 0.0;
+        }
+        let total: usize = self
+            .tokens
+            .iter()
+            .map(|t| t.iter().map(Vec::len).sum::<usize>())
+            .sum();
+        total as f64 / (self.tokens.len() * self.n_layers * self.per_layer) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_iterate() {
+        let mut tr = Trace::new(2, 8);
+        tr.push_token(vec![vec![1, 3], vec![0, 7]]);
+        tr.push_token(vec![vec![2], vec![0]]);
+        assert_eq!(tr.n_tokens(), 2);
+        let l0: Vec<_> = tr.layer(0).collect();
+        assert_eq!(l0[0], &[1, 3]);
+        assert_eq!(l0[1], &[2]);
+    }
+
+    #[test]
+    fn sparsity_computed() {
+        let mut tr = Trace::new(1, 10);
+        tr.push_token(vec![vec![0, 1, 2]]);
+        tr.push_token(vec![vec![5]]);
+        assert!((tr.sparsity() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn layer_arity_checked() {
+        let mut tr = Trace::new(2, 8);
+        tr.push_token(vec![vec![1]]);
+    }
+}

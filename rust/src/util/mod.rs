@@ -1,0 +1,12 @@
+//! Small self-contained utilities.
+//!
+//! The build environment resolves crates from a pinned offline set that
+//! lacks `rand`, `serde`, `clap` and `proptest`; these modules provide the
+//! minimal equivalents the rest of the library needs (see DESIGN.md
+//! §Environment-Substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

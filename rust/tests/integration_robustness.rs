@@ -1,0 +1,169 @@
+//! Robustness: failure injection, config validation, and randomized
+//! cross-module property sweeps that don't fit a single unit scope.
+
+use ripple::bench::workloads::{run_experiment, tiny_workload, System};
+use ripple::cache::{CachePolicy, Lru, NeuronCache, S3Fifo};
+use ripple::config::RunConfig;
+use ripple::engine::{Engine, EngineOptions};
+use ripple::neuron::Layout;
+use ripple::util::prop;
+use ripple::util::rng::Rng;
+
+#[test]
+fn engine_fails_cleanly_without_artifacts() {
+    let err = Engine::load("/definitely/not/here", EngineOptions::default())
+        .err()
+        .expect("must fail");
+    assert!(format!("{err:#}").contains("make artifacts"));
+}
+
+#[test]
+fn engine_rejects_uncompiled_batch_size() {
+    let dir = ripple::runtime::default_artifacts_dir();
+    if !ripple::runtime::artifacts_available(&dir) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let err = Engine::load(&dir, EngineOptions { batch: 3, ..Default::default() })
+        .err()
+        .expect("batch 3 is not a compiled variant");
+    assert!(format!("{err:#}").contains("batch"));
+}
+
+#[test]
+fn run_config_validation() {
+    assert!(RunConfig::from_json_str("{").is_err());
+    assert!(RunConfig::from_json_str(r#"{"model": 42}"#).is_ok()); // non-string ignored
+    assert!(RunConfig::from_json_str(r#"{"model": "nope"}"#).is_err());
+    assert!(RunConfig::from_json_str(r#"{"precision": "fp4"}"#).is_err());
+    assert!(RunConfig::from_json_str(r#"{"cache_ratio": -0.1}"#).is_err());
+    let ok = RunConfig::from_json_str(r#"{"model": "Mistral-7B", "cache_ratio": 0.3}"#).unwrap();
+    assert_eq!(ok.model.name, "Mistral-7B");
+}
+
+#[test]
+fn layout_rejects_corrupt_orders() {
+    assert!(Layout::from_order(&[]).is_ok()); // empty is a valid (empty) layout
+    assert!(Layout::from_order(&[1]).is_err()); // out of range
+    assert!(Layout::from_order(&[0, 0]).is_err()); // duplicate
+}
+
+/// Both cache policies never exceed capacity and never "hit" a key that
+/// was never inserted, under adversarial mixed workloads.
+#[test]
+fn prop_cache_policies_sound() {
+    for policy in ["lru", "s3fifo"] {
+        prop::run(
+            &format!("cache-sound-{policy}"),
+            prop::Config { cases: 40, max_size: 200, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let cap = rng.range(1, 32);
+                let ops: Vec<(bool, u64)> = (0..size * 4)
+                    .map(|_| (rng.chance(0.5), rng.below(64) as u64))
+                    .collect();
+                (cap, ops)
+            },
+            |(cap, ops)| {
+                let mut c: Box<dyn CachePolicy> = if *cap % 2 == 0 {
+                    Box::new(Lru::new(*cap))
+                } else {
+                    Box::new(S3Fifo::new(*cap))
+                };
+                let mut inserted = std::collections::HashSet::new();
+                for &(is_insert, key) in ops {
+                    if is_insert {
+                        c.insert(key);
+                        inserted.insert(key);
+                    } else {
+                        let hit = c.touch(key);
+                        if hit && !inserted.contains(&key) {
+                            return Err(format!("hit on never-inserted key {key}"));
+                        }
+                    }
+                    if c.len() > *cap {
+                        return Err(format!("len {} > cap {cap}", c.len()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// The experiment runner is total over every (system, precision,
+/// cache-ratio) combination on a small workload — no panics, metrics
+/// internally consistent.
+#[test]
+fn prop_experiment_runner_total() {
+    use ripple::config::Precision;
+    let mut w = tiny_workload();
+    w.eval_tokens = 10;
+    w.calib_tokens = 48;
+    for system in System::all() {
+        for prec in [Precision::Fp32, Precision::Fp16, Precision::Int8] {
+            for ratio in [0.0, 0.1, 0.5] {
+                w.precision = prec;
+                w.cache_ratio = ratio;
+                let r = run_experiment(&w, system).unwrap();
+                let m = &r.metrics;
+                assert_eq!(m.tokens, 10);
+                assert!(m.totals.read_bundles >= m.totals.extra_bundles);
+                assert!(
+                    m.totals.bytes
+                        >= m.totals.read_bundles * (r.bundle_bytes as u64 / 2),
+                    "bytes vs bundles inconsistent"
+                );
+                if m.totals.commands > 0 {
+                    assert!(m.mean_access_len() >= 1.0);
+                }
+            }
+        }
+    }
+}
+
+/// NeuronCache filter/admit stays consistent with an oracle hash map.
+#[test]
+fn prop_neuron_cache_matches_oracle_membership() {
+    prop::run(
+        "neuron-cache-oracle",
+        prop::Config { cases: 30, max_size: 100, ..Default::default() },
+        |rng: &mut Rng, size| {
+            let tokens: Vec<Vec<u32>> = (0..size.max(2))
+                .map(|_| {
+                    let k = rng.range(1, 12);
+                    let mut v: Vec<u32> = rng
+                        .sample_indices(64, k)
+                        .into_iter()
+                        .map(|x| x as u32)
+                        .collect();
+                    v.sort_unstable();
+                    v
+                })
+                .collect();
+            tokens
+        },
+        |tokens| {
+            // capacity larger than universe: nothing ever evicts, so the
+            // cache must behave exactly like a set
+            let mut c = NeuronCache::from_config("s3fifo", 1024, 9).unwrap();
+            let mut oracle = std::collections::HashSet::new();
+            for tok in tokens {
+                let (hits, misses) = c.filter(0, tok);
+                for h in &hits {
+                    if !oracle.contains(h) {
+                        return Err(format!("false hit {h}"));
+                    }
+                }
+                for m in &misses {
+                    if oracle.contains(m) {
+                        return Err(format!("false miss {m}"));
+                    }
+                }
+                let runs = ripple::access::plan_runs(&misses);
+                c.admit(0, &runs);
+                oracle.extend(misses);
+            }
+            Ok(())
+        },
+    );
+}
