@@ -31,6 +31,7 @@ use crate::metrics::RunMetrics;
 use crate::neuron::{Layout, NeuronSpace};
 use crate::pipeline::{IoPipeline, PipelineConfig};
 use crate::placement::{self, GreedyParams};
+use crate::prefetch::{PrefetchConfig, Prefetcher};
 use crate::trace::{DatasetProfile, Trace, TraceGen};
 
 /// One comparison point.
@@ -73,11 +74,21 @@ pub struct Workload {
     pub knn: usize,
     /// Placement-search threads.
     pub threads: usize,
+    /// Speculative prefetch on the async flash timeline (off by default:
+    /// the synchronous baseline replays the seed timeline bit-for-bit).
+    pub prefetch: PrefetchConfig,
+    /// Modeled per-layer compute window that overlapped I/O can hide,
+    /// ns. Derived from the sparse-deployment compute estimate; both the
+    /// synchronous and overlapped paths count it toward end-to-end
+    /// latency, only the overlapped path advances the sim clock with it.
+    pub compute_ns_per_layer: f64,
 }
 
 impl Workload {
     pub fn new(model: ModelConfig, device: DeviceConfig, dataset: DatasetProfile) -> Self {
         let sim_layers = model.n_layers.min(4);
+        let compute_ns_per_layer =
+            compute_sparse_ms_per_token(&model, &device) * 1e6 / model.n_layers as f64;
         Self {
             model,
             device,
@@ -90,7 +101,22 @@ impl Workload {
             seed: 7,
             knn: 48,
             threads: std::thread::available_parallelism().map_or(4, |n| n.get()),
+            prefetch: PrefetchConfig::default(),
+            compute_ns_per_layer,
         }
+    }
+
+    /// Build from a JSON-loadable `RunConfig` (CLI `simulate --config`):
+    /// carries model/device/precision/cache-ratio/seed and the prefetch
+    /// knobs; system axes (collapse, cache policy, placement) stay on
+    /// `SystemSpec`.
+    pub fn from_run(cfg: &crate::config::RunConfig, dataset: DatasetProfile) -> Self {
+        let mut w = Workload::new(cfg.model.clone(), cfg.device.clone(), dataset);
+        w.precision = cfg.precision;
+        w.cache_ratio = cfg.cache_ratio;
+        w.seed = cfg.seed;
+        w.prefetch = cfg.prefetch_config();
+        w
     }
 
     fn model_seed(&self) -> u64 {
@@ -148,6 +174,18 @@ impl ExperimentResult {
     /// Full-model mean I/O latency per token, ms.
     pub fn latency_ms(&self) -> f64 {
         self.metrics.mean_latency_ns() * self.layer_scale / 1e6
+    }
+
+    /// Full-model simulated end-to-end latency per token, ms: compute
+    /// plus the flash time compute could not hide (== compute + I/O for
+    /// the synchronous systems).
+    pub fn e2e_ms(&self) -> f64 {
+        self.metrics.mean_e2e_ns() * self.layer_scale / 1e6
+    }
+
+    /// Fraction of flash busy time hidden under compute.
+    pub fn overlap_ratio(&self) -> f64 {
+        self.metrics.overlap_ratio()
     }
 
     pub fn effective_bandwidth_gbps(&self) -> f64 {
@@ -283,15 +321,61 @@ fn run_inner(
     report_as: System,
 ) -> anyhow::Result<ExperimentResult> {
     let calib = w.calibration_trace();
+    // speculative prefetch learns from the same calibration trace as the
+    // placement search (dense streaming has nothing to speculate about)
+    let overlapped = w.prefetch.enabled && !spec.dense;
+    let mut prefetcher: Option<Prefetcher> = None;
     let (layouts, placement_secs) = if spec.ripple_placement {
         let t0 = std::time::Instant::now();
-        let layouts = placement::place_model(&calib, GreedyParams { knn: w.knn, ..Default::default() }, w.threads);
+        let layouts = if overlapped {
+            // share the dominant O(n²) co-count scan between the
+            // placement search and the prefetcher adjacency (§Perf);
+            // layouts are identical to `place_model`'s (same knn, same
+            // deterministic pair list regardless of scan sharding).
+            let scan_threads = (w.threads / calib.n_layers.max(1)).max(1);
+            let mut stats = Vec::with_capacity(calib.n_layers);
+            let mut pairs = Vec::with_capacity(calib.n_layers);
+            let mut layouts = Vec::with_capacity(calib.n_layers);
+            for l in 0..calib.n_layers {
+                let s = crate::coact::CoactStats::from_trace_layer(&calib, l);
+                let p = s.candidate_pairs_parallel(w.knn, scan_threads);
+                layouts.push(placement::search_with_pairs(&s, &p).layout);
+                stats.push(s);
+                pairs.push(p);
+            }
+            prefetcher =
+                Some(Prefetcher::from_layer_pairs(&stats, &pairs, w.prefetch.clone()));
+            layouts
+        } else {
+            placement::place_model(
+                &calib,
+                GreedyParams { knn: w.knn, ..Default::default() },
+                w.threads,
+            )
+        };
         (layouts, t0.elapsed().as_secs_f64())
     } else {
         (vec![Layout::identity(calib.per_layer); calib.n_layers], 0.0)
     };
     let (mut pipeline, mut sim) = pipeline_for_spec(spec, w, layouts)?;
     let bundle_bytes = pipeline.config().bundle_bytes;
+    if overlapped {
+        let pf = match prefetcher {
+            Some(pf) => pf,
+            // non-ripple placement: no shared scan to reuse
+            None => Prefetcher::from_trace(&calib, w.prefetch.clone(), w.threads),
+        };
+        pipeline.set_prefetcher(Some(pf));
+    }
+
+    // dense baselines execute the full FFN per token; sparse systems pay
+    // the sparse-deployment estimate — e2e comparisons across systems
+    // must not charge llama.cpp the sparse flop count.
+    let compute_ns_per_layer = if spec.dense {
+        compute_ms_per_token(&w.model, &w.device) * 1e6 / w.model.n_layers as f64
+    } else {
+        w.compute_ns_per_layer
+    };
 
     let eval = w.eval_trace(eval_dataset);
     let mut metrics = RunMetrics::new();
@@ -309,10 +393,15 @@ fn run_inner(
             // happened to transfer.
             t.demanded_bundles = tok.iter().map(Vec::len).sum::<usize>() as u64;
             t
+        } else if overlapped {
+            pipeline.step_token_overlapped(&mut sim, tok, compute_ns_per_layer)
         } else {
             pipeline.step_token(&mut sim, tok)
         };
         metrics.record(&t, bundle_bytes);
+        // compute happens either way; only the overlapped path lets the
+        // flash timeline hide underneath it
+        metrics.record_compute(compute_ns_per_layer * w.sim_layers as f64);
     }
     Ok(ExperimentResult {
         system: report_as,
@@ -457,5 +546,59 @@ mod tests {
         let b = run_experiment(&w, System::Ripple).unwrap();
         assert_eq!(a.metrics.totals.commands, b.metrics.totals.commands);
         assert!((a.latency_ms() - b.latency_ms()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefetch_overlaps_and_stays_deterministic() {
+        let mut w = tiny_workload();
+        w.prefetch.enabled = true;
+        w.prefetch.budget_bytes = 64 * w.model.bundle_bytes(w.precision);
+        let a = run_experiment(&w, System::Ripple).unwrap();
+        assert!(a.metrics.totals.prefetch_hit_bundles > 0, "no speculative hits");
+        assert!(a.overlap_ratio() > 0.0, "no overlap achieved");
+        assert!(a.metrics.totals.stall_ns < a.metrics.totals.elapsed_ns);
+        // bit-stable across identical runs, speculation and all
+        let b = run_experiment(&w, System::Ripple).unwrap();
+        assert_eq!(
+            a.metrics.totals.stall_ns.to_bits(),
+            b.metrics.totals.stall_ns.to_bits()
+        );
+        assert_eq!(
+            a.metrics.totals.elapsed_ns.to_bits(),
+            b.metrics.totals.elapsed_ns.to_bits()
+        );
+        assert_eq!(a.metrics.totals.commands, b.metrics.totals.commands);
+        assert_eq!(
+            a.metrics.totals.prefetch_hit_bundles,
+            b.metrics.totals.prefetch_hit_bundles
+        );
+    }
+
+    #[test]
+    fn workload_from_run_config_carries_prefetch() {
+        let cfg = crate::config::RunConfig::from_json_str(
+            r#"{"model": "OPT-1.3B", "cache_ratio": 0.2, "prefetch": true,
+                "prefetch_budget_bytes": 65536, "seed": 5}"#,
+        )
+        .unwrap();
+        let w = Workload::from_run(&cfg, DatasetProfile::wikitext());
+        assert_eq!(w.model.name, "OPT-1.3B");
+        assert!((w.cache_ratio - 0.2).abs() < 1e-12);
+        assert_eq!(w.seed, 5);
+        assert!(w.prefetch.enabled);
+        assert_eq!(w.prefetch.budget_bytes, 65536);
+        assert_eq!(w.dataset.name, "wikitext");
+    }
+
+    #[test]
+    fn sync_run_reports_zero_overlap() {
+        let w = tiny_workload();
+        let r = run_experiment(&w, System::Ripple).unwrap();
+        assert_eq!(r.metrics.totals.prefetch_hit_bundles, 0);
+        assert_eq!(r.metrics.totals.prefetch_wasted_bundles, 0);
+        assert!(r.overlap_ratio().abs() < 1e-9);
+        // e2e = io + compute for the serial schedule
+        let want = r.metrics.mean_stall_ns() + r.metrics.compute_ns / r.metrics.tokens as f64;
+        assert!((r.metrics.mean_e2e_ns() - want).abs() < 1e-6);
     }
 }

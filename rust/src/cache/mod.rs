@@ -17,8 +17,15 @@ pub trait CachePolicy: Send {
     fn touch(&mut self, key: u64) -> bool;
     /// Insert after a miss (may evict).
     fn insert(&mut self, key: u64);
+    /// Residency test with NO side effects (no recency/frequency bump) —
+    /// used by speculative prefetch filtering, which must not distort
+    /// the policy's view of real demand.
+    fn contains(&self, key: u64) -> bool;
     fn len(&self) -> usize;
     fn capacity(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 impl CachePolicy for Lru {
@@ -27,6 +34,9 @@ impl CachePolicy for Lru {
     }
     fn insert(&mut self, key: u64) {
         Lru::insert(self, key);
+    }
+    fn contains(&self, key: u64) -> bool {
+        Lru::contains_untouched(self, key)
     }
     fn len(&self) -> usize {
         Lru::len(self)
@@ -42,6 +52,9 @@ impl CachePolicy for S3Fifo {
     }
     fn insert(&mut self, key: u64) {
         S3Fifo::insert(self, key);
+    }
+    fn contains(&self, key: u64) -> bool {
+        S3Fifo::contains_untouched(self, key)
     }
     fn len(&self) -> usize {
         S3Fifo::len(self)
@@ -59,6 +72,9 @@ impl CachePolicy for NullCache {
         false
     }
     fn insert(&mut self, _key: u64) {}
+    fn contains(&self, _key: u64) -> bool {
+        false
+    }
     fn len(&self) -> usize {
         0
     }
@@ -128,6 +144,11 @@ impl NeuronCache {
     pub fn hit_ratio(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 { 0.0 } else { self.hits as f64 / total as f64 }
+    }
+
+    /// Side-effect-free residency test (prefetch planning).
+    pub fn contains(&self, layer: usize, slot: Slot) -> bool {
+        self.policy.contains(key(layer, slot))
     }
 
     /// Partition activated slots into (cached, must-read). Slots must be

@@ -1,6 +1,8 @@
-//! Run configuration: ties a model geometry, device, precision, cache and
-//! pipeline knobs together. Loadable from JSON (examples/ and the CLI).
+//! Run configuration: ties a model geometry, device, precision, cache,
+//! pipeline and prefetch knobs together. Loadable from JSON (examples/
+//! and the CLI).
 
+use crate::prefetch::PrefetchConfig;
 use crate::util::json::Json;
 
 use super::{DeviceConfig, ModelConfig, Precision, device_by_name, model_by_name};
@@ -20,12 +22,19 @@ pub struct RunConfig {
     pub cache_policy: String,
     /// Placement policy: "ripple", "structural", "frequency", "llmflash".
     pub placement: String,
+    /// Speculative next-layer prefetch on the async flash timeline.
+    pub prefetch: bool,
+    /// Per-layer speculative read budget, bytes.
+    pub prefetch_budget_bytes: usize,
+    /// Layers of lookahead for speculation (>= 1).
+    pub prefetch_lookahead: usize,
     /// RNG seed for workload generation.
     pub seed: u64,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
+        let pf = PrefetchConfig::default();
         Self {
             model: model_by_name("OPT-350M").unwrap(),
             device: device_by_name("OnePlus 12").unwrap(),
@@ -35,6 +44,9 @@ impl Default for RunConfig {
             collapse: true,
             cache_policy: "linking".to_string(),
             placement: "ripple".to_string(),
+            prefetch: pf.enabled,
+            prefetch_budget_bytes: pf.budget_bytes,
+            prefetch_lookahead: pf.lookahead,
             seed: 42,
         }
     }
@@ -68,6 +80,20 @@ impl RunConfig {
         if let Some(v) = j.get("placement").and_then(Json::as_str) {
             cfg.placement = v.to_string();
         }
+        if let Some(Json::Bool(b)) = j.get("prefetch") {
+            cfg.prefetch = *b;
+        }
+        if let Some(v) = j.get("prefetch_budget_bytes").and_then(Json::as_usize) {
+            anyhow::ensure!(
+                v <= 64 << 20,
+                "prefetch_budget_bytes {v} unreasonable (max 64 MiB)"
+            );
+            cfg.prefetch_budget_bytes = v;
+        }
+        if let Some(v) = j.get("prefetch_lookahead").and_then(Json::as_usize) {
+            anyhow::ensure!(v >= 1, "prefetch_lookahead must be >= 1");
+            cfg.prefetch_lookahead = v;
+        }
         if let Some(v) = j.get("seed").and_then(Json::as_f64) {
             cfg.seed = v as u64;
         }
@@ -81,6 +107,16 @@ impl RunConfig {
     /// DRAM cache capacity in bundles for this model.
     pub fn cache_capacity_bundles(&self) -> usize {
         (self.model.total_neurons() as f64 * self.cache_ratio) as usize
+    }
+
+    /// The prefetch knobs as a `prefetch::PrefetchConfig`.
+    pub fn prefetch_config(&self) -> PrefetchConfig {
+        PrefetchConfig {
+            enabled: self.prefetch,
+            budget_bytes: self.prefetch_budget_bytes,
+            lookahead: self.prefetch_lookahead,
+            ..Default::default()
+        }
     }
 }
 
@@ -114,6 +150,27 @@ mod tests {
     fn rejects_bad_values() {
         assert!(RunConfig::from_json_str(r#"{"model": "nope"}"#).is_err());
         assert!(RunConfig::from_json_str(r#"{"cache_ratio": 3.0}"#).is_err());
+        assert!(RunConfig::from_json_str(r#"{"prefetch_lookahead": 0}"#).is_err());
+        assert!(
+            RunConfig::from_json_str(r#"{"prefetch_budget_bytes": 999999999999}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn prefetch_knobs_parse() {
+        let c = RunConfig::from_json_str(
+            r#"{"prefetch": true, "prefetch_budget_bytes": 65536,
+                "prefetch_lookahead": 2}"#,
+        )
+        .unwrap();
+        assert!(c.prefetch);
+        assert_eq!(c.prefetch_budget_bytes, 65536);
+        assert_eq!(c.prefetch_lookahead, 2);
+        let pf = c.prefetch_config();
+        assert!(pf.enabled);
+        assert_eq!(pf.budget_slots(4096), 16);
+        // default stays off: bit-compatible with the synchronous baseline
+        assert!(!RunConfig::default().prefetch);
     }
 
     #[test]

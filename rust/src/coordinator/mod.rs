@@ -45,8 +45,15 @@ pub struct Response {
     pub engine_ms: f64,
     /// Queueing delay before the batch started.
     pub queue_ms: f64,
-    /// Simulated flash I/O time attributed to this batch, ms.
+    /// Simulated flash I/O (device busy) time attributed to this batch, ms.
     pub sim_io_ms: f64,
+    /// Speculative prefetch hits attributed to this batch, bundles.
+    pub prefetch_hit_bundles: u64,
+    /// Speculatively read bundles this batch never demanded.
+    pub prefetch_wasted_bundles: u64,
+    /// Fraction of this batch's flash busy time hidden under compute
+    /// (0.0 when the worker runs the synchronous schedule).
+    pub overlap_ratio: f64,
     /// Which worker served it.
     pub worker: usize,
     /// Batch size it was served in.
@@ -235,6 +242,7 @@ fn worker_loop(
     ready: mpsc::Sender<Result<()>>,
     counters: std::sync::Arc<Counters>,
 ) {
+    let want_prefetch = opts.prefetch.enabled;
     let mut engine = match Engine::load(&dir, opts) {
         Ok(e) => {
             let _ = ready.send(Ok(()));
@@ -245,14 +253,46 @@ fn worker_loop(
             return;
         }
     };
+    if want_prefetch {
+        // Learn the speculative predictor from a short self-calibration
+        // before taking traffic, then reset serving state so request
+        // metrics start clean (the DRAM cache stays warm on purpose).
+        match engine.calibrate(b"the quick brown fox jumps over the lazy dog. ", 32) {
+            Ok(tr) => {
+                if let Err(e) = engine.enable_prefetch(&tr) {
+                    log::error!("worker {wid}: prefetch setup failed: {e:#}");
+                }
+            }
+            Err(e) => log::error!("worker {wid}: prefetch calibration failed: {e:#}"),
+        }
+        if let Err(e) = engine.reset_sequence() {
+            log::error!("worker {wid}: reset after calibration failed: {e:#}");
+        }
+        engine.io_metrics = crate::metrics::RunMetrics::new();
+        engine.sim.reset_stats();
+    }
     while let Ok(WorkerMsg { batch }) = rx.recv() {
         let started = Instant::now();
         let max_new = batch.iter().map(|p| p.req.max_new).max().unwrap_or(0);
         let prompts: Vec<Vec<u8>> = batch.iter().map(|p| p.req.prompt.clone()).collect();
-        let io_before = engine.sim.clock_ns();
+        let flash_before = engine.sim.stats();
+        let pf_before = (
+            engine.io_metrics.totals.prefetch_hit_bundles,
+            engine.io_metrics.totals.prefetch_wasted_bundles,
+        );
         let result = engine.generate(&prompts, max_new, false);
         let engine_ms = started.elapsed().as_secs_f64() * 1e3;
-        let sim_io_ms = (engine.sim.clock_ns() - io_before) / 1e6;
+        let flash_after = engine.sim.stats();
+        let busy_d = flash_after.total_busy_ns - flash_before.total_busy_ns;
+        let hidden_d = flash_after.total_hidden_ns - flash_before.total_hidden_ns;
+        let sim_io_ms = busy_d / 1e6;
+        // the sim's canonical definition (hidden/busy), as a delta
+        let overlap_ratio =
+            if busy_d > 0.0 { (hidden_d / busy_d).clamp(0.0, 1.0) } else { 0.0 };
+        let prefetch_hit_bundles =
+            engine.io_metrics.totals.prefetch_hit_bundles - pf_before.0;
+        let prefetch_wasted_bundles =
+            engine.io_metrics.totals.prefetch_wasted_bundles - pf_before.1;
         match result {
             Ok(outs) => {
                 for (p, out) in batch.into_iter().zip(outs) {
@@ -270,6 +310,9 @@ fn worker_loop(
                         engine_ms,
                         queue_ms: started.duration_since(p.enqueued).as_secs_f64() * 1e3,
                         sim_io_ms,
+                        prefetch_hit_bundles,
+                        prefetch_wasted_bundles,
+                        overlap_ratio,
                         worker: wid,
                         batch_size: prompts.len(),
                     });

@@ -33,6 +33,7 @@ use crate::flash::UfsSim;
 use crate::metrics::RunMetrics;
 use crate::neuron::{BundleId, Layout, NeuronSpace, Slot};
 use crate::pipeline::{IoPipeline, PipelineConfig};
+use crate::prefetch::{PrefetchConfig, Prefetcher};
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Executable, Runtime};
 use crate::trace::Trace;
 
@@ -53,6 +54,12 @@ pub struct EngineOptions {
     pub cache_ratio: f64,
     pub cache_policy: String,
     pub collapse: bool,
+    /// Speculative next-layer prefetch on the async flash timeline.
+    /// Takes effect once a predictor is attached via `enable_prefetch`
+    /// (it learns from a recorded activation trace); until then — and
+    /// with `enabled: false` — the engine's flash timeline is
+    /// bit-identical to the synchronous baseline.
+    pub prefetch: PrefetchConfig,
     pub seed: u64,
 }
 
@@ -65,6 +72,7 @@ impl Default for EngineOptions {
             cache_ratio: 0.1,
             cache_policy: "linking".to_string(),
             collapse: true,
+            prefetch: PrefetchConfig::default(),
             seed: 42,
         }
     }
@@ -117,6 +125,9 @@ pub struct Engine {
     pub sim: UfsSim,
     pipeline: IoPipeline,
     pub io_metrics: RunMetrics,
+    /// Modeled per-layer compute window (deterministic; see DESIGN.md
+    /// §Async-flash-timeline) that overlapped I/O can hide behind.
+    compute_ns_per_layer: f64,
     /// When set, true activation sets are recorded per decode step.
     recorder: Option<Trace>,
     scratch: Vec<u8>,
@@ -192,6 +203,15 @@ impl Engine {
         };
         let pipeline = IoPipeline::new(pcfg, space.clone(), layouts, cache);
 
+        // Deterministic per-layer compute estimate (attention projections
+        // plus the sparse FFN over top-K bundles) — the window overlapped
+        // I/O gets to hide behind. No wall clock: the simulated timeline
+        // must replay bit-identically.
+        let dm = meta.d_model as f64;
+        let layer_flops = 8.0 * dm * dm + 4.0 * meta.top_k as f64 * dm;
+        let compute_ns_per_layer = layer_flops
+            / (crate::bench::workloads::EFFECTIVE_GFLOPS_OP12 * opts.device.soc_speed);
+
         let kv = Self::fresh_kv(&meta, b)?;
         Ok(Self {
             attn,
@@ -211,6 +231,7 @@ impl Engine {
             sim,
             pipeline,
             io_metrics: RunMetrics::new(),
+            compute_ns_per_layer,
             recorder: None,
             scratch: Vec::new(),
             meta,
@@ -260,9 +281,43 @@ impl Engine {
         let cache =
             NeuronCache::from_config(&self.opts.cache_policy, cache_cap, self.opts.seed)?;
         let pcfg = self.pipeline.config().clone();
+        let prefetcher = self.pipeline.take_prefetcher();
         self.pipeline = IoPipeline::new(pcfg, self.space.clone(), layouts, cache);
+        self.pipeline.set_prefetcher(prefetcher);
         self.io_metrics = RunMetrics::new();
         Ok(())
+    }
+
+    /// Attach the speculative prefetcher, learned from a recorded
+    /// activation trace (usually the output of [`Engine::calibrate`]).
+    /// Requires `opts.prefetch.enabled`; the trace geometry must match
+    /// the model. From here on `decode_step` runs the overlapped
+    /// submit/speculate/complete schedule per layer.
+    pub fn enable_prefetch(&mut self, calib: &Trace) -> Result<()> {
+        anyhow::ensure!(
+            self.opts.prefetch.enabled,
+            "prefetch disabled in EngineOptions"
+        );
+        anyhow::ensure!(
+            calib.n_layers == self.meta.n_layers && calib.per_layer == self.meta.d_ffn,
+            "calibration trace geometry ({}x{}) does not match model ({}x{})",
+            calib.n_layers,
+            calib.per_layer,
+            self.meta.n_layers,
+            self.meta.d_ffn
+        );
+        let pf = Prefetcher::from_trace(calib, self.opts.prefetch.clone(), 2);
+        self.pipeline.set_prefetcher(Some(pf));
+        Ok(())
+    }
+
+    pub fn prefetch_active(&self) -> bool {
+        self.pipeline.has_prefetcher()
+    }
+
+    /// Modeled per-layer compute window on the simulated timeline, ns.
+    pub fn compute_ns_per_layer(&self) -> f64 {
+        self.compute_ns_per_layer
     }
 
     /// Start/stop recording ground-truth activation traces.
@@ -385,11 +440,27 @@ impl Engine {
                 }
             }
 
-            // 3. I/O through the RIPPLE pipeline (real bytes)
+            // 3. I/O through the RIPPLE pipeline (real bytes). With a
+            // prefetcher attached, the demand batch is submitted on the
+            // async timeline, speculation for the next layer goes out
+            // behind it, and the modeled compute window advances the
+            // clock so the speculative reads drain underneath it.
             self.scratch.clear();
             let plan = self.pipeline.plan_layer(li, &active);
             let mut buf = std::mem::take(&mut self.scratch);
-            let io = self.pipeline.commit_layer_read(&plan, &mut self.sim, &mut buf);
+            let io = if self.pipeline.has_prefetcher() {
+                let ticket =
+                    self.pipeline.submit_layer_read(&plan, &mut self.sim, &mut buf);
+                if li + 1 < self.meta.n_layers {
+                    self.pipeline.prefetch_layer(&mut self.sim, li + 1, &active);
+                }
+                let io = self.pipeline.complete_layer(&plan, ticket, &mut self.sim);
+                self.sim.advance_compute(self.compute_ns_per_layer);
+                self.io_metrics.record_compute(self.compute_ns_per_layer);
+                io
+            } else {
+                self.pipeline.commit_layer_read(&plan, &mut self.sim, &mut buf)
+            };
             self.io_metrics.record(&io, self.space.bundle_bytes);
 
             // 4. gather + sparse FFN (PJRT)
@@ -701,6 +772,29 @@ mod tests {
         let Some(mut e) = engine(opts) else { return };
         let out = e.generate(&[b"abc".to_vec()], 4, false).unwrap();
         assert_eq!(out[0].len(), 4);
+    }
+
+    #[test]
+    fn prefetch_preserves_numerics() {
+        // Speculation only changes *when* bytes move, never which bytes
+        // feed the FFN: outputs must be identical with prefetch on.
+        let opts = EngineOptions {
+            prefetch: PrefetchConfig { enabled: true, ..Default::default() },
+            ..Default::default()
+        };
+        let Some(mut e) = engine(opts) else { return };
+        let prompt = b"the quick".to_vec();
+        let base = e.generate(&[prompt.clone()], 6, false).unwrap();
+        assert!(!e.prefetch_active());
+
+        let calib = e.calibrate(b"the quick brown fox", 24).unwrap();
+        e.enable_prefetch(&calib).unwrap();
+        assert!(e.prefetch_active());
+        let after = e.generate(&[prompt], 6, false).unwrap();
+        assert_eq!(base, after, "prefetch changed model outputs");
+        let t = &e.io_metrics.totals;
+        assert!(t.prefetch_hit_bundles + t.prefetch_wasted_bundles > 0);
+        assert!(t.stall_ns <= t.elapsed_ns + 1e-6);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! UFS flash simulator.
+//! UFS flash simulator with an asynchronous command timeline.
 //!
 //! Substitute for the phones' physical UFS 3.1/4.0 storage (see DESIGN.md
 //! §Substitutions). It holds a *real* backing image (the engine stores
@@ -17,8 +17,23 @@
 //! bounds how many commands one submission window may carry (the sim
 //! charges one extra `submit_overhead` per window refill).
 //!
-//! Determinism: no wall clock anywhere; the simulated clock advances only
-//! through `read_batch`, so every experiment replays bit-identically.
+//! # Two timelines (DESIGN.md §Async-flash-timeline)
+//!
+//! The sim tracks a *host* clock (`clock_ns`) and a *device* frontier
+//! (`device_free_ns`). `submit_batch` enqueues work on the device
+//! timeline (the device starts it when free, never before the host
+//! submits) and returns a [`Ticket`]; `wait` advances the host clock only
+//! for the *uncovered remainder* — if compute (`advance_compute`) already
+//! pushed the host clock past the batch's completion, the wait is free
+//! and the flash busy time was fully hidden. The legacy synchronous API
+//! (`charge` / `read_batch`) is submit-then-wait on an idle device and is
+//! arithmetically identical to the historical `clock += elapsed` model,
+//! so existing experiments replay bit-for-bit.
+//!
+//! Determinism: no wall clock anywhere; both timelines advance only
+//! through deterministic f64 arithmetic on submitted batches and
+//! explicit `advance_compute` calls, so every experiment — including
+//! ones with speculative prefetch in flight — replays bit-identically.
 
 use crate::config::DeviceConfig;
 
@@ -37,13 +52,40 @@ pub struct BatchResult {
     pub bytes: usize,
 }
 
+/// Outcome of waiting on an in-flight batch: its device-time result plus
+/// how long the host actually stalled (0 when fully overlapped).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WaitOutcome {
+    pub batch: BatchResult,
+    pub stall_ns: f64,
+}
+
+/// Handle to an in-flight submitted batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ticket(u64);
+
+struct InFlight {
+    id: u64,
+    /// Absolute device-timeline completion.
+    completion_ns: f64,
+    result: BatchResult,
+}
+
 /// Cumulative flash statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FlashStats {
     pub total_commands: u64,
     pub total_bytes: u64,
+    /// Device busy time (service time of all batches).
     pub total_busy_ns: f64,
     pub total_batches: u64,
+    /// Host time actually blocked in `wait` (== busy time when every
+    /// batch is waited synchronously).
+    pub total_stall_ns: f64,
+    /// Busy time hidden under compute (`busy - stall` per wait, clamped
+    /// at zero — queueing delay can make a stall exceed its own batch's
+    /// service time).
+    pub total_hidden_ns: f64,
 }
 
 impl FlashStats {
@@ -64,6 +106,15 @@ impl FlashStats {
             self.total_commands as f64 / (self.total_busy_ns / 1e9)
         }
     }
+
+    /// Fraction of device busy time hidden under compute, in [0, 1].
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.total_busy_ns == 0.0 {
+            0.0
+        } else {
+            self.total_hidden_ns / self.total_busy_ns
+        }
+    }
 }
 
 pub struct UfsSim {
@@ -71,6 +122,13 @@ pub struct UfsSim {
     image: Vec<u8>,
     clock_ns: f64,
     stats: FlashStats,
+    /// Device timeline frontier: when the device finishes everything
+    /// submitted so far.
+    device_free_ns: f64,
+    /// Host time spent in `advance_compute` (not flash time).
+    compute_ns: f64,
+    inflight: Vec<InFlight>,
+    next_ticket: u64,
     /// Synchronous (mmap page-fault) mode: each command pays the full
     /// QD-1 round-trip latency and nothing overlaps. Models llama.cpp's
     /// mmap offload path; async (queued) mode models a proper io
@@ -86,7 +144,17 @@ impl UfsSim {
 
     /// Create around an existing flash image (real model weights).
     pub fn with_image(dev: DeviceConfig, image: Vec<u8>) -> Self {
-        Self { dev, image, clock_ns: 0.0, stats: FlashStats::default(), sync: false }
+        Self {
+            dev,
+            image,
+            clock_ns: 0.0,
+            stats: FlashStats::default(),
+            device_free_ns: 0.0,
+            compute_ns: 0.0,
+            inflight: Vec::new(),
+            next_ticket: 0,
+            sync: false,
+        }
     }
 
     /// Switch to synchronous (queue-depth-1, mmap-fault) timing.
@@ -137,10 +205,122 @@ impl UfsSim {
         BatchResult { elapsed_ns: ns, commands: cmds.len(), bytes }
     }
 
-    /// Submit a batch: advances the simulated clock, updates statistics,
-    /// and copies each command's bytes into `out` (appended back-to-back
-    /// in command order). Returns the batch timing.
+    // -----------------------------------------------------------------------
+    // Asynchronous timeline
+    // -----------------------------------------------------------------------
+
+    /// Enqueue a batch on the device timeline without blocking the host.
+    /// Stats (commands/bytes/busy) are charged at submission — the device
+    /// will do this work regardless of whether anyone waits. Returns a
+    /// ticket to `wait` on (or `drop_ticket` for abandoned speculation).
+    pub fn submit_batch(&mut self, cmds: &[ReadCmd]) -> Ticket {
+        let r = self.time_batch(cmds);
+        // The device starts this batch when it has drained everything
+        // already queued, but never before the host submits it (now).
+        // An empty batch is zero work: it completes immediately at the
+        // host clock instead of queueing behind in-flight speculation.
+        let completion = if r.commands == 0 {
+            self.clock_ns
+        } else {
+            let start = if self.device_free_ns > self.clock_ns {
+                self.device_free_ns
+            } else {
+                self.clock_ns
+            };
+            let c = start + r.elapsed_ns;
+            self.device_free_ns = c;
+            c
+        };
+        self.stats.total_commands += r.commands as u64;
+        self.stats.total_bytes += r.bytes as u64;
+        self.stats.total_busy_ns += r.elapsed_ns;
+        self.stats.total_batches += 1;
+        let id = self.next_ticket;
+        self.next_ticket += 1;
+        self.inflight.push(InFlight { id, completion_ns: completion, result: r });
+        Ticket(id)
+    }
+
+    /// Like `submit_batch` but also copies each command's bytes into
+    /// `out` (appended back-to-back in command order). The data is
+    /// deterministic, so it is materialized at submit time; only *timing*
+    /// resolves at `wait`.
+    pub fn submit_read_batch(&mut self, cmds: &[ReadCmd], out: &mut Vec<u8>) -> Ticket {
+        self.copy_out(cmds, out);
+        self.submit_batch(cmds)
+    }
+
+    /// Block the host until the batch completes: advances the host clock
+    /// only for the uncovered remainder of the batch's completion time.
+    ///
+    /// Panics on an unknown (already waited / dropped) ticket.
+    pub fn wait(&mut self, t: Ticket) -> WaitOutcome {
+        let idx = self
+            .inflight
+            .iter()
+            .position(|f| f.id == t.0)
+            .expect("wait on unknown or already-completed flash ticket");
+        let inf = self.inflight.swap_remove(idx);
+        let stall = if inf.completion_ns > self.clock_ns {
+            inf.completion_ns - self.clock_ns
+        } else {
+            0.0
+        };
+        if inf.completion_ns > self.clock_ns {
+            self.clock_ns = inf.completion_ns;
+        }
+        self.stats.total_stall_ns += stall;
+        self.stats.total_hidden_ns += (inf.result.elapsed_ns - stall).max(0.0);
+        WaitOutcome { batch: inf.result, stall_ns: stall }
+    }
+
+    /// Abandon an in-flight batch without blocking (wholly wasted
+    /// speculation: the device still did the work — busy time stays
+    /// charged — but the host never needs the data). The batch's busy
+    /// time counts as hidden, since the host never stalled for it.
+    pub fn drop_ticket(&mut self, t: Ticket) {
+        if let Some(idx) = self.inflight.iter().position(|f| f.id == t.0) {
+            let inf = self.inflight.swap_remove(idx);
+            self.stats.total_hidden_ns += inf.result.elapsed_ns;
+        }
+    }
+
+    /// Advance the host clock by `ns` of (simulated) compute. In-flight
+    /// batches keep executing on the device timeline underneath.
+    pub fn advance_compute(&mut self, ns: f64) {
+        debug_assert!(ns >= 0.0);
+        self.clock_ns += ns;
+        self.compute_ns += ns;
+    }
+
+    /// Number of batches submitted but not yet waited/dropped.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Absolute device-timeline completion of everything submitted.
+    pub fn device_free_ns(&self) -> f64 {
+        self.device_free_ns
+    }
+
+    /// Total host time spent in `advance_compute`.
+    pub fn compute_ns(&self) -> f64 {
+        self.compute_ns
+    }
+
+    // -----------------------------------------------------------------------
+    // Synchronous (legacy) API — submit + wait on the spot
+    // -----------------------------------------------------------------------
+
+    /// Submit a batch synchronously: advances the simulated clock, updates
+    /// statistics, and copies each command's bytes into `out` (appended
+    /// back-to-back in command order). Returns the batch timing.
     pub fn read_batch(&mut self, cmds: &[ReadCmd], out: &mut Vec<u8>) -> BatchResult {
+        self.copy_out(cmds, out);
+        self.charge(cmds)
+    }
+
+    fn copy_out(&self, cmds: &[ReadCmd], out: &mut Vec<u8>) {
         for c in cmds {
             let o = c.offset as usize;
             assert!(
@@ -151,19 +331,15 @@ impl UfsSim {
             );
             out.extend_from_slice(&self.image[o..o + c.len]);
         }
-        self.charge(cmds)
     }
 
     /// Advance the clock for a batch without copying data (metrics-only
-    /// callers). Identical accounting to `read_batch`.
+    /// callers). Identical accounting to `read_batch`: submit-then-wait
+    /// on the spot, which on an idle device reduces to the historical
+    /// `clock += elapsed` arithmetic bit-for-bit.
     pub fn charge(&mut self, cmds: &[ReadCmd]) -> BatchResult {
-        let r = self.time_batch(cmds);
-        self.clock_ns += r.elapsed_ns;
-        self.stats.total_commands += r.commands as u64;
-        self.stats.total_bytes += r.bytes as u64;
-        self.stats.total_busy_ns += r.elapsed_ns;
-        self.stats.total_batches += 1;
-        r
+        let t = self.submit_batch(cmds);
+        self.wait(t).batch
     }
 
     pub fn clock_ns(&self) -> f64 {
@@ -177,6 +353,9 @@ impl UfsSim {
     pub fn reset_stats(&mut self) {
         self.stats = FlashStats::default();
         self.clock_ns = 0.0;
+        self.device_free_ns = 0.0;
+        self.compute_ns = 0.0;
+        self.inflight.clear();
     }
 }
 
@@ -249,6 +428,10 @@ mod tests {
         assert_eq!(s.total_batches, 2);
         assert!((sim.clock_ns() - s.total_busy_ns).abs() < 1e-9);
         assert!(s.iops() > 0.0 && s.bandwidth() > 0.0);
+        // fully synchronous -> every busy ns was a stall, nothing hidden
+        assert!((s.total_stall_ns - s.total_busy_ns).abs() < 1e-6);
+        assert!(s.total_hidden_ns.abs() < 1e-6);
+        assert!(s.overlap_ratio().abs() < 1e-9);
     }
 
     #[test]
@@ -292,5 +475,132 @@ mod tests {
         let r = sim.charge(&[]);
         assert_eq!(r.elapsed_ns, 0.0);
         assert_eq!(sim.stats().total_commands, 0);
+    }
+
+    #[test]
+    fn charge_is_bit_identical_to_submit_wait() {
+        // the legacy synchronous path and the async path must produce
+        // bit-identical timelines for the same command stream
+        let batches: Vec<Vec<ReadCmd>> = (0..10u64)
+            .map(|i| {
+                (0..(i % 4) + 1)
+                    .map(|j| ReadCmd {
+                        offset: (i * 131 + j * 17) * 64,
+                        len: 64 * (j as usize + 1),
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut a = UfsSim::new(op12(), 1 << 20);
+        let mut b = UfsSim::new(op12(), 1 << 20);
+        for cmds in &batches {
+            a.charge(cmds);
+            let t = b.submit_batch(cmds);
+            b.wait(t);
+        }
+        assert_eq!(a.clock_ns().to_bits(), b.clock_ns().to_bits());
+        assert_eq!(a.stats().total_busy_ns.to_bits(), b.stats().total_busy_ns.to_bits());
+        assert_eq!(a.stats().total_commands, b.stats().total_commands);
+        assert_eq!(a.stats().total_bytes, b.stats().total_bytes);
+        assert_eq!(a.stats().total_batches, b.stats().total_batches);
+    }
+
+    #[test]
+    fn compute_hides_inflight_batch() {
+        let mut sim = UfsSim::new(op12(), 1 << 20);
+        let cmds = [ReadCmd { offset: 0, len: 4096 }];
+        let service = sim.time_batch(&cmds).elapsed_ns;
+        let t = sim.submit_batch(&cmds);
+        // compute for twice the service time: the wait must be free
+        sim.advance_compute(2.0 * service);
+        let w = sim.wait(t);
+        assert_eq!(w.stall_ns, 0.0);
+        assert_eq!(w.batch.elapsed_ns.to_bits(), service.to_bits());
+        let s = sim.stats();
+        assert_eq!(s.total_stall_ns, 0.0);
+        assert_eq!(s.total_hidden_ns.to_bits(), service.to_bits());
+        assert!((s.overlap_ratio() - 1.0).abs() < 1e-12);
+        // host clock advanced by compute only
+        assert_eq!(sim.clock_ns().to_bits(), (2.0 * service).to_bits());
+    }
+
+    #[test]
+    fn partial_overlap_charges_remainder() {
+        let mut sim = UfsSim::new(op12(), 1 << 20);
+        let cmds = [ReadCmd { offset: 0, len: 65536 }];
+        let service = sim.time_batch(&cmds).elapsed_ns;
+        let t = sim.submit_batch(&cmds);
+        sim.advance_compute(service / 4.0);
+        let w = sim.wait(t);
+        assert!(w.stall_ns > 0.0 && w.stall_ns < service);
+        assert!((w.stall_ns + service / 4.0 - service).abs() < 1e-6);
+        // clock ends exactly at the batch completion
+        assert_eq!(sim.clock_ns().to_bits(), service.to_bits());
+    }
+
+    #[test]
+    fn serial_device_queues_batches() {
+        // two batches submitted back-to-back: the second starts when the
+        // first completes, so waiting the second costs both service times
+        let mut sim = UfsSim::new(op12(), 1 << 20);
+        let cmds = [ReadCmd { offset: 0, len: 4096 }];
+        let service = sim.time_batch(&cmds).elapsed_ns;
+        let t1 = sim.submit_batch(&cmds);
+        let t2 = sim.submit_batch(&cmds);
+        let w2 = sim.wait(t2);
+        assert!((w2.stall_ns - 2.0 * service).abs() < 1e-6);
+        // the first is long done: free wait
+        let w1 = sim.wait(t1);
+        assert_eq!(w1.stall_ns, 0.0);
+    }
+
+    #[test]
+    fn drop_ticket_counts_hidden_not_stall() {
+        let mut sim = UfsSim::new(op12(), 1 << 20);
+        let cmds = [ReadCmd { offset: 0, len: 4096 }];
+        let service = sim.time_batch(&cmds).elapsed_ns;
+        let t = sim.submit_batch(&cmds);
+        assert_eq!(sim.in_flight(), 1);
+        sim.drop_ticket(t);
+        assert_eq!(sim.in_flight(), 0);
+        let s = sim.stats();
+        assert_eq!(s.total_busy_ns.to_bits(), service.to_bits());
+        assert_eq!(s.total_stall_ns, 0.0);
+        assert_eq!(s.total_hidden_ns.to_bits(), service.to_bits());
+        // host clock untouched
+        assert_eq!(sim.clock_ns(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown or already-completed")]
+    fn double_wait_panics() {
+        let mut sim = UfsSim::new(op12(), 1 << 20);
+        let t = sim.submit_batch(&[ReadCmd { offset: 0, len: 64 }]);
+        sim.wait(t);
+        sim.wait(t);
+    }
+
+    #[test]
+    fn submit_read_batch_returns_data_at_submit() {
+        let mut sim = UfsSim::new(op12(), 1024);
+        sim.write_image(64, &[9, 8, 7]);
+        let mut out = Vec::new();
+        let t = sim.submit_read_batch(&[ReadCmd { offset: 64, len: 3 }], &mut out);
+        assert_eq!(out, vec![9, 8, 7]);
+        let w = sim.wait(t);
+        assert_eq!(w.batch.bytes, 3);
+    }
+
+    #[test]
+    fn reset_clears_timelines() {
+        let mut sim = UfsSim::new(op12(), 1 << 20);
+        let _ = sim.submit_batch(&[ReadCmd { offset: 0, len: 64 }]);
+        sim.advance_compute(100.0);
+        sim.reset_stats();
+        assert_eq!(sim.clock_ns(), 0.0);
+        assert_eq!(sim.device_free_ns(), 0.0);
+        assert_eq!(sim.compute_ns(), 0.0);
+        assert_eq!(sim.in_flight(), 0);
+        assert_eq!(sim.stats().total_batches, 0);
     }
 }

@@ -20,6 +20,7 @@ pub mod neuron;
 pub mod persist;
 pub mod pipeline;
 pub mod placement;
+pub mod prefetch;
 pub mod runtime;
 pub mod trace;
 pub mod util;

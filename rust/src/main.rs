@@ -28,7 +28,7 @@ use ripple::util::cli::Args;
 use ripple::util::stats::Table;
 
 fn main() {
-    let args = Args::from_env(&["dense", "help", "no-collapse"]);
+    let args = Args::from_env(&["dense", "help", "no-collapse", "prefetch"]);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let result = match cmd {
         "serve" => serve(&args),
@@ -53,11 +53,13 @@ fn print_help() {
         "ripple — correlation-aware neuron management (paper reproduction)\n\n\
          usage: ripple <serve|generate|place|simulate|devices|models> [options]\n\n\
          generate: --prompt <str> --tokens <n> [--dense]\n\
-         serve:    --requests <n> --tokens <n> --workers <n>\n\
+         serve:    --requests <n> --tokens <n> --workers <n> [--prefetch]\n\
          place:    --model <name> --dataset <alpaca|openwebtext|wikitext> [--knn <m>]\n\
          simulate: --model <name> --device <name> --dataset <name>\n\
                    --system <llamacpp|llmflash|ripple-offline|ripple>\n\
-                   [--cache-ratio <f>] [--tokens <n>] [--no-collapse]"
+                   [--config <runconfig.json>] [--cache-ratio <f>] [--tokens <n>]\n\
+                   [--no-collapse] [--prefetch] [--prefetch-budget <bytes>]\n\
+                   [--prefetch-lookahead <n>]"
     );
 }
 
@@ -99,7 +101,9 @@ fn serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 8)?;
     let tokens = args.get_usize("tokens", 8)?;
     let workers = args.get_usize("workers", 1)?;
-    let opts = ServerOptions { n_workers: workers, ..Default::default() };
+    let mut opts = ServerOptions { n_workers: workers, ..Default::default() };
+    // workers self-calibrate a speculative predictor at startup
+    opts.engine.prefetch.enabled = args.flag("prefetch");
     let server = Server::start(default_artifacts_dir(), opts)?;
     println!("serving {n_requests} requests x {tokens} tokens on {workers} worker(s)");
     let prompts = [
@@ -114,13 +118,17 @@ fn serve(args: &Args) -> Result<()> {
     for (i, rx) in rxs.into_iter().enumerate() {
         let r = rx.recv()?;
         println!(
-            "  req {i}: {:?} (worker {}, batch {}, queue {:.1} ms, engine {:.1} ms, sim I/O {:.2} ms)",
+            "  req {i}: {:?} (worker {}, batch {}, queue {:.1} ms, engine {:.1} ms, \
+             sim I/O {:.2} ms, overlap {:.0}%, pf hit/waste {}/{})",
             String::from_utf8_lossy(&r.generated),
             r.worker,
             r.batch_size,
             r.queue_ms,
             r.engine_ms,
             r.sim_io_ms,
+            r.overlap_ratio * 100.0,
+            r.prefetch_hit_bundles,
+            r.prefetch_wasted_bundles,
         );
     }
     let stats = server.shutdown();
@@ -156,20 +164,46 @@ fn place(args: &Args) -> Result<()> {
 }
 
 fn simulate(args: &Args) -> Result<()> {
-    let model = model_by_name(args.get_or("model", "OPT-350M"))?;
-    let device = device_by_name(args.get_or("device", "OnePlus 12"))?;
     let dataset = DatasetProfile::by_name(args.get_or("dataset", "alpaca"))?;
     let system = system_by_name(args.get_or("system", "ripple"))?;
-    let mut w = Workload::new(model, device, dataset);
+    // --config <file.json> loads a RunConfig (model/device/precision/
+    // cache-ratio/seed + prefetch knobs); explicit flags still override.
+    let mut w = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config `{path}`: {e}"))?;
+        let cfg = ripple::config::RunConfig::from_json_str(&text)?;
+        Workload::from_run(&cfg, dataset)
+    } else {
+        let model = model_by_name(args.get_or("model", "OPT-350M"))?;
+        let device = device_by_name(args.get_or("device", "OnePlus 12"))?;
+        Workload::new(model, device, dataset)
+    };
     w.cache_ratio = args.get_f64("cache-ratio", w.cache_ratio)?;
     w.eval_tokens = args.get_usize("tokens", w.eval_tokens)?;
+    w.prefetch.enabled = w.prefetch.enabled || args.flag("prefetch");
+    w.prefetch.budget_bytes =
+        args.get_usize("prefetch-budget", w.prefetch.budget_bytes)?;
+    w.prefetch.lookahead = args.get_usize("prefetch-lookahead", w.prefetch.lookahead)?;
+    // same bounds the JSON config path enforces
+    anyhow::ensure!(
+        w.prefetch.lookahead >= 1,
+        "--prefetch-lookahead must be >= 1"
+    );
+    anyhow::ensure!(
+        w.prefetch.budget_bytes <= 64 << 20,
+        "--prefetch-budget {} unreasonable (max 64 MiB)",
+        w.prefetch.budget_bytes
+    );
     let r = workloads::run_experiment(&w, system)?;
     let mut t = Table::new(&[
-        "system", "io ms/token", "IOPS", "eff bw MB/s", "mean access len", "place s",
+        "system", "io ms/token", "e2e ms/token", "overlap", "IOPS", "eff bw MB/s",
+        "mean access len", "place s",
     ]);
     t.row(&[
         r.system.name().into(),
         format!("{:.2}", r.latency_ms()),
+        format!("{:.2}", r.e2e_ms()),
+        format!("{:.0}%", r.overlap_ratio() * 100.0),
         format!("{:.0}", r.metrics.iops()),
         format!("{:.1}", r.metrics.effective_bandwidth() / 1e6),
         format!("{:.2}", r.metrics.mean_access_len()),

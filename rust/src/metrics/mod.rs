@@ -1,5 +1,7 @@
 //! I/O metrics: per-token and aggregated counters the paper reports
-//! (I/O latency per token, IOPS, effective bandwidth, transfer volume).
+//! (I/O latency per token, IOPS, effective bandwidth, transfer volume),
+//! plus the overlap/prefetch counters of the asynchronous pipeline
+//! (stall time, hidden flash time, speculative hit/waste).
 
 use crate::util::stats::{Percentiles, Summary};
 
@@ -14,12 +16,19 @@ pub struct TokenIo {
     pub extra_bundles: u64,
     /// Bundles served from the DRAM cache.
     pub cached_bundles: u64,
+    /// Demanded bundles served by an in-flight speculative prefetch.
+    pub prefetch_hit_bundles: u64,
+    /// Speculatively prefetched bundles this token never demanded.
+    pub prefetch_wasted_bundles: u64,
     /// Read commands issued.
     pub commands: u64,
     /// Bytes transferred.
     pub bytes: u64,
-    /// Simulated flash time, nanoseconds.
+    /// Simulated flash (device busy) time, nanoseconds.
     pub elapsed_ns: f64,
+    /// Host time actually blocked on flash, nanoseconds (== `elapsed_ns`
+    /// on the synchronous path; smaller when reads overlap compute).
+    pub stall_ns: f64,
 }
 
 impl TokenIo {
@@ -28,9 +37,12 @@ impl TokenIo {
         self.read_bundles += other.read_bundles;
         self.extra_bundles += other.extra_bundles;
         self.cached_bundles += other.cached_bundles;
+        self.prefetch_hit_bundles += other.prefetch_hit_bundles;
+        self.prefetch_wasted_bundles += other.prefetch_wasted_bundles;
         self.commands += other.commands;
         self.bytes += other.bytes;
         self.elapsed_ns += other.elapsed_ns;
+        self.stall_ns += other.stall_ns;
     }
 }
 
@@ -44,6 +56,9 @@ pub struct RunMetrics {
     /// Demanded bytes (useful traffic) per token — the numerator of the
     /// paper's *effective bandwidth*.
     pub demanded_bytes: u64,
+    /// Simulated compute time interleaved with I/O, nanoseconds (zero
+    /// for pure trace-driven synchronous runs).
+    pub compute_ns: f64,
 }
 
 impl RunMetrics {
@@ -59,9 +74,50 @@ impl RunMetrics {
         self.demanded_bytes += t.demanded_bundles * bundle_bytes as u64;
     }
 
-    /// Mean I/O latency per token, ns.
+    /// Account simulated compute that ran alongside (or between) the
+    /// token's flash operations.
+    pub fn record_compute(&mut self, ns: f64) {
+        self.compute_ns += ns;
+    }
+
+    /// Mean I/O (device busy) latency per token, ns.
     pub fn mean_latency_ns(&self) -> f64 {
         if self.tokens == 0 { 0.0 } else { self.totals.elapsed_ns / self.tokens as f64 }
+    }
+
+    /// Mean host stall per token, ns: the I/O time that actually blocked
+    /// the critical path. Equals `mean_latency_ns` without overlap.
+    pub fn mean_stall_ns(&self) -> f64 {
+        if self.tokens == 0 { 0.0 } else { self.totals.stall_ns / self.tokens as f64 }
+    }
+
+    /// Mean simulated end-to-end latency per token, ns: compute plus the
+    /// flash time that compute could not hide.
+    pub fn mean_e2e_ns(&self) -> f64 {
+        if self.tokens == 0 {
+            0.0
+        } else {
+            (self.totals.stall_ns + self.compute_ns) / self.tokens as f64
+        }
+    }
+
+    /// Fraction of flash busy time hidden under compute, in [0, 1].
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.totals.elapsed_ns == 0.0 {
+            0.0
+        } else {
+            (1.0 - self.totals.stall_ns / self.totals.elapsed_ns).max(0.0)
+        }
+    }
+
+    /// Fraction of prefetched bundles that were demanded, in [0, 1].
+    pub fn prefetch_hit_ratio(&self) -> f64 {
+        let total = self.totals.prefetch_hit_bundles + self.totals.prefetch_wasted_bundles;
+        if total == 0 {
+            0.0
+        } else {
+            self.totals.prefetch_hit_bundles as f64 / total as f64
+        }
     }
 
     /// Achieved IOPS.
@@ -116,6 +172,8 @@ mod tests {
             commands: cmds,
             bytes,
             elapsed_ns: ns,
+            stall_ns: ns,
+            ..Default::default()
         }
     }
 
@@ -139,5 +197,40 @@ mod tests {
         assert_eq!(m.mean_latency_ns(), 0.0);
         assert_eq!(m.iops(), 0.0);
         assert_eq!(m.effective_bandwidth(), 0.0);
+        assert_eq!(m.overlap_ratio(), 0.0);
+        assert_eq!(m.prefetch_hit_ratio(), 0.0);
+        assert_eq!(m.mean_e2e_ns(), 0.0);
+    }
+
+    #[test]
+    fn overlap_and_prefetch_ratios() {
+        let mut m = RunMetrics::new();
+        let mut t = tok(10, 8, 2, 4, 8 * 100, 1e6);
+        // half the flash time was hidden under compute
+        t.stall_ns = 0.5e6;
+        t.prefetch_hit_bundles = 3;
+        t.prefetch_wasted_bundles = 1;
+        m.record(&t, 100);
+        m.record_compute(2e6);
+        assert!((m.overlap_ratio() - 0.5).abs() < 1e-12);
+        assert!((m.prefetch_hit_ratio() - 0.75).abs() < 1e-12);
+        assert!((m.mean_stall_ns() - 0.5e6).abs() < 1e-9);
+        // e2e = stall (0.5ms) + compute (2ms)
+        assert!((m.mean_e2e_ns() - 2.5e6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn token_add_sums_new_fields() {
+        let mut a = TokenIo { prefetch_hit_bundles: 1, stall_ns: 5.0, ..Default::default() };
+        let b = TokenIo {
+            prefetch_hit_bundles: 2,
+            prefetch_wasted_bundles: 4,
+            stall_ns: 7.0,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.prefetch_hit_bundles, 3);
+        assert_eq!(a.prefetch_wasted_bundles, 4);
+        assert_eq!(a.stall_ns, 12.0);
     }
 }

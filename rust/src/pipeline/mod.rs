@@ -1,20 +1,36 @@
 //! The per-token I/O pipeline (paper Figure 7, online half):
 //!
 //!   activated bundles -> layout (bundle->slot) -> cache filter
-//!     -> run planning -> access collapse -> flash batch
-//!     -> cache admission -> adaptive-controller feedback
+//!     -> prefetch reconciliation -> run planning -> access collapse
+//!     -> flash batch -> cache admission -> adaptive-controller feedback
 //!
 //! The same pipeline object serves both the trace-driven paper benches
 //! (timing-only `step_token`) and the real PJRT engine (`plan_layer` +
 //! `commit_layer`, which also return the byte-level commands so the
 //! engine can read actual weights).
+//!
+//! # Overlapped mode (DESIGN.md §Async-flash-timeline)
+//!
+//! With a [`Prefetcher`] attached, the pipeline splits each layer's
+//! commit into `submit_layer` / `complete_layer` and, between them,
+//! issues speculative reads for upcoming layers (`prefetch_layer`) on
+//! the simulator's async device timeline. `plan_layer` treats demanded
+//! slots covered by an in-flight speculative batch as *prefetched* —
+//! they are excluded from the demand batch; `complete_layer` then waits
+//! the speculative ticket (charging only the time compute did not hide),
+//! admits the speculative runs into the DRAM cache, and reconciles
+//! hit/waste counters. With no prefetcher attached every code path is
+//! bit-identical to the historical synchronous pipeline.
 
-use crate::access::{collapse_runs, plan_runs, AdaptiveCollapse, SlotRun};
+use std::collections::BTreeMap;
+
+use crate::access::{collapse_runs, plan_runs, plan_volume, AdaptiveCollapse, SlotRun};
 use crate::cache::NeuronCache;
 use crate::config::RunConfig;
-use crate::flash::{ReadCmd, UfsSim};
+use crate::flash::{ReadCmd, Ticket, UfsSim};
 use crate::metrics::TokenIo;
 use crate::neuron::{BundleId, Layout, NeuronSpace, Slot};
+use crate::prefetch::Prefetcher;
 
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
@@ -57,6 +73,9 @@ pub struct LayerPlan {
     pub layer: usize,
     /// Demanded slots served by DRAM cache.
     pub cached: Vec<Slot>,
+    /// Demanded slots covered by an in-flight speculative prefetch
+    /// (empty unless a prefetcher is attached and speculation is live).
+    pub prefetched: Vec<Slot>,
     /// Demanded slots that must be read.
     pub missed: Vec<Slot>,
     /// Post-collapse read runs covering all missed slots.
@@ -65,12 +84,40 @@ pub struct LayerPlan {
     pub commands: Vec<ReadCmd>,
 }
 
+/// A speculative batch in flight for one upcoming layer.
+struct OutstandingPrefetch {
+    runs: Vec<SlotRun>,
+    ticket: Ticket,
+}
+
+impl OutstandingPrefetch {
+    fn covers(&self, slot: Slot) -> bool {
+        // runs are sorted and disjoint
+        self.runs
+            .binary_search_by(|r| {
+                if slot < r.start {
+                    std::cmp::Ordering::Greater
+                } else if slot >= r.end() {
+                    std::cmp::Ordering::Less
+                } else {
+                    std::cmp::Ordering::Equal
+                }
+            })
+            .is_ok()
+    }
+}
+
 pub struct IoPipeline {
     cfg: PipelineConfig,
     space: NeuronSpace,
     layouts: Vec<Layout>,
     pub cache: NeuronCache,
     adaptive: AdaptiveCollapse,
+    prefetcher: Option<Prefetcher>,
+    /// Speculative batches in flight, keyed by target layer.
+    outstanding: BTreeMap<usize, OutstandingPrefetch>,
+    /// Previous token's activation set per layer — predictor seed.
+    last_actives: Vec<Vec<BundleId>>,
 }
 
 impl IoPipeline {
@@ -86,7 +133,17 @@ impl IoPipeline {
         }
         let adaptive =
             AdaptiveCollapse::new(cfg.initial_threshold, cfg.max_threshold, cfg.window);
-        Self { cfg, space, layouts, cache, adaptive }
+        let last_actives = vec![Vec::new(); space.n_layers];
+        Self {
+            cfg,
+            space,
+            layouts,
+            cache,
+            adaptive,
+            prefetcher: None,
+            outstanding: BTreeMap::new(),
+            last_actives,
+        }
     }
 
     pub fn layouts(&self) -> &[Layout] {
@@ -101,20 +158,53 @@ impl IoPipeline {
         &self.cfg
     }
 
+    /// Attach (or detach) the speculative prefetcher. The predictor's
+    /// layer geometry must match the pipeline's.
+    pub fn set_prefetcher(&mut self, pf: Option<Prefetcher>) {
+        if let Some(p) = &pf {
+            assert_eq!(p.n_layers(), self.space.n_layers, "prefetcher layer mismatch");
+            assert_eq!(p.per_layer(), self.space.per_layer, "prefetcher width mismatch");
+        }
+        self.prefetcher = pf;
+    }
+
+    pub fn take_prefetcher(&mut self) -> Option<Prefetcher> {
+        self.prefetcher.take()
+    }
+
+    pub fn has_prefetcher(&self) -> bool {
+        self.prefetcher.is_some()
+    }
+
+    /// Speculative batches currently in flight.
+    pub fn outstanding_prefetches(&self) -> usize {
+        self.outstanding.len()
+    }
+
     pub fn threshold(&self) -> u32 {
         if self.cfg.collapse { self.adaptive.threshold() } else { 0 }
     }
 
-    /// Plan one layer: map to slots, filter through cache, plan + collapse
-    /// runs, lower to byte commands.
+    /// Plan one layer: map to slots, filter through cache, peel off
+    /// slots covered by in-flight speculation, plan + collapse runs,
+    /// lower to byte commands.
     pub fn plan_layer(&mut self, layer: usize, actives: &[BundleId]) -> LayerPlan {
         let layout = &self.layouts[layer];
         let slots = layout.slots_for(actives);
-        let (cached, missed) = self.cache.filter(layer, &slots);
+        let (cached, missed_all) = self.cache.filter(layer, &slots);
+        let (prefetched, missed) = match self.outstanding.get(&layer) {
+            Some(out) => missed_all.into_iter().partition(|&s| out.covers(s)),
+            None => (Vec::new(), missed_all),
+        };
         let base_runs = plan_runs(&missed);
         let runs = collapse_runs(&base_runs, self.threshold());
         let commands = self.lower_runs(layer, &runs);
-        LayerPlan { layer, cached, missed, runs, commands }
+        if self.prefetcher.is_some() {
+            // predictor seed for the next token; skip the clone entirely
+            // on the synchronous path
+            self.last_actives[layer] = actives.to_vec();
+        }
+        LayerPlan { layer, cached, prefetched, missed, runs, commands }
     }
 
     fn lower_runs(&self, layer: usize, runs: &[SlotRun]) -> Vec<ReadCmd> {
@@ -137,12 +227,131 @@ impl IoPipeline {
         cmds
     }
 
-    /// Charge a plan to the flash sim, admit into cache, feed the
-    /// adaptive controller, and return the metrics contribution.
+    // -----------------------------------------------------------------------
+    // Speculative prefetch
+    // -----------------------------------------------------------------------
+
+    /// While the current layer computes, issue speculative reads for the
+    /// next `lookahead` layers starting at `next_layer`, seeded by the
+    /// current token's activations (`cur_actives`) and each target
+    /// layer's previous-token activations. No-op without a prefetcher.
+    pub fn prefetch_layer(
+        &mut self,
+        sim: &mut UfsSim,
+        next_layer: usize,
+        cur_actives: &[BundleId],
+    ) {
+        let Some(pf) = &self.prefetcher else {
+            return;
+        };
+        let budget_slots = pf.config().budget_slots(self.cfg.bundle_bytes);
+        if budget_slots == 0 {
+            return;
+        }
+        let lookahead = pf.config().lookahead.max(1);
+        let threshold = self.threshold();
+        let last = next_layer.saturating_add(lookahead).min(self.space.n_layers);
+        for target in next_layer..last {
+            if self.outstanding.contains_key(&target) {
+                continue;
+            }
+            let seeds: [&[BundleId]; 2] = [cur_actives, &self.last_actives[target]];
+            let predicted = pf.predict(target, &seeds, budget_slots);
+            if predicted.is_empty() {
+                continue;
+            }
+            let layout = &self.layouts[target];
+            // predict() already caps at budget_slots; the residency
+            // filter only shrinks the list further
+            let mut slots: Vec<Slot> = predicted
+                .iter()
+                .map(|&b| layout.slot_of(b))
+                .filter(|&s| !self.cache.contains(target, s))
+                .collect();
+            slots.sort_unstable();
+            if slots.is_empty() {
+                continue;
+            }
+            let runs = collapse_runs(&plan_runs(&slots), threshold);
+            let cmds = self.lower_runs(target, &runs);
+            let ticket = sim.submit_batch(&cmds);
+            self.outstanding.insert(target, OutstandingPrefetch { runs, ticket });
+        }
+    }
+
+    /// Wait + reconcile the speculative batch covering `plan.layer`, if
+    /// any: charge the uncovered stall, admit the speculative runs into
+    /// the cache, and account hit/waste volume.
+    fn reconcile_prefetch(&mut self, plan: &LayerPlan, sim: &mut UfsSim) -> TokenIo {
+        let mut io = TokenIo::default();
+        let Some(out) = self.outstanding.remove(&plan.layer) else {
+            return io;
+        };
+        let w = sim.wait(out.ticket);
+        self.cache.admit(plan.layer, &out.runs);
+        let (pf_total, pf_extra) = plan_volume(&out.runs);
+        let hits = plan.prefetched.len() as u64;
+        io.prefetch_hit_bundles = hits;
+        // gap slots merged in by access collapse are collapse overhead,
+        // not misprediction: classify them as extra_bundles exactly like
+        // the demand path does, so waste counters blame the predictor
+        // only for slots it actually chose.
+        io.extra_bundles = pf_extra;
+        io.prefetch_wasted_bundles = (pf_total - pf_extra).saturating_sub(hits);
+        io.read_bundles = pf_total;
+        io.commands = w.batch.commands as u64;
+        io.bytes = w.batch.bytes as u64;
+        io.elapsed_ns = w.batch.elapsed_ns;
+        io.stall_ns = w.stall_ns;
+        io
+    }
+
+    // -----------------------------------------------------------------------
+    // Commit paths
+    // -----------------------------------------------------------------------
+
+    /// Submit the plan's demand batch on the async timeline (timing only).
+    pub fn submit_layer(&mut self, plan: &LayerPlan, sim: &mut UfsSim) -> Ticket {
+        sim.submit_batch(&plan.commands)
+    }
+
+    /// Like `submit_layer` but also copies real bytes out of the flash
+    /// image (engine path). Bytes are appended run-by-run in order.
+    pub fn submit_layer_read(
+        &mut self,
+        plan: &LayerPlan,
+        sim: &mut UfsSim,
+        out: &mut Vec<u8>,
+    ) -> Ticket {
+        sim.submit_read_batch(&plan.commands, out)
+    }
+
+    /// Wait the demand batch, reconcile speculation, admit into cache,
+    /// feed the adaptive controller, and return the metrics contribution.
+    pub fn complete_layer(
+        &mut self,
+        plan: &LayerPlan,
+        ticket: Ticket,
+        sim: &mut UfsSim,
+    ) -> TokenIo {
+        let sat = sim.device().sat_bandwidth;
+        // The speculative batch sits ahead of the demand batch in the
+        // serial device queue: reconcile it first so stalls attribute in
+        // completion order.
+        let mut io = self.reconcile_prefetch(plan, sim);
+        let w = sim.wait(ticket);
+        io.add(&self.finish_commit(plan, w.batch.elapsed_ns, w.stall_ns, sat));
+        io
+    }
+
+    /// Charge a plan to the flash sim synchronously, admit into cache,
+    /// feed the adaptive controller, and return the metrics contribution.
     pub fn commit_layer(&mut self, plan: &LayerPlan, sim: &mut UfsSim) -> TokenIo {
         let sat = sim.device().sat_bandwidth;
+        let mut io = self.reconcile_prefetch(plan, sim);
         let batch = sim.charge(&plan.commands);
-        self.finish_commit(plan, batch.elapsed_ns, sat)
+        io.add(&self.finish_commit(plan, batch.elapsed_ns, batch.elapsed_ns, sat));
+        io
     }
 
     /// Like `commit_layer` but also copies real bytes out of the flash
@@ -154,35 +363,78 @@ impl IoPipeline {
         out: &mut Vec<u8>,
     ) -> TokenIo {
         let sat = sim.device().sat_bandwidth;
+        let mut io = self.reconcile_prefetch(plan, sim);
         let batch = sim.read_batch(&plan.commands, out);
-        self.finish_commit(plan, batch.elapsed_ns, sat)
+        io.add(&self.finish_commit(plan, batch.elapsed_ns, batch.elapsed_ns, sat));
+        io
     }
 
-    fn finish_commit(&mut self, plan: &LayerPlan, elapsed_ns: f64, sat: f64) -> TokenIo {
+    fn finish_commit(
+        &mut self,
+        plan: &LayerPlan,
+        elapsed_ns: f64,
+        stall_ns: f64,
+        sat: f64,
+    ) -> TokenIo {
         self.cache.admit(plan.layer, &plan.runs);
-        let (total_slots, extra_slots) = crate::access::plan_volume(&plan.runs);
+        let (total_slots, extra_slots) = plan_volume(&plan.runs);
         let bytes = total_slots * self.cfg.bundle_bytes as u64;
         let demand_bytes = plan.missed.len() as u64 * self.cfg.bundle_bytes as u64;
         self.adaptive
             .observe(demand_bytes as f64, bytes as f64, elapsed_ns, sat);
         TokenIo {
-            demanded_bundles: (plan.missed.len() + plan.cached.len()) as u64,
+            demanded_bundles: (plan.missed.len() + plan.cached.len() + plan.prefetched.len())
+                as u64,
             read_bundles: total_slots,
             extra_bundles: extra_slots,
             cached_bundles: plan.cached.len() as u64,
+            prefetch_hit_bundles: 0,
+            prefetch_wasted_bundles: 0,
             commands: plan.commands.len() as u64,
             bytes,
             elapsed_ns,
+            stall_ns,
         }
     }
 
-    /// Trace-driven step: process all layers of one token against `sim`.
+    /// Trace-driven step: process all layers of one token against `sim`,
+    /// fully synchronously (the historical model; bit-stable with seeds).
     pub fn step_token(&mut self, sim: &mut UfsSim, actives: &[Vec<BundleId>]) -> TokenIo {
         assert_eq!(actives.len(), self.space.n_layers);
         let mut tok = TokenIo::default();
         for (layer, act) in actives.iter().enumerate() {
             let plan = self.plan_layer(layer, act);
             tok.add(&self.commit_layer(&plan, sim));
+        }
+        tok
+    }
+
+    /// Trace-driven step with the overlapped I/O–compute schedule: per
+    /// layer, the demand batch is submitted, speculation for upcoming
+    /// layers is issued behind it, the demand wait charges only what
+    /// compute can't hide, and `compute_ns_per_layer` of simulated
+    /// compute advances the host clock while speculation drains.
+    ///
+    /// With no prefetcher attached and `compute_ns_per_layer == 0.0`
+    /// this is bit-identical to [`step_token`].
+    pub fn step_token_overlapped(
+        &mut self,
+        sim: &mut UfsSim,
+        actives: &[Vec<BundleId>],
+        compute_ns_per_layer: f64,
+    ) -> TokenIo {
+        assert_eq!(actives.len(), self.space.n_layers);
+        let mut tok = TokenIo::default();
+        for (layer, act) in actives.iter().enumerate() {
+            let plan = self.plan_layer(layer, act);
+            let ticket = self.submit_layer(&plan, sim);
+            if layer + 1 < self.space.n_layers {
+                self.prefetch_layer(sim, layer + 1, act);
+            }
+            tok.add(&self.complete_layer(&plan, ticket, sim));
+            if compute_ns_per_layer > 0.0 {
+                sim.advance_compute(compute_ns_per_layer);
+            }
         }
         tok
     }
@@ -193,6 +445,8 @@ mod tests {
     use super::*;
     use crate::cache::{Admission, NeuronCache, S3Fifo};
     use crate::config::devices;
+    use crate::prefetch::{PrefetchConfig, Prefetcher};
+    use crate::trace::{DatasetProfile, TraceGen};
 
     fn mk_pipeline(collapse: bool, cache_cap: usize) -> (IoPipeline, UfsSim) {
         let space = NeuronSpace::new(2, 64, 128);
@@ -219,6 +473,7 @@ mod tests {
         let (mut p, _sim) = mk_pipeline(true, 0);
         let plan = p.plan_layer(0, &[1, 2, 3, 10, 12]);
         assert!(plan.cached.is_empty());
+        assert!(plan.prefetched.is_empty());
         assert_eq!(plan.missed.len(), 5);
         for &s in &plan.missed {
             assert!(plan.runs.iter().any(|r| s >= r.start && s < r.end()));
@@ -306,5 +561,141 @@ mod tests {
         let plan = p.plan_layer(0, &[0]);
         assert_eq!(plan.runs[0].start, 7);
         assert_eq!(plan.commands[0].offset, 7 * 16);
+    }
+
+    // -- overlapped mode ----------------------------------------------------
+
+    fn mk_prefetching_pipeline(
+        cache_cap: usize,
+        budget_bytes: usize,
+    ) -> (IoPipeline, UfsSim, crate::trace::Trace) {
+        let n = 256;
+        let space = NeuronSpace::new(2, n, 128);
+        let layouts = vec![Layout::identity(n), Layout::identity(n)];
+        let cache =
+            NeuronCache::new(Box::new(S3Fifo::new(cache_cap)), Admission::All, 7);
+        let cfg = PipelineConfig {
+            bundle_bytes: 128,
+            collapse: true,
+            initial_threshold: 2,
+            max_threshold: 8,
+            window: 8,
+            sub_reads_per_run: 1,
+        };
+        let sim = UfsSim::new(devices()[0].clone(), space.image_bytes());
+        let mut p = IoPipeline::new(cfg, space, layouts, cache);
+        let mut tg = TraceGen::new(2, n, 28, &DatasetProfile::alpaca(), 3, 9);
+        let calib = tg.generate(128);
+        let pcfg = PrefetchConfig {
+            enabled: true,
+            budget_bytes,
+            lookahead: 1,
+            max_partners: 8,
+        };
+        p.set_prefetcher(Some(Prefetcher::from_trace(&calib, pcfg, 2)));
+        let eval = tg.generate(40);
+        (p, sim, eval)
+    }
+
+    #[test]
+    fn overlapped_disabled_is_bit_identical_to_sync() {
+        let mut tg = TraceGen::new(2, 64, 10, &DatasetProfile::wikitext(), 5, 6);
+        let eval = tg.generate(25);
+        let (mut a, mut sim_a) = mk_pipeline(true, 32);
+        let (mut b, mut sim_b) = mk_pipeline(true, 32);
+        for tok in &eval.tokens {
+            a.step_token(&mut sim_a, tok);
+            b.step_token_overlapped(&mut sim_b, tok, 0.0);
+        }
+        let (sa, sb) = (sim_a.stats(), sim_b.stats());
+        assert_eq!(sim_a.clock_ns().to_bits(), sim_b.clock_ns().to_bits());
+        assert_eq!(sa.total_busy_ns.to_bits(), sb.total_busy_ns.to_bits());
+        assert_eq!(sa.total_commands, sb.total_commands);
+        assert_eq!(sa.total_bytes, sb.total_bytes);
+        assert_eq!(sa.total_batches, sb.total_batches);
+    }
+
+    #[test]
+    fn prefetch_produces_hits_and_overlap() {
+        let (mut p, mut sim, eval) = mk_prefetching_pipeline(0, 16 * 128);
+        let compute = 200_000.0; // generous per-layer compute window
+        let mut tok = TokenIo::default();
+        for t in &eval.tokens {
+            tok.add(&p.step_token_overlapped(&mut sim, t, compute));
+        }
+        assert!(tok.prefetch_hit_bundles > 0, "no speculative hits");
+        let s = sim.stats();
+        assert!(s.total_hidden_ns > 0.0, "no overlap achieved");
+        assert!(s.overlap_ratio() > 0.0);
+        // every layer drained its speculation
+        assert_eq!(p.outstanding_prefetches(), 0);
+        assert_eq!(sim.in_flight(), 0);
+    }
+
+    #[test]
+    fn prefetch_hits_shrink_demand_commands() {
+        // same stream with and without prefetch: speculation must strictly
+        // reduce the host-visible stall time given ample compute overlap
+        let (mut with, mut sim_with, eval) = mk_prefetching_pipeline(0, 32 * 128);
+        let (mut without, mut sim_without, _) = mk_prefetching_pipeline(0, 32 * 128);
+        without.set_prefetcher(None);
+        let compute = 400_000.0;
+        let mut stall_with = 0.0;
+        let mut stall_without = 0.0;
+        for t in &eval.tokens {
+            stall_with += with.step_token_overlapped(&mut sim_with, t, compute).stall_ns;
+            stall_without +=
+                without.step_token_overlapped(&mut sim_without, t, compute).stall_ns;
+        }
+        assert!(
+            stall_with < stall_without,
+            "prefetch should cut stalls: {stall_with} vs {stall_without}"
+        );
+    }
+
+    #[test]
+    fn overlapped_run_is_deterministic() {
+        let (mut a, mut sim_a, eval) = mk_prefetching_pipeline(64, 24 * 128);
+        let (mut b, mut sim_b, _) = mk_prefetching_pipeline(64, 24 * 128);
+        for t in &eval.tokens {
+            a.step_token_overlapped(&mut sim_a, t, 150_000.0);
+            b.step_token_overlapped(&mut sim_b, t, 150_000.0);
+        }
+        let (sa, sb) = (sim_a.stats(), sim_b.stats());
+        assert_eq!(sim_a.clock_ns().to_bits(), sim_b.clock_ns().to_bits());
+        assert_eq!(sa.total_busy_ns.to_bits(), sb.total_busy_ns.to_bits());
+        assert_eq!(sa.total_stall_ns.to_bits(), sb.total_stall_ns.to_bits());
+        assert_eq!(sa.total_hidden_ns.to_bits(), sb.total_hidden_ns.to_bits());
+        assert_eq!(sa.total_commands, sb.total_commands);
+        assert_eq!(sa.total_bytes, sb.total_bytes);
+    }
+
+    #[test]
+    fn prefetched_slots_excluded_from_demand_batch() {
+        let (mut p, mut sim, _eval) = mk_prefetching_pipeline(0, 64 * 128);
+        // seed the predictor path: run one token so last_actives exist
+        let tok0 = vec![vec![1, 2, 3], vec![10, 11, 12]];
+        p.step_token_overlapped(&mut sim, &tok0, 50_000.0);
+        // now speculate for layer 1 from layer 0's actives
+        let plan0 = p.plan_layer(0, &[1, 2, 3]);
+        let t0 = p.submit_layer(&plan0, &mut sim);
+        p.prefetch_layer(&mut sim, 1, &[1, 2, 3]);
+        assert_eq!(p.outstanding_prefetches(), 1);
+        p.complete_layer(&plan0, t0, &mut sim);
+        // layer 1 demand: the previous token's slots 10..12 are highly
+        // ranked seeds, so they must be covered by the speculation
+        let plan1 = p.plan_layer(1, &[10, 11, 12]);
+        assert!(
+            !plan1.prefetched.is_empty(),
+            "expected speculative coverage, got missed={:?}",
+            plan1.missed
+        );
+        for s in &plan1.prefetched {
+            assert!(!plan1.missed.contains(s));
+        }
+        let t1 = p.submit_layer(&plan1, &mut sim);
+        let io = p.complete_layer(&plan1, t1, &mut sim);
+        assert_eq!(io.prefetch_hit_bundles, plan1.prefetched.len() as u64);
+        assert_eq!(p.outstanding_prefetches(), 0);
     }
 }

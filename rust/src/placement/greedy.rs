@@ -49,9 +49,20 @@ pub struct SearchResult {
 
 /// Run Algorithm 1 on one layer's co-activation statistics.
 pub fn search(stats: &CoactStats, params: GreedyParams) -> SearchResult {
+    let pairs = stats.candidate_pairs_parallel(params.knn, params.scan_threads.max(1));
+    search_with_pairs(stats, &pairs)
+}
+
+/// Algorithm 1 over a precomputed candidate pair list (deduped, sorted
+/// by co-count descending — `CoactStats::candidate_pairs*` output).
+/// Lets callers share the dominant O(n²) co-count scan with other
+/// consumers (e.g. the speculative prefetcher's adjacency).
+pub fn search_with_pairs(
+    stats: &CoactStats,
+    pairs: &[(BundleId, BundleId, u32)],
+) -> SearchResult {
     let n = stats.n_neurons();
     assert!(n > 0);
-    let pairs = stats.candidate_pairs_parallel(params.knn, params.scan_threads.max(1));
 
     let mut nbr_cnt = vec![0u8; n];
     let mut uf = UnionFind::new(n);
@@ -61,7 +72,7 @@ pub fn search(stats: &CoactStats, params: GreedyParams) -> SearchResult {
 
     let mut links_made = 0usize;
     let mut pairs_scanned = 0usize;
-    for &(a, b, _count) in &pairs {
+    for &(a, b, _count) in pairs {
         pairs_scanned += 1;
         let (ai, bi) = (a as usize, b as usize);
         if nbr_cnt[ai] == 2 || nbr_cnt[bi] == 2 {

@@ -5,5 +5,5 @@ pub mod baselines;
 mod greedy;
 mod unionfind;
 
-pub use greedy::{place_model, search, GreedyParams, SearchResult};
+pub use greedy::{place_model, search, search_with_pairs, GreedyParams, SearchResult};
 pub use unionfind::UnionFind;

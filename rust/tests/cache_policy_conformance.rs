@@ -1,0 +1,189 @@
+//! Cache-policy conformance suite: one parameterized battery of
+//! trait-level contracts, run against every `CachePolicy` implementation
+//! (LRU and S3-FIFO; the zero-capacity contract also covers NullCache).
+//!
+//! The battery asserts only what the *trait* promises — capacity
+//! invariants, touch/insert semantics, eviction under pressure, no
+//! phantom hits, side-effect-free `contains` — so any future policy
+//! (ARC, CLOCK, ...) can be added to `POLICIES` and inherit the whole
+//! suite.
+
+use ripple::cache::{CachePolicy, Lru, NullCache, S3Fifo};
+use ripple::util::rng::Rng;
+
+type Ctor = fn(usize) -> Box<dyn CachePolicy>;
+
+/// Every policy the suite covers. Add new implementations here.
+const POLICIES: &[(&str, Ctor)] = &[
+    ("lru", |cap| Box::new(Lru::new(cap))),
+    ("s3fifo", |cap| Box::new(S3Fifo::new(cap))),
+];
+
+fn for_each_policy(mut f: impl FnMut(&str, Ctor)) {
+    for &(name, ctor) in POLICIES {
+        f(name, ctor);
+    }
+}
+
+#[test]
+fn capacity_never_exceeded_under_churn() {
+    for_each_policy(|name, ctor| {
+        for cap in [1usize, 2, 7, 16, 64] {
+            let mut c = ctor(cap);
+            let mut rng = Rng::new(0xCAFE ^ cap as u64);
+            for i in 0..2_000u64 {
+                c.insert(rng.below(cap * 5) as u64);
+                if i % 3 == 0 {
+                    c.touch(rng.below(cap * 5) as u64);
+                }
+                assert!(
+                    c.len() <= cap,
+                    "{name}: len {} > cap {cap} at op {i}",
+                    c.len()
+                );
+                assert_eq!(c.capacity(), cap, "{name}: capacity drifted");
+            }
+        }
+    });
+}
+
+#[test]
+fn reported_capacity_matches_construction() {
+    for_each_policy(|name, ctor| {
+        for cap in [0usize, 1, 5, 100] {
+            let c = ctor(cap);
+            assert_eq!(c.capacity(), cap, "{name}");
+            assert_eq!(c.len(), 0, "{name}: fresh cache not empty");
+        }
+    });
+}
+
+#[test]
+fn touch_misses_before_insert_and_hits_after() {
+    for_each_policy(|name, ctor| {
+        let mut c = ctor(16);
+        for k in 0..8u64 {
+            assert!(!c.touch(k), "{name}: phantom hit on fresh cache");
+        }
+        for k in 0..8u64 {
+            c.insert(k);
+        }
+        // no pressure (8 < 16): every inserted key must be resident
+        for k in 0..8u64 {
+            assert!(c.touch(k), "{name}: lost key {k} without pressure");
+        }
+        assert_eq!(c.len(), 8, "{name}");
+    });
+}
+
+#[test]
+fn touch_refresh_keeps_hot_key_alive_under_scan() {
+    // A key re-referenced on every step must survive a cold scan of 20x
+    // capacity: LRU via recency refresh, S3-FIFO via frequency promotion.
+    for_each_policy(|name, ctor| {
+        let mut c = ctor(10);
+        c.insert(7);
+        assert!(c.touch(7), "{name}");
+        for i in 1_000..1_200u64 {
+            c.insert(i);
+            assert!(c.touch(7), "{name}: hot key evicted by scan at {i}");
+        }
+        assert!(c.len() <= 10, "{name}");
+    });
+}
+
+#[test]
+fn eviction_under_pressure_is_real() {
+    // After inserting 3x capacity distinct keys, at most `cap` of them
+    // can still hit — the rest must have been evicted, not hidden.
+    for_each_policy(|name, ctor| {
+        let cap = 12usize;
+        let mut c = ctor(cap);
+        let keys: Vec<u64> = (0..3 * cap as u64).collect();
+        for &k in &keys {
+            c.insert(k);
+        }
+        assert!(c.len() <= cap, "{name}");
+        let resident = keys.iter().filter(|&&k| c.contains(k)).count();
+        assert!(resident <= cap, "{name}: {resident} resident > cap {cap}");
+        assert_eq!(resident, c.len(), "{name}: len disagrees with membership");
+    });
+}
+
+#[test]
+fn no_phantom_hits_under_random_ops() {
+    // A hit may only occur for a key that was inserted earlier; randomized
+    // mixed workload cross-checked against an oracle set of insertions.
+    for_each_policy(|name, ctor| {
+        for seed in 0..6u64 {
+            let mut rng = Rng::new(0xBEEF ^ seed);
+            let cap = rng.range(1, 24);
+            let mut c = ctor(cap);
+            let mut inserted = std::collections::HashSet::new();
+            for _ in 0..1_500 {
+                let key = rng.below(48) as u64;
+                if rng.chance(0.5) {
+                    c.insert(key);
+                    inserted.insert(key);
+                } else {
+                    let hit = c.touch(key);
+                    assert!(
+                        !hit || inserted.contains(&key),
+                        "{name}: hit on never-inserted key {key} (cap {cap}, seed {seed})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn contains_is_consistent_and_side_effect_free() {
+    for_each_policy(|name, ctor| {
+        let mut rng = Rng::new(0x51DE);
+        let mut c = ctor(8);
+        for _ in 0..500 {
+            let key = rng.below(24) as u64;
+            if rng.chance(0.4) {
+                c.insert(key);
+            }
+            // contains is repeatable (no internal state change)...
+            let a = c.contains(key);
+            let b = c.contains(key);
+            assert_eq!(a, b, "{name}: contains not repeatable for {key}");
+            // ...and agrees with what touch observes right after
+            let hit = c.touch(key);
+            assert_eq!(a, hit, "{name}: contains/touch disagree for {key}");
+        }
+    });
+}
+
+#[test]
+fn reinsert_of_resident_key_does_not_grow() {
+    for_each_policy(|name, ctor| {
+        let mut c = ctor(8);
+        c.insert(3);
+        let len = c.len();
+        for _ in 0..50 {
+            c.insert(3);
+        }
+        assert_eq!(c.len(), len, "{name}: duplicate insert grew the cache");
+        assert!(c.touch(3), "{name}");
+    });
+}
+
+#[test]
+fn zero_capacity_never_stores() {
+    let null_ctor: Ctor = |_| Box::new(NullCache);
+    let mut all: Vec<(&str, Ctor)> = POLICIES.to_vec();
+    all.push(("null", null_ctor));
+    for (name, ctor) in all {
+        let mut c = ctor(0);
+        for k in 0..32u64 {
+            c.insert(k);
+            assert!(!c.touch(k), "{name}: stored into zero-capacity cache");
+            assert!(!c.contains(k), "{name}");
+        }
+        assert_eq!(c.len(), 0, "{name}");
+    }
+}

@@ -1,0 +1,226 @@
+//! Cross-module property tests: access-collapse plan invariants and
+//! timeline determinism of the overlapped (prefetching) pipeline.
+//!
+//! Uses the in-repo `util::prop` harness + `util::rng` (the offline
+//! registry has no proptest).
+
+use ripple::access::{collapse_runs, plan_runs, plan_volume};
+use ripple::bench::workloads::{run_experiment, tiny_workload, System};
+use ripple::cache::{Admission, NeuronCache, S3Fifo};
+use ripple::flash::UfsSim;
+use ripple::neuron::{Layout, NeuronSpace, Slot};
+use ripple::pipeline::{IoPipeline, PipelineConfig};
+use ripple::prefetch::{PrefetchConfig, Prefetcher};
+use ripple::util::prop;
+use ripple::util::rng::Rng;
+
+fn gen_slots_and_threshold(rng: &mut Rng, size: usize) -> (Vec<Slot>, u32) {
+    let n = size.max(4) * 8;
+    let k = rng.range(1, size.max(2) * 2);
+    let mut s: Vec<Slot> = rng
+        .sample_indices(n, k.min(n))
+        .into_iter()
+        .map(|x| x as Slot)
+        .collect();
+    s.sort_unstable();
+    let threshold = rng.below(10) as u32;
+    (s, threshold)
+}
+
+/// Every missed slot is covered by exactly ONE collapsed run (coverage
+/// plus disjointness, counted explicitly).
+#[test]
+fn prop_each_missed_slot_covered_exactly_once() {
+    prop::run(
+        "collapse-exactly-once",
+        prop::Config { cases: 80, max_size: 160, ..Default::default() },
+        gen_slots_and_threshold,
+        |(slots, threshold)| {
+            let runs = collapse_runs(&plan_runs(slots), *threshold);
+            for &s in slots {
+                let covering =
+                    runs.iter().filter(|r| s >= r.start && s < r.end()).count();
+                if covering != 1 {
+                    return Err(format!("slot {s} covered by {covering} runs"));
+                }
+            }
+            // runs sorted, disjoint, non-touching (a shared boundary
+            // would mean a merge the planner missed)
+            if !runs.windows(2).all(|w| w[0].end() <= w[1].start) {
+                return Err("runs overlap or are unsorted".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Inside any collapsed run, the gap between consecutive demanded slots
+/// never exceeds the collapse threshold, and every run starts and ends
+/// on a demanded slot (gap fill is strictly interior).
+#[test]
+fn prop_no_interior_gap_exceeds_threshold() {
+    prop::run(
+        "collapse-gap-bound",
+        prop::Config { cases: 80, max_size: 160, ..Default::default() },
+        gen_slots_and_threshold,
+        |(slots, threshold)| {
+            let runs = collapse_runs(&plan_runs(slots), *threshold);
+            for r in &runs {
+                let demanded: Vec<Slot> = slots
+                    .iter()
+                    .copied()
+                    .filter(|&s| s >= r.start && s < r.end())
+                    .collect();
+                if demanded.first() != Some(&r.start) {
+                    return Err(format!("run at {} does not start demanded", r.start));
+                }
+                if demanded.last() != Some(&(r.end() - 1)) {
+                    return Err(format!("run at {} does not end demanded", r.start));
+                }
+                for w in demanded.windows(2) {
+                    let gap = w[1] - w[0] - 1;
+                    if gap > *threshold {
+                        return Err(format!(
+                            "interior gap {gap} > threshold {threshold} in run at {}",
+                            r.start
+                        ));
+                    }
+                }
+                // extra accounting: run length = demanded + interior fill
+                if r.demanded() as usize != demanded.len() {
+                    return Err(format!(
+                        "run at {} claims {} demanded, found {}",
+                        r.start,
+                        r.demanded(),
+                        demanded.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Collapsing never issues more commands than the uncollapsed plan, and
+/// the command count is monotone non-increasing in the threshold.
+#[test]
+fn prop_collapsed_command_count_monotone() {
+    prop::run_bool(
+        "collapse-count-monotone",
+        prop::Config { cases: 60, max_size: 160, ..Default::default() },
+        |rng, size| gen_slots_and_threshold(rng, size).0,
+        |slots| {
+            let base = plan_runs(slots);
+            let mut prev = base.len();
+            for t in 0..12u32 {
+                let merged = collapse_runs(&base, t);
+                if merged.len() > prev || merged.len() > base.len() {
+                    return false;
+                }
+                // volume identity: total - extra == demanded
+                let (total, extra) = plan_volume(&merged);
+                if total - extra != slots.len() as u64 {
+                    return false;
+                }
+                prev = merged.len();
+            }
+            true
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Determinism of the overlapped timeline
+// ---------------------------------------------------------------------------
+
+fn overlapped_pipeline(seed: u64, n: usize) -> (IoPipeline, UfsSim, ripple::trace::Trace) {
+    use ripple::trace::{DatasetProfile, TraceGen};
+    let space = NeuronSpace::new(2, n, 256);
+    let layouts = vec![Layout::identity(n), Layout::identity(n)];
+    let cache = NeuronCache::new(
+        Box::new(S3Fifo::new(n / 4)),
+        Admission::Linking { segment_min: 4, segment_p: 0.5 },
+        seed,
+    );
+    let cfg = PipelineConfig {
+        bundle_bytes: 256,
+        collapse: true,
+        initial_threshold: 3,
+        max_threshold: 12,
+        window: 8,
+        sub_reads_per_run: 1,
+    };
+    let sim = UfsSim::new(ripple::config::devices()[0].clone(), space.image_bytes());
+    let mut p = IoPipeline::new(cfg, space, layouts, cache);
+    let mut tg = TraceGen::new(2, n, n / 12, &DatasetProfile::openwebtext(), seed, seed ^ 7);
+    let calib = tg.generate(128);
+    let pcfg = PrefetchConfig {
+        enabled: true,
+        budget_bytes: 24 * 256,
+        lookahead: 1,
+        max_partners: 8,
+    };
+    p.set_prefetcher(Some(Prefetcher::from_trace(&calib, pcfg, 2)));
+    let eval = tg.generate(30);
+    (p, sim, eval)
+}
+
+/// Two overlapped pipeline runs with the same seed must produce
+/// byte-identical `FlashStats` timelines — speculation in flight and all.
+#[test]
+fn prop_overlapped_timeline_is_byte_identical() {
+    for seed in [3u64, 11, 42] {
+        let (mut pa, mut sim_a, eval) = overlapped_pipeline(seed, 384);
+        let (mut pb, mut sim_b, _) = overlapped_pipeline(seed, 384);
+        for tok in &eval.tokens {
+            pa.step_token_overlapped(&mut sim_a, tok, 120_000.0);
+            pb.step_token_overlapped(&mut sim_b, tok, 120_000.0);
+        }
+        let (a, b) = (sim_a.stats(), sim_b.stats());
+        assert_eq!(a.total_commands, b.total_commands, "seed {seed}");
+        assert_eq!(a.total_bytes, b.total_bytes, "seed {seed}");
+        assert_eq!(a.total_batches, b.total_batches, "seed {seed}");
+        assert_eq!(a.total_busy_ns.to_bits(), b.total_busy_ns.to_bits(), "seed {seed}");
+        assert_eq!(a.total_stall_ns.to_bits(), b.total_stall_ns.to_bits(), "seed {seed}");
+        assert_eq!(
+            a.total_hidden_ns.to_bits(),
+            b.total_hidden_ns.to_bits(),
+            "seed {seed}"
+        );
+        assert_eq!(sim_a.clock_ns().to_bits(), sim_b.clock_ns().to_bits(), "seed {seed}");
+        assert_eq!(
+            sim_a.device_free_ns().to_bits(),
+            sim_b.device_free_ns().to_bits(),
+            "seed {seed}"
+        );
+    }
+}
+
+/// The whole experiment runner stays byte-deterministic with prefetch
+/// enabled (predictor construction, speculation, reconciliation).
+#[test]
+fn prop_experiment_with_prefetch_deterministic() {
+    let mut w = tiny_workload();
+    w.eval_tokens = 16;
+    w.prefetch.enabled = true;
+    let a = run_experiment(&w, System::Ripple).unwrap();
+    let b = run_experiment(&w, System::Ripple).unwrap();
+    assert_eq!(
+        a.metrics.totals.elapsed_ns.to_bits(),
+        b.metrics.totals.elapsed_ns.to_bits()
+    );
+    assert_eq!(
+        a.metrics.totals.stall_ns.to_bits(),
+        b.metrics.totals.stall_ns.to_bits()
+    );
+    assert_eq!(a.metrics.totals.commands, b.metrics.totals.commands);
+    assert_eq!(a.metrics.totals.bytes, b.metrics.totals.bytes);
+    assert_eq!(
+        a.metrics.totals.prefetch_hit_bundles,
+        b.metrics.totals.prefetch_hit_bundles
+    );
+    assert_eq!(
+        a.metrics.totals.prefetch_wasted_bundles,
+        b.metrics.totals.prefetch_wasted_bundles
+    );
+}

@@ -1,0 +1,50 @@
+//! Minimal stand-in for the `log` crate facade (offline registry).
+//!
+//! `error!`/`warn!` go to stderr; `info!`/`debug!`/`trace!` compile the
+//! format arguments (so they stay type-checked) but emit nothing — the
+//! serving loop is latency-sensitive and has no configured logger.
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        eprintln!("[error] {}", format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        eprintln!("[warn] {}", format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {{
+        let _ = format_args!($($arg)*);
+    }};
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {{
+        let _ = format_args!($($arg)*);
+    }};
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {{
+        let _ = format_args!($($arg)*);
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand() {
+        crate::debug!("value {}", 42);
+        crate::info!("{}", "x");
+        crate::trace!("t");
+    }
+}

@@ -1,0 +1,236 @@
+//! API-compatible stub of the `xla` crate (xla_extension 0.5.x via the
+//! PJRT C API) for the offline build environment.
+//!
+//! Host-side `Literal` construction/extraction is implemented for real
+//! (the runtime's literal helpers and their tests run against it);
+//! device execution (`PjRtClient::compile` / `execute`) returns an
+//! "unavailable" error, which the engine surfaces cleanly — all
+//! engine/coordinator tests skip when `artifacts/` is absent, exactly as
+//! on a fresh checkout. Swap this path dependency for the real crate to
+//! run PJRT (see DESIGN.md §Substitutions).
+
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} unavailable: this build uses the offline xla stub (vendor/xla); \
+         link the real xla_extension crate to execute PJRT artifacts"
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Literals (functional)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-resident typed array, mirroring `xla::Literal`.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+/// Element types a `Literal` can hold / yield.
+pub trait NativeType: Copy + Sized {
+    fn extract(data: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn extract(data: &Data) -> Option<Vec<f32>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn extract(data: &Data) -> Option<Vec<i32>> {
+        match data {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 f32 literal.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: Data::F32(data.to_vec()) }
+    }
+
+    /// Scalar i32 literal (decode position etc.).
+    pub fn scalar(v: i32) -> Literal {
+        Literal { dims: vec![], data: Data::I32(vec![v]) }
+    }
+
+    /// Tuple literal (what executables return).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], data: Data::Tuple(elems) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(t) => t.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Reinterpret with new dims; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape element count mismatch: have {}, want {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Extract a flat vector of the requested element type.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(&self.data)
+            .ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Flatten a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(t) => Ok(t),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO artifacts (parse-only)
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module. The stub only checks the file exists and is
+/// non-empty; the real crate parses HLO text into a proto.
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let p = path.as_ref();
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| Error(format!("reading HLO text `{}`: {e}", p.display())))?;
+        if text.trim().is_empty() {
+            return Err(Error(format!("HLO text `{}` is empty", p.display())));
+        }
+        Ok(HloModuleProto { text })
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT client / executables (stubbed)
+// ---------------------------------------------------------------------------
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PJRT compilation"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PJRT buffer transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(7);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0]), Literal::scalar(2)]);
+        let elems = t.to_tuple().unwrap();
+        assert_eq!(elems.len(), 2);
+        assert!(Literal::vec1(&[1.0]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_compiles_to_unavailable() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "stub-cpu");
+        assert!(c.compile(&XlaComputation).is_err());
+    }
+
+    #[test]
+    fn hlo_from_missing_file_errors() {
+        assert!(HloModuleProto::from_text_file("/definitely/not/here.hlo.txt").is_err());
+    }
+}
