@@ -5,144 +5,19 @@
 //!   D. calibration-budget sensitivity
 //! These back the constants baked into the defaults (knn=48,
 //! adaptive window=16, segment_min=4 / segment_p=0.25, calib≈256).
+//!
+//! Thin wrapper over the `ablations` scenario preset (see
+//! `harness::presets`): the same scenario rows, rendered via the
+//! generic harness report; per-row placement-search seconds moved to
+//! the JSON-free wall-clock footer, and the full counter set lives in
+//! `BENCH_ablations.json` (`ripple bench --preset ablations`).
 
 use ripple::bench::banner;
-use ripple::bench::workloads::{bench_workload, layouts_for, System, Workload};
-use ripple::cache::{Admission, NeuronCache, S3Fifo};
-use ripple::flash::UfsSim;
-use ripple::metrics::RunMetrics;
-use ripple::neuron::NeuronSpace;
-use ripple::pipeline::{IoPipeline, PipelineConfig};
-use ripple::trace::DatasetProfile;
-use ripple::util::stats::Table;
-
-/// Run the eval stream through a custom pipeline configuration.
-fn run_custom(
-    w: &Workload,
-    knn: usize,
-    collapse: bool,
-    fixed_threshold: Option<u32>,
-    admission: Admission,
-) -> (RunMetrics, f64) {
-    let mut wk = w.clone();
-    wk.knn = knn;
-    let calib = wk.calibration_trace();
-    let (layouts, place_secs) = layouts_for(System::Ripple, &calib, wk.knn, wk.threads);
-    let bundle_bytes = wk.model.bundle_bytes(wk.precision);
-    let space = NeuronSpace::new(wk.sim_layers, wk.model.neurons_per_layer, bundle_bytes);
-    let cache = NeuronCache::new(
-        Box::new(S3Fifo::new((space.total() as f64 * wk.cache_ratio) as usize)),
-        admission,
-        wk.seed,
-    );
-    let max_threshold = ((wk.device.knee_bytes() / bundle_bytes as f64) as u32).max(1);
-    let (initial, max_t) = match fixed_threshold {
-        // fixed: pin by making min == max == value via window too large to adapt
-        Some(t) => (t, t),
-        None => (4, max_threshold),
-    };
-    let mut pipeline = IoPipeline::new(
-        PipelineConfig {
-            bundle_bytes,
-            collapse,
-            initial_threshold: initial,
-            max_threshold: max_t.max(initial),
-            window: if fixed_threshold.is_some() { usize::MAX } else { 16 },
-            sub_reads_per_run: 1,
-        },
-        space.clone(),
-        layouts,
-        cache,
-    );
-    let mut sim = UfsSim::new(wk.device.clone(), space.image_bytes());
-    let eval = wk.eval_trace(&wk.dataset);
-    let mut m = RunMetrics::new();
-    for tok in &eval.tokens {
-        let t = pipeline.step_token(&mut sim, tok);
-        m.record(&t, bundle_bytes);
-    }
-    (m, place_secs)
-}
+use ripple::harness::{default_threads, preset, run_matrix};
 
 fn main() {
-    let linking = Admission::Linking { segment_min: 4, segment_p: 0.25 };
-    let w = bench_workload("OPT-1.3B", 0, DatasetProfile::alpaca());
-    let scale = w.layer_scale();
-
-    banner("Ablation A", "greedy-search kNN width (OPT-1.3B)");
-    let mut t = Table::new(&["knn", "io ms/token", "mean access len", "search s"]);
-    for knn in [4, 8, 16, 32, 64] {
-        let (m, secs) = run_custom(&w, knn, true, None, linking);
-        t.row(&[
-            knn.to_string(),
-            format!("{:.1}", m.mean_latency_ns() * scale / 1e6),
-            format!("{:.2}", m.mean_access_len()),
-            format!("{secs:.2}"),
-        ]);
-    }
-    t.print();
-
-    banner("Ablation B", "fixed vs adaptive collapse threshold (OPT-1.3B)");
-    let mut t = Table::new(&["threshold", "io ms/token", "extra bundles/token", "eff bw MB/s"]);
-    for (label, fixed, collapse) in [
-        ("off", Some(0), false),
-        ("1", Some(1), true),
-        ("2", Some(2), true),
-        ("4", Some(4), true),
-        ("8", Some(8), true),
-        ("16", Some(16), true),
-        ("adaptive", None, true),
-    ] {
-        let (m, _) = run_custom(&w, 32, collapse, fixed, linking);
-        t.row(&[
-            label.into(),
-            format!("{:.1}", m.mean_latency_ns() * scale / 1e6),
-            format!("{:.1}", m.totals.extra_bundles as f64 / m.tokens as f64),
-            format!("{:.0}", m.effective_bandwidth() / 1e6),
-        ]);
-    }
-    t.print();
-
-    banner("Ablation C", "linking admission segment_p (OPT-1.3B)");
-    let mut t = Table::new(&["segment_p", "io ms/token", "cache hit %", "mean access len"]);
-    for p in [0.0, 0.25, 0.5, 1.0] {
-        let adm = Admission::Linking { segment_min: 4, segment_p: p };
-        let (m, _) = run_custom(&w, 32, true, None, adm);
-        t.row(&[
-            format!("{p:.2}"),
-            format!("{:.1}", m.mean_latency_ns() * scale / 1e6),
-            format!(
-                "{:.1}",
-                100.0 * m.totals.cached_bundles as f64
-                    / m.totals.demanded_bundles.max(1) as f64
-            ),
-            format!("{:.2}", m.mean_access_len()),
-        ]);
-    }
-    // plain (non-linking) admission for contrast
-    let (m, _) = run_custom(&w, 32, true, None, Admission::All);
-    t.row(&[
-        "admit-all".into(),
-        format!("{:.1}", m.mean_latency_ns() * scale / 1e6),
-        format!(
-            "{:.1}",
-            100.0 * m.totals.cached_bundles as f64 / m.totals.demanded_bundles.max(1) as f64
-        ),
-        format!("{:.2}", m.mean_access_len()),
-    ]);
-    t.print();
-
-    banner("Ablation D", "calibration budget (OPT-1.3B, tokens)");
-    let mut t = Table::new(&["calib tokens", "io ms/token", "mean access len"]);
-    for calib in [32, 64, 128, 256, 512] {
-        let mut wk = w.clone();
-        wk.calib_tokens = calib;
-        let (m, _) = run_custom(&wk, 32, true, None, linking);
-        t.row(&[
-            calib.to_string(),
-            format!("{:.1}", m.mean_latency_ns() * scale / 1e6),
-            format!("{:.2}", m.mean_access_len()),
-        ]);
-    }
-    t.print();
+    banner("Ablations", "kNN width / collapse threshold / admission / calibration (OPT-1.3B)");
+    let matrix = preset("ablations").expect("ablations preset");
+    let report = run_matrix(&matrix, default_threads()).expect("ablations sweep");
+    print!("{}", report.to_markdown(None));
 }

@@ -1,29 +1,21 @@
 //! Figure 1: bandwidth utilization across LLMs is IOPS-constrained under
 //! the structural layout; RIPPLE's co-activation linking recovers it.
+//!
+//! Thin wrapper over the `fig01` scenario preset (see
+//! `harness::presets`): the same scenarios and metrics, rendered via
+//! the generic harness report (utilization = `raw MB/s` over the
+//! device's saturation bandwidth). `ripple bench --preset fig01`
+//! additionally writes the `BENCH_fig01.json` artifact.
 
 use ripple::bench::banner;
-use ripple::bench::workloads::{bench_workload, run_experiment, System};
-use ripple::trace::DatasetProfile;
-use ripple::util::stats::Table;
+use ripple::harness::{default_threads, preset, run_matrix};
 
 fn main() {
     banner("Figure 1", "bandwidth utilization, baseline vs RIPPLE (OnePlus 12, alpaca)");
-    let models = ["OPT-350M", "OPT-1.3B", "OPT-6.7B", "Llama2-7B", "Mistral-7B"];
-    let sat = ripple::config::devices()[0].sat_bandwidth;
-    let mut t = Table::new(&["model", "baseline util", "RIPPLE util", "gain"]);
-    for m in models {
-        let w = bench_workload(m, 0, DatasetProfile::alpaca());
-        let base = run_experiment(&w, System::LlmFlash).unwrap();
-        let ripple = run_experiment(&w, System::Ripple).unwrap();
-        let bu = base.metrics.raw_bandwidth() / sat;
-        let ru = ripple.metrics.raw_bandwidth() / sat;
-        t.row(&[
-            m.into(),
-            format!("{:.1}%", bu * 100.0),
-            format!("{:.1}%", ru * 100.0),
-            format!("{:.2}x", ru / bu),
-        ]);
-    }
-    t.print();
+    let matrix = preset("fig01").expect("fig01 preset");
+    let report = run_matrix(&matrix, default_threads()).expect("fig01 sweep");
+    print!("{}", report.to_markdown(None));
+    let sat = ripple::config::devices()[0].sat_bandwidth / 1e6;
+    println!("\nutilization = raw MB/s / {sat:.0} MB/s (OnePlus 12 saturation bandwidth)");
     println!("paper: baselines leave most UFS bandwidth idle; RIPPLE lifts utilization");
 }

@@ -1,108 +1,26 @@
 //! Figure 18 (repo extension): the overlapped I/O–compute pipeline with
 //! speculative next-layer prefetch, on the Figure-10 overall workload.
 //!
-//! Sweeps the speculative read budget × DRAM cache ratio and reports,
-//! against the synchronous baseline (prefetch off — bit-identical to the
-//! historical timeline):
+//! Sweeps the speculative read budget × DRAM cache ratio against the
+//! synchronous baseline (prefetch off — bit-identical to the historical
+//! timeline), plus the collapse × prefetch toggle rows.
 //!
-//!   * simulated end-to-end token latency (compute + unhidden flash),
-//!   * overlap ratio (fraction of flash busy time hidden under compute),
-//!   * speculative hit ratio and wasted volume.
-//!
-//! A second table toggles access collapse under prefetch, completing the
-//! budget × cache × collapse ablation axis.
+//! Thin wrapper over the `fig18` scenario preset (see
+//! `harness::presets`): the same scenarios and metrics, rendered via
+//! the generic harness report (the sync row of each model × cache
+//! block is the 1.00× reference; speedups are the e2e ratios).
+//! `ripple bench --preset fig18` additionally writes the
+//! `BENCH_fig18.json` artifact, and `--baseline` diffs prior runs.
 
 use ripple::bench::banner;
-use ripple::bench::workloads::{bench_workload, run_experiment, run_spec, System, SystemSpec};
-use ripple::trace::DatasetProfile;
-use ripple::util::stats::Table;
+use ripple::harness::{default_threads, preset, run_matrix};
 
 fn main() {
     banner(
         "Figure 18",
         "overlapped pipeline: e2e latency + overlap vs prefetch budget (OnePlus 12)",
     );
-
-    let models = ["OPT-350M", "OPT-1.3B"];
-    let budgets_kb = [64usize, 256, 1024];
-    let cache_ratios = [0.05, 0.1, 0.2];
-
-    let mut t = Table::new(&[
-        "model", "cache", "budget", "e2e ms", "overlap", "pf hit", "waste MB/tok",
-        "vs sync",
-    ]);
-    for m in models {
-        for &ratio in &cache_ratios {
-            let mut w = bench_workload(m, 0, DatasetProfile::alpaca());
-            w.cache_ratio = ratio;
-            let sync = run_experiment(&w, System::Ripple).unwrap();
-            t.row(&[
-                m.into(),
-                format!("{ratio:.2}"),
-                "sync".into(),
-                format!("{:.2}", sync.e2e_ms()),
-                "-".into(),
-                "-".into(),
-                "-".into(),
-                "1.00x".into(),
-            ]);
-            for &kb in &budgets_kb {
-                let mut wp = w.clone();
-                wp.prefetch.enabled = true;
-                wp.prefetch.budget_bytes = kb * 1024;
-                let r = run_experiment(&wp, System::Ripple).unwrap();
-                let waste_mb = r.metrics.totals.prefetch_wasted_bundles as f64
-                    * r.bundle_bytes as f64
-                    / r.metrics.tokens.max(1) as f64
-                    / 1e6
-                    * r.layer_scale;
-                t.row(&[
-                    m.into(),
-                    format!("{ratio:.2}"),
-                    format!("{kb}KB"),
-                    format!("{:.2}", r.e2e_ms()),
-                    format!("{:.0}%", r.overlap_ratio() * 100.0),
-                    format!("{:.0}%", r.metrics.prefetch_hit_ratio() * 100.0),
-                    format!("{waste_mb:.2}"),
-                    format!("{:.2}x", sync.e2e_ms() / r.e2e_ms()),
-                ]);
-            }
-        }
-    }
-    println!("\n(a) prefetch budget x cache ratio (collapse on)");
-    t.print();
-
-    // (b) collapse toggle under a fixed budget: speculation and gap
-    // merging compose — collapse shrinks both demand and speculative
-    // command counts.
-    let mut tb = Table::new(&["collapse", "prefetch", "e2e ms", "overlap", "cmds/tok"]);
-    let w = bench_workload("OPT-350M", 0, DatasetProfile::alpaca());
-    for collapse in [false, true] {
-        for prefetch in [false, true] {
-            let mut wx = w.clone();
-            wx.prefetch.enabled = prefetch;
-            wx.prefetch.budget_bytes = 256 * 1024;
-            let spec = SystemSpec {
-                ripple_placement: true,
-                collapse,
-                cache_policy: if collapse { "linking" } else { "s3fifo" },
-                dense: false,
-                sub_reads: 1,
-            };
-            let r = run_spec(&wx, spec, &wx.dataset.clone()).unwrap();
-            tb.row(&[
-                if collapse { "on" } else { "off" }.into(),
-                if prefetch { "on" } else { "off" }.into(),
-                format!("{:.2}", r.e2e_ms()),
-                format!("{:.0}%", r.overlap_ratio() * 100.0),
-                format!(
-                    "{:.1}",
-                    r.metrics.totals.commands as f64 / r.metrics.tokens.max(1) as f64
-                        * r.layer_scale
-                ),
-            ]);
-        }
-    }
-    println!("\n(b) collapse x prefetch (budget 256KB, cache 0.1)");
-    tb.print();
+    let matrix = preset("fig18").expect("fig18 preset");
+    let report = run_matrix(&matrix, default_threads()).expect("fig18 sweep");
+    print!("{}", report.to_markdown(None));
 }

@@ -24,7 +24,7 @@
 //! by `n_layers / sim_layers`. IOPS/bandwidth/access-length metrics are
 //! ratios and need no scaling.
 
-use crate::cache::NeuronCache;
+use crate::cache::{Admission, NeuronCache, S3Fifo};
 use crate::config::{DeviceConfig, ModelConfig, Precision};
 use crate::flash::UfsSim;
 use crate::metrics::RunMetrics;
@@ -55,6 +55,29 @@ impl System {
 
     pub fn all() -> [System; 4] {
         [System::LlamaCpp, System::LlmFlash, System::RippleOffline, System::Ripple]
+    }
+
+    /// Stable lowercase key used by the CLI and the harness JSON schema.
+    pub fn key(self) -> &'static str {
+        match self {
+            System::LlamaCpp => "llamacpp",
+            System::LlmFlash => "llmflash",
+            System::RippleOffline => "ripple-offline",
+            System::Ripple => "ripple",
+        }
+    }
+
+    /// Inverse of [`System::key`]; also accepts `llama.cpp`.
+    pub fn by_key(s: &str) -> anyhow::Result<System> {
+        Ok(match s {
+            "llamacpp" | "llama.cpp" => System::LlamaCpp,
+            "llmflash" => System::LlmFlash,
+            "ripple-offline" => System::RippleOffline,
+            "ripple" => System::Ripple,
+            _ => anyhow::bail!(
+                "unknown system `{s}` (llamacpp|llmflash|ripple-offline|ripple)"
+            ),
+        })
     }
 }
 
@@ -218,16 +241,39 @@ fn pipeline_for_spec(
     w: &Workload,
     layouts: Vec<Layout>,
 ) -> anyhow::Result<(IoPipeline, UfsSim)> {
+    pipeline_with(spec, w, layouts, None, None)
+}
+
+/// The single pipeline/simulator construction every experiment path
+/// uses (shared with the harness's ablation runner, so ablation rows
+/// stay comparable with default-path rows). `admission` overrides the
+/// policy's admission layer (over an S3-FIFO base); `fixed_threshold`
+/// pins the collapse threshold by disabling the adaptive window.
+pub fn pipeline_with(
+    spec: SystemSpec,
+    w: &Workload,
+    layouts: Vec<Layout>,
+    admission: Option<Admission>,
+    fixed_threshold: Option<u32>,
+) -> anyhow::Result<(IoPipeline, UfsSim)> {
     let bundle_bytes = w.model.bundle_bytes(w.precision);
     let space = NeuronSpace::new(w.sim_layers, w.model.neurons_per_layer, bundle_bytes);
     let cache_cap = (space.total() as f64 * w.cache_ratio) as usize;
-    let cache = NeuronCache::from_config(spec.cache_policy, cache_cap, w.seed)?;
+    let cache = match admission {
+        Some(adm) => NeuronCache::new(Box::new(S3Fifo::new(cache_cap)), adm, w.seed),
+        None => NeuronCache::from_config(spec.cache_policy, cache_cap, w.seed)?,
+    };
+    let knee_threshold = ((w.device.knee_bytes() / bundle_bytes as f64) as u32).max(1);
+    let (initial, max_threshold, window) = match fixed_threshold {
+        Some(t) => (t, t, usize::MAX),
+        None => (4, knee_threshold, 16),
+    };
     let cfg = PipelineConfig {
         bundle_bytes,
         collapse: spec.collapse,
-        initial_threshold: 4,
-        max_threshold: ((w.device.knee_bytes() / bundle_bytes as f64) as u32).max(1),
-        window: 16,
+        initial_threshold: initial,
+        max_threshold,
+        window,
         sub_reads_per_run: spec.sub_reads,
     };
     let sim = UfsSim::new(w.device.clone(), space.image_bytes());

@@ -14,9 +14,13 @@
 //! same order; internally we rank by raw co-count and expose P(i)/P(ij)
 //! for reporting and tests.
 
+#![warn(missing_docs)]
+
 use crate::neuron::BundleId;
 use crate::trace::Trace;
 
+/// Per-layer co-activation statistics over a calibration trace,
+/// stored as one activation bitset per neuron.
 #[derive(Clone, Debug)]
 pub struct CoactStats {
     n_neurons: usize,
@@ -51,10 +55,12 @@ impl CoactStats {
         Self { n_neurons, n_tokens, words_per_neuron: words, bits }
     }
 
+    /// Number of neurons (bundles) in the layer.
     pub fn n_neurons(&self) -> usize {
         self.n_neurons
     }
 
+    /// Number of calibration tokens accumulated.
     pub fn n_tokens(&self) -> usize {
         self.n_tokens
     }
@@ -121,7 +127,7 @@ impl CoactStats {
     }
 
     /// All candidate pairs for the greedy search: for each neuron its
-    /// top-`m` partners, deduped (i<j), sorted by co-count descending.
+    /// top-`m` partners, deduped (`i < j`), sorted by co-count descending.
     /// This is the kNN sparsification described in DESIGN.md — pairs
     /// outside every neuron's top-m are nearly-always-zero co-count and
     /// tie at dist≈1, so they cannot beat any retained pair.
@@ -133,6 +139,26 @@ impl CoactStats {
     /// `threads` workers (§Perf: this scan dominates the offline search;
     /// sharding by neuron range is deterministic — results are merged and
     /// globally re-sorted, so the output is identical to the serial path).
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use ripple::coact::CoactStats;
+    ///
+    /// // three tokens over a 4-neuron layer
+    /// let tokens: [&[u32]; 3] = [&[0, 1, 2], &[0, 1], &[1, 2]];
+    /// let stats = CoactStats::from_sets(4, tokens.iter().copied());
+    ///
+    /// // sharding the scan never changes the result
+    /// assert_eq!(
+    ///     stats.candidate_pairs_parallel(2, 4),
+    ///     stats.candidate_pairs(2),
+    /// );
+    ///
+    /// // strongest pair first: neurons 0 and 1 co-fire twice
+    /// let (a, b, count) = stats.candidate_pairs(2)[0];
+    /// assert_eq!((a, b, count), (0, 1, 2));
+    /// ```
     pub fn candidate_pairs_parallel(
         &self,
         m: usize,

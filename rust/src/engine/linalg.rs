@@ -21,7 +21,7 @@ pub fn layer_norm(x: &[f32], rows: usize, d: usize, g: &[f32], b: &[f32], eps: f
     out
 }
 
-/// C(rows, n) = A(rows, d) @ B(n, d)^T (+ bias[n] if given).
+/// C(rows, n) = A(rows, d) @ B(n, d)^T (+ `bias[n]` if given).
 pub fn matmul_nt(a: &[f32], rows: usize, d: usize, b: &[f32], n: usize, bias: Option<&[f32]>) -> Vec<f32> {
     assert_eq!(a.len(), rows * d);
     assert_eq!(b.len(), n * d);

@@ -1,0 +1,33 @@
+//! Scenario-matrix experiment harness (DESIGN.md §Scenario-harness).
+//!
+//! The paper's claims rest on sweeps across devices, models, cache
+//! policies and placement strategies; this module makes those sweeps a
+//! first-class, reproducible artifact instead of ad-hoc bench binaries:
+//!
+//! * [`scenario`] — [`ScenarioSpec`] (one experiment point) and
+//!   [`ScenarioMatrix`] (axes + cartesian-product expansion),
+//! * [`presets`] — named matrices reproducing the paper figures
+//!   (`smoke`, `fig01`, `fig10`, `fig18`, `ablations`),
+//! * [`runner`] — the multi-threaded sweep executor (results are
+//!   thread-count invariant),
+//! * [`report`] — stable-schema `BENCH_<name>.json` plus Markdown with
+//!   baseline deltas.
+//!
+//! Driven from the CLI: `ripple bench --preset fig18 --baseline
+//! BENCH_prev.json --out report/`. The determinism contract: given the
+//! same matrix, the JSON bytes are identical run-to-run and across
+//! `--threads` values, so two reports can be diffed (or delta'd via
+//! `--baseline`) to see exactly what a PR changed.
+
+#![warn(missing_docs)]
+
+pub mod presets;
+pub mod report;
+pub mod runner;
+pub mod scenario;
+
+pub use presets::{preset, preset_names};
+pub use report::{delta_pct, Baseline, BaselineMetrics, ScenarioResult, SweepReport};
+pub use report::{fmt_delta, SCHEMA_VERSION};
+pub use runner::{default_threads, run_matrix, run_scenario};
+pub use scenario::{derive_seed, PrefetchPoint, ScenarioMatrix, ScenarioSpec};

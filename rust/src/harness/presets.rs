@@ -1,0 +1,215 @@
+//! Named scenario presets for the paper figures.
+//!
+//! Each preset is a [`ScenarioMatrix`] whose expansion reproduces one
+//! of the historical bench binaries (same workload construction, same
+//! seed 7, same sweep order), so `ripple bench --preset fig18`
+//! reports the same numbers as `cargo bench --bench fig18_overlap`
+//! did. `smoke` is a minutes-free CI-sized sweep over the fig10 axes.
+
+use crate::bench::workloads::System;
+use crate::cache::Admission;
+
+use super::scenario::{PrefetchPoint, ScenarioMatrix, ScenarioSpec};
+
+/// Every preset name `preset` accepts.
+pub fn preset_names() -> &'static [&'static str] {
+    &["smoke", "fig01", "fig10", "fig18", "ablations"]
+}
+
+/// Resolve a preset name to its matrix.
+pub fn preset(name: &str) -> anyhow::Result<ScenarioMatrix> {
+    Ok(match name {
+        "smoke" => smoke(),
+        "fig01" => fig01(),
+        "fig10" => fig10(),
+        "fig18" => fig18(),
+        "ablations" => ablations(),
+        _ => anyhow::bail!(
+            "unknown preset `{name}` (available: {})",
+            preset_names().join("|")
+        ),
+    })
+}
+
+fn all_models() -> Vec<String> {
+    ["OPT-350M", "OPT-1.3B", "OPT-6.7B", "Llama2-7B", "Mistral-7B"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+fn all_datasets() -> Vec<String> {
+    ["alpaca", "openwebtext", "wikitext"].iter().map(|s| s.to_string()).collect()
+}
+
+/// CI-sized sweep over the fig10 axes (one model, all systems) plus one
+/// overlapped-prefetch point; runs in seconds.
+fn smoke() -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new("smoke");
+    m.systems = vec![System::LlamaCpp, System::LlmFlash, System::Ripple];
+    let mut pf = ScenarioSpec::new("smoke-prefetch", "OPT-350M", System::Ripple);
+    pf.prefetch = PrefetchPoint::budget_kb(64);
+    m.extra.push(pf);
+    // 2 sim layers so the prefetch point has a next layer to speculate on
+    m.scale_down(96, 24, 2, 16);
+    m
+}
+
+/// Figure 1: bandwidth utilization, LLMFlash baseline vs RIPPLE, all
+/// models (OnePlus 12, alpaca).
+fn fig01() -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new("fig01");
+    m.models = all_models();
+    m.systems = vec![System::LlmFlash, System::Ripple];
+    m
+}
+
+/// Figure 10: overall latency + effective bandwidth, all models x all
+/// datasets x three systems (OnePlus 12, cache 0.1).
+fn fig10() -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new("fig10");
+    m.models = all_models();
+    m.datasets = all_datasets();
+    m.systems = vec![System::LlamaCpp, System::LlmFlash, System::Ripple];
+    m
+}
+
+/// Figure 18 (repo extension): the overlapped pipeline — prefetch
+/// budget x cache ratio on RIPPLE (part a), plus the collapse x
+/// prefetch toggle rows (part b) as extras.
+fn fig18() -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new("fig18");
+    m.models = vec!["OPT-350M".to_string(), "OPT-1.3B".to_string()];
+    m.cache_ratios = vec![0.05, 0.1, 0.2];
+    m.prefetch = vec![
+        PrefetchPoint::sync(),
+        PrefetchPoint::budget_kb(64),
+        PrefetchPoint::budget_kb(256),
+        PrefetchPoint::budget_kb(1024),
+    ];
+    for collapse in [false, true] {
+        for prefetch in [false, true] {
+            let name = format!(
+                "collapse-{}/prefetch-{}",
+                if collapse { "on" } else { "off" },
+                if prefetch { "on" } else { "off" }
+            );
+            let mut s = ScenarioSpec::new(&name, "OPT-350M", System::Ripple);
+            s.collapse = Some(collapse);
+            s.cache_policy = Some(if collapse { "linking" } else { "s3fifo" }.to_string());
+            if prefetch {
+                s.prefetch = PrefetchPoint::budget_kb(256);
+            }
+            m.extra.push(s);
+        }
+    }
+    m
+}
+
+/// Design-choice ablations (DESIGN.md §Experiment-index): kNN width,
+/// fixed vs adaptive collapse threshold, linking admission segment_p,
+/// calibration budget — all on OPT-1.3B, synchronous timeline.
+fn ablations() -> ScenarioMatrix {
+    let linking = Admission::Linking { segment_min: 4, segment_p: 0.25 };
+    let mut m = ScenarioMatrix::new("ablations");
+    m.models.clear(); // every row is hand-written below
+    for knn in [4usize, 8, 16, 32, 64] {
+        let mut s = ScenarioSpec::new(&format!("knn{knn:02}"), "OPT-1.3B", System::Ripple);
+        s.knn = knn;
+        s.admission = Some(linking);
+        m.extra.push(s);
+    }
+    let thresholds: [(&str, Option<u32>, bool); 7] = [
+        ("off", Some(0), false),
+        ("t01", Some(1), true),
+        ("t02", Some(2), true),
+        ("t04", Some(4), true),
+        ("t08", Some(8), true),
+        ("t16", Some(16), true),
+        ("adaptive", None, true),
+    ];
+    for (label, fixed, collapse) in thresholds {
+        let name = format!("threshold-{label}");
+        let mut s = ScenarioSpec::new(&name, "OPT-1.3B", System::Ripple);
+        s.knn = 32;
+        s.admission = Some(linking);
+        s.collapse = Some(collapse);
+        s.fixed_threshold = fixed;
+        m.extra.push(s);
+    }
+    for p in [0.0, 0.25, 0.5, 1.0] {
+        let mut s = ScenarioSpec::new(&format!("segp{p:.2}"), "OPT-1.3B", System::Ripple);
+        s.knn = 32;
+        s.admission = Some(Admission::Linking { segment_min: 4, segment_p: p });
+        m.extra.push(s);
+    }
+    let mut s = ScenarioSpec::new("admit-all", "OPT-1.3B", System::Ripple);
+    s.knn = 32;
+    s.admission = Some(Admission::All);
+    m.extra.push(s);
+    for calib in [32usize, 64, 128, 256, 512] {
+        let name = format!("calib{calib:03}");
+        let mut s = ScenarioSpec::new(&name, "OPT-1.3B", System::Ripple);
+        s.knn = 32;
+        s.calib_tokens = calib;
+        s.admission = Some(linking);
+        m.extra.push(s);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_preset_expands_with_unique_names() {
+        for name in preset_names() {
+            let m = preset(name).unwrap();
+            let specs = m.expand();
+            assert!(!specs.is_empty(), "{name} is empty");
+            let mut names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+            names.sort_unstable();
+            let before = names.len();
+            names.dedup();
+            assert_eq!(before, names.len(), "{name} has duplicate scenario names");
+        }
+        assert!(preset("bogus").is_err());
+    }
+
+    #[test]
+    fn fig18_matches_the_historical_bench_shape() {
+        let m = preset("fig18").unwrap();
+        let specs = m.expand();
+        // part (a): 2 models x 3 ratios x (sync + 3 budgets), then the
+        // 4 collapse x prefetch rows of part (b)
+        assert_eq!(specs.len(), 2 * 3 * 4 + 4);
+        assert_eq!(specs[0].seed, 7, "bench workloads run on seed 7");
+        assert_eq!(specs[0].calib_tokens, 256);
+        assert_eq!(specs[0].eval_tokens, 64);
+        assert_eq!(specs[0].sim_layers, 2);
+        assert_eq!(specs[0].knn, 64);
+        assert!(!specs[0].prefetch.enabled, "sync baseline comes first");
+        assert!(specs[1].prefetch.enabled);
+        assert_eq!(specs[1].prefetch.budget_bytes, 64 * 1024);
+    }
+
+    #[test]
+    fn smoke_is_small() {
+        let specs = preset("smoke").unwrap().expand();
+        assert_eq!(specs.len(), 4);
+        assert!(specs.iter().all(|s| s.eval_tokens <= 24 && s.sim_layers == 2));
+        assert!(specs.iter().any(|s| s.prefetch.enabled));
+    }
+
+    #[test]
+    fn ablations_cover_all_four_axes() {
+        let specs = preset("ablations").unwrap().expand();
+        assert!(specs.iter().any(|s| s.name.starts_with("knn")));
+        assert!(specs.iter().any(|s| s.name.starts_with("threshold-")));
+        assert!(specs.iter().any(|s| s.name.starts_with("segp")));
+        assert!(specs.iter().any(|s| s.name == "admit-all"));
+        assert!(specs.iter().any(|s| s.name.starts_with("calib")));
+        assert!(specs.iter().all(|s| !s.prefetch.enabled));
+    }
+}

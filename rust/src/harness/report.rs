@@ -1,0 +1,450 @@
+//! Stable-schema sweep reports: `BENCH_<name>.json` and a Markdown
+//! rendering with optional baseline deltas.
+//!
+//! The JSON contains **only simulated, deterministic** quantities —
+//! wall-clock timings (placement-search seconds) appear exclusively in
+//! the Markdown footer — so re-running the same matrix produces
+//! byte-identical files regardless of machine load or `--threads`.
+//! Object keys serialize sorted (the writer is `BTreeMap`-backed) and
+//! the scenario array preserves matrix expansion order. Schema changes
+//! must bump [`SCHEMA_VERSION`].
+
+use std::collections::BTreeMap;
+
+use crate::bench::workloads::ExperimentResult;
+use crate::cache::Admission;
+use crate::util::json::{self, Json};
+
+use super::scenario::ScenarioSpec;
+
+/// Version stamped into every report; parsers reject newer files.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One scenario's spec plus its measured outcome.
+pub struct ScenarioResult {
+    /// The fully-resolved experiment point that ran.
+    pub spec: ScenarioSpec,
+    /// Aggregated metrics (plus placement wall-clock, Markdown-only).
+    pub outcome: ExperimentResult,
+}
+
+impl ScenarioResult {
+    /// Full-model mean I/O (device busy) latency per token, ms.
+    pub fn io_ms(&self) -> f64 {
+        self.outcome.latency_ms()
+    }
+
+    /// Full-model simulated end-to-end latency per token, ms.
+    pub fn e2e_ms(&self) -> f64 {
+        self.outcome.e2e_ms()
+    }
+
+    /// Full-model mean host stall per token, ms.
+    pub fn stall_ms(&self) -> f64 {
+        self.outcome.metrics.mean_stall_ns() * self.outcome.layer_scale / 1e6
+    }
+
+    /// Full-model transferred bytes per token, MB.
+    pub fn io_mb_per_token(&self) -> f64 {
+        let m = &self.outcome.metrics;
+        m.totals.bytes as f64 / m.tokens.max(1) as f64 * self.outcome.layer_scale / 1e6
+    }
+
+    /// Full-model read commands per token.
+    pub fn commands_per_token(&self) -> f64 {
+        let m = &self.outcome.metrics;
+        m.totals.commands as f64 / m.tokens.max(1) as f64 * self.outcome.layer_scale
+    }
+}
+
+/// A completed sweep: every scenario result in expansion order.
+pub struct SweepReport {
+    /// Matrix name (becomes the `BENCH_<name>` file stem).
+    pub name: String,
+    /// Per-scenario results, in matrix expansion order.
+    pub results: Vec<ScenarioResult>,
+}
+
+impl SweepReport {
+    /// The stable-schema JSON document.
+    pub fn to_json(&self) -> Json {
+        let scenarios: Vec<Json> = self.results.iter().map(scenario_json).collect();
+        json::obj(vec![
+            ("schema_version", json::num(SCHEMA_VERSION as f64)),
+            ("name", json::s(&self.name)),
+            ("scenarios", json::arr(scenarios)),
+        ])
+    }
+
+    /// The JSON document serialized (deterministic bytes).
+    pub fn json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Human-readable Markdown: one row per scenario, a delta section
+    /// when a baseline is supplied, and a wall-clock footer (the only
+    /// non-deterministic content — never part of the JSON).
+    pub fn to_markdown(&self, baseline: Option<&Baseline>) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("# BENCH {}\n\n", self.name));
+        out.push_str(&format!(
+            "{} scenarios | schema v{SCHEMA_VERSION} | simulated metrics only \
+             (deterministic; wall-clock excluded from JSON)\n\n",
+            self.results.len()
+        ));
+        out.push_str(
+            "| model | device | dataset | system | config | io ms/tok | e2e ms/tok \
+             | overlap | cache hit | pf hit | IO MB/tok | eff MB/s | raw MB/s |\n",
+        );
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+        for r in &self.results {
+            let m = &r.outcome.metrics;
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {:.2} | {:.2} | {:.0}% | {:.0}% | {:.0}% \
+                 | {:.2} | {:.0} | {:.0} |\n",
+                r.spec.model,
+                r.spec.device,
+                r.spec.dataset,
+                r.spec.system.key(),
+                config_label(&r.spec),
+                r.io_ms(),
+                r.e2e_ms(),
+                m.overlap_ratio() * 100.0,
+                m.cache_hit_ratio() * 100.0,
+                m.prefetch_hit_ratio() * 100.0,
+                r.io_mb_per_token(),
+                m.effective_bandwidth() / 1e6,
+                m.raw_bandwidth() / 1e6,
+            ));
+        }
+        if let Some(base) = baseline {
+            out.push_str(&format!("\n## vs baseline `{}`\n\n", base.name));
+            out.push_str(
+                "| scenario | e2e ms/tok | base e2e | d e2e | io ms/tok | base io | d io |\n",
+            );
+            out.push_str("|---|---|---|---|---|---|---|\n");
+            let mut missing = 0usize;
+            for r in &self.results {
+                match base.get(&r.spec.name) {
+                    Some(b) => out.push_str(&format!(
+                        "| {} | {:.2} | {:.2} | {} | {:.2} | {:.2} | {} |\n",
+                        r.spec.name,
+                        r.e2e_ms(),
+                        b.e2e_ms,
+                        fmt_delta(delta_pct(r.e2e_ms(), b.e2e_ms)),
+                        r.io_ms(),
+                        b.io_ms,
+                        fmt_delta(delta_pct(r.io_ms(), b.io_ms)),
+                    )),
+                    None => {
+                        missing += 1;
+                        out.push_str(&format!(
+                            "| {} | {:.2} | - | - | {:.2} | - | - |\n",
+                            r.spec.name,
+                            r.e2e_ms(),
+                            r.io_ms(),
+                        ));
+                    }
+                }
+            }
+            if missing > 0 {
+                out.push_str(&format!(
+                    "\n{missing} scenario(s) had no match in the baseline (compared by \
+                     scenario name).\n"
+                ));
+            }
+        }
+        let place_secs: f64 = self.results.iter().map(|r| r.outcome.placement_secs).sum();
+        out.push_str(&format!(
+            "\nWall-clock (non-deterministic, not in JSON): placement search total \
+             {place_secs:.2}s.\n"
+        ));
+        out
+    }
+}
+
+/// Compact per-row description of the non-axis knobs.
+fn config_label(spec: &ScenarioSpec) -> String {
+    let mut parts = vec![format!("c{:.2}", spec.cache_ratio), spec.prefetch.label()];
+    if let Some(p) = &spec.cache_policy {
+        parts.push(format!("pol={p}"));
+    }
+    if let Some(c) = spec.collapse {
+        parts.push(format!("collapse={}", if c { "on" } else { "off" }));
+    }
+    if let Some(t) = spec.fixed_threshold {
+        parts.push(format!("thr={t}"));
+    }
+    if spec.admission.is_some() {
+        parts.push(format!("adm={}", admission_label(spec.admission)));
+    }
+    if spec.knn != 64 {
+        parts.push(format!("knn={}", spec.knn));
+    }
+    if spec.calib_tokens != 256 {
+        parts.push(format!("calib={}", spec.calib_tokens));
+    }
+    parts.join(" ")
+}
+
+/// Stable string form of the admission override for spec serialization.
+fn admission_label(a: Option<Admission>) -> String {
+    match a {
+        None => "default".to_string(),
+        Some(Admission::All) => "all".to_string(),
+        Some(Admission::Linking { segment_min, segment_p }) => {
+            format!("linking(min={segment_min},p={segment_p})")
+        }
+    }
+}
+
+fn scenario_json(r: &ScenarioResult) -> Json {
+    let spec = &r.spec;
+    let m = &r.outcome.metrics;
+    json::obj(vec![
+        ("name", json::s(&spec.name)),
+        ("model", json::s(&spec.model)),
+        ("device", json::s(&spec.device)),
+        ("dataset", json::s(&spec.dataset)),
+        ("system", json::s(spec.system.key())),
+        (
+            "cache_policy",
+            match &spec.cache_policy {
+                Some(p) => json::s(p),
+                None => Json::Null,
+            },
+        ),
+        (
+            "collapse",
+            match spec.collapse {
+                Some(b) => Json::Bool(b),
+                None => Json::Null,
+            },
+        ),
+        ("cache_ratio", json::num(spec.cache_ratio)),
+        ("precision", json::s(spec.precision.name())),
+        ("prefetch", Json::Bool(spec.prefetch.enabled)),
+        ("prefetch_budget_bytes", json::num(spec.prefetch.budget_bytes as f64)),
+        ("prefetch_lookahead", json::num(spec.prefetch.lookahead as f64)),
+        ("calib_tokens", json::num(spec.calib_tokens as f64)),
+        ("eval_tokens", json::num(spec.eval_tokens as f64)),
+        ("sim_layers", json::num(spec.sim_layers as f64)),
+        ("knn", json::num(spec.knn as f64)),
+        ("seed", json::s(&spec.seed.to_string())),
+        (
+            "fixed_threshold",
+            match spec.fixed_threshold {
+                Some(t) => json::num(t as f64),
+                None => Json::Null,
+            },
+        ),
+        ("admission", json::s(&admission_label(spec.admission))),
+        (
+            "metrics",
+            json::obj(vec![
+                ("tokens", json::num(m.tokens as f64)),
+                ("io_ms_per_token", json::num(r.io_ms())),
+                ("e2e_ms_per_token", json::num(r.e2e_ms())),
+                ("stall_ms_per_token", json::num(r.stall_ms())),
+                ("overlap_ratio", json::num(m.overlap_ratio())),
+                ("cache_hit_ratio", json::num(m.cache_hit_ratio())),
+                ("prefetch_hit_ratio", json::num(m.prefetch_hit_ratio())),
+                ("prefetch_hit_bundles", json::num(m.totals.prefetch_hit_bundles as f64)),
+                (
+                    "prefetch_wasted_bundles",
+                    json::num(m.totals.prefetch_wasted_bundles as f64),
+                ),
+                ("commands_per_token", json::num(r.commands_per_token())),
+                ("io_mb_per_token", json::num(r.io_mb_per_token())),
+                ("mean_access_len", json::num(m.mean_access_len())),
+                ("iops", json::num(m.iops())),
+                ("effective_bandwidth_mbps", json::num(m.effective_bandwidth() / 1e6)),
+                ("raw_bandwidth_mbps", json::num(m.raw_bandwidth() / 1e6)),
+                ("bundle_bytes", json::num(r.outcome.bundle_bytes as f64)),
+                ("layer_scale", json::num(r.outcome.layer_scale)),
+            ]),
+        ),
+    ])
+}
+
+/// Per-scenario metrics loaded back from a prior `BENCH_*.json` —
+/// only the fields the delta section compares, so older or trimmed
+/// baselines stay loadable.
+#[derive(Clone, Copy, Debug)]
+pub struct BaselineMetrics {
+    /// `io_ms_per_token` of the prior run.
+    pub io_ms: f64,
+    /// `e2e_ms_per_token` of the prior run.
+    pub e2e_ms: f64,
+}
+
+/// A prior sweep's JSON, indexed by scenario name for delta reporting.
+pub struct Baseline {
+    /// The prior sweep's matrix name.
+    pub name: String,
+    by_name: BTreeMap<String, BaselineMetrics>,
+}
+
+impl Baseline {
+    /// Parse a `BENCH_*.json` document produced by [`SweepReport`].
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(text)?;
+        let version = j.req_usize("schema_version")?;
+        anyhow::ensure!(
+            version as u64 <= SCHEMA_VERSION,
+            "baseline schema v{version} is newer than supported v{SCHEMA_VERSION}"
+        );
+        let name = j.req_str("name")?.to_string();
+        let scenarios = j
+            .req("scenarios")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("`scenarios` is not an array"))?;
+        let mut by_name = BTreeMap::new();
+        for sc in scenarios {
+            let n = sc.req_str("name")?.to_string();
+            let m = sc.req("metrics")?;
+            by_name.insert(
+                n,
+                BaselineMetrics {
+                    io_ms: m.req_f64("io_ms_per_token")?,
+                    e2e_ms: m.req_f64("e2e_ms_per_token")?,
+                },
+            );
+        }
+        Ok(Self { name, by_name })
+    }
+
+    /// Look up a prior scenario by name.
+    pub fn get(&self, scenario: &str) -> Option<&BaselineMetrics> {
+        self.by_name.get(scenario)
+    }
+
+    /// Number of scenarios in the baseline.
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    /// True when the baseline holds no scenarios.
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+}
+
+/// Relative change in percent, `(new - old) / old * 100`; `None` when
+/// the baseline value is (numerically) zero.
+pub fn delta_pct(new: f64, old: f64) -> Option<f64> {
+    if old.abs() < 1e-12 {
+        None
+    } else {
+        Some((new - old) / old * 100.0)
+    }
+}
+
+/// Render a delta as `+x.x%` / `-x.x%`, or `-` when undefined.
+pub fn fmt_delta(d: Option<f64>) -> String {
+    match d {
+        None => "-".to_string(),
+        Some(d) => format!("{d:+.1}%"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::System;
+    use crate::metrics::{RunMetrics, TokenIo};
+
+    fn fake_result(name: &str, elapsed_ns: f64) -> ScenarioResult {
+        let mut m = RunMetrics::new();
+        let t = TokenIo {
+            demanded_bundles: 10,
+            read_bundles: 8,
+            cached_bundles: 2,
+            commands: 4,
+            bytes: 8 * 100,
+            elapsed_ns,
+            stall_ns: elapsed_ns,
+            ..Default::default()
+        };
+        m.record(&t, 100);
+        m.record_compute(5e5);
+        ScenarioResult {
+            spec: ScenarioSpec::new(name, "OPT-350M", System::Ripple),
+            outcome: ExperimentResult {
+                system: System::Ripple,
+                metrics: m,
+                placement_secs: 0.0,
+                layer_scale: 2.0,
+                bundle_bytes: 100,
+            },
+        }
+    }
+
+    #[test]
+    fn delta_math() {
+        assert_eq!(delta_pct(110.0, 100.0), Some(10.0));
+        assert_eq!(delta_pct(90.0, 100.0), Some(-10.0));
+        assert_eq!(delta_pct(5.0, 0.0), None);
+        assert!((delta_pct(1.0, 3.0).unwrap() - (-66.666_666_666_666_66)).abs() < 1e-9);
+        assert_eq!(fmt_delta(Some(10.0)), "+10.0%");
+        assert_eq!(fmt_delta(Some(-0.04)), "-0.0%");
+        assert_eq!(fmt_delta(None), "-");
+    }
+
+    #[test]
+    fn json_roundtrips_through_baseline() {
+        let report = SweepReport {
+            name: "t".to_string(),
+            results: vec![fake_result("a", 1e6), fake_result("b", 2e6)],
+        };
+        let text = report.json_string();
+        assert!(text.contains("\"schema_version\":1"));
+        let base = Baseline::parse(&text).unwrap();
+        assert_eq!(base.name, "t");
+        assert_eq!(base.len(), 2);
+        let a = base.get("a").unwrap();
+        assert!((a.io_ms - report.results[0].io_ms()).abs() < 1e-9);
+        assert!((a.e2e_ms - report.results[0].e2e_ms()).abs() < 1e-9);
+        assert!(base.get("missing").is_none());
+    }
+
+    #[test]
+    fn baseline_rejects_newer_schema() {
+        let text = r#"{"schema_version": 99, "name": "x", "scenarios": []}"#;
+        assert!(Baseline::parse(text).is_err());
+        assert!(Baseline::parse("{").is_err());
+    }
+
+    #[test]
+    fn markdown_has_rows_and_deltas() {
+        let report = SweepReport {
+            name: "t".to_string(),
+            results: vec![fake_result("a", 1e6)],
+        };
+        let plain = report.to_markdown(None);
+        assert!(plain.contains("# BENCH t"));
+        assert!(plain.contains("| OPT-350M |"));
+        assert!(!plain.contains("baseline"));
+
+        // identical baseline -> +0.0% deltas
+        let base = Baseline::parse(&report.json_string()).unwrap();
+        let md = report.to_markdown(Some(&base));
+        assert!(md.contains("vs baseline"));
+        assert!(md.contains("+0.0%"));
+
+        // a baseline missing the scenario is flagged
+        let other = Baseline::parse(
+            r#"{"schema_version": 1, "name": "old", "scenarios": []}"#,
+        )
+        .unwrap();
+        let md = report.to_markdown(Some(&other));
+        assert!(md.contains("had no match"));
+    }
+
+    #[test]
+    fn json_is_deterministic_for_equal_inputs() {
+        let a = SweepReport { name: "t".into(), results: vec![fake_result("a", 1e6)] };
+        let b = SweepReport { name: "t".into(), results: vec![fake_result("a", 1e6)] };
+        assert_eq!(a.json_string(), b.json_string());
+    }
+}

@@ -1,0 +1,220 @@
+//! Multi-threaded sweep runner.
+//!
+//! Scenarios run in parallel over a work-stealing index; results are
+//! written back into slots keyed by scenario position, so the report
+//! order — and therefore the JSON bytes — is the matrix expansion
+//! order regardless of how many worker threads raced. Each scenario is
+//! itself deterministic (seeded traces, no wall clock in any metric),
+//! which the golden test in `rust/tests/harness_golden.rs` pins down:
+//! `--threads 1` and `--threads 8` produce byte-identical JSON.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::bench::workloads::{self, ExperimentResult, SystemSpec, Workload};
+use crate::metrics::RunMetrics;
+
+use super::report::{ScenarioResult, SweepReport};
+use super::scenario::{ScenarioMatrix, ScenarioSpec};
+
+/// Default sweep worker count: one per available core (4 when the
+/// parallelism query fails). Shared by the CLI and the bench wrappers.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map_or(4, |n| n.get())
+}
+
+/// Expand a matrix and run every scenario, using up to `threads` sweep
+/// workers. Returns results in matrix expansion order; the whole sweep
+/// drains before errors are inspected, and the first failing scenario
+/// (in expansion order) is reported with its name.
+pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> anyhow::Result<SweepReport> {
+    let specs = matrix.expand();
+    anyhow::ensure!(!specs.is_empty(), "matrix `{}` expands to no scenarios", matrix.name);
+    {
+        let mut names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        for w in names.windows(2) {
+            anyhow::ensure!(w[0] != w[1], "duplicate scenario name `{}`", w[0]);
+        }
+    }
+    let threads = threads.max(1).min(specs.len());
+    // avoid oversubscription: the per-scenario placement scan gets the
+    // cores the sweep level is not using (results are thread-invariant)
+    let inner_threads = (default_threads() / threads).max(1);
+    let slots: Vec<Mutex<Option<anyhow::Result<ExperimentResult>>>> =
+        specs.iter().map(|_| Mutex::new(None)).collect();
+    if threads == 1 {
+        for (spec, slot) in specs.iter().zip(&slots) {
+            *slot.lock().unwrap() = Some(run_scenario(spec, inner_threads));
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= specs.len() {
+                        break;
+                    }
+                    let r = run_scenario(&specs[i], inner_threads);
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+    }
+    let mut results = Vec::with_capacity(specs.len());
+    for (spec, slot) in specs.into_iter().zip(slots) {
+        let filled = slot.into_inner().unwrap().expect("scenario slot filled");
+        match filled {
+            Ok(outcome) => results.push(ScenarioResult { spec, outcome }),
+            Err(e) => anyhow::bail!("scenario `{}`: {e:#}", spec.name),
+        }
+    }
+    Ok(SweepReport { name: matrix.name.clone(), results })
+}
+
+/// Run one scenario end to end. `threads` bounds the intra-scenario
+/// placement-scan parallelism (never the results: every code path is
+/// thread-count invariant).
+pub fn run_scenario(spec: &ScenarioSpec, threads: usize) -> anyhow::Result<ExperimentResult> {
+    let mut w = spec.workload()?;
+    w.threads = threads.max(1);
+    let sspec = spec.system_spec(w.model.ffn_linears)?;
+    // dense streaming would silently ignore the knob (run_inner forces
+    // the sync timeline); reject rather than report a config that did
+    // not actually run
+    anyhow::ensure!(
+        !(sspec.dense && w.prefetch.enabled),
+        "scenario `{}`: dense streaming (llamacpp) has no speculative prefetch; \
+         use a sync prefetch point",
+        spec.name
+    );
+    if spec.admission.is_some() || spec.fixed_threshold.is_some() {
+        run_ablation(spec, &w, sspec)
+    } else {
+        let eval = w.dataset.clone();
+        workloads::run_spec(&w, sspec, &eval)
+    }
+}
+
+/// Custom path for the ablation-only knobs (pinned collapse threshold,
+/// explicit admission) that `SystemSpec` cannot express: synchronous
+/// timeline through the same `workloads::pipeline_with` construction
+/// every other experiment uses, so ablation rows stay comparable with
+/// default-path rows in the same report.
+fn run_ablation(
+    spec: &ScenarioSpec,
+    w: &Workload,
+    sspec: SystemSpec,
+) -> anyhow::Result<ExperimentResult> {
+    anyhow::ensure!(!sspec.dense, "ablation knobs do not support dense streaming");
+    anyhow::ensure!(!w.prefetch.enabled, "ablation knobs run on the synchronous timeline");
+    let calib = w.calibration_trace();
+    let (layouts, placement_secs) =
+        workloads::layouts_for(spec.system, &calib, w.knn, w.threads);
+    let (mut pipeline, mut sim) =
+        workloads::pipeline_with(sspec, w, layouts, spec.admission, spec.fixed_threshold)?;
+    let bundle_bytes = pipeline.config().bundle_bytes;
+    let eval = w.eval_trace(&w.dataset);
+    let mut metrics = RunMetrics::new();
+    for tok in &eval.tokens {
+        let t = pipeline.step_token(&mut sim, tok);
+        metrics.record(&t, bundle_bytes);
+        metrics.record_compute(w.compute_ns_per_layer * w.sim_layers as f64);
+    }
+    Ok(ExperimentResult {
+        system: spec.system,
+        metrics,
+        placement_secs,
+        layer_scale: w.layer_scale(),
+        bundle_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::System;
+    use crate::cache::Admission;
+    use crate::harness::scenario::PrefetchPoint;
+
+    fn tiny_spec(name: &str) -> ScenarioSpec {
+        let mut s = ScenarioSpec::new(name, "opt-micro", System::Ripple);
+        s.calib_tokens = 64;
+        s.eval_tokens = 16;
+        s.sim_layers = 2;
+        s.knn = 8;
+        s
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut m = ScenarioMatrix::new("dup");
+        m.extra.push(tiny_spec("a"));
+        m.extra.push(tiny_spec("a"));
+        let err = run_matrix(&m, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate scenario name"));
+    }
+
+    #[test]
+    fn empty_matrix_rejected() {
+        let mut m = ScenarioMatrix::new("empty");
+        m.models.clear();
+        assert!(run_matrix(&m, 1).is_err());
+    }
+
+    #[test]
+    fn ablation_path_matches_spirit_of_default_path() {
+        // an explicit adaptive-threshold + linking admission scenario
+        // runs the custom path and still produces sane sync metrics
+        let mut s = tiny_spec("abl");
+        s.admission = Some(Admission::Linking { segment_min: 4, segment_p: 0.5 });
+        let r = run_scenario(&s, 2).unwrap();
+        assert!(r.metrics.tokens == 16);
+        assert!(r.metrics.mean_latency_ns() > 0.0);
+        assert!(r.overlap_ratio().abs() < 1e-12, "ablations are sync-only");
+        // deterministic
+        let r2 = run_scenario(&s, 1).unwrap();
+        assert_eq!(
+            r.metrics.totals.elapsed_ns.to_bits(),
+            r2.metrics.totals.elapsed_ns.to_bits()
+        );
+        assert_eq!(r.metrics.totals.commands, r2.metrics.totals.commands);
+    }
+
+    #[test]
+    fn ablation_knobs_reject_prefetch_and_dense() {
+        let mut s = tiny_spec("bad");
+        s.fixed_threshold = Some(4);
+        s.prefetch = PrefetchPoint::budget_kb(64);
+        assert!(run_scenario(&s, 1).is_err());
+        let mut s = tiny_spec("dense");
+        s.system = System::LlamaCpp;
+        s.fixed_threshold = Some(4);
+        assert!(run_scenario(&s, 1).is_err());
+    }
+
+    #[test]
+    fn dense_with_prefetch_rejected_instead_of_misreported() {
+        let mut s = tiny_spec("dense-pf");
+        s.system = System::LlamaCpp;
+        s.prefetch = PrefetchPoint::budget_kb(64);
+        let err = run_scenario(&s, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("no speculative prefetch"));
+    }
+
+    #[test]
+    fn fixed_threshold_changes_collapse_behaviour() {
+        let mut off = tiny_spec("thr-off");
+        off.fixed_threshold = Some(0);
+        off.collapse = Some(false);
+        let mut wide = tiny_spec("thr-16");
+        wide.fixed_threshold = Some(16);
+        wide.collapse = Some(true);
+        let a = run_scenario(&off, 1).unwrap();
+        let b = run_scenario(&wide, 1).unwrap();
+        // gap-filling speculation only happens with collapse enabled
+        assert_eq!(a.metrics.totals.extra_bundles, 0);
+        assert!(b.metrics.totals.extra_bundles > 0);
+    }
+}

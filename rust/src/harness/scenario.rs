@@ -1,0 +1,471 @@
+//! Declarative scenario specs and the cartesian-product matrix.
+//!
+//! A [`ScenarioSpec`] pins every knob of one experiment point: model ×
+//! device × dataset × system (placement strategy) × cache policy ×
+//! prefetch configuration, plus the scale knobs (`calib_tokens`,
+//! `eval_tokens`, `sim_layers`, `knn`) whose defaults mirror
+//! `bench_workload` so scenario runs reproduce the historical bench
+//! binaries bit-for-bit. A [`ScenarioMatrix`] holds one value list per
+//! axis and expands to the cartesian product in a fixed axis order
+//! (model → device → dataset → system → cache policy → collapse →
+//! cache ratio → prefetch), so the scenario sequence — and therefore
+//! the report row order and the JSON bytes — never depends on thread
+//! count or timing.
+
+use crate::bench::workloads::{System, SystemSpec, Workload};
+use crate::cache::Admission;
+use crate::config::{device_by_name, model_by_name, Precision};
+use crate::trace::DatasetProfile;
+
+/// One point on the prefetch axis of a matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefetchPoint {
+    /// Speculative prefetch on the overlapped flash timeline; off means
+    /// the synchronous baseline (bit-identical to the seed timeline).
+    pub enabled: bool,
+    /// Per-target-layer speculative read budget, bytes.
+    pub budget_bytes: usize,
+    /// Layers of lookahead for speculation (>= 1).
+    pub lookahead: usize,
+}
+
+impl PrefetchPoint {
+    /// The synchronous baseline point (prefetch off).
+    pub fn sync() -> Self {
+        Self { enabled: false, budget_bytes: 256 * 1024, lookahead: 1 }
+    }
+
+    /// An overlapped point with a `kb`-KiB budget and lookahead 1.
+    pub fn budget_kb(kb: usize) -> Self {
+        Self { enabled: true, budget_bytes: kb * 1024, lookahead: 1 }
+    }
+
+    /// Stable label used in scenario names (`sync` or `pf<kb>KB-la<n>`).
+    pub fn label(&self) -> String {
+        if self.enabled {
+            format!("pf{}KB-la{}", self.budget_bytes / 1024, self.lookahead)
+        } else {
+            "sync".to_string()
+        }
+    }
+}
+
+/// One fully-resolved experiment point of a sweep.
+///
+/// Field defaults (see [`ScenarioSpec::new`]) match the historical
+/// `bench_workload` construction: OnePlus 12, alpaca, fp16, cache ratio
+/// 0.1, 256 calibration / 64 eval tokens, 2 representative layers,
+/// kNN 64, seed 7, prefetch off.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    /// Unique (within a matrix) name; baseline deltas match on it.
+    pub name: String,
+    /// Model geometry name (`config::model_by_name`).
+    pub model: String,
+    /// Device profile name (`config::device_by_name`).
+    pub device: String,
+    /// Dataset profile name (`trace::DatasetProfile::by_name`).
+    pub dataset: String,
+    /// Comparison system — bundles the placement strategy, read
+    /// granularity and default collapse/cache settings.
+    pub system: System,
+    /// Cache-policy override ("linking"|"s3fifo"|"lru"|"none"); `None`
+    /// keeps the system's default policy.
+    pub cache_policy: Option<String>,
+    /// Access-collapse override; `None` keeps the system default.
+    pub collapse: Option<bool>,
+    /// Fraction of all FFN bundles that fit the DRAM cache.
+    pub cache_ratio: f64,
+    /// Stored-weight precision.
+    pub precision: Precision,
+    /// Speculative-prefetch knobs.
+    pub prefetch: PrefetchPoint,
+    /// Calibration-trace length, tokens.
+    pub calib_tokens: usize,
+    /// Evaluation-trace length, tokens.
+    pub eval_tokens: usize,
+    /// Representative layers simulated (latency scales by
+    /// `n_layers / sim_layers`, see `bench::workloads` docs).
+    pub sim_layers: usize,
+    /// Greedy-search kNN width.
+    pub knn: usize,
+    /// Workload RNG seed (trace generation).
+    pub seed: u64,
+    /// Ablation knob: pin the collapse gap threshold instead of the
+    /// adaptive controller (sync-only custom pipeline path).
+    pub fixed_threshold: Option<u32>,
+    /// Ablation knob: explicit cache admission over an S3-FIFO policy
+    /// (sync-only custom pipeline path).
+    pub admission: Option<Admission>,
+}
+
+impl ScenarioSpec {
+    /// A spec with `bench_workload`-compatible defaults.
+    pub fn new(name: &str, model: &str, system: System) -> Self {
+        Self {
+            name: name.to_string(),
+            model: model.to_string(),
+            device: "OnePlus 12".to_string(),
+            dataset: "alpaca".to_string(),
+            system,
+            cache_policy: None,
+            collapse: None,
+            cache_ratio: 0.1,
+            precision: Precision::Fp16,
+            prefetch: PrefetchPoint::sync(),
+            calib_tokens: 256,
+            eval_tokens: 64,
+            sim_layers: 2,
+            knn: 64,
+            seed: 7,
+            fixed_threshold: None,
+            admission: None,
+        }
+    }
+
+    /// Build the `Workload` this scenario runs — the exact construction
+    /// the historical bench binaries used, so preset sweeps reproduce
+    /// their numbers bit-for-bit.
+    pub fn workload(&self) -> anyhow::Result<Workload> {
+        if !(0.0..=1.0).contains(&self.cache_ratio) {
+            anyhow::bail!(
+                "scenario `{}`: cache_ratio {} out of [0, 1]",
+                self.name,
+                self.cache_ratio
+            );
+        }
+        if self.calib_tokens == 0 || self.eval_tokens == 0 {
+            anyhow::bail!("scenario `{}`: token counts must be positive", self.name);
+        }
+        if self.prefetch.lookahead < 1 {
+            anyhow::bail!("scenario `{}`: prefetch lookahead must be >= 1", self.name);
+        }
+        // same bound RunConfig enforces on the JSON-config path
+        if self.prefetch.budget_bytes > 64 << 20 {
+            anyhow::bail!(
+                "scenario `{}`: prefetch budget {} unreasonable (max 64 MiB)",
+                self.name,
+                self.prefetch.budget_bytes
+            );
+        }
+        let model = model_by_name(&self.model)?;
+        let device = device_by_name(&self.device)?;
+        let dataset = DatasetProfile::by_name(&self.dataset)?;
+        let mut w = Workload::new(model, device, dataset);
+        w.precision = self.precision;
+        w.cache_ratio = self.cache_ratio;
+        w.calib_tokens = self.calib_tokens;
+        w.eval_tokens = self.eval_tokens;
+        w.sim_layers = self.sim_layers.clamp(1, w.model.n_layers);
+        w.knn = self.knn.max(1);
+        w.seed = self.seed;
+        w.prefetch.enabled = self.prefetch.enabled;
+        w.prefetch.budget_bytes = self.prefetch.budget_bytes;
+        w.prefetch.lookahead = self.prefetch.lookahead;
+        Ok(w)
+    }
+
+    /// Resolve the `SystemSpec` this scenario executes: the named
+    /// system's preset with the collapse / cache-policy overrides
+    /// applied.
+    pub fn system_spec(&self, ffn_linears: usize) -> anyhow::Result<SystemSpec> {
+        let mut spec = SystemSpec::of(self.system, ffn_linears);
+        if let Some(c) = self.collapse {
+            spec.collapse = c;
+        }
+        if let Some(p) = &self.cache_policy {
+            spec.cache_policy = static_policy(p)?;
+        }
+        Ok(spec)
+    }
+}
+
+/// Map a policy name to the `'static` string `SystemSpec` carries.
+/// Must stay in sync with `cache::NeuronCache::from_config`, which is
+/// where the name is ultimately interpreted.
+fn static_policy(name: &str) -> anyhow::Result<&'static str> {
+    Ok(match name {
+        "linking" => "linking",
+        "s3fifo" => "s3fifo",
+        "lru" => "lru",
+        "none" => "none",
+        _ => anyhow::bail!("unknown cache policy `{name}` (linking|s3fifo|lru|none)"),
+    })
+}
+
+/// Derive a per-scenario seed from a base seed and the scenario name
+/// (an FNV-style xor-multiply fold over the name bytes, folded into
+/// the base — same mixer family as `Workload::model_seed`). Pure
+/// function of its inputs; the constants are load-bearing for baseline
+/// comparability and must never change.
+pub fn derive_seed(base: u64, name: &str) -> u64 {
+    name.bytes().fold(base ^ 0xcbf2_9ce4_8422_2325, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+    })
+}
+
+/// A declarative sweep: one value list per axis, expanded to the
+/// cartesian product plus any hand-written `extra` scenarios.
+#[derive(Clone, Debug)]
+pub struct ScenarioMatrix {
+    /// Sweep name — becomes `BENCH_<name>.json` / `.md`.
+    pub name: String,
+    /// Model axis.
+    pub models: Vec<String>,
+    /// Device axis.
+    pub devices: Vec<String>,
+    /// Dataset axis.
+    pub datasets: Vec<String>,
+    /// System (placement strategy) axis.
+    pub systems: Vec<System>,
+    /// DRAM cache ratio axis.
+    pub cache_ratios: Vec<f64>,
+    /// Cache-policy override axis (`None` = system default).
+    pub cache_policies: Vec<Option<String>>,
+    /// Access-collapse override axis (`None` = system default).
+    pub collapse: Vec<Option<bool>>,
+    /// Prefetch axis.
+    pub prefetch: Vec<PrefetchPoint>,
+    /// Calibration tokens applied to every product scenario.
+    pub calib_tokens: usize,
+    /// Eval tokens applied to every product scenario.
+    pub eval_tokens: usize,
+    /// Representative layers applied to every product scenario.
+    pub sim_layers: usize,
+    /// kNN width applied to every product scenario.
+    pub knn: usize,
+    /// Precision applied to every product scenario.
+    pub precision: Precision,
+    /// Base workload seed (7 matches the historical benches).
+    pub base_seed: u64,
+    /// When true, each product scenario gets `derive_seed(base, name)`
+    /// instead of the shared base seed.
+    pub derive_seeds: bool,
+    /// Hand-written scenarios appended verbatim after the product
+    /// (non-product ablation rows).
+    pub extra: Vec<ScenarioSpec>,
+}
+
+impl ScenarioMatrix {
+    /// A single-point matrix (every axis a singleton) with
+    /// `bench_workload`-compatible defaults.
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            models: vec!["OPT-350M".to_string()],
+            devices: vec!["OnePlus 12".to_string()],
+            datasets: vec!["alpaca".to_string()],
+            systems: vec![System::Ripple],
+            cache_ratios: vec![0.1],
+            cache_policies: vec![None],
+            collapse: vec![None],
+            prefetch: vec![PrefetchPoint::sync()],
+            calib_tokens: 256,
+            eval_tokens: 64,
+            sim_layers: 2,
+            knn: 64,
+            precision: Precision::Fp16,
+            base_seed: 7,
+            derive_seeds: false,
+            extra: Vec::new(),
+        }
+    }
+
+    /// Shrink the scale knobs of the matrix *and* of every `extra`
+    /// scenario — used by the smoke preset and the determinism tests.
+    pub fn scale_down(&mut self, calib: usize, eval: usize, sim_layers: usize, knn: usize) {
+        self.calib_tokens = calib;
+        self.eval_tokens = eval;
+        self.sim_layers = sim_layers;
+        self.knn = knn;
+        for s in &mut self.extra {
+            s.calib_tokens = calib;
+            s.eval_tokens = eval;
+            s.sim_layers = sim_layers;
+            s.knn = knn;
+        }
+    }
+
+    /// Expand to the full scenario list: the cartesian product in fixed
+    /// axis order, then the `extra` scenarios. Deterministic — depends
+    /// only on the matrix value, never on threads or timing.
+    pub fn expand(&self) -> Vec<ScenarioSpec> {
+        let mut out = Vec::new();
+        for model in &self.models {
+            for device in &self.devices {
+                for dataset in &self.datasets {
+                    for &system in &self.systems {
+                        for policy in &self.cache_policies {
+                            for &collapse in &self.collapse {
+                                for &ratio in &self.cache_ratios {
+                                    for &pf in &self.prefetch {
+                                        let point = self.point(
+                                            model,
+                                            device,
+                                            dataset,
+                                            system,
+                                            policy,
+                                            collapse,
+                                            ratio,
+                                            pf,
+                                        );
+                                        out.push(point);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out.extend(self.extra.iter().cloned());
+        out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn point(
+        &self,
+        model: &str,
+        device: &str,
+        dataset: &str,
+        system: System,
+        policy: &Option<String>,
+        collapse: Option<bool>,
+        ratio: f64,
+        pf: PrefetchPoint,
+    ) -> ScenarioSpec {
+        let pol = policy.as_deref().unwrap_or("default");
+        let col = match collapse {
+            None => "collapse-default",
+            Some(true) => "collapse-on",
+            Some(false) => "collapse-off",
+        };
+        let name = format!(
+            "{model}/{device}/{dataset}/{}/c{ratio:.2}/{pol}/{col}/{}",
+            system.key(),
+            pf.label()
+        );
+        let mut s = ScenarioSpec::new(&name, model, system);
+        s.device = device.to_string();
+        s.dataset = dataset.to_string();
+        s.cache_policy = policy.clone();
+        s.collapse = collapse;
+        s.cache_ratio = ratio;
+        s.prefetch = pf;
+        s.calib_tokens = self.calib_tokens;
+        s.eval_tokens = self.eval_tokens;
+        s.sim_layers = self.sim_layers;
+        s.knn = self.knn;
+        s.precision = self.precision;
+        s.seed = if self.derive_seeds {
+            derive_seed(self.base_seed, &name)
+        } else {
+            self.base_seed
+        };
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_is_full_product_in_stable_order() {
+        let mut m = ScenarioMatrix::new("t");
+        m.models = vec!["OPT-350M".into(), "OPT-1.3B".into()];
+        m.systems = vec![System::LlmFlash, System::Ripple];
+        m.cache_ratios = vec![0.05, 0.1];
+        m.prefetch = vec![PrefetchPoint::sync(), PrefetchPoint::budget_kb(64)];
+        let specs = m.expand();
+        assert_eq!(specs.len(), 2 * 2 * 2 * 2);
+        // model is the outermost axis, prefetch the innermost
+        assert!(specs[0].name.contains("OPT-350M"));
+        assert!(specs[0].name.ends_with("sync"));
+        assert!(specs[1].name.ends_with("pf64KB-la1"));
+        assert!(specs.last().unwrap().name.contains("OPT-1.3B"));
+        // expansion is a pure function of the matrix
+        let again = m.expand();
+        assert_eq!(specs, again);
+        // names are unique
+        let mut names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), specs.len());
+    }
+
+    #[test]
+    fn extras_are_appended_and_scaled() {
+        let mut m = ScenarioMatrix::new("t");
+        m.extra.push(ScenarioSpec::new("custom", "opt-micro", System::Ripple));
+        m.scale_down(32, 8, 1, 4);
+        let specs = m.expand();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[1].name, "custom");
+        assert_eq!(specs[1].calib_tokens, 32);
+        assert_eq!(specs[1].knn, 4);
+        assert_eq!(specs[0].eval_tokens, 8);
+    }
+
+    #[test]
+    fn derived_seeds_are_stable_and_distinct() {
+        let a = derive_seed(7, "scenario-a");
+        assert_eq!(a, derive_seed(7, "scenario-a"));
+        assert_ne!(a, derive_seed(7, "scenario-b"));
+        assert_ne!(a, derive_seed(8, "scenario-a"));
+
+        let mut m = ScenarioMatrix::new("t");
+        m.derive_seeds = true;
+        m.cache_ratios = vec![0.05, 0.1];
+        let specs = m.expand();
+        assert_ne!(specs[0].seed, specs[1].seed);
+        assert_eq!(specs[0].seed, derive_seed(7, &specs[0].name));
+    }
+
+    #[test]
+    fn workload_mirrors_bench_construction() {
+        let mut spec = ScenarioSpec::new("x", "OPT-350M", System::Ripple);
+        spec.cache_ratio = 0.2;
+        spec.prefetch = PrefetchPoint::budget_kb(64);
+        let w = spec.workload().unwrap();
+        assert_eq!(w.model.name, "OPT-350M");
+        assert_eq!(w.device.name, "OnePlus 12");
+        assert_eq!(w.sim_layers, 2);
+        assert_eq!(w.calib_tokens, 256);
+        assert_eq!(w.eval_tokens, 64);
+        assert_eq!(w.knn, 64);
+        assert_eq!(w.seed, 7);
+        assert!((w.cache_ratio - 0.2).abs() < 1e-12);
+        assert!(w.prefetch.enabled);
+        assert_eq!(w.prefetch.budget_bytes, 64 * 1024);
+    }
+
+    #[test]
+    fn workload_rejects_bad_knobs() {
+        let mut spec = ScenarioSpec::new("x", "OPT-350M", System::Ripple);
+        spec.cache_ratio = 3.0;
+        assert!(spec.workload().is_err());
+        let mut spec = ScenarioSpec::new("x", "nope", System::Ripple);
+        spec.cache_ratio = 0.1;
+        assert!(spec.workload().is_err());
+        let mut spec = ScenarioSpec::new("x", "OPT-350M", System::Ripple);
+        spec.eval_tokens = 0;
+        assert!(spec.workload().is_err());
+        let mut spec = ScenarioSpec::new("x", "OPT-350M", System::Ripple);
+        spec.prefetch = PrefetchPoint { enabled: true, budget_bytes: 65 << 20, lookahead: 1 };
+        assert!(spec.workload().is_err());
+    }
+
+    #[test]
+    fn system_spec_overrides() {
+        let mut spec = ScenarioSpec::new("x", "OPT-350M", System::Ripple);
+        spec.collapse = Some(false);
+        spec.cache_policy = Some("s3fifo".to_string());
+        let s = spec.system_spec(2).unwrap();
+        assert!(!s.collapse);
+        assert_eq!(s.cache_policy, "s3fifo");
+        assert!(s.ripple_placement);
+        spec.cache_policy = Some("bogus".to_string());
+        assert!(spec.system_spec(2).is_err());
+    }
+}

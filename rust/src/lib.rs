@@ -15,6 +15,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod flash;
+pub mod harness;
 pub mod metrics;
 pub mod neuron;
 pub mod persist;

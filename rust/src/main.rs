@@ -8,6 +8,9 @@
 //!              and report continuity statistics
 //!   simulate   trace-driven I/O simulation for one (model, device,
 //!              dataset, system) point
+//!   bench      run a named scenario-matrix preset and write the
+//!              `BENCH_<name>.json` / `.md` report (DESIGN.md
+//!              §Scenario-harness)
 //!   devices / models
 //!              list the Table-2 / Table-3 configurations
 //!
@@ -15,6 +18,7 @@
 //!   ripple generate --prompt "the quick" --tokens 16
 //!   ripple simulate --model OPT-6.7B --system ripple --dataset wikitext
 //!   ripple place --model OPT-350M --dataset alpaca
+//!   ripple bench --preset fig18 --baseline report/BENCH_fig18.json
 
 use anyhow::Result;
 
@@ -22,19 +26,21 @@ use ripple::bench::workloads::{self, System, Workload};
 use ripple::config::{device_by_name, devices, model_by_name, models};
 use ripple::coordinator::{Server, ServerOptions};
 use ripple::engine::{Engine, EngineOptions};
+use ripple::harness;
 use ripple::runtime::default_artifacts_dir;
 use ripple::trace::DatasetProfile;
 use ripple::util::cli::Args;
 use ripple::util::stats::Table;
 
 fn main() {
-    let args = Args::from_env(&["dense", "help", "no-collapse", "prefetch"]);
+    let args = Args::from_env(&["dense", "help", "list", "no-collapse", "prefetch"]);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let result = match cmd {
         "serve" => serve(&args),
         "generate" => generate(&args),
         "place" => place(&args),
         "simulate" => simulate(&args),
+        "bench" => bench(&args),
         "devices" => list_devices(),
         "models" => list_models(),
         _ => {
@@ -51,26 +57,26 @@ fn main() {
 fn print_help() {
     println!(
         "ripple — correlation-aware neuron management (paper reproduction)\n\n\
-         usage: ripple <serve|generate|place|simulate|devices|models> [options]\n\n\
+         usage: ripple <serve|generate|place|simulate|bench|devices|models> [options]\n\n\
          generate: --prompt <str> --tokens <n> [--dense]\n\
          serve:    --requests <n> --tokens <n> --workers <n> [--prefetch]\n\
+                   --prefetch: workers speculatively read each next layer's\n\
+                   predicted bundles on the overlapped (async) flash timeline\n\
+                   so transfers hide under compute\n\
          place:    --model <name> --dataset <alpaca|openwebtext|wikitext> [--knn <m>]\n\
          simulate: --model <name> --device <name> --dataset <name>\n\
                    --system <llamacpp|llmflash|ripple-offline|ripple>\n\
                    [--config <runconfig.json>] [--cache-ratio <f>] [--tokens <n>]\n\
                    [--no-collapse] [--prefetch] [--prefetch-budget <bytes>]\n\
-                   [--prefetch-lookahead <n>]"
+                   [--prefetch-lookahead <n>]\n\
+                   --prefetch: overlap flash reads with modeled compute via\n\
+                   speculative next-layer prefetch (default: synchronous\n\
+                   timeline, bit-identical to the pre-overlap baseline)\n\
+         bench:    --preset <name> [--threads <n>] [--baseline <BENCH_x.json>]\n\
+                   [--out <dir>] | --list\n\
+                   runs a scenario matrix, prints the Markdown report and\n\
+                   writes BENCH_<name>.json + .md under --out (default report/)"
     );
-}
-
-fn system_by_name(s: &str) -> Result<System> {
-    Ok(match s {
-        "llamacpp" | "llama.cpp" => System::LlamaCpp,
-        "llmflash" => System::LlmFlash,
-        "ripple-offline" => System::RippleOffline,
-        "ripple" => System::Ripple,
-        _ => anyhow::bail!("unknown system `{s}`"),
-    })
 }
 
 fn generate(args: &Args) -> Result<()> {
@@ -163,9 +169,43 @@ fn place(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn bench(args: &Args) -> Result<()> {
+    if args.flag("list") {
+        println!("available presets:");
+        for p in harness::preset_names() {
+            println!("  {p}");
+        }
+        return Ok(());
+    }
+    let matrix = harness::preset(args.get_or("preset", "smoke"))?;
+    let threads = args.get_usize("threads", harness::default_threads())?;
+    let baseline = match args.get("baseline") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading baseline `{path}`: {e}"))?;
+            Some(harness::Baseline::parse(&text)?)
+        }
+        None => None,
+    };
+    let out_dir = args.get_or("out", "report");
+    let report = harness::run_matrix(&matrix, threads)?;
+    let md = report.to_markdown(baseline.as_ref());
+    print!("{md}");
+    std::fs::create_dir_all(out_dir)
+        .map_err(|e| anyhow::anyhow!("creating `{out_dir}`: {e}"))?;
+    let json_path = format!("{out_dir}/BENCH_{}.json", report.name);
+    let md_path = format!("{out_dir}/BENCH_{}.md", report.name);
+    std::fs::write(&json_path, report.json_string())
+        .map_err(|e| anyhow::anyhow!("writing `{json_path}`: {e}"))?;
+    std::fs::write(&md_path, &md)
+        .map_err(|e| anyhow::anyhow!("writing `{md_path}`: {e}"))?;
+    println!("\nwrote {json_path} and {md_path}");
+    Ok(())
+}
+
 fn simulate(args: &Args) -> Result<()> {
     let dataset = DatasetProfile::by_name(args.get_or("dataset", "alpaca"))?;
-    let system = system_by_name(args.get_or("system", "ripple"))?;
+    let system = System::by_key(args.get_or("system", "ripple"))?;
     // --config <file.json> loads a RunConfig (model/device/precision/
     // cache-ratio/seed + prefetch knobs); explicit flags still override.
     let mut w = if let Some(path) = args.get("config") {

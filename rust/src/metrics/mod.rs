@@ -110,6 +110,20 @@ impl RunMetrics {
         }
     }
 
+    /// Fraction of demanded bundles served by the DRAM cache, clamped
+    /// to [0, 1]. The clamp matters for dense (sparsity-oblivious)
+    /// runs, where cache hits are counted over every streamed bundle
+    /// but `demanded_bundles` is substituted with the activated subset
+    /// (the paper's effective-bandwidth convention).
+    pub fn cache_hit_ratio(&self) -> f64 {
+        if self.totals.demanded_bundles == 0 {
+            0.0
+        } else {
+            let r = self.totals.cached_bundles as f64 / self.totals.demanded_bundles as f64;
+            r.min(1.0)
+        }
+    }
+
     /// Fraction of prefetched bundles that were demanded, in [0, 1].
     pub fn prefetch_hit_ratio(&self) -> f64 {
         let total = self.totals.prefetch_hit_bundles + self.totals.prefetch_wasted_bundles;
@@ -217,6 +231,22 @@ mod tests {
         assert!((m.mean_stall_ns() - 0.5e6).abs() < 1e-9);
         // e2e = stall (0.5ms) + compute (2ms)
         assert!((m.mean_e2e_ns() - 2.5e6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cache_hit_ratio_clamped_for_dense_runs() {
+        let mut m = RunMetrics::new();
+        let mut t = tok(10, 8, 2, 4, 8 * 100, 1e6);
+        t.cached_bundles = 4;
+        m.record(&t, 100);
+        assert!((m.cache_hit_ratio() - 0.4).abs() < 1e-12);
+        // dense streaming: hits counted over all bundles, demanded only
+        // over activated ones — the ratio must still cap at 1
+        let mut m = RunMetrics::new();
+        let mut t = tok(10, 8, 2, 4, 8 * 100, 1e6);
+        t.cached_bundles = 25;
+        m.record(&t, 100);
+        assert_eq!(m.cache_hit_ratio(), 1.0);
     }
 
     #[test]

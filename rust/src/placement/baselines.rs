@@ -17,10 +17,14 @@
 use crate::coact::CoactStats;
 use crate::neuron::{BundleId, Layout};
 
+/// The model-structure (identity) order every framework defaults to.
 pub fn structural(n: usize) -> Layout {
     Layout::identity(n)
 }
 
+/// LLM-in-a-Flash's row-column-bundled layout: structural order over
+/// bundles (see module docs — the bundling itself is modeled by read
+/// granularity, not by reordering).
 pub fn llmflash(n: usize) -> Layout {
     Layout::identity(n)
 }

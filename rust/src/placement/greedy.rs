@@ -21,6 +21,7 @@ use crate::neuron::{BundleId, Layout};
 
 use super::unionfind::UnionFind;
 
+/// Tuning knobs for the greedy placement search.
 #[derive(Clone, Copy, Debug)]
 pub struct GreedyParams {
     /// Top-m co-activation partners per neuron kept in the pair queue.
@@ -38,6 +39,7 @@ impl Default for GreedyParams {
 /// Outcome of a placement search, with search diagnostics.
 #[derive(Clone, Debug)]
 pub struct SearchResult {
+    /// The placed bundle order (slot assignment) for the layer.
     pub layout: Layout,
     /// Pairs examined from the queue.
     pub pairs_scanned: usize,

@@ -1,6 +1,8 @@
 //! Offline correlation-aware clustering (paper §4): the placement search
 //! (Algorithm 1) and the baseline layouts it is evaluated against.
 
+#![warn(missing_docs)]
+
 pub mod baselines;
 mod greedy;
 mod unionfind;

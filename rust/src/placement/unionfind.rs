@@ -1,6 +1,7 @@
 //! Union-find (disjoint sets) with path halving + union by size.
 //! Used by Algorithm 1 to track which neurons already share a link.
 
+/// Disjoint-set forest over `0..n` element ids.
 #[derive(Clone, Debug)]
 pub struct UnionFind {
     parent: Vec<u32>,
@@ -9,6 +10,7 @@ pub struct UnionFind {
 }
 
 impl UnionFind {
+    /// `n` singleton sets.
     pub fn new(n: usize) -> Self {
         Self {
             parent: (0..n as u32).collect(),
@@ -17,10 +19,12 @@ impl UnionFind {
         }
     }
 
+    /// Total number of elements.
     pub fn len(&self) -> usize {
         self.parent.len()
     }
 
+    /// True when the structure tracks no elements.
     pub fn is_empty(&self) -> bool {
         self.parent.is_empty()
     }
@@ -30,6 +34,7 @@ impl UnionFind {
         self.sets
     }
 
+    /// Representative of `x`'s set (with path halving).
     #[inline]
     pub fn find(&mut self, mut x: u32) -> u32 {
         // path halving
@@ -58,10 +63,12 @@ impl UnionFind {
         true
     }
 
+    /// True when `a` and `b` share a set.
     pub fn same(&mut self, a: u32, b: u32) -> bool {
         self.find(a) == self.find(b)
     }
 
+    /// Size of the set containing `x`.
     pub fn set_size(&mut self, x: u32) -> u32 {
         let r = self.find(x);
         self.size[r as usize]

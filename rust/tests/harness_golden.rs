@@ -1,0 +1,94 @@
+//! Harness determinism + equivalence gates:
+//!
+//! * the sweep JSON for a fig10-shaped matrix is byte-identical across
+//!   `--threads 1` and `--threads 8` (the golden determinism contract
+//!   every later perf PR diffs against),
+//! * a scenario spec reproduces `run_experiment`'s metrics bit-for-bit
+//!   (so `bench --preset fig18` reports the same numbers as the
+//!   historical `benches/fig18_overlap.rs` loops), and
+//! * a report round-trips through `Baseline` with zero deltas.
+
+use ripple::bench::workloads::{bench_workload, run_experiment, System};
+use ripple::harness::{preset, run_matrix, run_scenario, Baseline, PrefetchPoint, ScenarioSpec};
+use ripple::trace::DatasetProfile;
+
+#[test]
+fn fig10_json_byte_identical_across_thread_counts() {
+    // the fig10 axes (datasets x systems), shrunk to test scale
+    let mut m = preset("fig10").unwrap();
+    m.models = vec!["OPT-350M".to_string()];
+    m.scale_down(64, 16, 1, 8);
+    let a = run_matrix(&m, 1).unwrap();
+    let b = run_matrix(&m, 8).unwrap();
+    let (ja, jb) = (a.json_string(), b.json_string());
+    assert!(!ja.is_empty());
+    assert_eq!(ja, jb, "sweep JSON must be byte-identical across thread counts");
+    // schema sanity: stable top-level fields and per-scenario metrics
+    assert!(ja.starts_with('{'));
+    assert!(ja.contains("\"schema_version\":1"));
+    assert!(ja.contains("\"name\":\"fig10\""));
+    assert!(ja.contains("\"e2e_ms_per_token\""));
+    assert!(ja.contains("\"overlap_ratio\""));
+    assert_eq!(a.results.len(), 3 * 3);
+}
+
+#[test]
+fn scenario_reproduces_fig18_bench_metrics() {
+    // exactly the construction benches/fig18_overlap.rs used, shrunk
+    // identically on both sides for test speed
+    let mut w = bench_workload("OPT-350M", 0, DatasetProfile::alpaca());
+    w.cache_ratio = 0.1;
+    w.prefetch.enabled = true;
+    w.prefetch.budget_bytes = 256 * 1024;
+    w.calib_tokens = 96;
+    w.eval_tokens = 24;
+    w.sim_layers = 2;
+    w.knn = 16;
+    let direct = run_experiment(&w, System::Ripple).unwrap();
+
+    let mut spec = ScenarioSpec::new("fig18-point", "OPT-350M", System::Ripple);
+    spec.cache_ratio = 0.1;
+    spec.prefetch = PrefetchPoint { enabled: true, budget_bytes: 256 * 1024, lookahead: 1 };
+    spec.calib_tokens = 96;
+    spec.eval_tokens = 24;
+    spec.sim_layers = 2;
+    spec.knn = 16;
+    let via = run_scenario(&spec, w.threads).unwrap();
+
+    assert_eq!(via.metrics.tokens, direct.metrics.tokens);
+    assert_eq!(via.metrics.totals.commands, direct.metrics.totals.commands);
+    assert_eq!(via.metrics.totals.bytes, direct.metrics.totals.bytes);
+    assert_eq!(
+        via.metrics.totals.prefetch_hit_bundles,
+        direct.metrics.totals.prefetch_hit_bundles
+    );
+    assert_eq!(
+        via.metrics.totals.elapsed_ns.to_bits(),
+        direct.metrics.totals.elapsed_ns.to_bits()
+    );
+    assert_eq!(
+        via.metrics.totals.stall_ns.to_bits(),
+        direct.metrics.totals.stall_ns.to_bits()
+    );
+    assert_eq!(via.e2e_ms().to_bits(), direct.e2e_ms().to_bits());
+    assert!(via.overlap_ratio() > 0.0, "fig18 point should overlap");
+}
+
+#[test]
+fn smoke_report_baselines_against_itself_with_zero_deltas() {
+    let mut m = preset("smoke").unwrap();
+    m.models = vec!["opt-micro".to_string()];
+    m.scale_down(64, 16, 2, 8);
+    let report = run_matrix(&m, 4).unwrap();
+    let base = Baseline::parse(&report.json_string()).unwrap();
+    assert_eq!(base.len(), report.results.len());
+    let md = report.to_markdown(Some(&base));
+    assert!(md.contains("# BENCH smoke"));
+    assert!(md.contains("vs baseline"));
+    assert!(md.contains("+0.0%"), "self-baseline must show zero deltas:\n{md}");
+    assert!(!md.contains("had no match"));
+    // every scenario row made it into the table
+    for r in &report.results {
+        assert!(md.contains(&r.spec.name), "missing row for {}", r.spec.name);
+    }
+}
