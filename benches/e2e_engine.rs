@@ -27,7 +27,7 @@ fn main() {
         w.model.neurons_per_layer,
         bundle_bytes,
     );
-    let cache = ripple::cache::NeuronCache::from_config(
+    let mut cache = ripple::cache::NeuronCache::from_config(
         "linking",
         (space.total() as f64 * 0.1) as usize,
         7,
@@ -44,14 +44,13 @@ fn main() {
         },
         space.clone(),
         layouts,
-        cache,
     );
     let mut sim = ripple::flash::UfsSim::new(w.device.clone(), space.image_bytes());
     let mut it = 0usize;
     let (mean, min, _max) = time_fn(4, 32, || {
         let tok = &eval.tokens[it % eval.tokens.len()];
         it += 1;
-        pipeline.step_token(&mut sim, tok)
+        pipeline.step_token(&mut cache, &mut sim, tok)
     });
     println!(
         "per-token planning+sim (OPT-6.7B, {} active/layer): mean {:.1}us min {:.1}us",

@@ -26,7 +26,7 @@ fn run_session(w: &Workload, system: System) -> Vec<f64> {
     let bundle_bytes = w.model.bundle_bytes(w.precision);
     let space = NeuronSpace::new(w.sim_layers, w.model.neurons_per_layer, bundle_bytes);
     let cache_policy = if system == System::Ripple { "linking" } else { "s3fifo" };
-    let cache = NeuronCache::from_config(
+    let mut cache = NeuronCache::from_config(
         cache_policy,
         (space.total() as f64 * w.cache_ratio) as usize,
         w.seed,
@@ -43,7 +43,6 @@ fn run_session(w: &Workload, system: System) -> Vec<f64> {
         },
         space.clone(),
         layouts,
-        cache,
     );
     let mut sim = UfsSim::new(w.device.clone(), space.image_bytes());
 
@@ -61,7 +60,7 @@ fn run_session(w: &Workload, system: System) -> Vec<f64> {
         let mut m = RunMetrics::new();
         for t in 0..TOKENS_PER_TURN {
             let tok = &session.tokens[turn * TOKENS_PER_TURN + t];
-            let io = pipeline.step_token(&mut sim, tok);
+            let io = pipeline.step_token(&mut cache, &mut sim, tok);
             m.record(&io, bundle_bytes);
         }
         per_turn.push(m.mean_latency_ns() * w.layer_scale() / 1e6);

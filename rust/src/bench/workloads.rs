@@ -27,7 +27,7 @@
 use crate::cache::{Admission, NeuronCache, S3Fifo};
 use crate::config::{DeviceConfig, ModelConfig, Precision};
 use crate::flash::UfsSim;
-use crate::metrics::RunMetrics;
+use crate::metrics::{RunMetrics, ServeSummary};
 use crate::neuron::{Layout, NeuronSpace};
 use crate::pipeline::{IoPipeline, PipelineConfig};
 use crate::placement::{self, GreedyParams};
@@ -176,6 +176,27 @@ impl Workload {
         tg.generate(self.eval_tokens)
     }
 
+    /// Per-session held-out stream for multi-session serving: session 0
+    /// is bit-identical to [`Workload::eval_trace`] (so a sessions=1
+    /// serve run reproduces the single-stream experiment exactly);
+    /// later sessions draw fresh streams over the SAME model community
+    /// structure and dataset popularity — statistically-identical users
+    /// whose hot sets overlap, which is what shared-cache reuse feeds on.
+    pub fn session_eval_trace(&self, dataset: &DatasetProfile, session: usize) -> Trace {
+        let stream = self.seed
+            ^ 0xDEAD_BEEF
+            ^ (session as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut tg = TraceGen::new(
+            self.sim_layers,
+            self.model.neurons_per_layer,
+            self.model.activated_per_layer(),
+            dataset,
+            self.model_seed(),
+            stream,
+        );
+        tg.generate(self.eval_tokens)
+    }
+
     pub fn layer_scale(&self) -> f64 {
         self.model.n_layers as f64 / self.sim_layers as f64
     }
@@ -191,6 +212,8 @@ pub struct ExperimentResult {
     /// Multiply per-token latency by this to get full-model figures.
     pub layer_scale: f64,
     pub bundle_bytes: usize,
+    /// Multi-session serving summary (`None` for single-stream runs).
+    pub serve: Option<ServeSummary>,
 }
 
 impl ExperimentResult {
@@ -240,44 +263,71 @@ fn pipeline_for_spec(
     spec: SystemSpec,
     w: &Workload,
     layouts: Vec<Layout>,
-) -> anyhow::Result<(IoPipeline, UfsSim)> {
+) -> anyhow::Result<(IoPipeline, NeuronCache, UfsSim)> {
     pipeline_with(spec, w, layouts, None, None)
 }
 
-/// The single pipeline/simulator construction every experiment path
-/// uses (shared with the harness's ablation runner, so ablation rows
-/// stay comparable with default-path rows). `admission` overrides the
-/// policy's admission layer (over an S3-FIFO base); `fixed_threshold`
-/// pins the collapse threshold by disabling the adaptive window.
-pub fn pipeline_with(
+/// The neuron address space a workload simulates.
+pub fn neuron_space(w: &Workload) -> NeuronSpace {
+    let bundle_bytes = w.model.bundle_bytes(w.precision);
+    NeuronSpace::new(w.sim_layers, w.model.neurons_per_layer, bundle_bytes)
+}
+
+/// Total DRAM cache capacity in slots — the paper's `cache_ratio`
+/// fraction of all simulated bundles. Multi-session private-cache runs
+/// split exactly this capacity across sessions so shared-vs-private
+/// comparisons are at equal total DRAM.
+pub fn cache_capacity(w: &Workload) -> usize {
+    (neuron_space(w).total() as f64 * w.cache_ratio) as usize
+}
+
+/// The single `PipelineConfig` construction every experiment path uses
+/// (default-path sweeps, ablations, and the serving simulation), so
+/// rows stay comparable across runners. `fixed_threshold` pins the
+/// collapse threshold by disabling the adaptive window.
+pub fn pipeline_config(
     spec: SystemSpec,
     w: &Workload,
-    layouts: Vec<Layout>,
-    admission: Option<Admission>,
     fixed_threshold: Option<u32>,
-) -> anyhow::Result<(IoPipeline, UfsSim)> {
+) -> PipelineConfig {
     let bundle_bytes = w.model.bundle_bytes(w.precision);
-    let space = NeuronSpace::new(w.sim_layers, w.model.neurons_per_layer, bundle_bytes);
-    let cache_cap = (space.total() as f64 * w.cache_ratio) as usize;
-    let cache = match admission {
-        Some(adm) => NeuronCache::new(Box::new(S3Fifo::new(cache_cap)), adm, w.seed),
-        None => NeuronCache::from_config(spec.cache_policy, cache_cap, w.seed)?,
-    };
     let knee_threshold = ((w.device.knee_bytes() / bundle_bytes as f64) as u32).max(1);
     let (initial, max_threshold, window) = match fixed_threshold {
         Some(t) => (t, t, usize::MAX),
         None => (4, knee_threshold, 16),
     };
-    let cfg = PipelineConfig {
+    PipelineConfig {
         bundle_bytes,
         collapse: spec.collapse,
         initial_threshold: initial,
         max_threshold,
         window,
         sub_reads_per_run: spec.sub_reads,
+    }
+}
+
+/// The single pipeline/cache/simulator construction every experiment
+/// path uses (shared with the harness's ablation runner, so ablation
+/// rows stay comparable with default-path rows). `admission` overrides
+/// the policy's admission layer (over an S3-FIFO base). The cache is
+/// returned as a separate value — pipelines borrow it per call, so
+/// multiple pipelines can share one cache (DESIGN.md §Serving).
+pub fn pipeline_with(
+    spec: SystemSpec,
+    w: &Workload,
+    layouts: Vec<Layout>,
+    admission: Option<Admission>,
+    fixed_threshold: Option<u32>,
+) -> anyhow::Result<(IoPipeline, NeuronCache, UfsSim)> {
+    let space = neuron_space(w);
+    let cache_cap = cache_capacity(w);
+    let cache = match admission {
+        Some(adm) => NeuronCache::new(Box::new(S3Fifo::new(cache_cap)), adm, w.seed),
+        None => NeuronCache::from_config(spec.cache_policy, cache_cap, w.seed)?,
     };
+    let cfg = pipeline_config(spec, w, fixed_threshold);
     let sim = UfsSim::new(w.device.clone(), space.image_bytes());
-    Ok((IoPipeline::new(cfg, space, layouts, cache), sim))
+    Ok((IoPipeline::new(cfg, space, layouts), cache, sim))
 }
 
 /// Fully-explicit system spec, for ablations that vary one axis at a
@@ -403,7 +453,7 @@ fn run_inner(
     } else {
         (vec![Layout::identity(calib.per_layer); calib.n_layers], 0.0)
     };
-    let (mut pipeline, mut sim) = pipeline_for_spec(spec, w, layouts)?;
+    let (mut pipeline, mut cache, mut sim) = pipeline_for_spec(spec, w, layouts)?;
     let bundle_bytes = pipeline.config().bundle_bytes;
     if overlapped {
         let pf = match prefetcher {
@@ -433,16 +483,16 @@ fn run_inner(
     };
     for tok in &eval.tokens {
         let t = if spec.dense {
-            let mut t = pipeline.step_token(&mut sim, &dense_tok);
+            let mut t = pipeline.step_token(&mut cache, &mut sim, &dense_tok);
             // effective bandwidth counts only the neurons the model
             // actually activates (paper §6.1), not what dense streaming
             // happened to transfer.
             t.demanded_bundles = tok.iter().map(Vec::len).sum::<usize>() as u64;
             t
         } else if overlapped {
-            pipeline.step_token_overlapped(&mut sim, tok, compute_ns_per_layer)
+            pipeline.step_token_overlapped(&mut cache, &mut sim, tok, compute_ns_per_layer)
         } else {
-            pipeline.step_token(&mut sim, tok)
+            pipeline.step_token(&mut cache, &mut sim, tok)
         };
         metrics.record(&t, bundle_bytes);
         // compute happens either way; only the overlapped path lets the
@@ -455,6 +505,7 @@ fn run_inner(
         placement_secs,
         layer_scale: w.layer_scale(),
         bundle_bytes,
+        serve: None,
     })
 }
 
@@ -634,6 +685,20 @@ mod tests {
         assert!(w.prefetch.enabled);
         assert_eq!(w.prefetch.budget_bytes, 65536);
         assert_eq!(w.dataset.name, "wikitext");
+    }
+
+    #[test]
+    fn session_zero_trace_is_the_single_stream_eval_trace() {
+        let w = tiny_workload();
+        let single = w.eval_trace(&w.dataset);
+        let s0 = w.session_eval_trace(&w.dataset, 0);
+        assert_eq!(single.tokens, s0.tokens, "session 0 must replay the eval stream");
+        // other sessions draw distinct streams over the same structure
+        let s1 = w.session_eval_trace(&w.dataset, 1);
+        let s2 = w.session_eval_trace(&w.dataset, 2);
+        assert_ne!(s0.tokens, s1.tokens);
+        assert_ne!(s1.tokens, s2.tokens);
+        assert_eq!(s1.n_tokens(), w.eval_tokens);
     }
 
     #[test]

@@ -102,6 +102,14 @@ pub enum Admission {
 }
 
 /// The neuron cache used by the pipeline: a policy + admission layer.
+///
+/// Multi-tenant serving (DESIGN.md §Serving) shares ONE `NeuronCache`
+/// across sessions: call [`NeuronCache::set_session`] before each
+/// session's accesses and the cache additionally attributes every hit
+/// to the session that admitted the entry, counting *cross-session*
+/// hits — the co-activation reuse a shared cache buys over private
+/// partitions. Without a session tag the counters and behavior are
+/// bit-identical to the historical single-tenant cache.
 pub struct NeuronCache {
     policy: Box<dyn CachePolicy>,
     admission: Admission,
@@ -109,11 +117,42 @@ pub struct NeuronCache {
     /// statistics
     pub hits: u64,
     pub misses: u64,
+    /// Hits on entries admitted by a *different* session (only counted
+    /// once `set_session` has been called).
+    pub cross_hits: u64,
+    /// Current session tag; `None` = single-tenant (no attribution).
+    session: Option<u32>,
+    /// key -> session that last admitted it. Entries for evicted keys
+    /// may linger (they are only consulted for resident keys, so stale
+    /// owners never miscount); the map is bounded by the slot universe.
+    owners: std::collections::HashMap<u64, u32>,
 }
 
 impl NeuronCache {
     pub fn new(policy: Box<dyn CachePolicy>, admission: Admission, seed: u64) -> Self {
-        Self { policy, admission, rng: Rng::new(seed), hits: 0, misses: 0 }
+        Self {
+            policy,
+            admission,
+            rng: Rng::new(seed),
+            hits: 0,
+            misses: 0,
+            cross_hits: 0,
+            session: None,
+            owners: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Tag subsequent accesses with a session id (multi-tenant serving).
+    /// Enables cross-session hit attribution; policy behavior, hit/miss
+    /// counts and admission decisions are unaffected.
+    pub fn set_session(&mut self, session: u32) {
+        self.session = Some(session);
+    }
+
+    /// The fraction of hits served by an entry another session admitted
+    /// (0.0 while single-tenant or before any hit).
+    pub fn cross_hit_ratio(&self) -> f64 {
+        if self.hits == 0 { 0.0 } else { self.cross_hits as f64 / self.hits as f64 }
     }
 
     /// Build from a RunConfig policy name.
@@ -157,8 +196,14 @@ impl NeuronCache {
         let mut hit = Vec::new();
         let mut miss = Vec::with_capacity(slots.len());
         for &s in slots {
-            if self.policy.touch(key(layer, s)) {
+            let k = key(layer, s);
+            if self.policy.touch(k) {
                 self.hits += 1;
+                if let Some(me) = self.session {
+                    if self.owners.get(&k).is_some_and(|&owner| owner != me) {
+                        self.cross_hits += 1;
+                    }
+                }
                 hit.push(s);
             } else {
                 self.misses += 1;
@@ -166,6 +211,14 @@ impl NeuronCache {
             }
         }
         (hit, miss)
+    }
+
+    #[inline]
+    fn insert_key(&mut self, k: u64) {
+        self.policy.insert(k);
+        if let Some(me) = self.session {
+            self.owners.insert(k, me);
+        }
     }
 
     /// Admit freshly-read runs according to the admission policy.
@@ -177,18 +230,18 @@ impl NeuronCache {
             match self.admission {
                 Admission::All => {
                     for s in r.start..r.end() {
-                        self.policy.insert(key(layer, s));
+                        self.insert_key(key(layer, s));
                     }
                 }
                 Admission::Linking { segment_min, segment_p } => {
                     if r.len < segment_min {
                         for s in r.start..r.end() {
-                            self.policy.insert(key(layer, s));
+                            self.insert_key(key(layer, s));
                         }
                     } else if self.rng.chance(segment_p) {
                         // all-or-nothing segment admission
                         for s in r.start..r.end() {
-                            self.policy.insert(key(layer, s));
+                            self.insert_key(key(layer, s));
                         }
                     }
                 }
@@ -275,6 +328,37 @@ mod tests {
         let (hit, miss) = c.filter(0, &[1, 2, 3]);
         assert!(hit.is_empty());
         assert_eq!(miss.len(), 3);
+    }
+
+    #[test]
+    fn cross_session_hits_attributed() {
+        let mut c = NeuronCache::new(Box::new(Lru::new(16)), Admission::All, 1);
+        c.set_session(0);
+        c.admit(0, &runs(&[1, 2]));
+        // a session hitting its own entries: no cross hits
+        c.filter(0, &[1, 2]);
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.cross_hits, 0);
+        // another session reusing them: cross hits
+        c.set_session(1);
+        let (hit, _) = c.filter(0, &[1, 2]);
+        assert_eq!(hit.len(), 2);
+        assert_eq!(c.cross_hits, 2);
+        assert!((c.cross_hit_ratio() - 0.5).abs() < 1e-12);
+        // ownership follows the most recent admitter
+        c.admit(0, &runs(&[9]));
+        c.set_session(0);
+        c.filter(0, &[9]);
+        assert_eq!(c.cross_hits, 3);
+    }
+
+    #[test]
+    fn untagged_cache_never_counts_cross_hits() {
+        let mut c = NeuronCache::new(Box::new(Lru::new(8)), Admission::All, 1);
+        c.admit(0, &runs(&[1]));
+        c.filter(0, &[1]);
+        assert!(c.hits == 1 && c.cross_hits == 0);
+        assert_eq!(c.cross_hit_ratio(), 0.0);
     }
 
     #[test]

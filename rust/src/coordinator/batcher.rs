@@ -1,6 +1,16 @@
 //! Dynamic batcher: groups queued requests into engine-sized batches,
 //! dispatching when the batch fills or the oldest request has waited the
 //! deadline (vLLM-style size-or-timeout policy).
+//!
+//! Two dispatch disciplines share the same FIFO queue:
+//!
+//! * **lockstep** (`pop_ready`) — the historical size-or-timeout batch,
+//!   used by the request/response `Server`;
+//! * **continuous** (`pop_upto`) — iteration-level scheduling: whenever
+//!   decode slots free up *between tokens*, the scheduler immediately
+//!   admits the oldest waiting requests to fill them, so sessions join
+//!   and leave a running batch instead of waiting for a full batch to
+//!   retire (the multi-session serving simulation, DESIGN.md §Serving).
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -69,6 +79,16 @@ impl<T> Batcher<T> {
     pub fn drain_all(&mut self) -> Vec<T> {
         self.queue.drain(..).map(|(x, _)| x).collect()
     }
+
+    /// Continuous-batching admission: immediately pop up to `n` queued
+    /// requests in FIFO order, regardless of batch-fill or deadline
+    /// state. Called with the number of free decode slots each time a
+    /// session finishes a token (or leaves), so waiting requests join
+    /// the running batch at the next token boundary.
+    pub fn pop_upto(&mut self, n: usize) -> Vec<T> {
+        let take = self.queue.len().min(n);
+        self.queue.drain(..take).map(|(x, _)| x).collect()
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +139,21 @@ mod tests {
         b.push(1, now);
         let d = b.next_deadline_in(now + Duration::from_millis(4)).unwrap();
         assert!(d <= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn pop_upto_is_fifo_prefix() {
+        let now = Instant::now();
+        let mut b = Batcher::new(cfg(4, 1000));
+        for i in 0..5 {
+            b.push(i, now);
+        }
+        assert_eq!(b.pop_upto(0), Vec::<i32>::new());
+        assert_eq!(b.pop_upto(2), vec![0, 1]);
+        assert_eq!(b.len(), 3);
+        // asking for more than queued drains what exists
+        assert_eq!(b.pop_upto(10), vec![2, 3, 4]);
+        assert!(b.is_empty());
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! L3 serving coordinator: request types, dynamic batcher, replica
-//! router, and the threaded serving loop.
+//! router, the threaded serving loop, and the deterministic
+//! multi-session serving simulation ([`session`]).
 //!
 //! Topology: a single dispatcher thread runs the `Batcher` and `Router`;
 //! each worker thread owns one `Engine` (PJRT handles are not `Send`, so
@@ -15,10 +16,12 @@
 
 mod batcher;
 mod router;
+pub mod session;
 pub mod tcp;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use router::Router;
+pub use session::{run_serve, ServeConfig, ServeOutcome, SessionManager};
 pub use tcp::{TcpClient, TcpFrontend};
 
 use std::sync::mpsc;

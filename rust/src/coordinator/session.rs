@@ -1,0 +1,389 @@
+//! Multi-session serving simulation (DESIGN.md §Serving).
+//!
+//! The paper's online stage models ONE decode stream. The serving
+//! regime the ROADMAP targets is N interleaved streams contending for
+//! one DRAM neuron cache and one flash command queue — the regime
+//! PowerInfer-2 (2406.06282) and "LLM in a flash" (2312.11514) show is
+//! dominated by cache sharing and I/O scheduling. [`SessionManager`]
+//! drives that regime deterministically:
+//!
+//! * every session owns only its *planner* state (an [`IoPipeline`]
+//!   with its own adaptive-collapse controller) and its activation
+//!   stream; the [`NeuronCache`] and [`UfsSim`] are borrowed shared
+//!   state, exactly one of each per device;
+//! * scheduling is **continuous batching**: up to `max_concurrent`
+//!   sessions hold decode slots; whenever a session finishes its last
+//!   token it leaves and the oldest waiting session joins at the next
+//!   token boundary (`Batcher::pop_upto`), rather than lockstep
+//!   batches that retire whole;
+//! * each decode round serves one token per active session, serially
+//!   on the shared (serial-service) flash device, with the start slot
+//!   rotated round-robin so no session is systematically last;
+//! * time is virtual: a token costs its flash stall plus the modeled
+//!   compute window, queueing delay is admission minus arrival, and no
+//!   wall clock feeds any metric — serve reports replay bit-for-bit.
+//!
+//! With `sessions == 1` and a shared cache the manager reduces exactly
+//! to the historical single-stream experiment: same trace, same cache
+//! and pipeline construction, same flash arithmetic, bit-for-bit
+//! (pinned by `rust/tests/harness_golden.rs`).
+
+use std::time::{Duration, Instant};
+
+use crate::bench::workloads::{
+    self, cache_capacity, layouts_for, neuron_space, System, SystemSpec, Workload,
+};
+use crate::cache::NeuronCache;
+use crate::flash::UfsSim;
+use crate::metrics::{RunMetrics, ServeMetrics, ServeSummary, SessionStats};
+use crate::pipeline::IoPipeline;
+use crate::trace::Trace;
+
+use super::{Batcher, BatcherConfig};
+
+/// Knobs of one serving simulation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Number of decode sessions (users).
+    pub sessions: usize,
+    /// Decode slots: how many sessions may be mid-decode at once.
+    pub max_concurrent: usize,
+    /// Virtual gap between consecutive session arrivals, ns (0 = all
+    /// arrive together, the maximum-contention case).
+    pub arrival_spacing_ns: f64,
+    /// One shared DRAM cache (true) vs per-session private partitions
+    /// of the same *total* capacity (false).
+    pub shared_cache: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            sessions: 4,
+            max_concurrent: 4,
+            arrival_spacing_ns: 0.0,
+            shared_cache: true,
+        }
+    }
+}
+
+/// Everything a serve run produces.
+pub struct ServeOutcome {
+    /// Aggregate I/O metrics over every token of every session —
+    /// directly comparable with single-stream `RunMetrics`.
+    pub metrics: RunMetrics,
+    /// Per-session and tail statistics.
+    pub serve: ServeMetrics,
+    /// Flat full-model-scaled summary (what reports serialize).
+    pub summary: ServeSummary,
+    /// Offline placement wall-clock, seconds (Markdown-only).
+    pub placement_secs: f64,
+    /// Bundle size used by every session.
+    pub bundle_bytes: usize,
+}
+
+/// One decode session's live state inside the manager.
+struct Session {
+    trace: Trace,
+    pipeline: IoPipeline,
+    next_token: usize,
+    stats: SessionStats,
+}
+
+/// Drives N sessions through one shared cache + flash timeline with
+/// continuous batching. Construct via [`run_serve`] for the standard
+/// workload wiring, or assemble manually for custom experiments.
+pub struct SessionManager {
+    cfg: ServeConfig,
+    sessions: Vec<Session>,
+    /// One entry in shared mode; one per session in private mode.
+    caches: Vec<NeuronCache>,
+    compute_ns_per_token: f64,
+    bundle_bytes: usize,
+}
+
+impl SessionManager {
+    /// Build a manager from per-session pipelines/traces and the cache
+    /// set (1 shared or `sessions` private). Panics on arity mismatch.
+    pub fn new(
+        cfg: ServeConfig,
+        streams: Vec<(IoPipeline, Trace)>,
+        caches: Vec<NeuronCache>,
+        compute_ns_per_token: f64,
+        bundle_bytes: usize,
+    ) -> Self {
+        assert_eq!(streams.len(), cfg.sessions, "one (pipeline, trace) per session");
+        let expected = if cfg.shared_cache { 1 } else { cfg.sessions };
+        assert_eq!(caches.len(), expected, "cache count must match sharing mode");
+        assert!(cfg.max_concurrent > 0, "need at least one decode slot");
+        let sessions = streams
+            .into_iter()
+            .enumerate()
+            .map(|(id, (pipeline, trace))| {
+                assert!(trace.n_tokens() > 0, "session {id} has an empty trace");
+                Session {
+                    trace,
+                    pipeline,
+                    next_token: 0,
+                    stats: SessionStats::new(id, id as f64 * cfg.arrival_spacing_ns),
+                }
+            })
+            .collect();
+        Self { cfg, sessions, caches, compute_ns_per_token, bundle_bytes }
+    }
+
+    /// Run every session to completion against the shared flash
+    /// timeline; returns (aggregate run metrics, serve metrics).
+    pub fn run(mut self, sim: &mut UfsSim) -> (RunMetrics, ServeMetrics) {
+        let n = self.cfg.sessions;
+        let mut agg = RunMetrics::new();
+        let mut serve = ServeMetrics {
+            max_concurrent: self.cfg.max_concurrent,
+            shared_cache: self.cfg.shared_cache,
+            ..Default::default()
+        };
+        // The Batcher keeps the admission queue FIFO; continuous-batching
+        // admission (`pop_upto`) never reads timestamps or deadlines, so
+        // every push carries one inert anchor Instant — arrival times
+        // live on the virtual clock (`SessionStats::arrival_ns`), and no
+        // wall-clock value ever reaches a metric.
+        let anchor = Instant::now();
+        let mut waiting: Batcher<usize> = Batcher::new(BatcherConfig {
+            max_batch: self.cfg.max_concurrent,
+            max_wait: Duration::from_secs(3600),
+        });
+        let mut clock_ns = 0.0f64;
+        let mut next_arrival = 0usize; // sessions not yet queued
+        let mut active: Vec<usize> = Vec::new(); // slot order
+        let mut done = 0usize;
+        let mut round = 0usize;
+        while done < n {
+            // arrivals due by now enter the admission queue
+            while next_arrival < n
+                && self.sessions[next_arrival].stats.arrival_ns <= clock_ns
+            {
+                waiting.push(next_arrival, anchor);
+                next_arrival += 1;
+            }
+            // continuous batching: free slots admit the oldest waiters
+            let free = self.cfg.max_concurrent - active.len();
+            for sid in waiting.pop_upto(free) {
+                self.sessions[sid].stats.queue_delay_ns =
+                    clock_ns - self.sessions[sid].stats.arrival_ns;
+                active.push(sid);
+            }
+            serve.peak_active = serve.peak_active.max(active.len());
+            if active.is_empty() {
+                // idle server: jump to the next arrival
+                assert!(next_arrival < n, "no active, no waiting, not done");
+                clock_ns = clock_ns.max(self.sessions[next_arrival].stats.arrival_ns);
+                continue;
+            }
+            // one decode round: one token per active session, serially on
+            // the shared device; rotate the start slot so no session is
+            // systematically last in the round.
+            let round_start = clock_ns;
+            let k = active.len();
+            let rot = round % k;
+            let mut leaving: Vec<usize> = Vec::new();
+            for i in 0..k {
+                let sid = active[(rot + i) % k];
+                let cache_idx = if self.cfg.shared_cache { 0 } else { sid };
+                let cache = &mut self.caches[cache_idx];
+                if self.cfg.shared_cache {
+                    cache.set_session(sid as u32);
+                }
+                let sess = &mut self.sessions[sid];
+                let tok = &sess.trace.tokens[sess.next_token];
+                let io = sess.pipeline.step_token(cache, sim, tok);
+                clock_ns += io.stall_ns + self.compute_ns_per_token;
+                let latency = clock_ns - round_start;
+                sess.stats.record_token(&io, latency);
+                serve.all_latency_ns.add(latency);
+                agg.record(&io, self.bundle_bytes);
+                agg.record_compute(self.compute_ns_per_token);
+                sess.next_token += 1;
+                if sess.next_token == sess.trace.n_tokens() {
+                    sess.stats.finished_ns = clock_ns;
+                    leaving.push(sid);
+                }
+            }
+            // sessions leave between tokens; their slots refill next round
+            active.retain(|sid| !leaving.contains(sid));
+            done += leaving.len();
+            round += 1;
+        }
+        serve.makespan_ns = clock_ns;
+        for c in &self.caches {
+            serve.cache_hits += c.hits;
+            serve.cache_cross_hits += c.cross_hits;
+        }
+        serve.sessions = self.sessions.into_iter().map(|s| s.stats).collect();
+        (agg, serve)
+    }
+}
+
+/// Run a full serving simulation for a workload: placement once (one
+/// model in flash serves everyone), one pipeline + trace per session,
+/// one shared `UfsSim`, and a shared cache or equal-total private
+/// partitions. Synchronous flash timeline only — speculative prefetch
+/// under contention is future work (ROADMAP).
+pub fn run_serve(
+    w: &Workload,
+    system: System,
+    spec: SystemSpec,
+    cfg: &ServeConfig,
+) -> anyhow::Result<ServeOutcome> {
+    anyhow::ensure!(cfg.sessions > 0, "serve needs at least one session");
+    anyhow::ensure!(cfg.max_concurrent > 0, "serve needs at least one decode slot");
+    anyhow::ensure!(
+        !spec.dense,
+        "dense streaming (llamacpp) has no per-session sparsity to share; \
+         run it single-stream"
+    );
+    anyhow::ensure!(
+        !w.prefetch.enabled,
+        "the serving simulation runs the synchronous flash timeline; \
+         disable prefetch"
+    );
+    let calib = w.calibration_trace();
+    let (layouts, placement_secs) = layouts_for(system, &calib, w.knn, w.threads);
+    let space = neuron_space(w);
+    let bundle_bytes = space.bundle_bytes;
+    let pcfg = workloads::pipeline_config(spec, w, None);
+    let cap_total = cache_capacity(w);
+    let n_caches = if cfg.shared_cache { 1 } else { cfg.sessions };
+    // private partitions must sum to EXACTLY the shared capacity or the
+    // shared-vs-private comparison is biased: spread the remainder of
+    // the floor division over the first caches.
+    let cap_of = |idx: usize| {
+        if cfg.shared_cache {
+            cap_total
+        } else {
+            cap_total / cfg.sessions + usize::from(idx < cap_total % cfg.sessions)
+        }
+    };
+    let caches: Vec<NeuronCache> = (0..n_caches)
+        .map(|idx| NeuronCache::from_config(spec.cache_policy, cap_of(idx), w.seed))
+        .collect::<anyhow::Result<_>>()?;
+    let streams: Vec<(IoPipeline, Trace)> = (0..cfg.sessions)
+        .map(|sid| {
+            (
+                IoPipeline::new(pcfg.clone(), space.clone(), layouts.clone()),
+                w.session_eval_trace(&w.dataset, sid),
+            )
+        })
+        .collect();
+    let compute_ns_per_token = w.compute_ns_per_layer * w.sim_layers as f64;
+    let mut sim = UfsSim::new(w.device.clone(), space.image_bytes());
+    let manager =
+        SessionManager::new(cfg.clone(), streams, caches, compute_ns_per_token, bundle_bytes);
+    let (metrics, mut serve) = manager.run(&mut sim);
+    let summary = serve.summary(w.layer_scale(), metrics.cache_hit_ratio());
+    Ok(ServeOutcome { metrics, serve, summary, placement_secs, bundle_bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::tiny_workload;
+
+    fn tiny_serve(cfg: ServeConfig) -> ServeOutcome {
+        let mut w = tiny_workload();
+        w.eval_tokens = 12;
+        let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+        run_serve(&w, System::Ripple, spec, &cfg).unwrap()
+    }
+
+    #[test]
+    fn all_sessions_complete_all_tokens() {
+        let out = tiny_serve(ServeConfig { sessions: 3, ..Default::default() });
+        assert_eq!(out.serve.sessions.len(), 3);
+        for s in &out.serve.sessions {
+            assert_eq!(s.tokens, 12);
+            assert!(s.finished_ns > 0.0);
+        }
+        assert_eq!(out.metrics.tokens, 36);
+        assert_eq!(out.summary.tokens, 36);
+        assert!(out.summary.p99_ms >= out.summary.p50_ms);
+        assert!(out.summary.makespan_ms > 0.0);
+    }
+
+    #[test]
+    fn slots_bound_concurrency_and_queue_delay_appears() {
+        let out = tiny_serve(ServeConfig {
+            sessions: 5,
+            max_concurrent: 2,
+            ..Default::default()
+        });
+        assert!(out.serve.peak_active <= 2);
+        // the first two sessions get slots at arrival; later ones wait
+        assert_eq!(out.serve.sessions[0].queue_delay_ns, 0.0);
+        assert_eq!(out.serve.sessions[1].queue_delay_ns, 0.0);
+        assert!(out.serve.sessions[4].queue_delay_ns > 0.0);
+        assert!(out.summary.mean_queue_delay_ms > 0.0);
+    }
+
+    #[test]
+    fn staggered_arrivals_reduce_contention() {
+        let packed = tiny_serve(ServeConfig {
+            sessions: 4,
+            max_concurrent: 4,
+            arrival_spacing_ns: 0.0,
+            shared_cache: true,
+        });
+        let spread = tiny_serve(ServeConfig {
+            sessions: 4,
+            max_concurrent: 4,
+            // huge spacing: sessions run essentially alone
+            arrival_spacing_ns: 1e12,
+            shared_cache: true,
+        });
+        assert!(
+            spread.summary.p95_ms <= packed.summary.p95_ms,
+            "serial sessions must not see worse tails than packed ones: \
+             {} vs {}",
+            spread.summary.p95_ms,
+            packed.summary.p95_ms
+        );
+        assert!(spread.summary.makespan_ms > packed.summary.makespan_ms);
+    }
+
+    #[test]
+    fn serve_run_is_deterministic() {
+        let cfg = ServeConfig { sessions: 4, max_concurrent: 3, ..Default::default() };
+        let a = tiny_serve(cfg.clone());
+        let b = tiny_serve(cfg);
+        assert_eq!(
+            a.metrics.totals.elapsed_ns.to_bits(),
+            b.metrics.totals.elapsed_ns.to_bits()
+        );
+        assert_eq!(a.metrics.totals.commands, b.metrics.totals.commands);
+        assert_eq!(a.summary.p99_ms.to_bits(), b.summary.p99_ms.to_bits());
+        assert_eq!(a.summary.makespan_ms.to_bits(), b.summary.makespan_ms.to_bits());
+        assert_eq!(a.summary.fairness.to_bits(), b.summary.fairness.to_bits());
+    }
+
+    #[test]
+    fn serve_rejects_dense_and_prefetch() {
+        let mut w = tiny_workload();
+        w.eval_tokens = 4;
+        let dense = SystemSpec::of(System::LlamaCpp, w.model.ffn_linears);
+        assert!(run_serve(&w, System::LlamaCpp, dense, &ServeConfig::default()).is_err());
+        let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+        w.prefetch.enabled = true;
+        assert!(run_serve(&w, System::Ripple, spec, &ServeConfig::default()).is_err());
+    }
+
+    #[test]
+    fn private_caches_never_cross_hit() {
+        let out = tiny_serve(ServeConfig {
+            sessions: 3,
+            shared_cache: false,
+            ..Default::default()
+        });
+        assert_eq!(out.serve.cache_cross_hits, 0);
+        assert_eq!(out.summary.cross_session_hit_ratio, 0.0);
+        assert!(!out.summary.shared_cache);
+    }
+}

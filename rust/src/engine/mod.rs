@@ -124,6 +124,9 @@ pub struct Engine {
     space: NeuronSpace,
     pub sim: UfsSim,
     pipeline: IoPipeline,
+    /// DRAM neuron cache — owned by the engine, borrowed by the
+    /// pipeline per call (shared-state ownership, DESIGN.md §Serving).
+    cache: NeuronCache,
     pub io_metrics: RunMetrics,
     /// Modeled per-layer compute window (deterministic; see DESIGN.md
     /// §Async-flash-timeline) that overlapped I/O can hide behind.
@@ -201,7 +204,7 @@ impl Engine {
             window: 16,
             sub_reads_per_run: 1,
         };
-        let pipeline = IoPipeline::new(pcfg, space.clone(), layouts, cache);
+        let pipeline = IoPipeline::new(pcfg, space.clone(), layouts);
 
         // Deterministic per-layer compute estimate (attention projections
         // plus the sparse FFN over top-K bundles) — the window overlapped
@@ -230,6 +233,7 @@ impl Engine {
             space,
             sim,
             pipeline,
+            cache,
             io_metrics: RunMetrics::new(),
             compute_ns_per_layer,
             recorder: None,
@@ -278,11 +282,11 @@ impl Engine {
         let image = build_flash_image(&self.space, &layouts, &self.layers);
         self.sim = UfsSim::with_image(self.opts.device.clone(), image);
         let cache_cap = (self.space.total() as f64 * self.opts.cache_ratio) as usize;
-        let cache =
+        self.cache =
             NeuronCache::from_config(&self.opts.cache_policy, cache_cap, self.opts.seed)?;
         let pcfg = self.pipeline.config().clone();
         let prefetcher = self.pipeline.take_prefetcher();
-        self.pipeline = IoPipeline::new(pcfg, self.space.clone(), layouts, cache);
+        self.pipeline = IoPipeline::new(pcfg, self.space.clone(), layouts);
         self.pipeline.set_prefetcher(prefetcher);
         self.io_metrics = RunMetrics::new();
         Ok(())
@@ -446,20 +450,24 @@ impl Engine {
             // behind it, and the modeled compute window advances the
             // clock so the speculative reads drain underneath it.
             self.scratch.clear();
-            let plan = self.pipeline.plan_layer(li, &active);
+            let plan = self.pipeline.plan_layer(&mut self.cache, li, &active);
             let mut buf = std::mem::take(&mut self.scratch);
             let io = if self.pipeline.has_prefetcher() {
                 let ticket =
                     self.pipeline.submit_layer_read(&plan, &mut self.sim, &mut buf);
                 if li + 1 < self.meta.n_layers {
-                    self.pipeline.prefetch_layer(&mut self.sim, li + 1, &active);
+                    self.pipeline
+                        .prefetch_layer(&self.cache, &mut self.sim, li + 1, &active);
                 }
-                let io = self.pipeline.complete_layer(&plan, ticket, &mut self.sim);
+                let io = self
+                    .pipeline
+                    .complete_layer(&mut self.cache, &plan, ticket, &mut self.sim);
                 self.sim.advance_compute(self.compute_ns_per_layer);
                 self.io_metrics.record_compute(self.compute_ns_per_layer);
                 io
             } else {
-                self.pipeline.commit_layer_read(&plan, &mut self.sim, &mut buf)
+                self.pipeline
+                    .commit_layer_read(&mut self.cache, &plan, &mut self.sim, &mut buf)
             };
             self.io_metrics.record(&io, self.space.bundle_bytes);
 

@@ -7,7 +7,8 @@
 //! * [`scenario`] — [`ScenarioSpec`] (one experiment point) and
 //!   [`ScenarioMatrix`] (axes + cartesian-product expansion),
 //! * [`presets`] — named matrices reproducing the paper figures
-//!   (`smoke`, `fig01`, `fig10`, `fig18`, `ablations`),
+//!   (`smoke`, `fig01`, `fig10`, `fig18`, `ablations`) plus the
+//!   multi-session `serve` contention sweep,
 //! * [`runner`] — the multi-threaded sweep executor (results are
 //!   thread-count invariant),
 //! * [`report`] — stable-schema `BENCH_<name>.json` plus Markdown with
@@ -30,4 +31,4 @@ pub use presets::{preset, preset_names};
 pub use report::{delta_pct, Baseline, BaselineMetrics, ScenarioResult, SweepReport};
 pub use report::{fmt_delta, SCHEMA_VERSION};
 pub use runner::{default_threads, run_matrix, run_scenario};
-pub use scenario::{derive_seed, PrefetchPoint, ScenarioMatrix, ScenarioSpec};
+pub use scenario::{derive_seed, PrefetchPoint, ScenarioMatrix, ScenarioSpec, ServePoint};

@@ -9,11 +9,11 @@
 use crate::bench::workloads::System;
 use crate::cache::Admission;
 
-use super::scenario::{PrefetchPoint, ScenarioMatrix, ScenarioSpec};
+use super::scenario::{PrefetchPoint, ScenarioMatrix, ScenarioSpec, ServePoint};
 
 /// Every preset name `preset` accepts.
 pub fn preset_names() -> &'static [&'static str] {
-    &["smoke", "fig01", "fig10", "fig18", "ablations"]
+    &["smoke", "fig01", "fig10", "fig18", "ablations", "serve"]
 }
 
 /// Resolve a preset name to its matrix.
@@ -24,6 +24,7 @@ pub fn preset(name: &str) -> anyhow::Result<ScenarioMatrix> {
         "fig10" => fig10(),
         "fig18" => fig18(),
         "ablations" => ablations(),
+        "serve" => serve(),
         _ => anyhow::bail!(
             "unknown preset `{name}` (available: {})",
             preset_names().join("|")
@@ -103,6 +104,34 @@ fn fig18() -> ScenarioMatrix {
             m.extra.push(s);
         }
     }
+    m
+}
+
+/// Multi-session serving sweep (DESIGN.md §Serving): sessions ×
+/// arrival spacing × shared-vs-private cache on RIPPLE (OPT-350M,
+/// OnePlus 12, alpaca — the hot-overlap workload: statistically
+/// identical users whose hot sets coincide). The leading
+/// `s1c4-a0ms-shared` row is the continuity anchor — with one session
+/// and a shared cache the serving loop reduces bit-for-bit to the
+/// single-stream fig10 experiment (pinned by
+/// `rust/tests/harness_golden.rs`).
+fn serve() -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new("serve");
+    m.systems = vec![System::Ripple];
+    let mut points = vec![Some(ServePoint::shared(1))];
+    for sessions in [2usize, 4, 8] {
+        for spacing_ms in [0.0, 25.0] {
+            for shared in [true, false] {
+                let base = if shared {
+                    ServePoint::shared(sessions)
+                } else {
+                    ServePoint::private(sessions)
+                };
+                points.push(Some(ServePoint { arrival_spacing_ms: spacing_ms, ..base }));
+            }
+        }
+    }
+    m.serve = points;
     m
 }
 
@@ -200,6 +229,32 @@ mod tests {
         assert_eq!(specs.len(), 4);
         assert!(specs.iter().all(|s| s.eval_tokens <= 24 && s.sim_layers == 2));
         assert!(specs.iter().any(|s| s.prefetch.enabled));
+    }
+
+    #[test]
+    fn serve_preset_covers_the_contention_axes() {
+        let specs = preset("serve").unwrap().expand();
+        // 1 anchor + 3 session counts x 2 spacings x shared/private
+        assert_eq!(specs.len(), 1 + 3 * 2 * 2);
+        let first = specs[0].serve.expect("anchor row is a serve point");
+        assert_eq!(first.sessions, 1);
+        assert!(first.shared_cache);
+        assert_eq!(specs[0].seed, 7, "serve rows run on the bench seed");
+        assert!(specs.iter().all(|s| s.serve.is_some() && !s.prefetch.enabled));
+        // every shared row has a private partner at the same point
+        for s in &specs {
+            let sv = s.serve.unwrap();
+            if sv.sessions > 1 && sv.shared_cache {
+                assert!(
+                    specs.iter().any(|o| {
+                        let ov = o.serve.unwrap();
+                        !ov.shared_cache && ov.pair_key() == sv.pair_key()
+                    }),
+                    "no private partner for {}",
+                    s.name
+                );
+            }
+        }
     }
 
     #[test]

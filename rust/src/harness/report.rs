@@ -18,7 +18,9 @@ use crate::util::json::{self, Json};
 use super::scenario::ScenarioSpec;
 
 /// Version stamped into every report; parsers reject newer files.
-pub const SCHEMA_VERSION: u64 = 1;
+/// v2 added the per-scenario `serve` spec/metrics objects (null for
+/// single-stream rows); v1 baselines still load.
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// One scenario's spec plus its measured outcome.
 pub struct ScenarioResult {
@@ -117,6 +119,7 @@ impl SweepReport {
                 m.raw_bandwidth() / 1e6,
             ));
         }
+        self.push_serving_sections(&mut out);
         if let Some(base) = baseline {
             out.push_str(&format!("\n## vs baseline `{}`\n\n", base.name));
             out.push_str(
@@ -161,6 +164,84 @@ impl SweepReport {
         ));
         out
     }
+
+    /// Multi-session sections: the per-scenario serving table and, when
+    /// a scenario has both shared- and private-cache variants of the
+    /// same (sessions, slots, arrival) point, the shared-vs-private
+    /// delta table (the headline comparison of DESIGN.md §Serving).
+    fn push_serving_sections(&self, out: &mut String) {
+        let rows: Vec<&ScenarioResult> =
+            self.results.iter().filter(|r| r.outcome.serve.is_some()).collect();
+        if rows.is_empty() {
+            return;
+        }
+        out.push_str("\n## Serving (multi-session)\n\n");
+        out.push_str(
+            "| scenario | sessions | slots | peak | cache | p50 ms | p95 ms | p99 ms \
+             | queue ms | fairness | agg hit | cross hit | makespan ms |\n",
+        );
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+        for r in &rows {
+            let sv = r.outcome.serve.as_ref().unwrap();
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {:.2} | {:.2} | {:.2} | {:.2} | {:.3} \
+                 | {:.0}% | {:.0}% | {:.1} |\n",
+                r.spec.name,
+                sv.sessions,
+                sv.max_concurrent,
+                sv.peak_active,
+                if sv.shared_cache { "shared" } else { "private" },
+                sv.p50_ms,
+                sv.p95_ms,
+                sv.p99_ms,
+                sv.mean_queue_delay_ms,
+                sv.fairness,
+                sv.cache_hit_ratio * 100.0,
+                sv.cross_session_hit_ratio * 100.0,
+                sv.makespan_ms,
+            ));
+        }
+        // shared vs private at equal total DRAM, matched by pair id
+        let pair_id = |r: &ScenarioResult| -> String {
+            let point = r.spec.serve.as_ref().unwrap();
+            let prefix =
+                r.spec.name.strip_suffix(&point.label()).unwrap_or(&r.spec.name);
+            format!("{prefix}{}", point.pair_key())
+        };
+        let mut deltas = String::new();
+        for r in &rows {
+            let sv = r.outcome.serve.as_ref().unwrap();
+            if !sv.shared_cache {
+                continue;
+            }
+            let id = pair_id(r);
+            let Some(partner) = rows.iter().find(|o| {
+                !o.outcome.serve.as_ref().unwrap().shared_cache && pair_id(o) == id
+            }) else {
+                continue;
+            };
+            let pv = partner.outcome.serve.as_ref().unwrap();
+            deltas.push_str(&format!(
+                "| {} | {:.1}% | {:.1}% | {:+.1}pp | {:.2} | {:.2} | {} |\n",
+                r.spec.serve.as_ref().unwrap().pair_key(),
+                sv.cache_hit_ratio * 100.0,
+                pv.cache_hit_ratio * 100.0,
+                (sv.cache_hit_ratio - pv.cache_hit_ratio) * 100.0,
+                sv.mean_ms,
+                pv.mean_ms,
+                fmt_delta(delta_pct(sv.mean_ms, pv.mean_ms)),
+            ));
+        }
+        if !deltas.is_empty() {
+            out.push_str("\n### Shared vs private cache (equal total DRAM)\n\n");
+            out.push_str(
+                "| point | shared hit | private hit | d hit | shared e2e ms \
+                 | private e2e ms | d e2e |\n",
+            );
+            out.push_str("|---|---|---|---|---|---|---|\n");
+            out.push_str(&deltas);
+        }
+    }
 }
 
 /// Compact per-row description of the non-axis knobs.
@@ -184,6 +265,9 @@ fn config_label(spec: &ScenarioSpec) -> String {
     if spec.calib_tokens != 256 {
         parts.push(format!("calib={}", spec.calib_tokens));
     }
+    if let Some(sv) = &spec.serve {
+        parts.push(sv.label());
+    }
     parts.join(" ")
 }
 
@@ -195,6 +279,40 @@ fn admission_label(a: Option<Admission>) -> String {
         Some(Admission::Linking { segment_min, segment_p }) => {
             format!("linking(min={segment_min},p={segment_p})")
         }
+    }
+}
+
+/// Serve-point spec object (`null` for single-stream scenarios).
+fn serve_spec_json(spec: &ScenarioSpec) -> Json {
+    match &spec.serve {
+        None => Json::Null,
+        Some(sv) => json::obj(vec![
+            ("sessions", json::num(sv.sessions as f64)),
+            ("max_concurrent", json::num(sv.max_concurrent as f64)),
+            ("arrival_spacing_ms", json::num(sv.arrival_spacing_ms)),
+            ("shared_cache", Json::Bool(sv.shared_cache)),
+        ]),
+    }
+}
+
+/// Serve outcome object (`null` for single-stream scenarios).
+fn serve_metrics_json(r: &ScenarioResult) -> Json {
+    match &r.outcome.serve {
+        None => Json::Null,
+        Some(sv) => json::obj(vec![
+            ("sessions", json::num(sv.sessions as f64)),
+            ("peak_active", json::num(sv.peak_active as f64)),
+            ("tokens", json::num(sv.tokens as f64)),
+            ("p50_ms", json::num(sv.p50_ms)),
+            ("p95_ms", json::num(sv.p95_ms)),
+            ("p99_ms", json::num(sv.p99_ms)),
+            ("mean_ms", json::num(sv.mean_ms)),
+            ("mean_queue_delay_ms", json::num(sv.mean_queue_delay_ms)),
+            ("fairness", json::num(sv.fairness)),
+            ("cache_hit_ratio", json::num(sv.cache_hit_ratio)),
+            ("cross_session_hit_ratio", json::num(sv.cross_session_hit_ratio)),
+            ("makespan_ms", json::num(sv.makespan_ms)),
+        ]),
     }
 }
 
@@ -239,6 +357,8 @@ fn scenario_json(r: &ScenarioResult) -> Json {
             },
         ),
         ("admission", json::s(&admission_label(spec.admission))),
+        ("serve", serve_spec_json(spec)),
+        ("serve_metrics", serve_metrics_json(r)),
         (
             "metrics",
             json::obj(vec![
@@ -376,8 +496,40 @@ mod tests {
                 placement_secs: 0.0,
                 layer_scale: 2.0,
                 bundle_bytes: 100,
+                serve: None,
             },
         }
+    }
+
+    fn fake_serve_result(name: &str, shared: bool, hit: f64, mean_ms: f64) -> ScenarioResult {
+        use crate::harness::scenario::ServePoint;
+        use crate::metrics::ServeSummary;
+        let point = ServePoint {
+            sessions: 4,
+            max_concurrent: 4,
+            arrival_spacing_ms: 0.0,
+            shared_cache: shared,
+        };
+        let mut r = fake_result(name, 1e6);
+        r.spec.name = format!("{name}/{}", point.label());
+        r.spec.serve = Some(point);
+        r.outcome.serve = Some(ServeSummary {
+            sessions: 4,
+            max_concurrent: 4,
+            peak_active: 4,
+            shared_cache: shared,
+            tokens: 64,
+            p50_ms: mean_ms,
+            p95_ms: mean_ms * 2.0,
+            p99_ms: mean_ms * 3.0,
+            mean_ms,
+            mean_queue_delay_ms: 0.5,
+            fairness: 0.9,
+            cache_hit_ratio: hit,
+            cross_session_hit_ratio: if shared { 0.3 } else { 0.0 },
+            makespan_ms: 100.0,
+        });
+        r
     }
 
     #[test]
@@ -398,7 +550,10 @@ mod tests {
             results: vec![fake_result("a", 1e6), fake_result("b", 2e6)],
         };
         let text = report.json_string();
-        assert!(text.contains("\"schema_version\":1"));
+        assert!(text.contains("\"schema_version\":2"));
+        // single-stream rows carry null serve objects (stable schema)
+        assert!(text.contains("\"serve\":null"));
+        assert!(text.contains("\"serve_metrics\":null"));
         let base = Baseline::parse(&text).unwrap();
         assert_eq!(base.name, "t");
         assert_eq!(base.len(), 2);
@@ -446,5 +601,43 @@ mod tests {
         let a = SweepReport { name: "t".into(), results: vec![fake_result("a", 1e6)] };
         let b = SweepReport { name: "t".into(), results: vec![fake_result("a", 1e6)] };
         assert_eq!(a.json_string(), b.json_string());
+    }
+
+    #[test]
+    fn serve_rows_serialize_and_render_the_delta_table() {
+        let report = SweepReport {
+            name: "serve".to_string(),
+            results: vec![
+                fake_serve_result("a", true, 0.6, 2.0),
+                fake_serve_result("a", false, 0.4, 2.5),
+            ],
+        };
+        let text = report.json_string();
+        assert!(text.contains("\"serve_metrics\":{"));
+        assert!(text.contains("\"cross_session_hit_ratio\""));
+        assert!(text.contains("\"p99_ms\""));
+        assert!(text.contains("\"shared_cache\":true"));
+        // old baselines (io/e2e only) still parse the new schema
+        let base = Baseline::parse(&text).unwrap();
+        assert_eq!(base.len(), 2);
+
+        let md = report.to_markdown(None);
+        assert!(md.contains("## Serving (multi-session)"), "{md}");
+        assert!(md.contains("### Shared vs private cache"), "{md}");
+        // shared row wins by 20pp in this fixture
+        assert!(md.contains("+20.0pp"), "{md}");
+        assert!(md.contains("| shared |"));
+        assert!(md.contains("| private |"));
+    }
+
+    #[test]
+    fn serve_delta_table_skips_unpaired_rows() {
+        let report = SweepReport {
+            name: "serve".to_string(),
+            results: vec![fake_serve_result("solo", true, 0.6, 2.0)],
+        };
+        let md = report.to_markdown(None);
+        assert!(md.contains("## Serving (multi-session)"));
+        assert!(!md.contains("### Shared vs private cache"));
     }
 }

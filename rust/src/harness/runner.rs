@@ -12,10 +12,11 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::bench::workloads::{self, ExperimentResult, SystemSpec, Workload};
+use crate::coordinator::session::{run_serve, ServeConfig};
 use crate::metrics::RunMetrics;
 
 use super::report::{ScenarioResult, SweepReport};
-use super::scenario::{ScenarioMatrix, ScenarioSpec};
+use super::scenario::{ScenarioMatrix, ScenarioSpec, ServePoint};
 
 /// Default sweep worker count: one per available core (4 when the
 /// parallelism query fails). Shared by the CLI and the bench wrappers.
@@ -89,12 +90,54 @@ pub fn run_scenario(spec: &ScenarioSpec, threads: usize) -> anyhow::Result<Exper
          use a sync prefetch point",
         spec.name
     );
+    if let Some(sv) = &spec.serve {
+        return run_serve_point(spec, sv, &w, sspec);
+    }
     if spec.admission.is_some() || spec.fixed_threshold.is_some() {
         run_ablation(spec, &w, sspec)
     } else {
         let eval = w.dataset.clone();
         workloads::run_spec(&w, sspec, &eval)
     }
+}
+
+/// Multi-session serving path (DESIGN.md §Serving): N sessions through
+/// one shared cache + flash timeline via `coordinator::session`. The
+/// aggregate metrics land in the same `ExperimentResult` slots every
+/// other row uses, plus the serve summary.
+fn run_serve_point(
+    spec: &ScenarioSpec,
+    sv: &ServePoint,
+    w: &Workload,
+    sspec: SystemSpec,
+) -> anyhow::Result<ExperimentResult> {
+    anyhow::ensure!(
+        !w.prefetch.enabled,
+        "scenario `{}`: serve points run the synchronous timeline; \
+         use a sync prefetch point",
+        spec.name
+    );
+    anyhow::ensure!(
+        spec.admission.is_none() && spec.fixed_threshold.is_none(),
+        "scenario `{}`: ablation knobs are not supported on serve points",
+        spec.name
+    );
+    let cfg = ServeConfig {
+        sessions: sv.sessions,
+        max_concurrent: sv.max_concurrent,
+        arrival_spacing_ns: sv.arrival_spacing_ms * 1e6,
+        shared_cache: sv.shared_cache,
+    };
+    let out = run_serve(w, spec.system, sspec, &cfg)
+        .map_err(|e| anyhow::anyhow!("scenario `{}`: {e:#}", spec.name))?;
+    Ok(ExperimentResult {
+        system: spec.system,
+        metrics: out.metrics,
+        placement_secs: out.placement_secs,
+        layer_scale: w.layer_scale(),
+        bundle_bytes: out.bundle_bytes,
+        serve: Some(out.summary),
+    })
 }
 
 /// Custom path for the ablation-only knobs (pinned collapse threshold,
@@ -112,13 +155,13 @@ fn run_ablation(
     let calib = w.calibration_trace();
     let (layouts, placement_secs) =
         workloads::layouts_for(spec.system, &calib, w.knn, w.threads);
-    let (mut pipeline, mut sim) =
+    let (mut pipeline, mut cache, mut sim) =
         workloads::pipeline_with(sspec, w, layouts, spec.admission, spec.fixed_threshold)?;
     let bundle_bytes = pipeline.config().bundle_bytes;
     let eval = w.eval_trace(&w.dataset);
     let mut metrics = RunMetrics::new();
     for tok in &eval.tokens {
-        let t = pipeline.step_token(&mut sim, tok);
+        let t = pipeline.step_token(&mut cache, &mut sim, tok);
         metrics.record(&t, bundle_bytes);
         metrics.record_compute(w.compute_ns_per_layer * w.sim_layers as f64);
     }
@@ -128,6 +171,7 @@ fn run_ablation(
         placement_secs,
         layer_scale: w.layer_scale(),
         bundle_bytes,
+        serve: None,
     })
 }
 
@@ -201,6 +245,47 @@ mod tests {
         s.prefetch = PrefetchPoint::budget_kb(64);
         let err = run_scenario(&s, 1).unwrap_err();
         assert!(format!("{err:#}").contains("no speculative prefetch"));
+    }
+
+    #[test]
+    fn serve_point_runs_and_reports_summary() {
+        let mut s = tiny_spec("serve-2");
+        s.serve = Some(ServePoint {
+            sessions: 2,
+            max_concurrent: 2,
+            arrival_spacing_ms: 0.0,
+            shared_cache: true,
+        });
+        let r = run_scenario(&s, 1).unwrap();
+        assert_eq!(r.metrics.tokens, 32, "2 sessions x 16 eval tokens");
+        let sv = r.serve.expect("serve summary");
+        assert_eq!(sv.sessions, 2);
+        assert_eq!(sv.tokens, 32);
+        assert!(sv.shared_cache);
+        assert!(sv.p50_ms > 0.0 && sv.p99_ms >= sv.p50_ms);
+        assert!(r.overlap_ratio().abs() < 1e-12, "serve is sync-only");
+    }
+
+    #[test]
+    fn serve_point_rejects_prefetch_and_ablation_knobs() {
+        let sv = ServePoint {
+            sessions: 2,
+            max_concurrent: 2,
+            arrival_spacing_ms: 0.0,
+            shared_cache: true,
+        };
+        let mut s = tiny_spec("serve-pf");
+        s.serve = Some(sv);
+        s.prefetch = PrefetchPoint::budget_kb(64);
+        assert!(run_scenario(&s, 1).is_err());
+        let mut s = tiny_spec("serve-abl");
+        s.serve = Some(sv);
+        s.fixed_threshold = Some(4);
+        assert!(run_scenario(&s, 1).is_err());
+        let mut s = tiny_spec("serve-dense");
+        s.serve = Some(sv);
+        s.system = System::LlamaCpp;
+        assert!(run_scenario(&s, 1).is_err());
     }
 
     #[test]

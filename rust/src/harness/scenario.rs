@@ -50,6 +50,55 @@ impl PrefetchPoint {
     }
 }
 
+/// One point on the serving axis of a matrix (DESIGN.md §Serving):
+/// N continuous-batched sessions through one shared flash timeline,
+/// with one shared DRAM cache or equal-total private partitions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServePoint {
+    /// Number of decode sessions.
+    pub sessions: usize,
+    /// Decode slots (continuous-batch width).
+    pub max_concurrent: usize,
+    /// Virtual gap between consecutive session arrivals, ms
+    /// (full-model scale is NOT applied — this is raw sim time).
+    pub arrival_spacing_ms: f64,
+    /// Shared cache (true) vs private per-session partitions (false).
+    pub shared_cache: bool,
+}
+
+impl ServePoint {
+    /// A `sessions`-user shared-cache point, 4 decode slots, arrivals
+    /// packed at t=0 (the maximum-contention configuration).
+    pub fn shared(sessions: usize) -> Self {
+        Self { sessions, max_concurrent: 4, arrival_spacing_ms: 0.0, shared_cache: true }
+    }
+
+    /// The same point with private per-session caches (equal total
+    /// capacity) — the shared-vs-private comparison partner.
+    pub fn private(sessions: usize) -> Self {
+        Self { shared_cache: false, ..Self::shared(sessions) }
+    }
+
+    /// Stable label used in scenario names
+    /// (`s<N>c<slots>-a<ms>ms-<shared|priv>`).
+    pub fn label(&self) -> String {
+        format!(
+            "s{}c{}-a{}ms-{}",
+            self.sessions,
+            self.max_concurrent,
+            self.arrival_spacing_ms,
+            if self.shared_cache { "shared" } else { "priv" }
+        )
+    }
+
+    /// The label's sharing-independent prefix — shared and private rows
+    /// of the same (sessions, slots, arrival) point share it, which is
+    /// how the report pairs them for the delta table.
+    pub fn pair_key(&self) -> String {
+        format!("s{}c{}-a{}ms", self.sessions, self.max_concurrent, self.arrival_spacing_ms)
+    }
+}
+
 /// One fully-resolved experiment point of a sweep.
 ///
 /// Field defaults (see [`ScenarioSpec::new`]) match the historical
@@ -97,6 +146,9 @@ pub struct ScenarioSpec {
     /// Ablation knob: explicit cache admission over an S3-FIFO policy
     /// (sync-only custom pipeline path).
     pub admission: Option<Admission>,
+    /// Multi-session serving point; `None` = the historical
+    /// single-stream experiment.
+    pub serve: Option<ServePoint>,
 }
 
 impl ScenarioSpec {
@@ -120,6 +172,7 @@ impl ScenarioSpec {
             seed: 7,
             fixed_threshold: None,
             admission: None,
+            serve: None,
         }
     }
 
@@ -147,6 +200,21 @@ impl ScenarioSpec {
                 self.name,
                 self.prefetch.budget_bytes
             );
+        }
+        if let Some(sv) = &self.serve {
+            if sv.sessions == 0 || sv.max_concurrent == 0 {
+                anyhow::bail!(
+                    "scenario `{}`: serve point needs sessions >= 1 and \
+                     max_concurrent >= 1",
+                    self.name
+                );
+            }
+            if sv.arrival_spacing_ms.is_nan() || sv.arrival_spacing_ms < 0.0 {
+                anyhow::bail!(
+                    "scenario `{}`: arrival spacing must be finite and >= 0",
+                    self.name
+                );
+            }
         }
         let model = model_by_name(&self.model)?;
         let device = device_by_name(&self.device)?;
@@ -226,6 +294,9 @@ pub struct ScenarioMatrix {
     pub collapse: Vec<Option<bool>>,
     /// Prefetch axis.
     pub prefetch: Vec<PrefetchPoint>,
+    /// Serving axis (`None` = single-stream; names stay unchanged for
+    /// `None`, so pre-serve baselines keep matching).
+    pub serve: Vec<Option<ServePoint>>,
     /// Calibration tokens applied to every product scenario.
     pub calib_tokens: usize,
     /// Eval tokens applied to every product scenario.
@@ -260,6 +331,7 @@ impl ScenarioMatrix {
             cache_policies: vec![None],
             collapse: vec![None],
             prefetch: vec![PrefetchPoint::sync()],
+            serve: vec![None],
             calib_tokens: 256,
             eval_tokens: 64,
             sim_layers: 2,
@@ -299,17 +371,20 @@ impl ScenarioMatrix {
                             for &collapse in &self.collapse {
                                 for &ratio in &self.cache_ratios {
                                     for &pf in &self.prefetch {
-                                        let point = self.point(
-                                            model,
-                                            device,
-                                            dataset,
-                                            system,
-                                            policy,
-                                            collapse,
-                                            ratio,
-                                            pf,
-                                        );
-                                        out.push(point);
+                                        for &sv in &self.serve {
+                                            let point = self.point(
+                                                model,
+                                                device,
+                                                dataset,
+                                                system,
+                                                policy,
+                                                collapse,
+                                                ratio,
+                                                pf,
+                                                sv,
+                                            );
+                                            out.push(point);
+                                        }
                                     }
                                 }
                             }
@@ -333,6 +408,7 @@ impl ScenarioMatrix {
         collapse: Option<bool>,
         ratio: f64,
         pf: PrefetchPoint,
+        sv: Option<ServePoint>,
     ) -> ScenarioSpec {
         let pol = policy.as_deref().unwrap_or("default");
         let col = match collapse {
@@ -340,11 +416,16 @@ impl ScenarioMatrix {
             Some(true) => "collapse-on",
             Some(false) => "collapse-off",
         };
-        let name = format!(
+        let mut name = format!(
             "{model}/{device}/{dataset}/{}/c{ratio:.2}/{pol}/{col}/{}",
             system.key(),
             pf.label()
         );
+        if let Some(sv) = &sv {
+            // single-stream names are unchanged, so old baselines match
+            name.push('/');
+            name.push_str(&sv.label());
+        }
         let mut s = ScenarioSpec::new(&name, model, system);
         s.device = device.to_string();
         s.dataset = dataset.to_string();
@@ -352,6 +433,7 @@ impl ScenarioMatrix {
         s.collapse = collapse;
         s.cache_ratio = ratio;
         s.prefetch = pf;
+        s.serve = sv;
         s.calib_tokens = self.calib_tokens;
         s.eval_tokens = self.eval_tokens;
         s.sim_layers = self.sim_layers;
@@ -454,6 +536,37 @@ mod tests {
         let mut spec = ScenarioSpec::new("x", "OPT-350M", System::Ripple);
         spec.prefetch = PrefetchPoint { enabled: true, budget_bytes: 65 << 20, lookahead: 1 };
         assert!(spec.workload().is_err());
+    }
+
+    #[test]
+    fn serve_axis_expands_with_stable_labels() {
+        let mut m = ScenarioMatrix::new("t");
+        m.serve = vec![None, Some(ServePoint::shared(4)), Some(ServePoint::private(4))];
+        let specs = m.expand();
+        assert_eq!(specs.len(), 3);
+        // single-stream names are unchanged by the new axis
+        assert!(specs[0].name.ends_with("sync"), "{}", specs[0].name);
+        assert!(specs[0].serve.is_none());
+        assert!(specs[1].name.ends_with("s4c4-a0ms-shared"), "{}", specs[1].name);
+        assert!(specs[2].name.ends_with("s4c4-a0ms-priv"), "{}", specs[2].name);
+        assert_eq!(specs[1].serve.unwrap().sessions, 4);
+        assert!(!specs[2].serve.unwrap().shared_cache);
+        // shared/private partners share the pairing key
+        assert_eq!(ServePoint::shared(4).pair_key(), ServePoint::private(4).pair_key());
+        assert_ne!(ServePoint::shared(2).pair_key(), ServePoint::shared(4).pair_key());
+    }
+
+    #[test]
+    fn workload_rejects_bad_serve_points() {
+        let mut spec = ScenarioSpec::new("x", "OPT-350M", System::Ripple);
+        spec.serve = Some(ServePoint { sessions: 0, ..ServePoint::shared(1) });
+        assert!(spec.workload().is_err());
+        spec.serve = Some(ServePoint { max_concurrent: 0, ..ServePoint::shared(2) });
+        assert!(spec.workload().is_err());
+        spec.serve = Some(ServePoint { arrival_spacing_ms: -1.0, ..ServePoint::shared(2) });
+        assert!(spec.workload().is_err());
+        spec.serve = Some(ServePoint::shared(2));
+        assert!(spec.workload().is_ok());
     }
 
     #[test]

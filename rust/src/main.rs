@@ -22,9 +22,9 @@
 
 use anyhow::Result;
 
-use ripple::bench::workloads::{self, System, Workload};
+use ripple::bench::workloads::{self, System, SystemSpec, Workload};
 use ripple::config::{device_by_name, devices, model_by_name, models};
-use ripple::coordinator::{Server, ServerOptions};
+use ripple::coordinator::{run_serve, ServeConfig, Server, ServerOptions};
 use ripple::engine::{Engine, EngineOptions};
 use ripple::harness;
 use ripple::runtime::default_artifacts_dir;
@@ -33,7 +33,14 @@ use ripple::util::cli::Args;
 use ripple::util::stats::Table;
 
 fn main() {
-    let args = Args::from_env(&["dense", "help", "list", "no-collapse", "prefetch"]);
+    let args = Args::from_env(&[
+        "dense",
+        "help",
+        "list",
+        "no-collapse",
+        "prefetch",
+        "private-cache",
+    ]);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let result = match cmd {
         "serve" => serve(&args),
@@ -72,6 +79,14 @@ fn print_help() {
                    --prefetch: overlap flash reads with modeled compute via\n\
                    speculative next-layer prefetch (default: synchronous\n\
                    timeline, bit-identical to the pre-overlap baseline)\n\
+                   [--sessions <n>] [--max-concurrent <slots>]\n\
+                   [--session-arrival-ms <gap>] [--private-cache]\n\
+                   --sessions: multi-session serving simulation — N\n\
+                   continuous-batched decode streams through ONE shared\n\
+                   DRAM cache and ONE flash timeline (per-session p50/p95/\n\
+                   p99 latency, queueing delay, fairness, cross-session\n\
+                   cache reuse); --private-cache splits the same total\n\
+                   DRAM into per-session partitions for comparison\n\
          bench:    --preset <name> [--threads <n>] [--baseline <BENCH_x.json>]\n\
                    [--out <dir>] | --list\n\
                    runs a scenario matrix, prints the Markdown report and\n\
@@ -234,6 +249,13 @@ fn simulate(args: &Args) -> Result<()> {
         "--prefetch-budget {} unreasonable (max 64 MiB)",
         w.prefetch.budget_bytes
     );
+    anyhow::ensure!(
+        !args.flag("sessions"),
+        "--sessions needs a value (e.g. --sessions 4)"
+    );
+    if args.get("sessions").is_some() {
+        return simulate_serve(args, &w, system);
+    }
     let r = workloads::run_experiment(&w, system)?;
     let mut t = Table::new(&[
         "system", "io ms/token", "e2e ms/token", "overlap", "IOPS", "eff bw MB/s",
@@ -250,6 +272,64 @@ fn simulate(args: &Args) -> Result<()> {
         format!("{:.2}", r.placement_secs),
     ]);
     t.print();
+    Ok(())
+}
+
+/// `simulate --sessions N`: the multi-session serving simulation —
+/// N continuous-batched decode streams through one shared DRAM cache
+/// and one shared flash timeline (DESIGN.md §Serving).
+fn simulate_serve(args: &Args, w: &Workload, system: System) -> Result<()> {
+    anyhow::ensure!(
+        !w.prefetch.enabled,
+        "--sessions runs the synchronous flash timeline; drop --prefetch"
+    );
+    let cfg = ServeConfig {
+        sessions: args.get_usize("sessions", 4)?,
+        max_concurrent: args.get_usize("max-concurrent", 4)?,
+        arrival_spacing_ns: args.get_f64("session-arrival-ms", 0.0)? * 1e6,
+        shared_cache: !args.flag("private-cache"),
+    };
+    let sspec = SystemSpec::of(system, w.model.ffn_linears);
+    let out = run_serve(w, system, sspec, &cfg)?;
+    let scale = w.layer_scale();
+    let ms = |ns: f64| ns * scale / 1e6;
+    let mut t = Table::new(&[
+        "session", "arrival ms", "queue ms", "tokens", "mean ms/tok", "p95 ms/tok",
+        "finished ms",
+    ]);
+    let mut sessions = out.serve.sessions.clone();
+    for s in &mut sessions {
+        t.row(&[
+            s.id.to_string(),
+            format!("{:.1}", ms(s.arrival_ns)),
+            format!("{:.2}", ms(s.queue_delay_ns)),
+            s.tokens.to_string(),
+            format!("{:.2}", ms(s.mean_latency_ns())),
+            format!("{:.2}", ms(s.latency_ns.percentile(95.0))),
+            format!("{:.1}", ms(s.finished_ns)),
+        ]);
+    }
+    t.print();
+    let sv = &out.summary;
+    println!(
+        "\n{} sessions x {} tokens ({} cache, {} slots, peak {} active): \
+         p50/p95/p99 {:.2}/{:.2}/{:.2} ms/token, mean queue {:.2} ms, \
+         fairness {:.3}, agg cache hit {:.1}% (cross-session {:.1}%), \
+         makespan {:.1} ms",
+        sv.sessions,
+        sv.tokens,
+        if sv.shared_cache { "shared" } else { "private" },
+        sv.max_concurrent,
+        sv.peak_active,
+        sv.p50_ms,
+        sv.p95_ms,
+        sv.p99_ms,
+        sv.mean_queue_delay_ms,
+        sv.fairness,
+        sv.cache_hit_ratio * 100.0,
+        sv.cross_session_hit_ratio * 100.0,
+        sv.makespan_ms,
+    );
     Ok(())
 }
 

@@ -1,7 +1,13 @@
 //! I/O metrics: per-token and aggregated counters the paper reports
 //! (I/O latency per token, IOPS, effective bandwidth, transfer volume),
 //! plus the overlap/prefetch counters of the asynchronous pipeline
-//! (stall time, hidden flash time, speculative hit/waste).
+//! (stall time, hidden flash time, speculative hit/waste) and the
+//! per-session serving statistics of the multi-session simulation
+//! ([`serve`]).
+
+pub mod serve;
+
+pub use serve::{ServeMetrics, ServeSummary, SessionStats};
 
 use crate::util::stats::{Percentiles, Summary};
 

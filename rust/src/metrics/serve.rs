@@ -1,0 +1,273 @@
+//! Per-session and aggregate serving metrics (DESIGN.md §Serving).
+//!
+//! The multi-session simulation measures what the single-stream
+//! `RunMetrics` cannot: tail token latency under contention (p50/p95/
+//! p99), queueing delay before a session is admitted to a decode slot,
+//! fairness across sessions, and how much of the DRAM cache's value
+//! comes from *cross-session* co-activation reuse. Everything here is
+//! virtual-time arithmetic on simulated quantities — no wall clock —
+//! so serve reports stay byte-deterministic.
+
+use crate::util::stats::Percentiles;
+
+use super::TokenIo;
+
+/// One decode session's lifetime statistics.
+#[derive(Clone, Debug)]
+pub struct SessionStats {
+    /// Session id (also its arrival order).
+    pub id: usize,
+    /// Virtual arrival time on the serving clock, ns.
+    pub arrival_ns: f64,
+    /// Time spent waiting for a decode slot (admission - arrival), ns.
+    pub queue_delay_ns: f64,
+    /// Virtual completion time of the session's last token, ns.
+    pub finished_ns: f64,
+    /// Tokens decoded.
+    pub tokens: u64,
+    /// Summed per-token I/O contribution.
+    pub totals: TokenIo,
+    /// Per-token serve latency (queueing within the round + own I/O +
+    /// compute), ns.
+    pub latency_ns: Percentiles,
+    sum_latency_ns: f64,
+}
+
+impl SessionStats {
+    /// A fresh session arriving at `arrival_ns`.
+    pub fn new(id: usize, arrival_ns: f64) -> Self {
+        Self {
+            id,
+            arrival_ns,
+            queue_delay_ns: 0.0,
+            finished_ns: 0.0,
+            tokens: 0,
+            totals: TokenIo::default(),
+            latency_ns: Percentiles::new(),
+            sum_latency_ns: 0.0,
+        }
+    }
+
+    /// Record one decoded token and its observed serve latency.
+    pub fn record_token(&mut self, io: &TokenIo, latency_ns: f64) {
+        self.tokens += 1;
+        self.totals.add(io);
+        self.latency_ns.add(latency_ns);
+        self.sum_latency_ns += latency_ns;
+    }
+
+    /// Mean per-token serve latency, ns.
+    pub fn mean_latency_ns(&self) -> f64 {
+        if self.tokens == 0 { 0.0 } else { self.sum_latency_ns / self.tokens as f64 }
+    }
+}
+
+/// Aggregate outcome of one multi-session serve run.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    /// Per-session statistics, indexed by session id.
+    pub sessions: Vec<SessionStats>,
+    /// Every token's serve latency across all sessions, ns.
+    pub all_latency_ns: Percentiles,
+    /// Virtual time from first arrival to last completion, ns.
+    pub makespan_ns: f64,
+    /// Decode-slot count the run was configured with.
+    pub max_concurrent: usize,
+    /// Highest number of simultaneously active sessions observed.
+    pub peak_active: usize,
+    /// True when all sessions shared one DRAM cache.
+    pub shared_cache: bool,
+    /// Total cache hits across sessions (shared or summed private).
+    pub cache_hits: u64,
+    /// Hits served by an entry a *different* session admitted (always 0
+    /// with private caches).
+    pub cache_cross_hits: u64,
+}
+
+impl ServeMetrics {
+    /// Total tokens decoded across sessions.
+    pub fn tokens(&self) -> u64 {
+        self.sessions.iter().map(|s| s.tokens).sum()
+    }
+
+    /// Mean queueing delay before admission, ns.
+    pub fn mean_queue_delay_ns(&self) -> f64 {
+        if self.sessions.is_empty() {
+            0.0
+        } else {
+            self.sessions.iter().map(|s| s.queue_delay_ns).sum::<f64>()
+                / self.sessions.len() as f64
+        }
+    }
+
+    /// Jain's fairness index over per-session mean token latency, in
+    /// (0, 1]; 1.0 = perfectly equal service.
+    pub fn fairness(&self) -> f64 {
+        let xs: Vec<f64> =
+            self.sessions.iter().map(|s| s.mean_latency_ns()).filter(|&x| x > 0.0).collect();
+        if xs.is_empty() {
+            return 1.0;
+        }
+        let sum: f64 = xs.iter().sum();
+        let sum_sq: f64 = xs.iter().map(|x| x * x).sum();
+        if sum_sq == 0.0 { 1.0 } else { sum * sum / (xs.len() as f64 * sum_sq) }
+    }
+
+    /// Fraction of cache hits that were cross-session reuse, in [0, 1].
+    pub fn cross_session_hit_ratio(&self) -> f64 {
+        if self.cache_hits == 0 {
+            0.0
+        } else {
+            self.cache_cross_hits as f64 / self.cache_hits as f64
+        }
+    }
+
+    /// Simulated serving throughput, tokens/sec of virtual time.
+    pub fn throughput_tokens_per_s(&self) -> f64 {
+        if self.makespan_ns == 0.0 {
+            0.0
+        } else {
+            self.tokens() as f64 / (self.makespan_ns / 1e9)
+        }
+    }
+
+    /// Condense into the flat summary the harness reports serialize.
+    /// `layer_scale` lifts per-representative-layer latencies to the
+    /// full model, exactly like `ExperimentResult::latency_ms`;
+    /// `cache_hit_ratio` is the aggregate demanded-bundle hit ratio of
+    /// the run (computed by the caller from its `RunMetrics`).
+    pub fn summary(&mut self, layer_scale: f64, cache_hit_ratio: f64) -> ServeSummary {
+        let ms = |ns: f64| ns * layer_scale / 1e6;
+        let (p50, p95, p99) = (
+            self.all_latency_ns.percentile(50.0),
+            self.all_latency_ns.percentile(95.0),
+            self.all_latency_ns.percentile(99.0),
+        );
+        ServeSummary {
+            sessions: self.sessions.len(),
+            max_concurrent: self.max_concurrent,
+            peak_active: self.peak_active,
+            shared_cache: self.shared_cache,
+            tokens: self.tokens(),
+            p50_ms: ms(p50),
+            p95_ms: ms(p95),
+            p99_ms: ms(p99),
+            mean_ms: ms(self.all_latency_ns.mean()),
+            mean_queue_delay_ms: ms(self.mean_queue_delay_ns()),
+            fairness: self.fairness(),
+            cache_hit_ratio,
+            cross_session_hit_ratio: self.cross_session_hit_ratio(),
+            makespan_ms: ms(self.makespan_ns),
+        }
+    }
+}
+
+/// Flat, full-model-scaled serve summary carried by `ExperimentResult`
+/// and serialized into `BENCH_serve.json` (all simulated quantities —
+/// deterministic).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ServeSummary {
+    /// Number of sessions served.
+    pub sessions: usize,
+    /// Configured decode-slot count.
+    pub max_concurrent: usize,
+    /// Highest simultaneous session count observed.
+    pub peak_active: usize,
+    /// Shared (true) vs private per-session caches.
+    pub shared_cache: bool,
+    /// Total tokens decoded.
+    pub tokens: u64,
+    /// Full-model p50 token serve latency, ms.
+    pub p50_ms: f64,
+    /// Full-model p95 token serve latency, ms.
+    pub p95_ms: f64,
+    /// Full-model p99 token serve latency, ms.
+    pub p99_ms: f64,
+    /// Full-model mean token serve latency, ms.
+    pub mean_ms: f64,
+    /// Full-model mean admission queueing delay, ms.
+    pub mean_queue_delay_ms: f64,
+    /// Jain's fairness index over per-session mean latency.
+    pub fairness: f64,
+    /// Aggregate demanded-bundle cache hit ratio.
+    pub cache_hit_ratio: f64,
+    /// Fraction of hits that were cross-session reuse.
+    pub cross_session_hit_ratio: f64,
+    /// Full-model virtual makespan, ms.
+    pub makespan_ms: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok(ns: f64) -> TokenIo {
+        TokenIo {
+            demanded_bundles: 10,
+            read_bundles: 6,
+            cached_bundles: 4,
+            commands: 3,
+            bytes: 600,
+            elapsed_ns: ns,
+            stall_ns: ns,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn session_records_latency_and_totals() {
+        let mut s = SessionStats::new(0, 100.0);
+        s.record_token(&tok(1e6), 2e6);
+        s.record_token(&tok(1e6), 4e6);
+        assert_eq!(s.tokens, 2);
+        assert_eq!(s.totals.commands, 6);
+        assert!((s.mean_latency_ns() - 3e6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fairness_index_bounds() {
+        let mut m = ServeMetrics::default();
+        for id in 0..4 {
+            let mut s = SessionStats::new(id, 0.0);
+            s.record_token(&tok(1e6), 1e6); // equal latencies
+            m.sessions.push(s);
+        }
+        assert!((m.fairness() - 1.0).abs() < 1e-12);
+        // one session 9x slower drags fairness below 1
+        m.sessions[3].record_token(&tok(1e6), 17e6);
+        let f = m.fairness();
+        assert!(f < 1.0 && f > 0.25, "fairness={f}");
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let mut m = ServeMetrics::default();
+        assert_eq!(m.tokens(), 0);
+        assert_eq!(m.mean_queue_delay_ns(), 0.0);
+        assert_eq!(m.fairness(), 1.0);
+        assert_eq!(m.cross_session_hit_ratio(), 0.0);
+        assert_eq!(m.throughput_tokens_per_s(), 0.0);
+        let s = m.summary(2.0, 0.0);
+        assert_eq!(s.tokens, 0);
+        assert_eq!(s.p99_ms, 0.0);
+    }
+
+    #[test]
+    fn summary_scales_by_layer_scale() {
+        let mut m = ServeMetrics::default();
+        let mut s = SessionStats::new(0, 0.0);
+        s.record_token(&tok(1e6), 2e6);
+        m.all_latency_ns.add(2e6);
+        m.sessions.push(s);
+        m.makespan_ns = 2e6;
+        m.max_concurrent = 4;
+        m.cache_hits = 8;
+        m.cache_cross_hits = 2;
+        let sum = m.summary(3.0, 0.4);
+        assert!((sum.p50_ms - 6.0).abs() < 1e-9);
+        assert!((sum.makespan_ms - 6.0).abs() < 1e-9);
+        assert!((sum.cross_session_hit_ratio - 0.25).abs() < 1e-12);
+        assert!((sum.cache_hit_ratio - 0.4).abs() < 1e-12);
+        assert_eq!(sum.tokens, 1);
+    }
+}

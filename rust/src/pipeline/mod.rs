@@ -21,6 +21,18 @@
 //! admits the speculative runs into the DRAM cache, and reconciles
 //! hit/waste counters. With no prefetcher attached every code path is
 //! bit-identical to the historical synchronous pipeline.
+//!
+//! # Shared-state ownership (DESIGN.md §Serving)
+//!
+//! The pipeline owns only *per-stream* planner state (layouts, the
+//! adaptive collapse controller, speculation bookkeeping). The DRAM
+//! neuron cache and the flash timeline are **borrowed** per call —
+//! multi-session serving drives N pipelines through one shared
+//! [`NeuronCache`] and one shared [`UfsSim`], which is exactly the
+//! contention the paper's single-stream model cannot express. A
+//! single-tenant caller simply keeps one cache + sim next to its one
+//! pipeline; every code path is bit-identical to the historical
+//! cache-owning pipeline.
 
 use std::collections::BTreeMap;
 
@@ -111,7 +123,6 @@ pub struct IoPipeline {
     cfg: PipelineConfig,
     space: NeuronSpace,
     layouts: Vec<Layout>,
-    pub cache: NeuronCache,
     adaptive: AdaptiveCollapse,
     prefetcher: Option<Prefetcher>,
     /// Speculative batches in flight, keyed by target layer.
@@ -121,12 +132,7 @@ pub struct IoPipeline {
 }
 
 impl IoPipeline {
-    pub fn new(
-        cfg: PipelineConfig,
-        space: NeuronSpace,
-        layouts: Vec<Layout>,
-        cache: NeuronCache,
-    ) -> Self {
+    pub fn new(cfg: PipelineConfig, space: NeuronSpace, layouts: Vec<Layout>) -> Self {
         assert_eq!(layouts.len(), space.n_layers);
         for l in &layouts {
             assert_eq!(l.len(), space.per_layer);
@@ -138,7 +144,6 @@ impl IoPipeline {
             cfg,
             space,
             layouts,
-            cache,
             adaptive,
             prefetcher: None,
             outstanding: BTreeMap::new(),
@@ -185,13 +190,18 @@ impl IoPipeline {
         if self.cfg.collapse { self.adaptive.threshold() } else { 0 }
     }
 
-    /// Plan one layer: map to slots, filter through cache, peel off
-    /// slots covered by in-flight speculation, plan + collapse runs,
-    /// lower to byte commands.
-    pub fn plan_layer(&mut self, layer: usize, actives: &[BundleId]) -> LayerPlan {
+    /// Plan one layer: map to slots, filter through the (borrowed,
+    /// possibly shared) cache, peel off slots covered by in-flight
+    /// speculation, plan + collapse runs, lower to byte commands.
+    pub fn plan_layer(
+        &mut self,
+        cache: &mut NeuronCache,
+        layer: usize,
+        actives: &[BundleId],
+    ) -> LayerPlan {
         let layout = &self.layouts[layer];
         let slots = layout.slots_for(actives);
-        let (cached, missed_all) = self.cache.filter(layer, &slots);
+        let (cached, missed_all) = cache.filter(layer, &slots);
         let (prefetched, missed) = match self.outstanding.get(&layer) {
             Some(out) => missed_all.into_iter().partition(|&s| out.covers(s)),
             None => (Vec::new(), missed_all),
@@ -237,6 +247,7 @@ impl IoPipeline {
     /// layer's previous-token activations. No-op without a prefetcher.
     pub fn prefetch_layer(
         &mut self,
+        cache: &NeuronCache,
         sim: &mut UfsSim,
         next_layer: usize,
         cur_actives: &[BundleId],
@@ -266,7 +277,7 @@ impl IoPipeline {
             let mut slots: Vec<Slot> = predicted
                 .iter()
                 .map(|&b| layout.slot_of(b))
-                .filter(|&s| !self.cache.contains(target, s))
+                .filter(|&s| !cache.contains(target, s))
                 .collect();
             slots.sort_unstable();
             if slots.is_empty() {
@@ -282,13 +293,18 @@ impl IoPipeline {
     /// Wait + reconcile the speculative batch covering `plan.layer`, if
     /// any: charge the uncovered stall, admit the speculative runs into
     /// the cache, and account hit/waste volume.
-    fn reconcile_prefetch(&mut self, plan: &LayerPlan, sim: &mut UfsSim) -> TokenIo {
+    fn reconcile_prefetch(
+        &mut self,
+        cache: &mut NeuronCache,
+        plan: &LayerPlan,
+        sim: &mut UfsSim,
+    ) -> TokenIo {
         let mut io = TokenIo::default();
         let Some(out) = self.outstanding.remove(&plan.layer) else {
             return io;
         };
         let w = sim.wait(out.ticket);
-        self.cache.admit(plan.layer, &out.runs);
+        cache.admit(plan.layer, &out.runs);
         let (pf_total, pf_extra) = plan_volume(&out.runs);
         let hits = plan.prefetched.len() as u64;
         io.prefetch_hit_bundles = hits;
@@ -330,6 +346,7 @@ impl IoPipeline {
     /// feed the adaptive controller, and return the metrics contribution.
     pub fn complete_layer(
         &mut self,
+        cache: &mut NeuronCache,
         plan: &LayerPlan,
         ticket: Ticket,
         sim: &mut UfsSim,
@@ -338,19 +355,24 @@ impl IoPipeline {
         // The speculative batch sits ahead of the demand batch in the
         // serial device queue: reconcile it first so stalls attribute in
         // completion order.
-        let mut io = self.reconcile_prefetch(plan, sim);
+        let mut io = self.reconcile_prefetch(cache, plan, sim);
         let w = sim.wait(ticket);
-        io.add(&self.finish_commit(plan, w.batch.elapsed_ns, w.stall_ns, sat));
+        io.add(&self.finish_commit(cache, plan, w.batch.elapsed_ns, w.stall_ns, sat));
         io
     }
 
     /// Charge a plan to the flash sim synchronously, admit into cache,
     /// feed the adaptive controller, and return the metrics contribution.
-    pub fn commit_layer(&mut self, plan: &LayerPlan, sim: &mut UfsSim) -> TokenIo {
+    pub fn commit_layer(
+        &mut self,
+        cache: &mut NeuronCache,
+        plan: &LayerPlan,
+        sim: &mut UfsSim,
+    ) -> TokenIo {
         let sat = sim.device().sat_bandwidth;
-        let mut io = self.reconcile_prefetch(plan, sim);
+        let mut io = self.reconcile_prefetch(cache, plan, sim);
         let batch = sim.charge(&plan.commands);
-        io.add(&self.finish_commit(plan, batch.elapsed_ns, batch.elapsed_ns, sat));
+        io.add(&self.finish_commit(cache, plan, batch.elapsed_ns, batch.elapsed_ns, sat));
         io
     }
 
@@ -358,25 +380,27 @@ impl IoPipeline {
     /// image (engine path). Bytes are appended run-by-run in order.
     pub fn commit_layer_read(
         &mut self,
+        cache: &mut NeuronCache,
         plan: &LayerPlan,
         sim: &mut UfsSim,
         out: &mut Vec<u8>,
     ) -> TokenIo {
         let sat = sim.device().sat_bandwidth;
-        let mut io = self.reconcile_prefetch(plan, sim);
+        let mut io = self.reconcile_prefetch(cache, plan, sim);
         let batch = sim.read_batch(&plan.commands, out);
-        io.add(&self.finish_commit(plan, batch.elapsed_ns, batch.elapsed_ns, sat));
+        io.add(&self.finish_commit(cache, plan, batch.elapsed_ns, batch.elapsed_ns, sat));
         io
     }
 
     fn finish_commit(
         &mut self,
+        cache: &mut NeuronCache,
         plan: &LayerPlan,
         elapsed_ns: f64,
         stall_ns: f64,
         sat: f64,
     ) -> TokenIo {
-        self.cache.admit(plan.layer, &plan.runs);
+        cache.admit(plan.layer, &plan.runs);
         let (total_slots, extra_slots) = plan_volume(&plan.runs);
         let bytes = total_slots * self.cfg.bundle_bytes as u64;
         let demand_bytes = plan.missed.len() as u64 * self.cfg.bundle_bytes as u64;
@@ -399,12 +423,17 @@ impl IoPipeline {
 
     /// Trace-driven step: process all layers of one token against `sim`,
     /// fully synchronously (the historical model; bit-stable with seeds).
-    pub fn step_token(&mut self, sim: &mut UfsSim, actives: &[Vec<BundleId>]) -> TokenIo {
+    pub fn step_token(
+        &mut self,
+        cache: &mut NeuronCache,
+        sim: &mut UfsSim,
+        actives: &[Vec<BundleId>],
+    ) -> TokenIo {
         assert_eq!(actives.len(), self.space.n_layers);
         let mut tok = TokenIo::default();
         for (layer, act) in actives.iter().enumerate() {
-            let plan = self.plan_layer(layer, act);
-            tok.add(&self.commit_layer(&plan, sim));
+            let plan = self.plan_layer(cache, layer, act);
+            tok.add(&self.commit_layer(cache, &plan, sim));
         }
         tok
     }
@@ -419,6 +448,7 @@ impl IoPipeline {
     /// this is bit-identical to [`step_token`].
     pub fn step_token_overlapped(
         &mut self,
+        cache: &mut NeuronCache,
         sim: &mut UfsSim,
         actives: &[Vec<BundleId>],
         compute_ns_per_layer: f64,
@@ -426,12 +456,12 @@ impl IoPipeline {
         assert_eq!(actives.len(), self.space.n_layers);
         let mut tok = TokenIo::default();
         for (layer, act) in actives.iter().enumerate() {
-            let plan = self.plan_layer(layer, act);
+            let plan = self.plan_layer(cache, layer, act);
             let ticket = self.submit_layer(&plan, sim);
             if layer + 1 < self.space.n_layers {
-                self.prefetch_layer(sim, layer + 1, act);
+                self.prefetch_layer(cache, sim, layer + 1, act);
             }
-            tok.add(&self.complete_layer(&plan, ticket, sim));
+            tok.add(&self.complete_layer(cache, &plan, ticket, sim));
             if compute_ns_per_layer > 0.0 {
                 sim.advance_compute(compute_ns_per_layer);
             }
@@ -448,7 +478,7 @@ mod tests {
     use crate::prefetch::{PrefetchConfig, Prefetcher};
     use crate::trace::{DatasetProfile, TraceGen};
 
-    fn mk_pipeline(collapse: bool, cache_cap: usize) -> (IoPipeline, UfsSim) {
+    fn mk_pipeline(collapse: bool, cache_cap: usize) -> (IoPipeline, NeuronCache, UfsSim) {
         let space = NeuronSpace::new(2, 64, 128);
         let layouts = vec![Layout::identity(64), Layout::identity(64)];
         let cache = NeuronCache::new(
@@ -465,13 +495,13 @@ mod tests {
             sub_reads_per_run: 1,
         };
         let sim = UfsSim::new(devices()[0].clone(), space.image_bytes());
-        (IoPipeline::new(cfg, space, layouts, cache), sim)
+        (IoPipeline::new(cfg, space, layouts), cache, sim)
     }
 
     #[test]
     fn plan_covers_all_misses() {
-        let (mut p, _sim) = mk_pipeline(true, 0);
-        let plan = p.plan_layer(0, &[1, 2, 3, 10, 12]);
+        let (mut p, mut cache, _sim) = mk_pipeline(true, 0);
+        let plan = p.plan_layer(&mut cache, 0, &[1, 2, 3, 10, 12]);
         assert!(plan.cached.is_empty());
         assert!(plan.prefetched.is_empty());
         assert_eq!(plan.missed.len(), 5);
@@ -484,8 +514,8 @@ mod tests {
 
     #[test]
     fn commands_map_to_byte_extents() {
-        let (mut p, _sim) = mk_pipeline(false, 0);
-        let plan = p.plan_layer(1, &[0, 1]);
+        let (mut p, mut cache, _sim) = mk_pipeline(false, 0);
+        let plan = p.plan_layer(&mut cache, 1, &[0, 1]);
         assert_eq!(plan.commands.len(), 1);
         let c = plan.commands[0];
         assert_eq!(c.offset, p.space.layer_base(1));
@@ -494,9 +524,9 @@ mod tests {
 
     #[test]
     fn sub_reads_split_runs() {
-        let (mut p, _sim) = mk_pipeline(false, 0);
+        let (mut p, mut cache, _sim) = mk_pipeline(false, 0);
         p.cfg.sub_reads_per_run = 2;
-        let plan = p.plan_layer(0, &[0, 1, 2, 3]);
+        let plan = p.plan_layer(&mut cache, 0, &[0, 1, 2, 3]);
         assert_eq!(plan.commands.len(), 2);
         let total: usize = plan.commands.iter().map(|c| c.len).sum();
         assert_eq!(total, 4 * 128);
@@ -504,10 +534,10 @@ mod tests {
 
     #[test]
     fn cache_reduces_second_token_reads() {
-        let (mut p, mut sim) = mk_pipeline(false, 64);
-        let t1 = p.step_token(&mut sim, &[vec![1, 2, 3], vec![4, 5]]);
+        let (mut p, mut cache, mut sim) = mk_pipeline(false, 64);
+        let t1 = p.step_token(&mut cache, &mut sim, &[vec![1, 2, 3], vec![4, 5]]);
         assert_eq!(t1.cached_bundles, 0);
-        let t2 = p.step_token(&mut sim, &[vec![1, 2, 3], vec![4, 5]]);
+        let t2 = p.step_token(&mut cache, &mut sim, &[vec![1, 2, 3], vec![4, 5]]);
         assert_eq!(t2.cached_bundles, 5);
         assert_eq!(t2.commands, 0);
         assert_eq!(t2.elapsed_ns, 0.0);
@@ -515,29 +545,29 @@ mod tests {
 
     #[test]
     fn collapse_reduces_commands_and_reads_extra() {
-        let (mut p, mut sim) = mk_pipeline(true, 0);
+        let (mut p, mut cache, mut sim) = mk_pipeline(true, 0);
         // gaps of 1: 0,2,4,6 -> one command with threshold >=1
-        let t = p.step_token(&mut sim, &[vec![0, 2, 4, 6], vec![]]);
+        let t = p.step_token(&mut cache, &mut sim, &[vec![0, 2, 4, 6], vec![]]);
         assert_eq!(t.commands, 1);
         assert_eq!(t.extra_bundles, 3);
         assert_eq!(t.read_bundles, 7);
         assert_eq!(t.demanded_bundles, 4);
 
-        let (mut p2, mut sim2) = mk_pipeline(false, 0);
-        let t2 = p2.step_token(&mut sim2, &[vec![0, 2, 4, 6], vec![]]);
+        let (mut p2, mut cache2, mut sim2) = mk_pipeline(false, 0);
+        let t2 = p2.step_token(&mut cache2, &mut sim2, &[vec![0, 2, 4, 6], vec![]]);
         assert_eq!(t2.commands, 4);
         assert!(t.elapsed_ns < t2.elapsed_ns, "collapse should be faster");
     }
 
     #[test]
     fn read_path_returns_real_bytes() {
-        let (mut p, mut sim) = mk_pipeline(false, 0);
+        let (mut p, mut cache, mut sim) = mk_pipeline(false, 0);
         // write a recognizable pattern into slot 3 of layer 0
         let (off, len) = p.space.slot_range(0, 3);
         sim.write_image(off, &vec![0xAB; len]);
-        let plan = p.plan_layer(0, &[3]);
+        let plan = p.plan_layer(&mut cache, 0, &[3]);
         let mut out = Vec::new();
-        let t = p.commit_layer_read(&plan, &mut sim, &mut out);
+        let t = p.commit_layer_read(&mut cache, &plan, &mut sim, &mut out);
         assert_eq!(out, vec![0xAB; 128]);
         assert_eq!(t.commands, 1);
     }
@@ -548,7 +578,7 @@ mod tests {
         // bundle 0 lives at slot 7
         let order: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 0];
         let layouts = vec![Layout::from_order(&order).unwrap()];
-        let cache = NeuronCache::new(Box::new(S3Fifo::new(0)), Admission::All, 1);
+        let mut cache = NeuronCache::new(Box::new(S3Fifo::new(0)), Admission::All, 1);
         let cfg = PipelineConfig {
             bundle_bytes: 16,
             collapse: false,
@@ -557,8 +587,8 @@ mod tests {
             window: 4,
             sub_reads_per_run: 1,
         };
-        let mut p = IoPipeline::new(cfg, space, layouts, cache);
-        let plan = p.plan_layer(0, &[0]);
+        let mut p = IoPipeline::new(cfg, space, layouts);
+        let plan = p.plan_layer(&mut cache, 0, &[0]);
         assert_eq!(plan.runs[0].start, 7);
         assert_eq!(plan.commands[0].offset, 7 * 16);
     }
@@ -568,7 +598,7 @@ mod tests {
     fn mk_prefetching_pipeline(
         cache_cap: usize,
         budget_bytes: usize,
-    ) -> (IoPipeline, UfsSim, crate::trace::Trace) {
+    ) -> (IoPipeline, NeuronCache, UfsSim, crate::trace::Trace) {
         let n = 256;
         let space = NeuronSpace::new(2, n, 128);
         let layouts = vec![Layout::identity(n), Layout::identity(n)];
@@ -583,7 +613,7 @@ mod tests {
             sub_reads_per_run: 1,
         };
         let sim = UfsSim::new(devices()[0].clone(), space.image_bytes());
-        let mut p = IoPipeline::new(cfg, space, layouts, cache);
+        let mut p = IoPipeline::new(cfg, space, layouts);
         let mut tg = TraceGen::new(2, n, 28, &DatasetProfile::alpaca(), 3, 9);
         let calib = tg.generate(128);
         let pcfg = PrefetchConfig {
@@ -594,18 +624,18 @@ mod tests {
         };
         p.set_prefetcher(Some(Prefetcher::from_trace(&calib, pcfg, 2)));
         let eval = tg.generate(40);
-        (p, sim, eval)
+        (p, cache, sim, eval)
     }
 
     #[test]
     fn overlapped_disabled_is_bit_identical_to_sync() {
         let mut tg = TraceGen::new(2, 64, 10, &DatasetProfile::wikitext(), 5, 6);
         let eval = tg.generate(25);
-        let (mut a, mut sim_a) = mk_pipeline(true, 32);
-        let (mut b, mut sim_b) = mk_pipeline(true, 32);
+        let (mut a, mut cache_a, mut sim_a) = mk_pipeline(true, 32);
+        let (mut b, mut cache_b, mut sim_b) = mk_pipeline(true, 32);
         for tok in &eval.tokens {
-            a.step_token(&mut sim_a, tok);
-            b.step_token_overlapped(&mut sim_b, tok, 0.0);
+            a.step_token(&mut cache_a, &mut sim_a, tok);
+            b.step_token_overlapped(&mut cache_b, &mut sim_b, tok, 0.0);
         }
         let (sa, sb) = (sim_a.stats(), sim_b.stats());
         assert_eq!(sim_a.clock_ns().to_bits(), sim_b.clock_ns().to_bits());
@@ -617,11 +647,11 @@ mod tests {
 
     #[test]
     fn prefetch_produces_hits_and_overlap() {
-        let (mut p, mut sim, eval) = mk_prefetching_pipeline(0, 16 * 128);
+        let (mut p, mut cache, mut sim, eval) = mk_prefetching_pipeline(0, 16 * 128);
         let compute = 200_000.0; // generous per-layer compute window
         let mut tok = TokenIo::default();
         for t in &eval.tokens {
-            tok.add(&p.step_token_overlapped(&mut sim, t, compute));
+            tok.add(&p.step_token_overlapped(&mut cache, &mut sim, t, compute));
         }
         assert!(tok.prefetch_hit_bundles > 0, "no speculative hits");
         let s = sim.stats();
@@ -636,16 +666,19 @@ mod tests {
     fn prefetch_hits_shrink_demand_commands() {
         // same stream with and without prefetch: speculation must strictly
         // reduce the host-visible stall time given ample compute overlap
-        let (mut with, mut sim_with, eval) = mk_prefetching_pipeline(0, 32 * 128);
-        let (mut without, mut sim_without, _) = mk_prefetching_pipeline(0, 32 * 128);
+        let (mut with, mut cache_w, mut sim_with, eval) = mk_prefetching_pipeline(0, 32 * 128);
+        let (mut without, mut cache_n, mut sim_without, _) = mk_prefetching_pipeline(0, 32 * 128);
         without.set_prefetcher(None);
         let compute = 400_000.0;
         let mut stall_with = 0.0;
         let mut stall_without = 0.0;
         for t in &eval.tokens {
-            stall_with += with.step_token_overlapped(&mut sim_with, t, compute).stall_ns;
-            stall_without +=
-                without.step_token_overlapped(&mut sim_without, t, compute).stall_ns;
+            stall_with += with
+                .step_token_overlapped(&mut cache_w, &mut sim_with, t, compute)
+                .stall_ns;
+            stall_without += without
+                .step_token_overlapped(&mut cache_n, &mut sim_without, t, compute)
+                .stall_ns;
         }
         assert!(
             stall_with < stall_without,
@@ -655,11 +688,11 @@ mod tests {
 
     #[test]
     fn overlapped_run_is_deterministic() {
-        let (mut a, mut sim_a, eval) = mk_prefetching_pipeline(64, 24 * 128);
-        let (mut b, mut sim_b, _) = mk_prefetching_pipeline(64, 24 * 128);
+        let (mut a, mut cache_a, mut sim_a, eval) = mk_prefetching_pipeline(64, 24 * 128);
+        let (mut b, mut cache_b, mut sim_b, _) = mk_prefetching_pipeline(64, 24 * 128);
         for t in &eval.tokens {
-            a.step_token_overlapped(&mut sim_a, t, 150_000.0);
-            b.step_token_overlapped(&mut sim_b, t, 150_000.0);
+            a.step_token_overlapped(&mut cache_a, &mut sim_a, t, 150_000.0);
+            b.step_token_overlapped(&mut cache_b, &mut sim_b, t, 150_000.0);
         }
         let (sa, sb) = (sim_a.stats(), sim_b.stats());
         assert_eq!(sim_a.clock_ns().to_bits(), sim_b.clock_ns().to_bits());
@@ -672,19 +705,19 @@ mod tests {
 
     #[test]
     fn prefetched_slots_excluded_from_demand_batch() {
-        let (mut p, mut sim, _eval) = mk_prefetching_pipeline(0, 64 * 128);
+        let (mut p, mut cache, mut sim, _eval) = mk_prefetching_pipeline(0, 64 * 128);
         // seed the predictor path: run one token so last_actives exist
         let tok0 = vec![vec![1, 2, 3], vec![10, 11, 12]];
-        p.step_token_overlapped(&mut sim, &tok0, 50_000.0);
+        p.step_token_overlapped(&mut cache, &mut sim, &tok0, 50_000.0);
         // now speculate for layer 1 from layer 0's actives
-        let plan0 = p.plan_layer(0, &[1, 2, 3]);
+        let plan0 = p.plan_layer(&mut cache, 0, &[1, 2, 3]);
         let t0 = p.submit_layer(&plan0, &mut sim);
-        p.prefetch_layer(&mut sim, 1, &[1, 2, 3]);
+        p.prefetch_layer(&cache, &mut sim, 1, &[1, 2, 3]);
         assert_eq!(p.outstanding_prefetches(), 1);
-        p.complete_layer(&plan0, t0, &mut sim);
+        p.complete_layer(&mut cache, &plan0, t0, &mut sim);
         // layer 1 demand: the previous token's slots 10..12 are highly
         // ranked seeds, so they must be covered by the speculation
-        let plan1 = p.plan_layer(1, &[10, 11, 12]);
+        let plan1 = p.plan_layer(&mut cache, 1, &[10, 11, 12]);
         assert!(
             !plan1.prefetched.is_empty(),
             "expected speculative coverage, got missed={:?}",
@@ -694,7 +727,7 @@ mod tests {
             assert!(!plan1.missed.contains(s));
         }
         let t1 = p.submit_layer(&plan1, &mut sim);
-        let io = p.complete_layer(&plan1, t1, &mut sim);
+        let io = p.complete_layer(&mut cache, &plan1, t1, &mut sim);
         assert_eq!(io.prefetch_hit_bundles, plan1.prefetched.len() as u64);
         assert_eq!(p.outstanding_prefetches(), 0);
     }

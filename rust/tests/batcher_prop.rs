@@ -1,0 +1,210 @@
+//! Property battery for `coordinator::Batcher` (util::prop harness):
+//! the dispatch policies the serving paths rely on —
+//!
+//! * FIFO order is preserved across any mix of `pop_ready` /
+//!   `pop_upto` dispatches,
+//! * a request polled at its deadline is never dispatched later than
+//!   `max_wait` past its enqueue,
+//! * `pop_ready` never yields an empty batch and never exceeds
+//!   `max_batch`,
+//! * `next_deadline_in` is monotone non-increasing as time advances.
+
+use std::time::{Duration, Instant};
+
+use ripple::coordinator::{Batcher, BatcherConfig};
+use ripple::util::prop;
+use ripple::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+enum Op {
+    Push,
+    AdvanceMs(u64),
+    Pop,
+    PopUpto(usize),
+}
+
+#[derive(Clone, Debug)]
+struct Scenario {
+    max_batch: usize,
+    max_wait_ms: u64,
+    ops: Vec<Op>,
+}
+
+fn gen_scenario(rng: &mut Rng, size: usize) -> Scenario {
+    let max_batch = rng.range(1, 9);
+    let max_wait_ms = rng.below(50) as u64;
+    let n = size.max(2) * 2;
+    let ops = (0..n)
+        .map(|_| match rng.below(5) {
+            0 | 1 => Op::Push,
+            2 => Op::AdvanceMs(rng.below(30) as u64),
+            3 => Op::Pop,
+            _ => Op::PopUpto(rng.below(6)),
+        })
+        .collect();
+    Scenario { max_batch, max_wait_ms, ops }
+}
+
+/// Replaying any op mix, the concatenation of every dispatched batch
+/// (plus the final drain) is exactly the push sequence — FIFO with no
+/// loss, duplication, or reordering — and every `pop_ready` batch is
+/// non-empty and within `max_batch`.
+#[test]
+fn prop_dispatch_preserves_fifo_order() {
+    prop::run(
+        "batcher-fifo",
+        prop::Config { cases: 80, max_size: 40, ..Default::default() },
+        gen_scenario,
+        |sc| {
+            let t0 = Instant::now();
+            let mut b: Batcher<u32> = Batcher::new(BatcherConfig {
+                max_batch: sc.max_batch,
+                max_wait: Duration::from_millis(sc.max_wait_ms),
+            });
+            let mut now = t0;
+            let mut pushed = 0u32;
+            let mut dispatched: Vec<u32> = Vec::new();
+            for op in &sc.ops {
+                match op {
+                    Op::Push => {
+                        b.push(pushed, now);
+                        pushed += 1;
+                    }
+                    Op::AdvanceMs(ms) => now += Duration::from_millis(*ms),
+                    Op::Pop => {
+                        if let Some(batch) = b.pop_ready(now) {
+                            if batch.is_empty() {
+                                return Err("pop_ready yielded an empty batch".into());
+                            }
+                            if batch.len() > sc.max_batch {
+                                return Err(format!(
+                                    "batch of {} exceeds max_batch {}",
+                                    batch.len(),
+                                    sc.max_batch
+                                ));
+                            }
+                            dispatched.extend(batch);
+                        }
+                    }
+                    Op::PopUpto(n) => {
+                        let batch = b.pop_upto(*n);
+                        if batch.len() > *n {
+                            return Err("pop_upto over-delivered".into());
+                        }
+                        dispatched.extend(batch);
+                    }
+                }
+            }
+            dispatched.extend(b.drain_all());
+            let want: Vec<u32> = (0..pushed).collect();
+            if dispatched != want {
+                return Err(format!("order broken: {dispatched:?} != 0..{pushed}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Poll the batcher at each request's own deadline (enqueue +
+/// max_wait): the request must already be dispatched by then — no
+/// request waits beyond `max_wait` when the worker honors the deadline
+/// hint.
+#[test]
+fn prop_no_request_outlives_its_deadline_when_polled() {
+    prop::run(
+        "batcher-deadline",
+        prop::Config { cases: 80, max_size: 32, ..Default::default() },
+        |rng, size| {
+            let max_batch = rng.range(1, 6);
+            let max_wait_ms = 1 + rng.below(40) as u64;
+            let gaps: Vec<u64> =
+                (0..size.max(1)).map(|_| rng.below(25) as u64).collect();
+            (max_batch, max_wait_ms, gaps)
+        },
+        |(max_batch, max_wait_ms, gaps)| {
+            let t0 = Instant::now();
+            let max_wait = Duration::from_millis(*max_wait_ms);
+            let mut b: Batcher<usize> =
+                Batcher::new(BatcherConfig { max_batch: *max_batch, max_wait });
+            // enqueue everything at its arrival time
+            let mut t = t0;
+            let mut enqueue_at = Vec::with_capacity(gaps.len());
+            for (i, gap) in gaps.iter().enumerate() {
+                t += Duration::from_millis(*gap);
+                enqueue_at.push(t);
+                b.push(i, t);
+            }
+            // poll at each request's deadline, in deadline order
+            let mut out = vec![false; gaps.len()];
+            for (i, &enq) in enqueue_at.iter().enumerate() {
+                let deadline = enq + max_wait;
+                while let Some(batch) = b.pop_ready(deadline) {
+                    for x in batch {
+                        out[x] = true;
+                    }
+                }
+                if !out[i] {
+                    return Err(format!(
+                        "request {i} still queued at its deadline (+{max_wait_ms}ms)"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// With a fixed queue, `next_deadline_in` shrinks (never grows) as the
+/// polling time advances, and hits zero at/after the deadline.
+#[test]
+fn prop_next_deadline_monotone_as_time_advances() {
+    prop::run(
+        "batcher-deadline-monotone",
+        prop::Config { cases: 60, max_size: 24, ..Default::default() },
+        |rng, size| {
+            let max_wait_ms = rng.below(50) as u64;
+            let n_push = rng.range(1, size.max(2));
+            let probes: Vec<u64> = (0..8).map(|_| rng.below(30) as u64).collect();
+            (max_wait_ms, n_push, probes)
+        },
+        |(max_wait_ms, n_push, probes)| {
+            let t0 = Instant::now();
+            let mut b: Batcher<usize> = Batcher::new(BatcherConfig {
+                max_batch: usize::MAX >> 1,
+                max_wait: Duration::from_millis(*max_wait_ms),
+            });
+            for i in 0..*n_push {
+                b.push(i, t0 + Duration::from_millis(i as u64));
+            }
+            let mut now = t0;
+            let mut prev = b.next_deadline_in(now).expect("non-empty queue");
+            for gap in probes {
+                now += Duration::from_millis(*gap);
+                let d = b.next_deadline_in(now).expect("queue untouched");
+                if d > prev {
+                    return Err(format!("deadline grew: {d:?} > {prev:?}"));
+                }
+                prev = d;
+            }
+            // far past the deadline the wait is zero and the front is due
+            let late = now + Duration::from_millis(max_wait_ms + 1000);
+            if b.next_deadline_in(late) != Some(Duration::ZERO) {
+                return Err("deadline did not saturate at zero".into());
+            }
+            if b.pop_ready(late).is_none() {
+                return Err("front not dispatchable after its deadline".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// An empty batcher never reports a deadline and never dispatches.
+#[test]
+fn empty_batcher_has_no_deadline_and_no_batches() {
+    let now = Instant::now();
+    let mut b: Batcher<u8> = Batcher::new(BatcherConfig::default());
+    assert!(b.next_deadline_in(now).is_none());
+    assert!(b.pop_ready(now + Duration::from_secs(60)).is_none());
+    assert!(b.pop_upto(4).is_empty());
+}

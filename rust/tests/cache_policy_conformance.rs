@@ -172,6 +172,154 @@ fn reinsert_of_resident_key_does_not_grow() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Shared-cache concurrency battery (DESIGN.md §Serving): a policy shared
+// by N sessions must behave as a pure function of the merged op order —
+// no hidden per-caller state — and `contains` probes from other sessions
+// must never perturb it.
+// ---------------------------------------------------------------------------
+
+type SessionOp = (bool, u64); // (is_insert, key)
+
+/// Deterministic per-session op streams over a shared hot keyspace.
+fn gen_session_streams(rng: &mut Rng, n_sessions: usize) -> Vec<Vec<SessionOp>> {
+    (0..n_sessions)
+        .map(|_| {
+            let len = rng.range(20, 120);
+            (0..len).map(|_| (rng.chance(0.5), rng.below(40) as u64)).collect()
+        })
+        .collect()
+}
+
+/// Round-robin merge of the session streams — the canonical
+/// "equivalent single-stream trace" of that interleaving.
+fn round_robin_merge(streams: &[Vec<SessionOp>]) -> Vec<SessionOp> {
+    let mut merged = Vec::new();
+    let mut cursors = vec![0usize; streams.len()];
+    loop {
+        let mut progressed = false;
+        for (s, stream) in streams.iter().enumerate() {
+            if cursors[s] < stream.len() {
+                merged.push(stream[cursors[s]]);
+                cursors[s] += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            return merged;
+        }
+    }
+}
+
+/// Driving a policy through interleaved multi-session streams gives the
+/// same hit/miss outcomes AND the same end state as replaying the
+/// merged trace single-stream: the policy keys carry all the state,
+/// sessions add none.
+#[test]
+fn interleaved_session_streams_match_merged_single_stream() {
+    for_each_policy(|name, ctor| {
+        for seed in 0..6u64 {
+            let mut rng = Rng::new(0x5E55_10 ^ seed);
+            let cap = rng.range(2, 24);
+            let n_sessions = rng.range(2, 5);
+            let streams = gen_session_streams(&mut rng, n_sessions);
+            let merged = round_robin_merge(&streams);
+
+            // driver A: the multi-session scheduler (per-stream cursors)
+            let mut a = ctor(cap);
+            let mut outcomes_a = Vec::new();
+            let mut cursors = vec![0usize; n_sessions];
+            loop {
+                let mut progressed = false;
+                for (s, stream) in streams.iter().enumerate() {
+                    if cursors[s] < stream.len() {
+                        let (is_insert, key) = stream[cursors[s]];
+                        cursors[s] += 1;
+                        if is_insert {
+                            a.insert(key);
+                        } else {
+                            outcomes_a.push((key, a.touch(key)));
+                        }
+                        progressed = true;
+                    }
+                }
+                if !progressed {
+                    break;
+                }
+            }
+
+            // driver B: the merged trace, single stream
+            let mut b = ctor(cap);
+            let mut outcomes_b = Vec::new();
+            for &(is_insert, key) in &merged {
+                if is_insert {
+                    b.insert(key);
+                } else {
+                    outcomes_b.push((key, b.touch(key)));
+                }
+            }
+
+            assert_eq!(outcomes_a, outcomes_b, "{name}: outcomes diverged (seed {seed})");
+            assert_eq!(a.len(), b.len(), "{name}: end sizes diverged (seed {seed})");
+            for key in 0..40u64 {
+                assert_eq!(
+                    a.contains(key),
+                    b.contains(key),
+                    "{name}: end membership diverged at {key} (seed {seed})"
+                );
+            }
+        }
+    });
+}
+
+/// `contains` stays side-effect-free under interleaving: peppering the
+/// stream with residency probes (another session peeking, as the
+/// shared-cache prefetch filter does) changes neither the hit/miss
+/// outcome sequence nor the final membership.
+#[test]
+fn contains_probes_never_perturb_an_interleaved_stream() {
+    for_each_policy(|name, ctor| {
+        for seed in 0..6u64 {
+            let mut rng = Rng::new(0xD00D ^ seed);
+            let cap = rng.range(2, 16);
+            let ops: Vec<SessionOp> =
+                (0..300).map(|_| (rng.chance(0.5), rng.below(32) as u64)).collect();
+            let probes: Vec<u64> =
+                (0..ops.len() * 3).map(|_| rng.below(32) as u64).collect();
+
+            let mut clean = ctor(cap);
+            let mut probed = ctor(cap);
+            let mut outcomes_clean = Vec::new();
+            let mut outcomes_probed = Vec::new();
+            for (i, &(is_insert, key)) in ops.iter().enumerate() {
+                // three foreign probes before every op on the probed copy
+                for p in 0..3 {
+                    let _ = probed.contains(probes[i * 3 + p]);
+                }
+                if is_insert {
+                    clean.insert(key);
+                    probed.insert(key);
+                } else {
+                    outcomes_clean.push(clean.touch(key));
+                    outcomes_probed.push(probed.touch(key));
+                }
+            }
+            assert_eq!(
+                outcomes_clean, outcomes_probed,
+                "{name}: contains() perturbed outcomes (seed {seed})"
+            );
+            assert_eq!(clean.len(), probed.len(), "{name} (seed {seed})");
+            for key in 0..32u64 {
+                assert_eq!(
+                    clean.contains(key),
+                    probed.contains(key),
+                    "{name}: membership diverged at {key} (seed {seed})"
+                );
+            }
+        }
+    });
+}
+
 #[test]
 fn zero_capacity_never_stores() {
     let null_ctor: Ctor = |_| Box::new(NullCache);

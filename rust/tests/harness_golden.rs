@@ -9,7 +9,9 @@
 //! * a report round-trips through `Baseline` with zero deltas.
 
 use ripple::bench::workloads::{bench_workload, run_experiment, System};
-use ripple::harness::{preset, run_matrix, run_scenario, Baseline, PrefetchPoint, ScenarioSpec};
+use ripple::harness::{
+    preset, run_matrix, run_scenario, Baseline, PrefetchPoint, ScenarioSpec, ServePoint,
+};
 use ripple::trace::DatasetProfile;
 
 #[test]
@@ -25,7 +27,7 @@ fn fig10_json_byte_identical_across_thread_counts() {
     assert_eq!(ja, jb, "sweep JSON must be byte-identical across thread counts");
     // schema sanity: stable top-level fields and per-scenario metrics
     assert!(ja.starts_with('{'));
-    assert!(ja.contains("\"schema_version\":1"));
+    assert!(ja.contains("\"schema_version\":2"));
     assert!(ja.contains("\"name\":\"fig10\""));
     assert!(ja.contains("\"e2e_ms_per_token\""));
     assert!(ja.contains("\"overlap_ratio\""));
@@ -72,6 +74,69 @@ fn scenario_reproduces_fig18_bench_metrics() {
     );
     assert_eq!(via.e2e_ms().to_bits(), direct.e2e_ms().to_bits());
     assert!(via.overlap_ratio() > 0.0, "fig18 point should overlap");
+}
+
+#[test]
+fn serve_json_byte_identical_across_thread_counts() {
+    // the serve axes (sessions x shared-vs-private), shrunk to test scale
+    let mut m = preset("serve").unwrap();
+    m.serve = vec![
+        Some(ServePoint::shared(1)),
+        Some(ServePoint::shared(3)),
+        Some(ServePoint::private(3)),
+    ];
+    m.scale_down(48, 12, 2, 8);
+    let a = run_matrix(&m, 1).unwrap();
+    let b = run_matrix(&m, 8).unwrap();
+    let (ja, jb) = (a.json_string(), b.json_string());
+    assert_eq!(ja, jb, "serve JSON must be byte-identical across thread counts");
+    assert!(ja.contains("\"name\":\"serve\""));
+    assert!(ja.contains("\"serve_metrics\":{"));
+    assert!(ja.contains("\"p99_ms\""));
+    assert!(ja.contains("\"cross_session_hit_ratio\""));
+    assert_eq!(a.results.len(), 3);
+    // the markdown carries the serving section and the shared-vs-private
+    // delta table for the paired 3-session points
+    let md = a.to_markdown(None);
+    assert!(md.contains("## Serving (multi-session)"), "{md}");
+    assert!(md.contains("### Shared vs private cache"), "{md}");
+}
+
+#[test]
+fn serve_single_session_reproduces_single_stream_metrics_bit_for_bit() {
+    // the fig10 ripple/alpaca point, shrunk identically on both sides
+    let mut plain = ScenarioSpec::new("plain", "OPT-350M", System::Ripple);
+    plain.calib_tokens = 64;
+    plain.eval_tokens = 16;
+    plain.sim_layers = 2;
+    plain.knn = 8;
+    let direct = run_scenario(&plain, 2).unwrap();
+    assert!(direct.serve.is_none());
+
+    let mut via = plain.clone();
+    via.name = "serve-anchor".to_string();
+    via.serve = Some(ServePoint::shared(1));
+    let served = run_scenario(&via, 2).unwrap();
+
+    let (a, b) = (&direct.metrics, &served.metrics);
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.totals.commands, b.totals.commands);
+    assert_eq!(a.totals.bytes, b.totals.bytes);
+    assert_eq!(a.totals.demanded_bundles, b.totals.demanded_bundles);
+    assert_eq!(a.totals.cached_bundles, b.totals.cached_bundles);
+    assert_eq!(a.totals.read_bundles, b.totals.read_bundles);
+    assert_eq!(a.totals.extra_bundles, b.totals.extra_bundles);
+    assert_eq!(a.totals.elapsed_ns.to_bits(), b.totals.elapsed_ns.to_bits());
+    assert_eq!(a.totals.stall_ns.to_bits(), b.totals.stall_ns.to_bits());
+    assert_eq!(a.compute_ns.to_bits(), b.compute_ns.to_bits());
+    assert_eq!(direct.e2e_ms().to_bits(), served.e2e_ms().to_bits());
+    assert_eq!(direct.latency_ms().to_bits(), served.latency_ms().to_bits());
+    // and the serve summary is coherent with the single stream
+    let sv = served.serve.expect("serve summary");
+    assert_eq!(sv.sessions, 1);
+    assert_eq!(sv.tokens, 16);
+    assert_eq!(sv.cross_session_hit_ratio, 0.0, "one session cannot cross-hit");
+    assert_eq!(sv.mean_queue_delay_ms, 0.0, "an idle server admits instantly");
 }
 
 #[test]

@@ -86,14 +86,14 @@ fn prefetch_disabled_reproduces_sync_timeline_bit_identically() {
             sub_reads_per_run: 1,
         };
         let sim = UfsSim::new(w.device.clone(), space.image_bytes());
-        (IoPipeline::new(cfg, space, layouts, cache), sim)
+        (IoPipeline::new(cfg, space, layouts), cache, sim)
     };
 
-    let (mut p_sync, mut sim_sync) = mk(layouts.clone());
-    let (mut p_over, mut sim_over) = mk(layouts);
+    let (mut p_sync, mut cache_sync, mut sim_sync) = mk(layouts.clone());
+    let (mut p_over, mut cache_over, mut sim_over) = mk(layouts);
     for tok in &eval.tokens {
-        p_sync.step_token(&mut sim_sync, tok);
-        p_over.step_token_overlapped(&mut sim_over, tok, 0.0);
+        p_sync.step_token(&mut cache_sync, &mut sim_sync, tok);
+        p_over.step_token_overlapped(&mut cache_over, &mut sim_over, tok, 0.0);
     }
     let (a, b) = (sim_sync.stats(), sim_over.stats());
     assert_eq!(sim_sync.clock_ns().to_bits(), sim_over.clock_ns().to_bits());

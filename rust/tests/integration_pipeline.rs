@@ -17,7 +17,7 @@ fn mk_pipeline(
     space: NeuronSpace,
     collapse: bool,
     cache_cap: usize,
-) -> (IoPipeline, UfsSim) {
+) -> (IoPipeline, NeuronCache, UfsSim) {
     let cache = NeuronCache::from_config("s3fifo", cache_cap, 3).unwrap();
     let cfg = PipelineConfig {
         bundle_bytes: space.bundle_bytes,
@@ -28,7 +28,7 @@ fn mk_pipeline(
         sub_reads_per_run: 1,
     };
     let sim = UfsSim::new(devices()[0].clone(), space.image_bytes());
-    (IoPipeline::new(cfg, space, layouts, cache), sim)
+    (IoPipeline::new(cfg, space, layouts), cache, sim)
 }
 
 /// With no cache and no collapse, per-token command count must equal the
@@ -42,12 +42,12 @@ fn pipeline_commands_match_bruteforce_runs() {
         .map(|l| search(&CoactStats::from_trace_layer(&calib, l), GreedyParams::default()).layout)
         .collect();
     let space = NeuronSpace::new(2, n, 128);
-    let (mut pipeline, mut sim) = mk_pipeline(layouts.clone(), space, false, 0);
+    let (mut pipeline, mut cache, mut sim) = mk_pipeline(layouts.clone(), space, false, 0);
 
     let eval = tg.generate(30);
     for tok in &eval.tokens {
         let before = sim.stats().total_commands;
-        let t = pipeline.step_token(&mut sim, tok);
+        let t = pipeline.step_token(&mut cache, &mut sim, tok);
         let after = sim.stats().total_commands;
         let expect: usize = tok
             .iter()
@@ -70,12 +70,12 @@ fn collapse_is_never_worse() {
     let space = NeuronSpace::new(1, n, 2048);
 
     let eval = tg.generate(50);
-    let (mut p_off, mut sim_off) =
+    let (mut p_off, mut cache_off, mut sim_off) =
         mk_pipeline(vec![layout.clone()], space.clone(), false, 0);
-    let (mut p_on, mut sim_on) = mk_pipeline(vec![layout], space, true, 0);
+    let (mut p_on, mut cache_on, mut sim_on) = mk_pipeline(vec![layout], space, true, 0);
     for tok in &eval.tokens {
-        p_off.step_token(&mut sim_off, tok);
-        p_on.step_token(&mut sim_on, tok);
+        p_off.step_token(&mut cache_off, &mut sim_off, tok);
+        p_on.step_token(&mut cache_on, &mut sim_on, tok);
     }
     assert!(sim_on.stats().total_commands <= sim_off.stats().total_commands);
     assert!(sim_on.clock_ns() <= sim_off.clock_ns() * 1.02);
@@ -100,11 +100,11 @@ fn system_ordering_holds() {
 fn cache_integration_reduces_traffic() {
     let n = 128;
     let space = NeuronSpace::new(1, n, 256);
-    let (mut pipeline, mut sim) =
+    let (mut pipeline, mut cache, mut sim) =
         mk_pipeline(vec![Layout::identity(n)], space, false, 64);
     let tok = vec![vec![1u32, 2, 3, 50, 51, 90]];
-    let t1 = pipeline.step_token(&mut sim, &tok);
-    let t2 = pipeline.step_token(&mut sim, &tok);
+    let t1 = pipeline.step_token(&mut cache, &mut sim, &tok);
+    let t2 = pipeline.step_token(&mut cache, &mut sim, &tok);
     assert!(t2.read_bundles < t1.read_bundles);
     assert_eq!(t2.cached_bundles + t2.read_bundles - t2.extra_bundles, 6);
 }

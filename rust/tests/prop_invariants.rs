@@ -133,7 +133,10 @@ fn prop_collapsed_command_count_monotone() {
 // Determinism of the overlapped timeline
 // ---------------------------------------------------------------------------
 
-fn overlapped_pipeline(seed: u64, n: usize) -> (IoPipeline, UfsSim, ripple::trace::Trace) {
+fn overlapped_pipeline(
+    seed: u64,
+    n: usize,
+) -> (IoPipeline, NeuronCache, UfsSim, ripple::trace::Trace) {
     use ripple::trace::{DatasetProfile, TraceGen};
     let space = NeuronSpace::new(2, n, 256);
     let layouts = vec![Layout::identity(n), Layout::identity(n)];
@@ -151,7 +154,7 @@ fn overlapped_pipeline(seed: u64, n: usize) -> (IoPipeline, UfsSim, ripple::trac
         sub_reads_per_run: 1,
     };
     let sim = UfsSim::new(ripple::config::devices()[0].clone(), space.image_bytes());
-    let mut p = IoPipeline::new(cfg, space, layouts, cache);
+    let mut p = IoPipeline::new(cfg, space, layouts);
     let mut tg = TraceGen::new(2, n, n / 12, &DatasetProfile::openwebtext(), seed, seed ^ 7);
     let calib = tg.generate(128);
     let pcfg = PrefetchConfig {
@@ -162,7 +165,7 @@ fn overlapped_pipeline(seed: u64, n: usize) -> (IoPipeline, UfsSim, ripple::trac
     };
     p.set_prefetcher(Some(Prefetcher::from_trace(&calib, pcfg, 2)));
     let eval = tg.generate(30);
-    (p, sim, eval)
+    (p, cache, sim, eval)
 }
 
 /// Two overlapped pipeline runs with the same seed must produce
@@ -170,11 +173,11 @@ fn overlapped_pipeline(seed: u64, n: usize) -> (IoPipeline, UfsSim, ripple::trac
 #[test]
 fn prop_overlapped_timeline_is_byte_identical() {
     for seed in [3u64, 11, 42] {
-        let (mut pa, mut sim_a, eval) = overlapped_pipeline(seed, 384);
-        let (mut pb, mut sim_b, _) = overlapped_pipeline(seed, 384);
+        let (mut pa, mut cache_a, mut sim_a, eval) = overlapped_pipeline(seed, 384);
+        let (mut pb, mut cache_b, mut sim_b, _) = overlapped_pipeline(seed, 384);
         for tok in &eval.tokens {
-            pa.step_token_overlapped(&mut sim_a, tok, 120_000.0);
-            pb.step_token_overlapped(&mut sim_b, tok, 120_000.0);
+            pa.step_token_overlapped(&mut cache_a, &mut sim_a, tok, 120_000.0);
+            pb.step_token_overlapped(&mut cache_b, &mut sim_b, tok, 120_000.0);
         }
         let (a, b) = (sim_a.stats(), sim_b.stats());
         assert_eq!(a.total_commands, b.total_commands, "seed {seed}");
