@@ -30,6 +30,7 @@ fn main() {
     let mut cache = ripple::cache::NeuronCache::from_config(
         "linking",
         (space.total() as f64 * 0.1) as usize,
+        ripple::cache::KeySpace::of(&space),
         7,
     )
     .unwrap();

@@ -9,7 +9,7 @@
 //! Run: cargo run --release --example mobile_assistant
 
 use ripple::bench::workloads::{bench_workload, layouts_for, System, Workload};
-use ripple::cache::NeuronCache;
+use ripple::cache::{KeySpace, NeuronCache};
 use ripple::flash::UfsSim;
 use ripple::metrics::RunMetrics;
 use ripple::neuron::NeuronSpace;
@@ -29,6 +29,7 @@ fn run_session(w: &Workload, system: System) -> Vec<f64> {
     let mut cache = NeuronCache::from_config(
         cache_policy,
         (space.total() as f64 * w.cache_ratio) as usize,
+        KeySpace::of(&space),
         w.seed,
     )
     .unwrap();

@@ -27,13 +27,15 @@ impl SlotRun {
     }
 }
 
-/// Group sorted, deduplicated slots into maximal contiguous runs.
-pub fn plan_runs(sorted_slots: &[Slot]) -> Vec<SlotRun> {
+/// Group sorted, deduplicated slots into maximal contiguous runs,
+/// reusing the caller's buffer (§Perf: the per-token hot path clears
+/// and refills one scratch vector instead of allocating).
+pub fn plan_runs_into(sorted_slots: &[Slot], out: &mut Vec<SlotRun>) {
     debug_assert!(sorted_slots.windows(2).all(|w| w[0] < w[1]), "slots must be sorted+unique");
-    let mut runs = Vec::new();
+    out.clear();
     let mut it = sorted_slots.iter().copied();
     let Some(first) = it.next() else {
-        return runs;
+        return;
     };
     let mut start = first;
     let mut len = 1u32;
@@ -41,24 +43,32 @@ pub fn plan_runs(sorted_slots: &[Slot]) -> Vec<SlotRun> {
         if s == start + len {
             len += 1;
         } else {
-            runs.push(SlotRun { start, len, extra: 0 });
+            out.push(SlotRun { start, len, extra: 0 });
             start = s;
             len = 1;
         }
     }
-    runs.push(SlotRun { start, len, extra: 0 });
+    out.push(SlotRun { start, len, extra: 0 });
+}
+
+/// Allocating convenience wrapper over [`plan_runs_into`].
+pub fn plan_runs(sorted_slots: &[Slot]) -> Vec<SlotRun> {
+    let mut runs = Vec::new();
+    plan_runs_into(sorted_slots, &mut runs);
     runs
 }
 
 /// Access collapse: merge adjacent runs whose gap is at most `threshold`
 /// slots, speculatively reading the `gap` slots in between (paper §5.1).
 /// One merge trades `gap * bundle_bytes` extra transfer for one fewer
-/// command — a win whenever the device is IOPS-bound.
-pub fn collapse_runs(runs: &[SlotRun], threshold: u32) -> Vec<SlotRun> {
+/// command — a win whenever the device is IOPS-bound. The output buffer
+/// is cleared and refilled (must not alias `runs`).
+pub fn collapse_runs_into(runs: &[SlotRun], threshold: u32, out: &mut Vec<SlotRun>) {
+    out.clear();
     if threshold == 0 || runs.len() < 2 {
-        return runs.to_vec();
+        out.extend_from_slice(runs);
+        return;
     }
-    let mut out: Vec<SlotRun> = Vec::with_capacity(runs.len());
     out.push(runs[0]);
     for &r in &runs[1..] {
         let last = out.last_mut().unwrap();
@@ -71,6 +81,12 @@ pub fn collapse_runs(runs: &[SlotRun], threshold: u32) -> Vec<SlotRun> {
             out.push(r);
         }
     }
+}
+
+/// Allocating convenience wrapper over [`collapse_runs_into`].
+pub fn collapse_runs(runs: &[SlotRun], threshold: u32) -> Vec<SlotRun> {
+    let mut out = Vec::with_capacity(runs.len());
+    collapse_runs_into(runs, threshold, &mut out);
     out
 }
 

@@ -24,7 +24,7 @@
 //! by `n_layers / sim_layers`. IOPS/bandwidth/access-length metrics are
 //! ratios and need no scaling.
 
-use crate::cache::{Admission, NeuronCache, S3Fifo};
+use crate::cache::{Admission, KeySpace, NeuronCache, S3Fifo};
 use crate::config::{DeviceConfig, ModelConfig, Precision};
 use crate::flash::UfsSim;
 use crate::metrics::{RunMetrics, ServeSummary};
@@ -209,6 +209,11 @@ pub struct ExperimentResult {
     /// Wall-clock spent in the offline placement search, seconds
     /// (already includes co-activation extraction).
     pub placement_secs: f64,
+    /// Wall-clock spent in the per-token decode loop, seconds. Like
+    /// `placement_secs` it is non-deterministic and therefore lives in
+    /// the Markdown report ONLY, never in the JSON (§Perf: the `perf`
+    /// preset reads simulated-tokens/sec off it).
+    pub decode_wall_secs: f64,
     /// Multiply per-token latency by this to get full-model figures.
     pub layer_scale: f64,
     pub bundle_bytes: usize,
@@ -232,6 +237,16 @@ impl ExperimentResult {
     /// Fraction of flash busy time hidden under compute.
     pub fn overlap_ratio(&self) -> f64 {
         self.metrics.overlap_ratio()
+    }
+
+    /// Simulated tokens decoded per wall-clock second (Markdown-only:
+    /// wall time is non-deterministic and never serialized to JSON).
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        if self.decode_wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.metrics.tokens as f64 / self.decode_wall_secs
+        }
     }
 
     pub fn effective_bandwidth_gbps(&self) -> f64 {
@@ -321,9 +336,15 @@ pub fn pipeline_with(
 ) -> anyhow::Result<(IoPipeline, NeuronCache, UfsSim)> {
     let space = neuron_space(w);
     let cache_cap = cache_capacity(w);
+    let keys = KeySpace::of(&space);
     let cache = match admission {
-        Some(adm) => NeuronCache::new(Box::new(S3Fifo::new(cache_cap)), adm, w.seed),
-        None => NeuronCache::from_config(spec.cache_policy, cache_cap, w.seed)?,
+        Some(adm) => NeuronCache::new(
+            Box::new(S3Fifo::bounded(cache_cap, keys.bound())),
+            adm,
+            w.seed,
+            keys,
+        ),
+        None => NeuronCache::from_config(spec.cache_policy, cache_cap, keys, w.seed)?,
     };
     let cfg = pipeline_config(spec, w, fixed_threshold);
     let sim = UfsSim::new(w.device.clone(), space.image_bytes());
@@ -481,6 +502,7 @@ fn run_inner(
     } else {
         Vec::new()
     };
+    let t_decode = std::time::Instant::now();
     for tok in &eval.tokens {
         let t = if spec.dense {
             let mut t = pipeline.step_token(&mut cache, &mut sim, &dense_tok);
@@ -499,10 +521,12 @@ fn run_inner(
         // flash timeline hide underneath it
         metrics.record_compute(compute_ns_per_layer * w.sim_layers as f64);
     }
+    let decode_wall_secs = t_decode.elapsed().as_secs_f64();
     Ok(ExperimentResult {
         system: report_as,
         metrics,
         placement_secs,
+        decode_wall_secs,
         layer_scale: w.layer_scale(),
         bundle_bytes,
         serve: None,

@@ -1,7 +1,13 @@
 //! Classic LRU cache over u64 keys (baseline policy + building block).
 //! Intrusive doubly-linked list over a slab, O(1) touch/insert/evict.
-
-use std::collections::HashMap;
+//!
+//! §Perf: the key index is a direct-indexed dense slot table
+//! (`Vec<u32>`), not a hash map — cache keys are
+//! `layer * slots_per_layer + slot` (see [`crate::cache::KeySpace`]), so
+//! the key universe is small, dense, and known at construction.
+//! [`Lru::bounded`] pre-sizes every table so steady-state operation
+//! never touches the allocator; [`Lru::new`] starts with an empty index
+//! and grows it on demand (tests and callers with unknown bounds).
 
 const NIL: u32 = u32::MAX;
 
@@ -14,22 +20,40 @@ struct Node {
 
 #[derive(Debug)]
 pub struct Lru {
-    map: HashMap<u64, u32>,
+    /// key -> node index (dense slot table; `NIL` = absent).
+    index: Vec<u32>,
     nodes: Vec<Node>,
     free: Vec<u32>,
     head: u32, // most recent
     tail: u32, // least recent
+    len: usize,
     capacity: usize,
 }
 
 impl Lru {
     pub fn new(capacity: usize) -> Self {
+        Self::bounded(capacity, 0)
+    }
+
+    /// Capacity-aware construction: all keys are `< key_bound`, so the
+    /// slot table (and the node slab) can be sized once, up front. With
+    /// a real bound the slab reserves the FULL capacity — at most
+    /// `key_bound` entries can ever be resident, and the zero-alloc
+    /// invariant (§Perf) must hold at any cache size; only the
+    /// unknown-bound [`Lru::new`] path caps its speculative reservation.
+    pub fn bounded(capacity: usize, key_bound: usize) -> Self {
+        let slab = if key_bound > 0 {
+            capacity.min(key_bound)
+        } else {
+            capacity.min(1 << 20)
+        };
         Self {
-            map: HashMap::with_capacity(capacity.min(1 << 20)),
-            nodes: Vec::with_capacity(capacity.min(1 << 20)),
-            free: Vec::new(),
+            index: vec![NIL; key_bound],
+            nodes: Vec::with_capacity(slab),
+            free: Vec::with_capacity(slab),
             head: NIL,
             tail: NIL,
+            len: 0,
             capacity,
         }
     }
@@ -39,11 +63,30 @@ impl Lru {
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len == 0
+    }
+
+    #[inline]
+    fn slot(&self, key: u64) -> u32 {
+        self.index.get(key as usize).copied().unwrap_or(NIL)
+    }
+
+    /// Write the slot entry for `key`, growing the table when the key
+    /// exceeds the construction-time bound (never on the bounded path).
+    #[inline]
+    fn set_slot(&mut self, key: u64, idx: u32) {
+        let k = key as usize;
+        if k >= self.index.len() {
+            if idx == NIL {
+                return;
+            }
+            self.index.resize(k + 1, NIL);
+        }
+        self.index[k] = idx;
     }
 
     fn unlink(&mut self, idx: u32) {
@@ -77,17 +120,17 @@ impl Lru {
 
     /// Lookup; a hit refreshes recency.
     pub fn touch(&mut self, key: u64) -> bool {
-        if let Some(&idx) = self.map.get(&key) {
-            self.unlink(idx);
-            self.push_front(idx);
-            true
-        } else {
-            false
+        let idx = self.slot(key);
+        if idx == NIL {
+            return false;
         }
+        self.unlink(idx);
+        self.push_front(idx);
+        true
     }
 
     pub fn contains_untouched(&self, key: u64) -> bool {
-        self.map.contains_key(&key)
+        self.slot(key) != NIL
     }
 
     /// Insert a key, evicting the LRU entry if full.
@@ -100,13 +143,14 @@ impl Lru {
             return None;
         }
         let mut evicted = None;
-        if self.map.len() >= self.capacity {
+        if self.len >= self.capacity {
             let tail = self.tail;
             debug_assert_ne!(tail, NIL);
             let old_key = self.nodes[tail as usize].key;
             self.unlink(tail);
-            self.map.remove(&old_key);
+            self.set_slot(old_key, NIL);
             self.free.push(tail);
+            self.len -= 1;
             evicted = Some(old_key);
         }
         let idx = if let Some(i) = self.free.pop() {
@@ -117,18 +161,21 @@ impl Lru {
             (self.nodes.len() - 1) as u32
         };
         self.push_front(idx);
-        self.map.insert(key, idx);
+        self.set_slot(key, idx);
+        self.len += 1;
         evicted
     }
 
     pub fn remove(&mut self, key: u64) -> bool {
-        if let Some(idx) = self.map.remove(&key) {
-            self.unlink(idx);
-            self.free.push(idx);
-            true
-        } else {
-            false
+        let idx = self.slot(key);
+        if idx == NIL {
+            return false;
         }
+        self.unlink(idx);
+        self.set_slot(key, NIL);
+        self.free.push(idx);
+        self.len -= 1;
+        true
     }
 }
 
@@ -184,5 +231,22 @@ mod tests {
             c.insert(i % 37);
             assert!(c.len() <= 16);
         }
+    }
+
+    #[test]
+    fn bounded_behaves_like_unbounded() {
+        // same op stream, identical outcomes, and the bounded slot table
+        // never grows past its construction size
+        let mut a = Lru::new(4);
+        let mut b = Lru::bounded(4, 37);
+        for i in 0..500u64 {
+            let k = (i * 7) % 37;
+            assert_eq!(a.touch(k), b.touch(k), "touch diverged at {i}");
+            if i % 3 != 0 {
+                assert_eq!(a.insert(k), b.insert(k), "insert diverged at {i}");
+            }
+            assert_eq!(a.len(), b.len());
+        }
+        assert_eq!(b.index.len(), 37);
     }
 }

@@ -13,8 +13,16 @@
 //! main lazily reinserts keys with freq > 0 (decremented). A miss whose
 //! key sits in ghost is inserted directly into main ("quick demotion
 //! was wrong" signal). Frequencies are capped at 3 as in the paper.
+//!
+//! §Perf: the per-key (freq, loc) record lives in a direct-indexed
+//! dense byte table (`Vec<u8>`), not a hash map — keys are
+//! `layer * slots_per_layer + slot` (see [`crate::cache::KeySpace`]),
+//! so the universe is small and known up front. [`S3Fifo::bounded`]
+//! pre-sizes the table and the three queues so steady-state operation
+//! never touches the allocator; [`S3Fifo::new`] grows the table on
+//! demand for callers with unknown key bounds.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 #[derive(Debug)]
 pub struct S3Fifo {
@@ -24,26 +32,55 @@ pub struct S3Fifo {
     main: VecDeque<u64>,
     ghost: VecDeque<u64>,
     ghost_cap: usize,
-    /// key -> (freq, where): where: 0=small, 1=main, 2=ghost
-    table: HashMap<u64, (u8, u8)>,
+    /// key -> packed (freq, loc) record (dense; `ABSENT` = untracked).
+    /// loc: 0=small, 1=main, 2=ghost; freq capped at `FREQ_CAP`.
+    table: Vec<u8>,
 }
 
 const IN_SMALL: u8 = 0;
 const IN_MAIN: u8 = 1;
 const IN_GHOST: u8 = 2;
 const FREQ_CAP: u8 = 3;
+/// Dense-table sentinel for "key not tracked" (no packed record ever
+/// reaches it: max is `(IN_GHOST << 2) | FREQ_CAP`).
+const ABSENT: u8 = u8::MAX;
+
+#[inline]
+fn pack(freq: u8, loc: u8) -> u8 {
+    (loc << 2) | freq
+}
+
+#[inline]
+fn unpack(b: u8) -> (u8, u8) {
+    (b & 0b11, b >> 2)
+}
 
 impl S3Fifo {
     pub fn new(capacity: usize) -> Self {
+        Self::bounded(capacity, 0)
+    }
+
+    /// Capacity-aware construction: all keys are `< key_bound`, so the
+    /// record table and the queue rings can be sized once, up front.
+    /// With a real bound the rings reserve their FULL worst case — the
+    /// zero-alloc invariant (§Perf) must hold at any cache size; only
+    /// the unknown-bound [`S3Fifo::new`] path caps its speculative
+    /// reservation.
+    pub fn bounded(capacity: usize, key_bound: usize) -> Self {
         let small_cap = (capacity / 10).max(1).min(capacity);
+        let ghost_cap = capacity; // ghost remembers ~1x capacity of keys
+        let cap_guard = if key_bound > 0 { usize::MAX } else { 1 << 20 };
+        let reserve = |n: usize| VecDeque::with_capacity((n + 2).min(cap_guard));
         Self {
             capacity,
             small_cap,
-            small: VecDeque::new(),
-            main: VecDeque::new(),
-            ghost: VecDeque::new(),
-            ghost_cap: capacity, // ghost remembers ~1x capacity of keys
-            table: HashMap::new(),
+            // small can fill the whole cache before the first eviction,
+            // so both resident queues reserve full capacity
+            small: reserve(capacity),
+            main: reserve(capacity),
+            ghost: reserve(ghost_cap),
+            ghost_cap,
+            table: vec![ABSENT; key_bound],
         }
     }
 
@@ -60,11 +97,38 @@ impl S3Fifo {
         self.len() == 0
     }
 
+    #[inline]
+    fn get(&self, key: u64) -> Option<(u8, u8)> {
+        match self.table.get(key as usize) {
+            Some(&b) if b != ABSENT => Some(unpack(b)),
+            _ => None,
+        }
+    }
+
+    /// Write the (freq, loc) record for `key`, growing the table when
+    /// the key exceeds the construction-time bound (never on the
+    /// bounded path).
+    #[inline]
+    fn set(&mut self, key: u64, freq: u8, loc: u8) {
+        let k = key as usize;
+        if k >= self.table.len() {
+            self.table.resize(k + 1, ABSENT);
+        }
+        self.table[k] = pack(freq, loc);
+    }
+
+    #[inline]
+    fn remove_record(&mut self, key: u64) {
+        if let Some(b) = self.table.get_mut(key as usize) {
+            *b = ABSENT;
+        }
+    }
+
     /// Lookup; a hit bumps the frequency counter.
     pub fn touch(&mut self, key: u64) -> bool {
-        match self.table.get_mut(&key) {
-            Some((freq, loc)) if *loc != IN_GHOST => {
-                *freq = (*freq + 1).min(FREQ_CAP);
+        match self.get(key) {
+            Some((freq, loc)) if loc != IN_GHOST => {
+                self.set(key, (freq + 1).min(FREQ_CAP), loc);
                 true
             }
             _ => false,
@@ -72,92 +136,100 @@ impl S3Fifo {
     }
 
     pub fn contains_untouched(&self, key: u64) -> bool {
-        matches!(self.table.get(&key), Some((_, loc)) if *loc != IN_GHOST)
+        matches!(self.get(key), Some((_, loc)) if loc != IN_GHOST)
     }
 
     /// Insert after a miss (no-op if already resident).
-    pub fn insert(&mut self, key: u64) {
+    /// Returns the resident key evicted to make room, if any.
+    pub fn insert(&mut self, key: u64) -> Option<u64> {
         if self.capacity == 0 {
-            return;
+            return None;
         }
-        match self.table.get(&key) {
-            Some((_, loc)) if *loc != IN_GHOST => return, // already resident
-            Some((_, _ghost)) => {
-                // ghost hit: admit straight to main
-                self.remove_from_ghost(key);
-                self.ensure_room();
+        match self.get(key) {
+            Some((_, loc)) if loc != IN_GHOST => None, // already resident
+            Some(_) => {
+                // ghost hit: admit straight to main. Lazy removal: the
+                // ghost queue entry is validated against the table when
+                // it rotates out.
+                self.remove_record(key);
+                let evicted = self.ensure_room();
                 self.main.push_back(key);
-                self.table.insert(key, (0, IN_MAIN));
+                self.set(key, 0, IN_MAIN);
+                evicted
             }
             None => {
-                self.ensure_room();
+                let evicted = self.ensure_room();
                 self.small.push_back(key);
-                self.table.insert(key, (0, IN_SMALL));
+                self.set(key, 0, IN_SMALL);
+                evicted
             }
         }
     }
 
-    fn remove_from_ghost(&mut self, key: u64) {
-        // lazy: mark removed in table; ghost queue entries are validated
-        // against the table when they rotate out.
-        self.table.remove(&key);
-    }
-
-    fn ensure_room(&mut self) {
+    fn ensure_room(&mut self) -> Option<u64> {
+        let mut evicted = None;
         while self.len() >= self.capacity {
-            if self.small.len() >= self.small_cap || self.main.is_empty() {
-                self.evict_small();
+            let e = if self.small.len() >= self.small_cap || self.main.is_empty() {
+                self.evict_small()
             } else {
-                self.evict_main();
-            }
+                self.evict_main()
+            };
+            debug_assert!(
+                evicted.is_none() || e.is_none(),
+                "one insert evicts at most one resident key"
+            );
+            evicted = evicted.or(e);
         }
+        evicted
     }
 
-    fn evict_small(&mut self) {
+    fn evict_small(&mut self) -> Option<u64> {
         while let Some(key) = self.small.pop_front() {
-            let Some(&(freq, loc)) = self.table.get(&key) else { continue };
+            let Some((freq, loc)) = self.get(key) else { continue };
             if loc != IN_SMALL {
                 continue; // stale queue entry
             }
             if freq > 0 {
                 // re-referenced while in small: promote to main
-                self.table.insert(key, (0, IN_MAIN));
+                self.set(key, 0, IN_MAIN);
                 self.main.push_back(key);
                 if self.len() < self.capacity {
-                    return;
+                    return None;
                 }
                 continue;
             }
-            // demote to ghost
-            self.table.insert(key, (0, IN_GHOST));
+            // demote to ghost: the key leaves the resident set
+            self.set(key, 0, IN_GHOST);
             self.ghost.push_back(key);
             self.trim_ghost();
-            return;
+            return Some(key);
         }
+        None
     }
 
-    fn evict_main(&mut self) {
+    fn evict_main(&mut self) -> Option<u64> {
         while let Some(key) = self.main.pop_front() {
-            let Some(&(freq, loc)) = self.table.get(&key) else { continue };
+            let Some((freq, loc)) = self.get(key) else { continue };
             if loc != IN_MAIN {
                 continue;
             }
             if freq > 0 {
                 // lazy promotion: second chance with decayed freq
-                self.table.insert(key, (freq - 1, IN_MAIN));
+                self.set(key, freq - 1, IN_MAIN);
                 self.main.push_back(key);
                 continue;
             }
-            self.table.remove(&key);
-            return;
+            self.remove_record(key);
+            return Some(key);
         }
+        None
     }
 
     fn trim_ghost(&mut self) {
         while self.ghost.len() > self.ghost_cap {
             if let Some(old) = self.ghost.pop_front() {
-                if matches!(self.table.get(&old), Some((_, loc)) if *loc == IN_GHOST) {
-                    self.table.remove(&old);
+                if matches!(self.get(old), Some((_, loc)) if loc == IN_GHOST) {
+                    self.remove_record(old);
                 }
             }
         }
@@ -222,6 +294,40 @@ mod tests {
         let mut c = S3Fifo::new(0);
         c.insert(1);
         assert!(!c.touch(1));
+    }
+
+    #[test]
+    fn evictions_reported_once_per_insert() {
+        let mut c = S3Fifo::new(8);
+        let mut resident = std::collections::HashSet::new();
+        for i in 0..2_000u64 {
+            let k = (i * 13) % 41;
+            if c.touch(k) {
+                continue;
+            }
+            let evicted = c.insert(k);
+            resident.insert(k);
+            if let Some(e) = evicted {
+                assert!(resident.remove(&e), "evicted {e} was not resident");
+                assert!(!c.contains_untouched(e), "evicted {e} still resident");
+            }
+            assert_eq!(resident.len(), c.len(), "resident set diverged at {i}");
+        }
+    }
+
+    #[test]
+    fn bounded_behaves_like_unbounded() {
+        let mut a = S3Fifo::new(16);
+        let mut b = S3Fifo::bounded(16, 97);
+        for i in 0..5_000u64 {
+            let k = (i * 31) % 97;
+            assert_eq!(a.touch(k), b.touch(k), "touch diverged at {i}");
+            if i % 2 == 0 {
+                assert_eq!(a.insert(k), b.insert(k), "insert diverged at {i}");
+            }
+            assert_eq!(a.len(), b.len());
+        }
+        assert_eq!(b.table.len(), 97);
     }
 
     #[test]

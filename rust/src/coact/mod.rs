@@ -29,6 +29,10 @@ pub struct CoactStats {
     /// Row-major: neuron i's token bitset at
     /// `bits[i*words_per_neuron .. (i+1)*words_per_neuron]`.
     bits: Vec<u64>,
+    /// Total activation count over ALL neurons — Eq. 1's denominator,
+    /// computed once at construction (§Perf: `p_i` used to rescan every
+    /// bitset, an O(n · words) popcount per call).
+    total_freq: u64,
 }
 
 impl CoactStats {
@@ -46,13 +50,17 @@ impl CoactStats {
         let n_tokens = sets.len();
         let words = n_tokens.div_ceil(64).max(1);
         let mut bits = vec![0u64; n_neurons * words];
+        let mut total_freq = 0u64;
         for (t, set) in sets.iter().enumerate() {
             let (w, b) = (t / 64, t % 64);
             for &i in set.iter() {
-                bits[i as usize * words + w] |= 1u64 << b;
+                let cell = &mut bits[i as usize * words + w];
+                // sets may repeat a neuron; count each bit exactly once
+                total_freq += u64::from(*cell & (1u64 << b) == 0);
+                *cell |= 1u64 << b;
             }
         }
-        Self { n_neurons, n_tokens, words_per_neuron: words, bits }
+        Self { n_neurons, n_tokens, words_per_neuron: words, bits, total_freq }
     }
 
     /// Number of neurons (bundles) in the layer.
@@ -83,10 +91,15 @@ impl CoactStats {
         a.iter().zip(b).map(|(x, y)| (x & y).count_ones()).sum()
     }
 
-    /// P(i) per Eq. 1 (frequency normalized over all neurons).
+    /// P(i) per Eq. 1 (frequency normalized over all neurons). The
+    /// denominator is cached at construction — O(words) per call, not
+    /// O(n · words).
     pub fn p_i(&self, i: BundleId) -> f64 {
-        let total: u64 = (0..self.n_neurons).map(|k| self.freq(k as u32) as u64).sum();
-        if total == 0 { 0.0 } else { self.freq(i) as f64 / total as f64 }
+        if self.total_freq == 0 {
+            0.0
+        } else {
+            self.freq(i) as f64 / self.total_freq as f64
+        }
     }
 
     /// Empirical pairwise activation probability (per-token), used by
@@ -274,6 +287,23 @@ mod tests {
         assert!((s.p_ij(0, 1) - 0.5).abs() < 1e-12);
         assert!((s.dist(0, 1) - 0.5).abs() < 1e-12);
         assert_eq!(s.dist(0, 3), 1.0);
+    }
+
+    #[test]
+    fn p_i_sums_to_one_over_all_neurons() {
+        // the cached denominator must equal the popcount rescan it
+        // replaced: P sums to exactly 1 whenever anything activated
+        let s = stats(&[&[0, 1, 2], &[0, 1], &[3], &[7]]);
+        let sum: f64 = (0..8u32).map(|i| s.p_i(i)).sum();
+        assert!((sum - 1.0).abs() < 1e-12, "sum={sum}");
+        // duplicate ids within one token count once, like the bitset
+        let d = stats(&[&[4, 4, 5]]);
+        let sum: f64 = (0..8u32).map(|i| d.p_i(i)).sum();
+        assert!((sum - 1.0).abs() < 1e-12, "sum={sum}");
+        assert!((d.p_i(4) - 0.5).abs() < 1e-12);
+        // and an empty trace stays at zero instead of dividing by it
+        let e = stats(&[]);
+        assert_eq!(e.p_i(0), 0.0);
     }
 
     #[test]

@@ -33,7 +33,7 @@ use std::time::{Duration, Instant};
 use crate::bench::workloads::{
     self, cache_capacity, layouts_for, neuron_space, System, SystemSpec, Workload,
 };
-use crate::cache::NeuronCache;
+use crate::cache::{KeySpace, NeuronCache};
 use crate::flash::UfsSim;
 use crate::metrics::{RunMetrics, ServeMetrics, ServeSummary, SessionStats};
 use crate::pipeline::IoPipeline;
@@ -78,6 +78,9 @@ pub struct ServeOutcome {
     pub summary: ServeSummary,
     /// Offline placement wall-clock, seconds (Markdown-only).
     pub placement_secs: f64,
+    /// Wall-clock of the multi-session decode loop, seconds
+    /// (Markdown-only, like `placement_secs`; see §Perf).
+    pub decode_wall_secs: f64,
     /// Bundle size used by every session.
     pub bundle_bytes: usize,
 }
@@ -263,8 +266,9 @@ pub fn run_serve(
             cap_total / cfg.sessions + usize::from(idx < cap_total % cfg.sessions)
         }
     };
+    let keys = KeySpace::of(&space);
     let caches: Vec<NeuronCache> = (0..n_caches)
-        .map(|idx| NeuronCache::from_config(spec.cache_policy, cap_of(idx), w.seed))
+        .map(|idx| NeuronCache::from_config(spec.cache_policy, cap_of(idx), keys, w.seed))
         .collect::<anyhow::Result<_>>()?;
     let streams: Vec<(IoPipeline, Trace)> = (0..cfg.sessions)
         .map(|sid| {
@@ -278,9 +282,18 @@ pub fn run_serve(
     let mut sim = UfsSim::new(w.device.clone(), space.image_bytes());
     let manager =
         SessionManager::new(cfg.clone(), streams, caches, compute_ns_per_token, bundle_bytes);
+    let t_decode = Instant::now();
     let (metrics, mut serve) = manager.run(&mut sim);
+    let decode_wall_secs = t_decode.elapsed().as_secs_f64();
     let summary = serve.summary(w.layer_scale(), metrics.cache_hit_ratio());
-    Ok(ServeOutcome { metrics, serve, summary, placement_secs, bundle_bytes })
+    Ok(ServeOutcome {
+        metrics,
+        serve,
+        summary,
+        placement_secs,
+        decode_wall_secs,
+        bundle_bytes,
+    })
 }
 
 #[cfg(test)]

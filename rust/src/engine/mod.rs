@@ -27,12 +27,12 @@ use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
-use crate::cache::NeuronCache;
+use crate::cache::{KeySpace, NeuronCache};
 use crate::config::{DeviceConfig, Precision};
 use crate::flash::UfsSim;
 use crate::metrics::RunMetrics;
 use crate::neuron::{BundleId, Layout, NeuronSpace, Slot};
-use crate::pipeline::{IoPipeline, PipelineConfig};
+use crate::pipeline::{IoPipeline, LayerPlan, PipelineConfig};
 use crate::prefetch::{PrefetchConfig, Prefetcher};
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Executable, Runtime};
 use crate::trace::Trace;
@@ -134,6 +134,9 @@ pub struct Engine {
     /// When set, true activation sets are recorded per decode step.
     recorder: Option<Trace>,
     scratch: Vec<u8>,
+    /// Reusable per-layer I/O plan (§Perf: the decode loop refills it
+    /// instead of allocating a fresh plan per layer).
+    io_plan: LayerPlan,
 }
 
 impl Engine {
@@ -195,7 +198,12 @@ impl Engine {
         let sim = UfsSim::with_image(opts.device.clone(), image);
 
         let cache_cap = (space.total() as f64 * opts.cache_ratio) as usize;
-        let cache = NeuronCache::from_config(&opts.cache_policy, cache_cap, opts.seed)?;
+        let cache = NeuronCache::from_config(
+            &opts.cache_policy,
+            cache_cap,
+            KeySpace::of(&space),
+            opts.seed,
+        )?;
         let pcfg = PipelineConfig {
             bundle_bytes,
             collapse: opts.collapse,
@@ -238,6 +246,7 @@ impl Engine {
             compute_ns_per_layer,
             recorder: None,
             scratch: Vec::new(),
+            io_plan: LayerPlan::default(),
             meta,
             opts,
         })
@@ -282,8 +291,12 @@ impl Engine {
         let image = build_flash_image(&self.space, &layouts, &self.layers);
         self.sim = UfsSim::with_image(self.opts.device.clone(), image);
         let cache_cap = (self.space.total() as f64 * self.opts.cache_ratio) as usize;
-        self.cache =
-            NeuronCache::from_config(&self.opts.cache_policy, cache_cap, self.opts.seed)?;
+        self.cache = NeuronCache::from_config(
+            &self.opts.cache_policy,
+            cache_cap,
+            KeySpace::of(&self.space),
+            self.opts.seed,
+        )?;
         let pcfg = self.pipeline.config().clone();
         let prefetcher = self.pipeline.take_prefetcher();
         self.pipeline = IoPipeline::new(pcfg, self.space.clone(), layouts);
@@ -450,7 +463,8 @@ impl Engine {
             // behind it, and the modeled compute window advances the
             // clock so the speculative reads drain underneath it.
             self.scratch.clear();
-            let plan = self.pipeline.plan_layer(&mut self.cache, li, &active);
+            let mut plan = std::mem::take(&mut self.io_plan);
+            self.pipeline.plan_layer_into(&mut self.cache, li, &active, &mut plan);
             let mut buf = std::mem::take(&mut self.scratch);
             let io = if self.pipeline.has_prefetcher() {
                 let ticket =
@@ -471,9 +485,13 @@ impl Engine {
             };
             self.io_metrics.record(&io, self.space.bundle_bytes);
 
-            // 4. gather + sparse FFN (PJRT)
-            let (u_act, bu_act, d_act) = self.gather(li, &active, &plan, &buf)?;
+            // 4. gather + sparse FFN (PJRT). Restore the reusable
+            // buffers BEFORE propagating any error so a recovering
+            // caller keeps the pre-reserved hot-path capacities.
+            let gathered = self.gather(li, &active, &plan, &buf);
             self.scratch = buf;
+            self.io_plan = plan;
+            let (u_act, bu_act, d_act) = gathered?;
             let lp = &self.layers[li];
             let k = self.meta.top_k as i64;
             let outs = self.ffn_sparse.run(&[

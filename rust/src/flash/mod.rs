@@ -151,7 +151,10 @@ impl UfsSim {
             stats: FlashStats::default(),
             device_free_ns: 0.0,
             compute_ns: 0.0,
-            inflight: Vec::new(),
+            // a handful of batches at most are ever in flight (demand +
+            // per-layer speculation); reserving keeps submit_batch off
+            // the allocator on the decode hot path (§Perf)
+            inflight: Vec::with_capacity(8),
             next_ticket: 0,
             sync: false,
         }

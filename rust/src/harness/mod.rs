@@ -8,7 +8,8 @@
 //!   [`ScenarioMatrix`] (axes + cartesian-product expansion),
 //! * [`presets`] — named matrices reproducing the paper figures
 //!   (`smoke`, `fig01`, `fig10`, `fig18`, `ablations`) plus the
-//!   multi-session `serve` contention sweep,
+//!   multi-session `serve` contention sweep and the `perf`
+//!   decode-throughput proof (wall-clock tokens/sec, Markdown-only),
 //! * [`runner`] — the multi-threaded sweep executor (results are
 //!   thread-count invariant),
 //! * [`report`] — stable-schema `BENCH_<name>.json` plus Markdown with

@@ -13,7 +13,7 @@ use super::scenario::{PrefetchPoint, ScenarioMatrix, ScenarioSpec, ServePoint};
 
 /// Every preset name `preset` accepts.
 pub fn preset_names() -> &'static [&'static str] {
-    &["smoke", "fig01", "fig10", "fig18", "ablations", "serve"]
+    &["smoke", "fig01", "fig10", "fig18", "ablations", "serve", "perf"]
 }
 
 /// Resolve a preset name to its matrix.
@@ -25,6 +25,7 @@ pub fn preset(name: &str) -> anyhow::Result<ScenarioMatrix> {
         "fig18" => fig18(),
         "ablations" => ablations(),
         "serve" => serve(),
+        "perf" => perf(),
         _ => anyhow::bail!(
             "unknown preset `{name}` (available: {})",
             preset_names().join("|")
@@ -132,6 +133,28 @@ fn serve() -> ScenarioMatrix {
         }
     }
     m.serve = points;
+    m
+}
+
+/// Decode-throughput proof preset (§Perf, DESIGN.md): long eval
+/// streams over the fig10 point so the simulator's own speed is
+/// measurable — the three systems' synchronous decode loops, one
+/// overlapped-prefetch point, and one shared-cache serving point. The
+/// simulated metrics in `BENCH_perf.json` stay deterministic and
+/// byte-diffable; wall-clock simulated-tokens/sec appears ONLY in the
+/// Markdown report's "Decode throughput" section.
+fn perf() -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new("perf");
+    m.systems = vec![System::LlamaCpp, System::LlmFlash, System::Ripple];
+    m.eval_tokens = 512;
+    let mut pf = ScenarioSpec::new("perf-prefetch", "OPT-350M", System::Ripple);
+    pf.eval_tokens = 512;
+    pf.prefetch = PrefetchPoint::budget_kb(256);
+    m.extra.push(pf);
+    let mut sv = ScenarioSpec::new("perf-serve", "OPT-350M", System::Ripple);
+    sv.eval_tokens = 128;
+    sv.serve = Some(ServePoint::shared(4));
+    m.extra.push(sv);
     m
 }
 
@@ -255,6 +278,19 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn perf_preset_covers_every_decode_loop() {
+        let specs = preset("perf").unwrap().expand();
+        // 3 synchronous systems + prefetch + serve extras
+        assert_eq!(specs.len(), 3 + 2);
+        assert!(specs[..3].iter().all(|s| s.eval_tokens == 512 && !s.prefetch.enabled));
+        let pf = specs.iter().find(|s| s.name == "perf-prefetch").unwrap();
+        assert!(pf.prefetch.enabled);
+        let sv = specs.iter().find(|s| s.name == "perf-serve").unwrap();
+        assert_eq!(sv.serve.unwrap().sessions, 4);
+        assert_eq!(specs[0].seed, 7, "perf rows run on the bench seed");
     }
 
     #[test]

@@ -120,6 +120,7 @@ impl SweepReport {
             ));
         }
         self.push_serving_sections(&mut out);
+        self.push_throughput_section(&mut out);
         if let Some(base) = baseline {
             out.push_str(&format!("\n## vs baseline `{}`\n\n", base.name));
             out.push_str(
@@ -158,9 +159,18 @@ impl SweepReport {
             }
         }
         let place_secs: f64 = self.results.iter().map(|r| r.outcome.placement_secs).sum();
+        let decode_secs: f64 =
+            self.results.iter().map(|r| r.outcome.decode_wall_secs).sum();
+        // loaded fixtures carry no wall timings; don't render a
+        // misleading "0.00s decode loop" for them
+        let decode_note = if decode_secs > 0.0 {
+            format!(", decode loops total {decode_secs:.2}s")
+        } else {
+            String::new()
+        };
         out.push_str(&format!(
             "\nWall-clock (non-deterministic, not in JSON): placement search total \
-             {place_secs:.2}s.\n"
+             {place_secs:.2}s{decode_note}.\n"
         ));
         out
     }
@@ -240,6 +250,33 @@ impl SweepReport {
             );
             out.push_str("|---|---|---|---|---|---|---|\n");
             out.push_str(&deltas);
+        }
+    }
+
+    /// Decode-throughput table (§Perf): simulated tokens per wall-clock
+    /// second of the decode loop. Wall time is machine-dependent, so
+    /// this section exists ONLY in the Markdown — the JSON stays a pure
+    /// function of the spec and byte-diffs clean across machines.
+    fn push_throughput_section(&self, out: &mut String) {
+        let rows: Vec<&ScenarioResult> = self
+            .results
+            .iter()
+            .filter(|r| r.outcome.decode_wall_secs > 0.0)
+            .collect();
+        if rows.is_empty() {
+            return;
+        }
+        out.push_str("\n## Decode throughput (wall-clock, Markdown-only)\n\n");
+        out.push_str("| scenario | tokens | decode wall s | simulated tok/s |\n");
+        out.push_str("|---|---|---|---|\n");
+        for r in rows {
+            out.push_str(&format!(
+                "| {} | {} | {:.3} | {:.0} |\n",
+                r.spec.name,
+                r.outcome.metrics.tokens,
+                r.outcome.decode_wall_secs,
+                r.outcome.decode_tokens_per_sec(),
+            ));
         }
     }
 }
@@ -494,6 +531,7 @@ mod tests {
                 system: System::Ripple,
                 metrics: m,
                 placement_secs: 0.0,
+                decode_wall_secs: 0.0,
                 layer_scale: 2.0,
                 bundle_bytes: 100,
                 serve: None,
@@ -594,6 +632,25 @@ mod tests {
         .unwrap();
         let md = report.to_markdown(Some(&other));
         assert!(md.contains("had no match"));
+    }
+
+    #[test]
+    fn throughput_section_is_markdown_only() {
+        let mut r = fake_result("a", 1e6);
+        r.outcome.decode_wall_secs = 0.5;
+        let report = SweepReport { name: "t".to_string(), results: vec![r] };
+        // wall-clock never reaches the JSON ...
+        let json = report.json_string();
+        assert!(!json.contains("decode_wall"));
+        assert!(!json.contains("tok/s"));
+        // ... but the Markdown reports simulated tokens per wall second
+        let md = report.to_markdown(None);
+        assert!(md.contains("## Decode throughput (wall-clock, Markdown-only)"), "{md}");
+        assert!(md.contains("| a | 1 | 0.500 | 2 |"), "{md}");
+
+        // without wall timings (loaded fixtures) the section is absent
+        let bare = SweepReport { name: "t".to_string(), results: vec![fake_result("a", 1e6)] };
+        assert!(!bare.to_markdown(None).contains("Decode throughput"));
     }
 
     #[test]

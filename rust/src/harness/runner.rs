@@ -134,6 +134,7 @@ fn run_serve_point(
         system: spec.system,
         metrics: out.metrics,
         placement_secs: out.placement_secs,
+        decode_wall_secs: out.decode_wall_secs,
         layer_scale: w.layer_scale(),
         bundle_bytes: out.bundle_bytes,
         serve: Some(out.summary),
@@ -160,15 +161,18 @@ fn run_ablation(
     let bundle_bytes = pipeline.config().bundle_bytes;
     let eval = w.eval_trace(&w.dataset);
     let mut metrics = RunMetrics::new();
+    let t_decode = std::time::Instant::now();
     for tok in &eval.tokens {
         let t = pipeline.step_token(&mut cache, &mut sim, tok);
         metrics.record(&t, bundle_bytes);
         metrics.record_compute(w.compute_ns_per_layer * w.sim_layers as f64);
     }
+    let decode_wall_secs = t_decode.elapsed().as_secs_f64();
     Ok(ExperimentResult {
         system: spec.system,
         metrics,
         placement_secs,
+        decode_wall_secs,
         layer_scale: w.layer_scale(),
         bundle_bytes,
         serve: None,

@@ -90,7 +90,10 @@ fn print_help() {
          bench:    --preset <name> [--threads <n>] [--baseline <BENCH_x.json>]\n\
                    [--out <dir>] | --list\n\
                    runs a scenario matrix, prints the Markdown report and\n\
-                   writes BENCH_<name>.json + .md under --out (default report/)"
+                   writes BENCH_<name>.json + .md under --out (default report/)\n\
+                   --preset perf: decode-throughput proof — long eval\n\
+                   streams whose wall-clock simulated-tokens/sec lands in\n\
+                   the Markdown report only (JSON stays deterministic)"
     );
 }
 

@@ -62,10 +62,19 @@ impl Layout {
         &self.to_bundle
     }
 
-    /// Map a set of activated bundles to sorted flash slots.
+    /// Map a set of activated bundles to sorted flash slots, reusing
+    /// the caller's buffer (§Perf: the per-token hot path clears and
+    /// refills one scratch vector instead of allocating).
+    pub fn slots_for_into(&self, bundles: &[BundleId], out: &mut Vec<Slot>) {
+        out.clear();
+        out.extend(bundles.iter().map(|&b| self.slot_of(b)));
+        out.sort_unstable();
+    }
+
+    /// Allocating convenience wrapper over [`Layout::slots_for_into`].
     pub fn slots_for(&self, bundles: &[BundleId]) -> Vec<Slot> {
-        let mut slots: Vec<Slot> = bundles.iter().map(|&b| self.slot_of(b)).collect();
-        slots.sort_unstable();
+        let mut slots = Vec::with_capacity(bundles.len());
+        self.slots_for_into(bundles, &mut slots);
         slots
     }
 

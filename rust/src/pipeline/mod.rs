@@ -34,15 +34,13 @@
 //! pipeline; every code path is bit-identical to the historical
 //! cache-owning pipeline.
 
-use std::collections::BTreeMap;
-
-use crate::access::{collapse_runs, plan_runs, plan_volume, AdaptiveCollapse, SlotRun};
+use crate::access::{collapse_runs_into, plan_runs_into, plan_volume, AdaptiveCollapse, SlotRun};
 use crate::cache::NeuronCache;
 use crate::config::RunConfig;
 use crate::flash::{ReadCmd, Ticket, UfsSim};
 use crate::metrics::TokenIo;
 use crate::neuron::{BundleId, Layout, NeuronSpace, Slot};
-use crate::prefetch::Prefetcher;
+use crate::prefetch::{PredictScratch, Prefetcher};
 
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
@@ -79,8 +77,11 @@ impl PipelineConfig {
     }
 }
 
-/// One layer's planned I/O.
-#[derive(Clone, Debug)]
+/// One layer's planned I/O. The buffers are reusable: the pipeline's
+/// step loops keep ONE plan alive and refill it per layer
+/// ([`IoPipeline::plan_layer_into`]), so the steady-state decode path
+/// allocates nothing (§Perf).
+#[derive(Clone, Debug, Default)]
 pub struct LayerPlan {
     pub layer: usize,
     /// Demanded slots served by DRAM cache.
@@ -94,6 +95,18 @@ pub struct LayerPlan {
     pub runs: Vec<SlotRun>,
     /// Byte-level commands for the flash sim (sub_reads applied).
     pub commands: Vec<ReadCmd>,
+}
+
+impl LayerPlan {
+    /// Retarget the plan at `layer`, keeping every buffer's capacity.
+    fn reset(&mut self, layer: usize) {
+        self.layer = layer;
+        self.cached.clear();
+        self.prefetched.clear();
+        self.missed.clear();
+        self.runs.clear();
+        self.commands.clear();
+    }
 }
 
 /// A speculative batch in flight for one upcoming layer.
@@ -119,16 +132,75 @@ impl OutstandingPrefetch {
     }
 }
 
+/// Reusable per-token buffers (§Perf): every intermediate vector of the
+/// decode hot path lives here and is cleared between uses, never
+/// dropped — after warmup a token costs zero heap allocations
+/// (pinned by `rust/tests/zero_alloc_decode.rs`).
+#[derive(Default)]
+struct StepScratch {
+    /// The step loops' reusable per-layer plan.
+    plan: LayerPlan,
+    /// Demanded slots after layout mapping (sorted).
+    slots: Vec<Slot>,
+    /// Cache-filter miss output, before the speculation peel.
+    missed_all: Vec<Slot>,
+    /// Pre-collapse runs of the demand path.
+    base_runs: Vec<SlotRun>,
+    /// Prefetch path: predicted bundles for one target layer.
+    predicted: Vec<BundleId>,
+    /// Prefetch path: non-resident predicted slots (sorted).
+    pf_slots: Vec<Slot>,
+    /// Prefetch path: pre-collapse speculative runs.
+    pf_base_runs: Vec<SlotRun>,
+    /// Prefetch path: lowered speculative commands.
+    pf_cmds: Vec<ReadCmd>,
+    /// Dense scoring buffers for the predictor.
+    predict: PredictScratch,
+    /// Free pool of run buffers cycling through in-flight speculation.
+    run_pool: Vec<Vec<SlotRun>>,
+}
+
 pub struct IoPipeline {
     cfg: PipelineConfig,
     space: NeuronSpace,
     layouts: Vec<Layout>,
     adaptive: AdaptiveCollapse,
     prefetcher: Option<Prefetcher>,
-    /// Speculative batches in flight, keyed by target layer.
-    outstanding: BTreeMap<usize, OutstandingPrefetch>,
+    /// Speculative batches in flight, indexed by target layer.
+    outstanding: Vec<Option<OutstandingPrefetch>>,
     /// Previous token's activation set per layer — predictor seed.
+    /// Buffers are cleared and refilled in place, never cloned.
     last_actives: Vec<Vec<BundleId>>,
+    /// Reusable per-token buffers (§Perf).
+    scratch: StepScratch,
+}
+
+/// Lower planned runs to byte-level commands (sub_reads applied) into a
+/// reusable buffer. Free function so callers can hold disjoint borrows
+/// of the pipeline's other fields.
+fn lower_runs_into(
+    cfg: &PipelineConfig,
+    space: &NeuronSpace,
+    layer: usize,
+    runs: &[SlotRun],
+    cmds: &mut Vec<ReadCmd>,
+) {
+    cmds.clear();
+    let bb = cfg.bundle_bytes;
+    let sub = cfg.sub_reads_per_run.max(1);
+    for r in runs {
+        let (offset, _) = space.slot_range(layer, r.start);
+        let total = r.len as usize * bb;
+        // sub_reads > 1 models unbundled storage: the run's bytes are
+        // split across `sub` matrix regions read separately.
+        let part = total / sub;
+        for i in 0..sub {
+            let len = if i + 1 == sub { total - part * (sub - 1) } else { part };
+            if len > 0 {
+                cmds.push(ReadCmd { offset: offset + (i * part) as u64, len });
+            }
+        }
+    }
 }
 
 impl IoPipeline {
@@ -140,14 +212,30 @@ impl IoPipeline {
         let adaptive =
             AdaptiveCollapse::new(cfg.initial_threshold, cfg.max_threshold, cfg.window);
         let last_actives = vec![Vec::new(); space.n_layers];
+        let outstanding = (0..space.n_layers).map(|_| None).collect();
+        // §Perf: reserve every per-token buffer at its hard bound (a
+        // layer can demand at most `per_layer` slots), so the decode hot
+        // path never allocates — not even on the very first token.
+        let n = space.per_layer;
+        let sub = cfg.sub_reads_per_run.max(1);
+        let mut scratch = StepScratch::default();
+        scratch.plan.cached.reserve(n);
+        scratch.plan.prefetched.reserve(n);
+        scratch.plan.missed.reserve(n);
+        scratch.plan.runs.reserve(n);
+        scratch.plan.commands.reserve(n * sub);
+        scratch.slots.reserve(n);
+        scratch.missed_all.reserve(n);
+        scratch.base_runs.reserve(n);
         Self {
             cfg,
             space,
             layouts,
             adaptive,
             prefetcher: None,
-            outstanding: BTreeMap::new(),
+            outstanding,
             last_actives,
+            scratch,
         }
     }
 
@@ -169,6 +257,27 @@ impl IoPipeline {
         if let Some(p) = &pf {
             assert_eq!(p.n_layers(), self.space.n_layers, "prefetcher layer mismatch");
             assert_eq!(p.per_layer(), self.space.per_layer, "prefetcher width mismatch");
+            // pre-size the dense scoring buffers and the speculation
+            // scratch at their hard bounds so even the first prediction
+            // is allocation-free (§Perf)
+            self.scratch.predict = p.scratch();
+            let budget = p
+                .config()
+                .budget_slots(self.cfg.bundle_bytes)
+                .min(self.space.per_layer);
+            let sub = self.cfg.sub_reads_per_run.max(1);
+            self.scratch.predicted.reserve(budget);
+            self.scratch.pf_slots.reserve(budget);
+            self.scratch.pf_base_runs.reserve(budget);
+            self.scratch.pf_cmds.reserve(budget * sub);
+            // one pooled run buffer per layer covers the deepest
+            // possible speculation fan-out
+            while self.scratch.run_pool.len() < self.space.n_layers {
+                self.scratch.run_pool.push(Vec::with_capacity(budget));
+            }
+            for la in &mut self.last_actives {
+                la.reserve(self.space.per_layer);
+            }
         }
         self.prefetcher = pf;
     }
@@ -183,58 +292,69 @@ impl IoPipeline {
 
     /// Speculative batches currently in flight.
     pub fn outstanding_prefetches(&self) -> usize {
-        self.outstanding.len()
+        self.outstanding.iter().filter(|o| o.is_some()).count()
     }
 
     pub fn threshold(&self) -> u32 {
         if self.cfg.collapse { self.adaptive.threshold() } else { 0 }
     }
 
-    /// Plan one layer: map to slots, filter through the (borrowed,
+    /// Plan one layer into a reusable `plan` (§Perf: zero allocations in
+    /// steady state): map to slots, filter through the (borrowed,
     /// possibly shared) cache, peel off slots covered by in-flight
     /// speculation, plan + collapse runs, lower to byte commands.
+    pub fn plan_layer_into(
+        &mut self,
+        cache: &mut NeuronCache,
+        layer: usize,
+        actives: &[BundleId],
+        plan: &mut LayerPlan,
+    ) {
+        let threshold = self.threshold();
+        plan.reset(layer);
+        self.layouts[layer].slots_for_into(actives, &mut self.scratch.slots);
+        cache.filter_into(
+            layer,
+            &self.scratch.slots,
+            &mut plan.cached,
+            &mut self.scratch.missed_all,
+        );
+        match &self.outstanding[layer] {
+            Some(out) => {
+                for &s in &self.scratch.missed_all {
+                    if out.covers(s) {
+                        plan.prefetched.push(s);
+                    } else {
+                        plan.missed.push(s);
+                    }
+                }
+            }
+            None => plan.missed.extend_from_slice(&self.scratch.missed_all),
+        }
+        plan_runs_into(&plan.missed, &mut self.scratch.base_runs);
+        collapse_runs_into(&self.scratch.base_runs, threshold, &mut plan.runs);
+        lower_runs_into(&self.cfg, &self.space, layer, &plan.runs, &mut plan.commands);
+        if self.prefetcher.is_some() {
+            // predictor seed for the next token: refill the layer's
+            // buffer in place (no clone; skipped entirely on the
+            // synchronous path)
+            let last = &mut self.last_actives[layer];
+            last.clear();
+            last.extend_from_slice(actives);
+        }
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`IoPipeline::plan_layer_into`] for callers that keep plans.
     pub fn plan_layer(
         &mut self,
         cache: &mut NeuronCache,
         layer: usize,
         actives: &[BundleId],
     ) -> LayerPlan {
-        let layout = &self.layouts[layer];
-        let slots = layout.slots_for(actives);
-        let (cached, missed_all) = cache.filter(layer, &slots);
-        let (prefetched, missed) = match self.outstanding.get(&layer) {
-            Some(out) => missed_all.into_iter().partition(|&s| out.covers(s)),
-            None => (Vec::new(), missed_all),
-        };
-        let base_runs = plan_runs(&missed);
-        let runs = collapse_runs(&base_runs, self.threshold());
-        let commands = self.lower_runs(layer, &runs);
-        if self.prefetcher.is_some() {
-            // predictor seed for the next token; skip the clone entirely
-            // on the synchronous path
-            self.last_actives[layer] = actives.to_vec();
-        }
-        LayerPlan { layer, cached, prefetched, missed, runs, commands }
-    }
-
-    fn lower_runs(&self, layer: usize, runs: &[SlotRun]) -> Vec<ReadCmd> {
-        let bb = self.cfg.bundle_bytes;
-        let sub = self.cfg.sub_reads_per_run.max(1);
-        let mut cmds = Vec::with_capacity(runs.len() * sub);
-        for r in runs {
-            let (offset, _) = self.space.slot_range(layer, r.start);
-            let total = r.len as usize * bb;
-            // sub_reads > 1 models unbundled storage: the run's bytes are
-            // split across `sub` matrix regions read separately.
-            let part = total / sub;
-            for i in 0..sub {
-                let len = if i + 1 == sub { total - part * (sub - 1) } else { part };
-                if len > 0 {
-                    cmds.push(ReadCmd { offset: offset + (i * part) as u64, len });
-                }
-            }
-        }
-        cmds
+        let mut plan = LayerPlan::default();
+        self.plan_layer_into(cache, layer, actives, &mut plan);
+        plan
     }
 
     // -----------------------------------------------------------------------
@@ -252,7 +372,7 @@ impl IoPipeline {
         next_layer: usize,
         cur_actives: &[BundleId],
     ) {
-        let Some(pf) = &self.prefetcher else {
+        let Some(pf) = self.prefetcher.as_ref() else {
             return;
         };
         let budget_slots = pf.config().budget_slots(self.cfg.bundle_bytes);
@@ -263,30 +383,43 @@ impl IoPipeline {
         let threshold = self.threshold();
         let last = next_layer.saturating_add(lookahead).min(self.space.n_layers);
         for target in next_layer..last {
-            if self.outstanding.contains_key(&target) {
+            if self.outstanding[target].is_some() {
                 continue;
             }
             let seeds: [&[BundleId]; 2] = [cur_actives, &self.last_actives[target]];
-            let predicted = pf.predict(target, &seeds, budget_slots);
-            if predicted.is_empty() {
+            pf.predict_into(
+                target,
+                &seeds,
+                budget_slots,
+                &mut self.scratch.predict,
+                &mut self.scratch.predicted,
+            );
+            if self.scratch.predicted.is_empty() {
                 continue;
             }
             let layout = &self.layouts[target];
-            // predict() already caps at budget_slots; the residency
+            // predict_into() already caps at budget_slots; the residency
             // filter only shrinks the list further
-            let mut slots: Vec<Slot> = predicted
-                .iter()
-                .map(|&b| layout.slot_of(b))
-                .filter(|&s| !cache.contains(target, s))
-                .collect();
-            slots.sort_unstable();
-            if slots.is_empty() {
+            self.scratch.pf_slots.clear();
+            for &b in &self.scratch.predicted {
+                let s = layout.slot_of(b);
+                if !cache.contains(target, s) {
+                    self.scratch.pf_slots.push(s);
+                }
+            }
+            self.scratch.pf_slots.sort_unstable();
+            if self.scratch.pf_slots.is_empty() {
                 continue;
             }
-            let runs = collapse_runs(&plan_runs(&slots), threshold);
-            let cmds = self.lower_runs(target, &runs);
-            let ticket = sim.submit_batch(&cmds);
-            self.outstanding.insert(target, OutstandingPrefetch { runs, ticket });
+            plan_runs_into(&self.scratch.pf_slots, &mut self.scratch.pf_base_runs);
+            // the run list must outlive this call (it rides with the
+            // in-flight batch), so it cycles through a free pool instead
+            // of being allocated per speculation
+            let mut runs = self.scratch.run_pool.pop().unwrap_or_default();
+            collapse_runs_into(&self.scratch.pf_base_runs, threshold, &mut runs);
+            lower_runs_into(&self.cfg, &self.space, target, &runs, &mut self.scratch.pf_cmds);
+            let ticket = sim.submit_batch(&self.scratch.pf_cmds);
+            self.outstanding[target] = Some(OutstandingPrefetch { runs, ticket });
         }
     }
 
@@ -300,7 +433,7 @@ impl IoPipeline {
         sim: &mut UfsSim,
     ) -> TokenIo {
         let mut io = TokenIo::default();
-        let Some(out) = self.outstanding.remove(&plan.layer) else {
+        let Some(out) = self.outstanding[plan.layer].take() else {
             return io;
         };
         let w = sim.wait(out.ticket);
@@ -319,6 +452,10 @@ impl IoPipeline {
         io.bytes = w.batch.bytes as u64;
         io.elapsed_ns = w.batch.elapsed_ns;
         io.stall_ns = w.stall_ns;
+        // recycle the drained run buffer for the next speculation
+        let mut runs = out.runs;
+        runs.clear();
+        self.scratch.run_pool.push(runs);
         io
     }
 
@@ -423,6 +560,8 @@ impl IoPipeline {
 
     /// Trace-driven step: process all layers of one token against `sim`,
     /// fully synchronously (the historical model; bit-stable with seeds).
+    /// Steady-state cost is zero heap allocations: the per-layer plan is
+    /// the pipeline's own reusable buffer, taken out for the loop.
     pub fn step_token(
         &mut self,
         cache: &mut NeuronCache,
@@ -431,10 +570,12 @@ impl IoPipeline {
     ) -> TokenIo {
         assert_eq!(actives.len(), self.space.n_layers);
         let mut tok = TokenIo::default();
+        let mut plan = std::mem::take(&mut self.scratch.plan);
         for (layer, act) in actives.iter().enumerate() {
-            let plan = self.plan_layer(cache, layer, act);
+            self.plan_layer_into(cache, layer, act, &mut plan);
             tok.add(&self.commit_layer(cache, &plan, sim));
         }
+        self.scratch.plan = plan;
         tok
     }
 
@@ -455,8 +596,9 @@ impl IoPipeline {
     ) -> TokenIo {
         assert_eq!(actives.len(), self.space.n_layers);
         let mut tok = TokenIo::default();
+        let mut plan = std::mem::take(&mut self.scratch.plan);
         for (layer, act) in actives.iter().enumerate() {
-            let plan = self.plan_layer(cache, layer, act);
+            self.plan_layer_into(cache, layer, act, &mut plan);
             let ticket = self.submit_layer(&plan, sim);
             if layer + 1 < self.space.n_layers {
                 self.prefetch_layer(cache, sim, layer + 1, act);
@@ -466,6 +608,7 @@ impl IoPipeline {
                 sim.advance_compute(compute_ns_per_layer);
             }
         }
+        self.scratch.plan = plan;
         tok
     }
 }
@@ -473,7 +616,7 @@ impl IoPipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cache::{Admission, NeuronCache, S3Fifo};
+    use crate::cache::{Admission, KeySpace, NeuronCache, S3Fifo};
     use crate::config::devices;
     use crate::prefetch::{PrefetchConfig, Prefetcher};
     use crate::trace::{DatasetProfile, TraceGen};
@@ -485,6 +628,7 @@ mod tests {
             Box::new(S3Fifo::new(cache_cap)),
             Admission::All,
             7,
+            KeySpace::of(&space),
         );
         let cfg = PipelineConfig {
             bundle_bytes: 128,
@@ -578,7 +722,8 @@ mod tests {
         // bundle 0 lives at slot 7
         let order: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 0];
         let layouts = vec![Layout::from_order(&order).unwrap()];
-        let mut cache = NeuronCache::new(Box::new(S3Fifo::new(0)), Admission::All, 1);
+        let mut cache =
+            NeuronCache::new(Box::new(S3Fifo::new(0)), Admission::All, 1, KeySpace::of(&space));
         let cfg = PipelineConfig {
             bundle_bytes: 16,
             collapse: false,
@@ -602,8 +747,12 @@ mod tests {
         let n = 256;
         let space = NeuronSpace::new(2, n, 128);
         let layouts = vec![Layout::identity(n), Layout::identity(n)];
-        let cache =
-            NeuronCache::new(Box::new(S3Fifo::new(cache_cap)), Admission::All, 7);
+        let cache = NeuronCache::new(
+            Box::new(S3Fifo::new(cache_cap)),
+            Admission::All,
+            7,
+            KeySpace::of(&space),
+        );
         let cfg = PipelineConfig {
             bundle_bytes: 128,
             collapse: true,

@@ -21,11 +21,27 @@
 //! arithmetic over a deterministic trace: predictions are bit-stable,
 //! which is what keeps the overlapped flash timeline replayable.
 
-use std::collections::HashMap;
-
 use crate::coact::CoactStats;
 use crate::neuron::BundleId;
 use crate::trace::Trace;
+
+/// Dense-score sentinel: the bundle has not been touched this call.
+/// Real scores are bounded by `(max_freq * 2 + 1) * seeds`, far below it.
+const UNSCORED: u64 = u64::MAX;
+
+/// Reusable scoring buffers for [`Prefetcher::predict_into`] (§Perf):
+/// a direct-indexed per-bundle score array plus a touched list, reset
+/// in O(touched) after every call — the hot path never hashes and,
+/// after warmup, never allocates.
+#[derive(Clone, Debug, Default)]
+pub struct PredictScratch {
+    /// `bundle -> accumulated score` (`UNSCORED` = untouched).
+    score: Vec<u64>,
+    /// Bundles scored this call, in first-touch order.
+    touched: Vec<BundleId>,
+    /// Scored candidates, sorted (score desc, id asc) then truncated.
+    ranked: Vec<(BundleId, u64)>,
+}
 
 /// Runtime knobs for speculative prefetch (see `RunConfig`).
 #[derive(Clone, Debug)]
@@ -134,12 +150,37 @@ impl Prefetcher {
         self.per_layer
     }
 
-    /// Predict up to `max_out` bundles likely active in `layer`, scored
-    /// from the given seed activation sets. Returns sorted unique ids.
-    pub fn predict(&self, layer: usize, seeds: &[&[BundleId]], max_out: usize) -> Vec<BundleId> {
-        if max_out == 0 || layer >= self.partners.len() {
-            return Vec::new();
+    /// Allocate scoring scratch sized for this predictor's layer width.
+    pub fn scratch(&self) -> PredictScratch {
+        PredictScratch {
+            score: vec![UNSCORED; self.per_layer],
+            touched: Vec::with_capacity(self.per_layer.min(1 << 16)),
+            ranked: Vec::with_capacity(self.per_layer.min(1 << 16)),
         }
+    }
+
+    /// Predict up to `max_out` bundles likely active in `layer`, scored
+    /// from the given seed activation sets; `out` receives sorted unique
+    /// ids. Scores accumulate in a dense array indexed by bundle id and
+    /// reset via the touched list, so repeated calls neither hash nor
+    /// (after warmup) allocate — bit-identical to the historical
+    /// hash-map scorer, which the replayable flash timeline depends on.
+    pub fn predict_into(
+        &self,
+        layer: usize,
+        seeds: &[&[BundleId]],
+        max_out: usize,
+        scratch: &mut PredictScratch,
+        out: &mut Vec<BundleId>,
+    ) {
+        out.clear();
+        if max_out == 0 || layer >= self.partners.len() {
+            return;
+        }
+        if scratch.score.len() < self.per_layer {
+            scratch.score.resize(self.per_layer, UNSCORED);
+        }
+        debug_assert!(scratch.touched.is_empty(), "scratch not reset");
         let freq = &self.freq[layer];
         let adj = &self.partners[layer];
         // Seed bonus exceeding any popularity-floor score: a bundle that
@@ -150,15 +191,26 @@ impl Prefetcher {
             .first()
             .map(|&h| freq[h as usize] as u64)
             .unwrap_or(0);
-        let mut score: HashMap<BundleId, u64> = HashMap::new();
+        let score = &mut scratch.score;
+        let touched = &mut scratch.touched;
         for seed in seeds {
             for &s in *seed {
                 if (s as usize) >= self.per_layer {
                     continue;
                 }
-                *score.entry(s).or_insert(0) += freq[s as usize] as u64 + top_freq + 1;
+                let e = &mut score[s as usize];
+                if *e == UNSCORED {
+                    *e = 0;
+                    touched.push(s);
+                }
+                *e += freq[s as usize] as u64 + top_freq + 1;
                 for &(p, w) in &adj[s as usize] {
-                    *score.entry(p).or_insert(0) += w as u64;
+                    let e = &mut score[p as usize];
+                    if *e == UNSCORED {
+                        *e = 0;
+                        touched.push(p);
+                    }
+                    *e += w as u64;
                 }
             }
         }
@@ -167,14 +219,34 @@ impl Prefetcher {
         for &h in self.hot[layer].iter().take(max_out) {
             let pop = (freq[h as usize] as u64).div_ceil(2);
             if pop > 0 {
-                score.entry(h).or_insert(pop);
+                let e = &mut score[h as usize];
+                if *e == UNSCORED {
+                    *e = pop;
+                    touched.push(h);
+                }
             }
         }
-        let mut ranked: Vec<(BundleId, u64)> = score.into_iter().collect();
+        let ranked = &mut scratch.ranked;
+        ranked.clear();
+        ranked.extend(touched.iter().map(|&b| (b, score[b as usize])));
+        // total order (unique ids), so the result never depends on the
+        // accumulation order — same contract the hash map had
         ranked.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
         ranked.truncate(max_out);
-        let mut out: Vec<BundleId> = ranked.into_iter().map(|(b, _)| b).collect();
+        out.extend(ranked.iter().map(|&(b, _)| b));
         out.sort_unstable();
+        // O(touched) reset: ready for the next call
+        for &b in touched.iter() {
+            score[b as usize] = UNSCORED;
+        }
+        touched.clear();
+    }
+
+    /// Allocating convenience wrapper over [`Prefetcher::predict_into`].
+    pub fn predict(&self, layer: usize, seeds: &[&[BundleId]], max_out: usize) -> Vec<BundleId> {
+        let mut scratch = self.scratch();
+        let mut out = Vec::new();
+        self.predict_into(layer, seeds, max_out, &mut scratch, &mut out);
         out
     }
 }
@@ -247,6 +319,28 @@ mod tests {
         // 64/512 = 12.5% random baseline
         let ratio = hits_seeded as f64 / total as f64;
         assert!(ratio > 0.2, "seeded hit ratio {ratio}");
+    }
+
+    #[test]
+    fn predict_into_matches_predict_across_reused_scratch() {
+        // the dense-scored path must be bit-identical to the allocating
+        // wrapper, including when one scratch serves many calls
+        let tr = calib(2, 256);
+        let pf = Prefetcher::from_trace(&tr, PrefetchConfig::default(), 2);
+        let mut scratch = pf.scratch();
+        let mut out = Vec::new();
+        for t in 0..8 {
+            let seed = tr.tokens[t][0].clone();
+            for layer in 0..2 {
+                pf.predict_into(layer, &[&seed], 24, &mut scratch, &mut out);
+                assert_eq!(out, pf.predict(layer, &[&seed], 24), "t={t} layer={layer}");
+            }
+        }
+        // cold-seed and empty calls reset cleanly too
+        pf.predict_into(0, &[], 16, &mut scratch, &mut out);
+        assert_eq!(out, pf.predict(0, &[], 16));
+        pf.predict_into(0, &[], 0, &mut scratch, &mut out);
+        assert!(out.is_empty());
     }
 
     #[test]

@@ -320,6 +320,298 @@ fn contains_probes_never_perturb_an_interleaved_stream() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Dense-vs-reference oracle battery (§Perf): the production policies
+// index a direct-addressed Vec slot table; these randomized traces pin
+// them against simple HashMap + VecDeque model oracles — identical
+// hit/miss outcomes, identical eviction sequences, identical membership
+// — for both the `bounded` (pre-sized) and `new` (grow-on-demand)
+// constructions.
+// ---------------------------------------------------------------------------
+
+mod oracle {
+    use std::collections::{HashMap, VecDeque};
+
+    /// Textbook LRU: recency order in a VecDeque (back = MRU).
+    pub struct RefLru {
+        capacity: usize,
+        order: VecDeque<u64>,
+    }
+
+    impl RefLru {
+        pub fn new(capacity: usize) -> Self {
+            Self { capacity, order: VecDeque::new() }
+        }
+
+        pub fn touch(&mut self, key: u64) -> bool {
+            match self.order.iter().position(|&k| k == key) {
+                Some(pos) => {
+                    self.order.remove(pos);
+                    self.order.push_back(key);
+                    true
+                }
+                None => false,
+            }
+        }
+
+        pub fn insert(&mut self, key: u64) -> Option<u64> {
+            if self.capacity == 0 {
+                return None;
+            }
+            if self.touch(key) {
+                return None;
+            }
+            let mut evicted = None;
+            if self.order.len() >= self.capacity {
+                evicted = self.order.pop_front();
+            }
+            self.order.push_back(key);
+            evicted
+        }
+
+        pub fn contains(&self, key: u64) -> bool {
+            self.order.contains(&key)
+        }
+
+        pub fn len(&self) -> usize {
+            self.order.len()
+        }
+    }
+
+    const IN_SMALL: u8 = 0;
+    const IN_MAIN: u8 = 1;
+    const IN_GHOST: u8 = 2;
+    const FREQ_CAP: u8 = 3;
+
+    /// The historical HashMap-backed S3-FIFO, kept verbatim as the
+    /// model oracle for the dense-indexed production implementation.
+    pub struct RefS3Fifo {
+        capacity: usize,
+        small_cap: usize,
+        small: VecDeque<u64>,
+        main: VecDeque<u64>,
+        ghost: VecDeque<u64>,
+        ghost_cap: usize,
+        table: HashMap<u64, (u8, u8)>,
+    }
+
+    impl RefS3Fifo {
+        pub fn new(capacity: usize) -> Self {
+            Self {
+                capacity,
+                small_cap: (capacity / 10).max(1).min(capacity),
+                small: VecDeque::new(),
+                main: VecDeque::new(),
+                ghost: VecDeque::new(),
+                ghost_cap: capacity,
+                table: HashMap::new(),
+            }
+        }
+
+        pub fn len(&self) -> usize {
+            self.small.len() + self.main.len()
+        }
+
+        pub fn touch(&mut self, key: u64) -> bool {
+            match self.table.get_mut(&key) {
+                Some((freq, loc)) if *loc != IN_GHOST => {
+                    *freq = (*freq + 1).min(FREQ_CAP);
+                    true
+                }
+                _ => false,
+            }
+        }
+
+        pub fn contains(&self, key: u64) -> bool {
+            matches!(self.table.get(&key), Some((_, loc)) if *loc != IN_GHOST)
+        }
+
+        pub fn insert(&mut self, key: u64) -> Option<u64> {
+            if self.capacity == 0 {
+                return None;
+            }
+            match self.table.get(&key) {
+                Some((_, loc)) if *loc != IN_GHOST => None,
+                Some(_) => {
+                    self.table.remove(&key);
+                    let evicted = self.ensure_room();
+                    self.main.push_back(key);
+                    self.table.insert(key, (0, IN_MAIN));
+                    evicted
+                }
+                None => {
+                    let evicted = self.ensure_room();
+                    self.small.push_back(key);
+                    self.table.insert(key, (0, IN_SMALL));
+                    evicted
+                }
+            }
+        }
+
+        fn ensure_room(&mut self) -> Option<u64> {
+            let mut evicted = None;
+            while self.len() >= self.capacity {
+                let e = if self.small.len() >= self.small_cap || self.main.is_empty() {
+                    self.evict_small()
+                } else {
+                    self.evict_main()
+                };
+                evicted = evicted.or(e);
+            }
+            evicted
+        }
+
+        fn evict_small(&mut self) -> Option<u64> {
+            while let Some(key) = self.small.pop_front() {
+                let Some(&(freq, loc)) = self.table.get(&key) else { continue };
+                if loc != IN_SMALL {
+                    continue;
+                }
+                if freq > 0 {
+                    self.table.insert(key, (0, IN_MAIN));
+                    self.main.push_back(key);
+                    if self.len() < self.capacity {
+                        return None;
+                    }
+                    continue;
+                }
+                self.table.insert(key, (0, IN_GHOST));
+                self.ghost.push_back(key);
+                self.trim_ghost();
+                return Some(key);
+            }
+            None
+        }
+
+        fn evict_main(&mut self) -> Option<u64> {
+            while let Some(key) = self.main.pop_front() {
+                let Some(&(freq, loc)) = self.table.get(&key) else { continue };
+                if loc != IN_MAIN {
+                    continue;
+                }
+                if freq > 0 {
+                    self.table.insert(key, (freq - 1, IN_MAIN));
+                    self.main.push_back(key);
+                    continue;
+                }
+                self.table.remove(&key);
+                return Some(key);
+            }
+            None
+        }
+
+        fn trim_ghost(&mut self) {
+            while self.ghost.len() > self.ghost_cap {
+                if let Some(old) = self.ghost.pop_front() {
+                    if matches!(self.table.get(&old), Some((_, loc)) if *loc == IN_GHOST) {
+                        self.table.remove(&old);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Drive a production policy and its oracle through the same randomized
+/// trace, comparing hit/miss outcomes, eviction sequences, len, and a
+/// full-membership sweep after every operation burst.
+fn run_oracle_battery(
+    name: &str,
+    mut policy: Box<dyn CachePolicy>,
+    mut oracle_touch: impl FnMut(u64) -> bool,
+    mut oracle_insert: impl FnMut(u64) -> Option<u64>,
+    mut oracle_contains: impl FnMut(u64) -> bool,
+    mut oracle_len: impl FnMut() -> usize,
+    seed: u64,
+    key_bound: u64,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..2_500u64 {
+        let key = rng.below(key_bound as usize) as u64;
+        if rng.chance(0.5) {
+            assert_eq!(
+                policy.insert(key),
+                oracle_insert(key),
+                "{name}: eviction sequence diverged at op {i} (seed {seed})"
+            );
+        } else {
+            assert_eq!(
+                policy.touch(key),
+                oracle_touch(key),
+                "{name}: hit/miss diverged at op {i} (seed {seed})"
+            );
+        }
+        assert_eq!(policy.len(), oracle_len(), "{name}: len diverged at op {i}");
+        if i % 250 == 0 {
+            for k in 0..key_bound {
+                assert_eq!(
+                    policy.contains(k),
+                    oracle_contains(k),
+                    "{name}: membership diverged at key {k}, op {i} (seed {seed})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_lru_matches_hashmap_oracle_on_random_traces() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0x0DAC1E ^ seed);
+        let cap = rng.range(1, 24);
+        let bound = 40u64;
+        // both constructions must match the oracle exactly
+        for bounded in [false, true] {
+            let dense: Box<dyn CachePolicy> = if bounded {
+                Box::new(Lru::bounded(cap, bound as usize))
+            } else {
+                Box::new(Lru::new(cap))
+            };
+            let mut oracle = oracle::RefLru::new(cap);
+            // sharing one oracle across closures is clumsy; use a cell
+            let o = std::cell::RefCell::new(&mut oracle);
+            run_oracle_battery(
+                if bounded { "lru(bounded)" } else { "lru" },
+                dense,
+                |k| o.borrow_mut().touch(k),
+                |k| o.borrow_mut().insert(k),
+                |k| o.borrow().contains(k),
+                || o.borrow().len(),
+                seed,
+                bound,
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_s3fifo_matches_hashmap_oracle_on_random_traces() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0x53F1F0 ^ seed);
+        let cap = rng.range(1, 24);
+        let bound = 40u64;
+        for bounded in [false, true] {
+            let dense: Box<dyn CachePolicy> = if bounded {
+                Box::new(S3Fifo::bounded(cap, bound as usize))
+            } else {
+                Box::new(S3Fifo::new(cap))
+            };
+            let mut oracle = oracle::RefS3Fifo::new(cap);
+            let o = std::cell::RefCell::new(&mut oracle);
+            run_oracle_battery(
+                if bounded { "s3fifo(bounded)" } else { "s3fifo" },
+                dense,
+                |k| o.borrow_mut().touch(k),
+                |k| o.borrow_mut().insert(k),
+                |k| o.borrow().contains(k),
+                || o.borrow().len(),
+                seed,
+                bound,
+            );
+        }
+    }
+}
+
 #[test]
 fn zero_capacity_never_stores() {
     let null_ctor: Ctor = |_| Box::new(NullCache);

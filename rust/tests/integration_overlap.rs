@@ -7,7 +7,7 @@
 //!   historical synchronous pipeline (determinism regression).
 
 use ripple::bench::workloads::{bench_workload, run_experiment, System, Workload};
-use ripple::cache::NeuronCache;
+use ripple::cache::{KeySpace, NeuronCache};
 use ripple::flash::UfsSim;
 use ripple::neuron::NeuronSpace;
 use ripple::pipeline::{IoPipeline, PipelineConfig};
@@ -74,6 +74,7 @@ fn prefetch_disabled_reproduces_sync_timeline_bit_identically() {
         let cache = NeuronCache::from_config(
             "linking",
             (space.total() as f64 * w.cache_ratio) as usize,
+            KeySpace::of(&space),
             w.seed,
         )
         .unwrap();

@@ -3,7 +3,7 @@
 
 use ripple::access::{collapse_runs, plan_runs};
 use ripple::bench::workloads::{run_experiment, tiny_workload, System};
-use ripple::cache::NeuronCache;
+use ripple::cache::{KeySpace, NeuronCache};
 use ripple::coact::CoactStats;
 use ripple::config::devices;
 use ripple::flash::UfsSim;
@@ -18,7 +18,7 @@ fn mk_pipeline(
     collapse: bool,
     cache_cap: usize,
 ) -> (IoPipeline, NeuronCache, UfsSim) {
-    let cache = NeuronCache::from_config("s3fifo", cache_cap, 3).unwrap();
+    let cache = NeuronCache::from_config("s3fifo", cache_cap, KeySpace::of(&space), 3).unwrap();
     let cfg = PipelineConfig {
         bundle_bytes: space.bundle_bytes,
         collapse,

@@ -2,7 +2,7 @@
 //! cross-module property sweeps that don't fit a single unit scope.
 
 use ripple::bench::workloads::{run_experiment, tiny_workload, System};
-use ripple::cache::{CachePolicy, Lru, NeuronCache, S3Fifo};
+use ripple::cache::{CachePolicy, KeySpace, Lru, NeuronCache, S3Fifo};
 use ripple::config::RunConfig;
 use ripple::engine::{Engine, EngineOptions};
 use ripple::neuron::Layout;
@@ -145,7 +145,8 @@ fn prop_neuron_cache_matches_oracle_membership() {
         |tokens| {
             // capacity larger than universe: nothing ever evicts, so the
             // cache must behave exactly like a set
-            let mut c = NeuronCache::from_config("s3fifo", 1024, 9).unwrap();
+            let mut c =
+                NeuronCache::from_config("s3fifo", 1024, KeySpace::new(1, 64), 9).unwrap();
             let mut oracle = std::collections::HashSet::new();
             for tok in tokens {
                 let (hits, misses) = c.filter(0, tok);

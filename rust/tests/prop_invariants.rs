@@ -6,7 +6,7 @@
 
 use ripple::access::{collapse_runs, plan_runs, plan_volume};
 use ripple::bench::workloads::{run_experiment, tiny_workload, System};
-use ripple::cache::{Admission, NeuronCache, S3Fifo};
+use ripple::cache::{Admission, KeySpace, NeuronCache, S3Fifo};
 use ripple::flash::UfsSim;
 use ripple::neuron::{Layout, NeuronSpace, Slot};
 use ripple::pipeline::{IoPipeline, PipelineConfig};
@@ -144,6 +144,7 @@ fn overlapped_pipeline(
         Box::new(S3Fifo::new(n / 4)),
         Admission::Linking { segment_min: 4, segment_p: 0.5 },
         seed,
+        KeySpace::of(&space),
     );
     let cfg = PipelineConfig {
         bundle_bytes: 256,

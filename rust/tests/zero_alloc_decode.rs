@@ -1,0 +1,149 @@
+//! The zero-allocation decode gate (§Perf, DESIGN.md).
+//!
+//! A counting global allocator wraps the system allocator; after one
+//! warmup pass over the fig10 single-stream workload (which grows every
+//! scratch buffer to its high-water mark), replaying the same token
+//! stream through the decode step must perform ZERO heap allocations —
+//! the dense slot-indexed caches, the step scratch arena, and the
+//! pooled speculation buffers together make the steady-state per-token
+//! path allocation- and hash-free.
+//!
+//! This file is its own test binary on purpose: a `#[global_allocator]`
+//! is process-wide, and the counter must not race other test threads.
+
+use std::alloc::{GlobalAlloc, Layout, System as SystemAlloc};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use ripple::bench::workloads::{
+    bench_workload, layouts_for, pipeline_with, System, SystemSpec, Workload,
+};
+use ripple::cache::NeuronCache;
+use ripple::flash::UfsSim;
+use ripple::pipeline::IoPipeline;
+use ripple::prefetch::Prefetcher;
+use ripple::trace::{DatasetProfile, Trace};
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+impl CountingAlloc {
+    #[inline]
+    fn count() {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::count();
+        SystemAlloc.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        Self::count();
+        SystemAlloc.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        Self::count();
+        SystemAlloc.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        // frees are not allocations; steady state may still return
+        // nothing to the allocator, but we only gate acquisitions
+        SystemAlloc.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations performed by `f` while the counter is armed.
+fn count_allocs(f: impl FnOnce()) -> u64 {
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    f();
+    COUNTING.store(false, Ordering::SeqCst);
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+/// Prove the counter is live before trusting a zero reading.
+fn assert_counter_works() {
+    let sanity = count_allocs(|| {
+        let v: Vec<u64> = Vec::with_capacity(32);
+        std::hint::black_box(&v);
+    });
+    assert!(sanity > 0, "counting allocator saw no allocation from Vec::with_capacity");
+}
+
+/// The fig10 single-stream point (OPT-350M / OnePlus 12 / alpaca /
+/// RIPPLE), shrunk for test speed exactly like the golden tests do.
+fn fig10_workload() -> Workload {
+    let mut w = bench_workload("OPT-350M", 0, DatasetProfile::alpaca());
+    w.calib_tokens = 96;
+    w.eval_tokens = 24;
+    w.sim_layers = 2;
+    w.knn = 16;
+    w.threads = 2;
+    w
+}
+
+fn build(w: &Workload) -> (IoPipeline, NeuronCache, UfsSim, Trace) {
+    let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+    let calib = w.calibration_trace();
+    let (layouts, _) = layouts_for(System::Ripple, &calib, w.knn, w.threads);
+    let (mut pipeline, cache, sim) = pipeline_with(spec, w, layouts, None, None).unwrap();
+    if w.prefetch.enabled {
+        let pf = Prefetcher::from_trace(&calib, w.prefetch.clone(), w.threads);
+        pipeline.set_prefetcher(Some(pf));
+    }
+    let eval = w.eval_trace(&w.dataset);
+    (pipeline, cache, sim, eval)
+}
+
+/// One test fn on purpose: the global counter must never observe a
+/// concurrent sibling test's allocations, and a single-test binary has
+/// no worker threads racing the counting window.
+#[test]
+fn decode_step_is_allocation_free_after_warmup() {
+    assert_counter_works();
+
+    // --- synchronous fig10 path -----------------------------------------
+    let w = fig10_workload();
+    let (mut pipeline, mut cache, mut sim, eval) = build(&w);
+    // warmup: one full pass grows any buffer not already at its bound
+    for tok in &eval.tokens {
+        pipeline.step_token(&mut cache, &mut sim, tok);
+    }
+    // steady state: replaying the same stream allocates NOTHING
+    let steady = count_allocs(|| {
+        for tok in &eval.tokens {
+            pipeline.step_token(&mut cache, &mut sim, tok);
+        }
+    });
+    assert_eq!(
+        steady, 0,
+        "synchronous decode hot path allocated {steady} times after warmup"
+    );
+
+    // --- overlapped (speculative prefetch) path -------------------------
+    let mut w = fig10_workload();
+    w.prefetch.enabled = true;
+    w.prefetch.budget_bytes = 32 * w.model.bundle_bytes(w.precision);
+    let (mut pipeline, mut cache, mut sim, eval) = build(&w);
+    let compute_ns = w.compute_ns_per_layer;
+    for tok in &eval.tokens {
+        pipeline.step_token_overlapped(&mut cache, &mut sim, tok, compute_ns);
+    }
+    let steady = count_allocs(|| {
+        for tok in &eval.tokens {
+            pipeline.step_token_overlapped(&mut cache, &mut sim, tok, compute_ns);
+        }
+    });
+    assert_eq!(
+        steady, 0,
+        "overlapped decode hot path allocated {steady} times after warmup"
+    );
+}
