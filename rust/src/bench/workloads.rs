@@ -431,6 +431,32 @@ pub fn run_experiment_eval(
     run_inner(w, SystemSpec::of(system, w.model.ffn_linears), eval_dataset, system)
 }
 
+/// Shared-scan construction for overlapped (prefetch-enabled) ripple
+/// runs: one dominant O(n²) co-count scan per layer feeds BOTH the
+/// placement search and the prefetcher adjacency (§Perf). Layouts are
+/// identical to `place_model`'s — same knn, same deterministic pair
+/// list regardless of scan sharding. The serving path reuses this
+/// exact constructor so a `sessions == 1` serve run replays the
+/// single-stream experiment's placement and prefetcher bit-for-bit.
+pub fn ripple_overlapped_artifacts(
+    w: &Workload,
+    calib: &Trace,
+) -> (Vec<Layout>, Prefetcher) {
+    let scan_threads = (w.threads / calib.n_layers.max(1)).max(1);
+    let mut stats = Vec::with_capacity(calib.n_layers);
+    let mut pairs = Vec::with_capacity(calib.n_layers);
+    let mut layouts = Vec::with_capacity(calib.n_layers);
+    for l in 0..calib.n_layers {
+        let s = crate::coact::CoactStats::from_trace_layer(calib, l);
+        let p = s.candidate_pairs_parallel(w.knn, scan_threads);
+        layouts.push(placement::search_with_pairs(&s, &p).layout);
+        stats.push(s);
+        pairs.push(p);
+    }
+    let pf = Prefetcher::from_layer_pairs(&stats, &pairs, w.prefetch.clone());
+    (layouts, pf)
+}
+
 fn run_inner(
     w: &Workload,
     spec: SystemSpec,
@@ -445,23 +471,8 @@ fn run_inner(
     let (layouts, placement_secs) = if spec.ripple_placement {
         let t0 = std::time::Instant::now();
         let layouts = if overlapped {
-            // share the dominant O(n²) co-count scan between the
-            // placement search and the prefetcher adjacency (§Perf);
-            // layouts are identical to `place_model`'s (same knn, same
-            // deterministic pair list regardless of scan sharding).
-            let scan_threads = (w.threads / calib.n_layers.max(1)).max(1);
-            let mut stats = Vec::with_capacity(calib.n_layers);
-            let mut pairs = Vec::with_capacity(calib.n_layers);
-            let mut layouts = Vec::with_capacity(calib.n_layers);
-            for l in 0..calib.n_layers {
-                let s = crate::coact::CoactStats::from_trace_layer(&calib, l);
-                let p = s.candidate_pairs_parallel(w.knn, scan_threads);
-                layouts.push(placement::search_with_pairs(&s, &p).layout);
-                stats.push(s);
-                pairs.push(p);
-            }
-            prefetcher =
-                Some(Prefetcher::from_layer_pairs(&stats, &pairs, w.prefetch.clone()));
+            let (layouts, pf) = ripple_overlapped_artifacts(w, &calib);
+            prefetcher = Some(pf);
             layouts
         } else {
             placement::place_model(

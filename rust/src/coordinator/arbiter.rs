@@ -1,0 +1,225 @@
+//! Per-round arbitration of the global speculative-prefetch byte budget
+//! across serving sessions (DESIGN.md §Serving).
+//!
+//! Every active session would happily speculate up to its configured
+//! per-submission budget, but the sessions share ONE serial flash
+//! device: unchecked speculation from k sessions multiplies the wasted
+//! device busy time k-fold and queues everyone's demand reads behind
+//! it. The arbiter divides a *global* byte budget across the round's
+//! active sessions before any token is served; each session's grant
+//! caps its speculative submissions for that round
+//! ([`crate::pipeline::IoPipeline::set_prefetch_grant`]).
+//!
+//! Both policies are work-conserving — share a session cannot use
+//! (its demand is below its fair cut, or it has nothing left to
+//! speculate on) flows to sessions that can — and deterministic: ties
+//! break by session index, and all arithmetic is integer bytes, so the
+//! serving timeline stays bit-replayable.
+
+/// Budget-division policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArbiterPolicy {
+    /// Iterative water-fill: every open session receives an equal cut
+    /// of the remainder until demands are met or the budget drains.
+    /// Identical sessions receive equal grants (up to one byte of
+    /// integer remainder).
+    FairShare,
+    /// Sessions closest to (or past) the per-token latency target are
+    /// filled first, each up to its full demand, until the budget
+    /// drains. Urgency is the session's mean per-token latency relative
+    /// to `target_ns`.
+    DeadlineAware {
+        /// Per-token latency target in nanoseconds.
+        target_ns: f64,
+    },
+}
+
+/// One session's standing in the round, as seen by the arbiter.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionDemand {
+    /// Bytes of speculation the session could use this round (its
+    /// configured per-submission budget; 0 when it cannot speculate).
+    pub demand_bytes: usize,
+    /// Mean per-token latency observed so far, ns (0 before the first
+    /// served token). Only the deadline-aware policy reads this.
+    pub mean_latency_ns: f64,
+}
+
+/// Divides a global speculative byte budget across sessions each round.
+/// The grant buffers are reused call-to-call, so arbitration in the
+/// steady-state serve loop is allocation-free.
+#[derive(Clone, Debug)]
+pub struct PrefetchArbiter {
+    policy: ArbiterPolicy,
+    global_budget_bytes: usize,
+    grants: Vec<usize>,
+    order: Vec<usize>,
+}
+
+impl PrefetchArbiter {
+    pub fn new(policy: ArbiterPolicy, global_budget_bytes: usize) -> Self {
+        Self { policy, global_budget_bytes, grants: Vec::new(), order: Vec::new() }
+    }
+
+    /// Pre-size the reusable buffers for up to `n` concurrent sessions.
+    pub fn reserve(&mut self, n: usize) {
+        self.grants.reserve(n);
+        self.order.reserve(n);
+    }
+
+    pub fn policy(&self) -> ArbiterPolicy {
+        self.policy
+    }
+
+    pub fn global_budget_bytes(&self) -> usize {
+        self.global_budget_bytes
+    }
+
+    /// Divide the global budget across `demands`. Returns one grant per
+    /// session, in bytes; `grants[i] <= demands[i].demand_bytes` and
+    /// the grants sum to `min(global_budget, Σ demand)`.
+    pub fn arbitrate(&mut self, demands: &[SessionDemand]) -> &[usize] {
+        self.grants.clear();
+        self.grants.resize(demands.len(), 0);
+        if !demands.is_empty() && self.global_budget_bytes > 0 {
+            match self.policy {
+                ArbiterPolicy::FairShare => self.fair_share(demands),
+                ArbiterPolicy::DeadlineAware { target_ns } => {
+                    self.deadline_aware(demands, target_ns)
+                }
+            }
+        }
+        &self.grants
+    }
+
+    fn fair_share(&mut self, demands: &[SessionDemand]) {
+        let mut remaining = self.global_budget_bytes;
+        loop {
+            let open = demands
+                .iter()
+                .zip(&self.grants)
+                .filter(|(d, g)| d.demand_bytes > **g)
+                .count();
+            if open == 0 || remaining == 0 {
+                return;
+            }
+            let share = remaining / open;
+            if share == 0 {
+                // fewer bytes left than open sessions: hand the integer
+                // remainder out a byte at a time, in session order
+                for (i, d) in demands.iter().enumerate() {
+                    if remaining == 0 {
+                        return;
+                    }
+                    if d.demand_bytes > self.grants[i] {
+                        self.grants[i] += 1;
+                        remaining -= 1;
+                    }
+                }
+                return;
+            }
+            for (i, d) in demands.iter().enumerate() {
+                let headroom = d.demand_bytes - self.grants[i].min(d.demand_bytes);
+                let take = headroom.min(share);
+                self.grants[i] += take;
+                remaining -= take;
+            }
+        }
+    }
+
+    fn deadline_aware(&mut self, demands: &[SessionDemand], target_ns: f64) {
+        self.order.clear();
+        self.order.extend(0..demands.len());
+        let target = target_ns.max(1.0);
+        self.order.sort_unstable_by(|&a, &b| {
+            let ua = demands[a].mean_latency_ns / target;
+            let ub = demands[b].mean_latency_ns / target;
+            // most urgent first; session index breaks ties so the
+            // schedule is deterministic
+            ub.partial_cmp(&ua).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        let mut remaining = self.global_budget_bytes;
+        for &i in &self.order {
+            let take = demands[i].demand_bytes.min(remaining);
+            self.grants[i] = take;
+            remaining -= take;
+            if remaining == 0 {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demand(bytes: usize) -> SessionDemand {
+        SessionDemand { demand_bytes: bytes, mean_latency_ns: 0.0 }
+    }
+
+    #[test]
+    fn fair_share_splits_equally_and_caps_at_demand() {
+        let mut a = PrefetchArbiter::new(ArbiterPolicy::FairShare, 900);
+        let g = a.arbitrate(&[demand(400), demand(400), demand(400)]);
+        assert_eq!(g, &[300, 300, 300]);
+        // demand below the fair cut frees share for the others
+        let g = a.arbitrate(&[demand(100), demand(400), demand(400)]);
+        assert_eq!(g, &[100, 400, 400]);
+    }
+
+    #[test]
+    fn fair_share_integer_remainder_stays_within_one_byte() {
+        let mut a = PrefetchArbiter::new(ArbiterPolicy::FairShare, 1000);
+        let g = a.arbitrate(&[demand(500), demand(500), demand(500)]);
+        assert_eq!(g.iter().sum::<usize>(), 1000);
+        let (lo, hi) = (*g.iter().min().unwrap(), *g.iter().max().unwrap());
+        assert!(hi - lo <= 1, "grants {g:?}");
+    }
+
+    #[test]
+    fn single_session_gets_min_of_budget_and_demand() {
+        let mut a = PrefetchArbiter::new(ArbiterPolicy::FairShare, 256 * 1024);
+        assert_eq!(a.arbitrate(&[demand(256 * 1024)]), &[256 * 1024]);
+        assert_eq!(a.arbitrate(&[demand(64)]), &[64]);
+        let mut d = PrefetchArbiter::new(
+            ArbiterPolicy::DeadlineAware { target_ns: 1e6 },
+            256 * 1024,
+        );
+        assert_eq!(d.arbitrate(&[demand(256 * 1024)]), &[256 * 1024]);
+    }
+
+    #[test]
+    fn deadline_aware_fills_most_urgent_first() {
+        let mut a =
+            PrefetchArbiter::new(ArbiterPolicy::DeadlineAware { target_ns: 1e6 }, 500);
+        let g = a.arbitrate(&[
+            SessionDemand { demand_bytes: 400, mean_latency_ns: 5e5 },
+            SessionDemand { demand_bytes: 400, mean_latency_ns: 2e6 },
+            SessionDemand { demand_bytes: 400, mean_latency_ns: 9e5 },
+        ]);
+        // session 1 is past the deadline: full demand; session 2 is
+        // next-closest and takes the remainder; session 0 starves
+        assert_eq!(g, &[0, 400, 100]);
+    }
+
+    #[test]
+    fn deadline_aware_ties_break_by_session_index() {
+        let mut a =
+            PrefetchArbiter::new(ArbiterPolicy::DeadlineAware { target_ns: 1e6 }, 300);
+        let g = a.arbitrate(&[
+            SessionDemand { demand_bytes: 200, mean_latency_ns: 1e6 },
+            SessionDemand { demand_bytes: 200, mean_latency_ns: 1e6 },
+        ]);
+        assert_eq!(g, &[200, 100]);
+    }
+
+    #[test]
+    fn empty_and_zero_budget_rounds_grant_nothing() {
+        let mut a = PrefetchArbiter::new(ArbiterPolicy::FairShare, 0);
+        assert_eq!(a.arbitrate(&[demand(100)]), &[0]);
+        let mut b = PrefetchArbiter::new(ArbiterPolicy::FairShare, 100);
+        assert!(b.arbitrate(&[]).is_empty());
+        assert_eq!(b.arbitrate(&[demand(0), demand(0)]), &[0, 0]);
+    }
+}

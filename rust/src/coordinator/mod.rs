@@ -14,11 +14,13 @@
 //! right-padded with spaces during the longer prompts' prefill. Padding
 //! only feeds a slot's *own* sequence; slots never attend to each other.
 
+pub mod arbiter;
 mod batcher;
 mod router;
 pub mod session;
 pub mod tcp;
 
+pub use arbiter::{ArbiterPolicy, PrefetchArbiter, SessionDemand};
 pub use batcher::{Batcher, BatcherConfig};
 pub use router::Router;
 pub use session::{run_serve, ServeConfig, ServeOutcome, SessionManager};

@@ -21,7 +21,12 @@
 //!   rotated round-robin so no session is systematically last;
 //! * time is virtual: a token costs its flash stall plus the modeled
 //!   compute window, queueing delay is admission minus arrival, and no
-//!   wall clock feeds any metric — serve reports replay bit-for-bit.
+//!   wall clock feeds any metric — serve reports replay bit-for-bit;
+//! * with prefetch enabled, every session runs the overlapped pipeline
+//!   against the shared device frontier, and a
+//!   [`PrefetchArbiter`](super::arbiter::PrefetchArbiter) divides the
+//!   global speculative byte budget across the round's active sessions
+//!   before any token is served (fair-share or deadline-aware).
 //!
 //! With `sessions == 1` and a shared cache the manager reduces exactly
 //! to the historical single-stream experiment: same trace, same cache
@@ -37,8 +42,10 @@ use crate::cache::{KeySpace, NeuronCache};
 use crate::flash::UfsSim;
 use crate::metrics::{RunMetrics, ServeMetrics, ServeSummary, SessionStats};
 use crate::pipeline::IoPipeline;
+use crate::prefetch::Prefetcher;
 use crate::trace::Trace;
 
+use super::arbiter::{ArbiterPolicy, PrefetchArbiter, SessionDemand};
 use super::{Batcher, BatcherConfig};
 
 /// Knobs of one serving simulation.
@@ -54,6 +61,15 @@ pub struct ServeConfig {
     /// One shared DRAM cache (true) vs per-session private partitions
     /// of the same *total* capacity (false).
     pub shared_cache: bool,
+    /// Policy dividing the global speculative byte budget across the
+    /// round's active sessions (prefetch-enabled workloads only).
+    pub arbiter: ArbiterPolicy,
+    /// Global speculative byte budget per decode round, across ALL
+    /// sessions. `None` defaults to the per-session configured budget
+    /// times `sessions`, so a single session keeps its full budget and
+    /// the run reduces bit-for-bit to the single-stream overlapped
+    /// experiment.
+    pub prefetch_global_budget: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -63,6 +79,8 @@ impl Default for ServeConfig {
             max_concurrent: 4,
             arrival_spacing_ns: 0.0,
             shared_cache: true,
+            arbiter: ArbiterPolicy::FairShare,
+            prefetch_global_budget: None,
         }
     }
 }
@@ -96,6 +114,11 @@ struct Session {
 /// Drives N sessions through one shared cache + flash timeline with
 /// continuous batching. Construct via [`run_serve`] for the standard
 /// workload wiring, or assemble manually for custom experiments.
+///
+/// All loop state lives on the manager (hoisted buffers, pre-sized
+/// recorders), so a steady-state [`step_round`](Self::step_round)
+/// touches the allocator not at all — pinned by
+/// `rust/tests/zero_alloc_decode.rs`.
 pub struct SessionManager {
     cfg: ServeConfig,
     sessions: Vec<Session>,
@@ -103,6 +126,22 @@ pub struct SessionManager {
     caches: Vec<NeuronCache>,
     compute_ns_per_token: f64,
     bundle_bytes: usize,
+    /// Overlapped (prefetch-capable) serve path, enabled by
+    /// [`enable_prefetch`](Self::enable_prefetch).
+    overlapped: bool,
+    compute_ns_per_layer: f64,
+    arbiter: PrefetchArbiter,
+    // ---- run state, hoisted so the steady-state round is alloc-free
+    agg: RunMetrics,
+    serve: ServeMetrics,
+    waiting: Batcher<usize>,
+    anchor: Instant,
+    clock_ns: f64,
+    next_arrival: usize,
+    active: Vec<usize>,
+    demands: Vec<SessionDemand>,
+    done: usize,
+    round: usize,
 }
 
 impl SessionManager {
@@ -119,7 +158,7 @@ impl SessionManager {
         let expected = if cfg.shared_cache { 1 } else { cfg.sessions };
         assert_eq!(caches.len(), expected, "cache count must match sharing mode");
         assert!(cfg.max_concurrent > 0, "need at least one decode slot");
-        let sessions = streams
+        let mut sessions: Vec<Session> = streams
             .into_iter()
             .enumerate()
             .map(|(id, (pipeline, trace))| {
@@ -132,105 +171,214 @@ impl SessionManager {
                 }
             })
             .collect();
-        Self { cfg, sessions, caches, compute_ns_per_token, bundle_bytes }
-    }
-
-    /// Run every session to completion against the shared flash
-    /// timeline; returns (aggregate run metrics, serve metrics).
-    pub fn run(mut self, sim: &mut UfsSim) -> (RunMetrics, ServeMetrics) {
-        let n = self.cfg.sessions;
+        // pre-size every recorder the round loop feeds, so recording
+        // stays off the allocator
+        let total_tokens: usize = sessions.iter().map(|s| s.trace.n_tokens()).sum();
+        for s in &mut sessions {
+            let n = s.trace.n_tokens();
+            s.stats.latency_ns.reserve(n);
+        }
         let mut agg = RunMetrics::new();
+        agg.latency_ns.reserve(total_tokens);
         let mut serve = ServeMetrics {
-            max_concurrent: self.cfg.max_concurrent,
-            shared_cache: self.cfg.shared_cache,
+            max_concurrent: cfg.max_concurrent,
+            shared_cache: cfg.shared_cache,
             ..Default::default()
         };
+        serve.all_latency_ns.reserve(total_tokens);
+        let mut arbiter = PrefetchArbiter::new(cfg.arbiter, 0);
+        arbiter.reserve(cfg.sessions);
         // The Batcher keeps the admission queue FIFO; continuous-batching
         // admission (`pop_upto`) never reads timestamps or deadlines, so
         // every push carries one inert anchor Instant — arrival times
         // live on the virtual clock (`SessionStats::arrival_ns`), and no
         // wall-clock value ever reaches a metric.
-        let anchor = Instant::now();
-        let mut waiting: Batcher<usize> = Batcher::new(BatcherConfig {
-            max_batch: self.cfg.max_concurrent,
+        let waiting = Batcher::new(BatcherConfig {
+            max_batch: cfg.max_concurrent,
             max_wait: Duration::from_secs(3600),
         });
-        let mut clock_ns = 0.0f64;
-        let mut next_arrival = 0usize; // sessions not yet queued
-        let mut active: Vec<usize> = Vec::new(); // slot order
-        let mut done = 0usize;
-        let mut round = 0usize;
-        while done < n {
-            // arrivals due by now enter the admission queue
-            while next_arrival < n
-                && self.sessions[next_arrival].stats.arrival_ns <= clock_ns
-            {
-                waiting.push(next_arrival, anchor);
-                next_arrival += 1;
-            }
-            // continuous batching: free slots admit the oldest waiters
-            let free = self.cfg.max_concurrent - active.len();
-            for sid in waiting.pop_upto(free) {
-                self.sessions[sid].stats.queue_delay_ns =
-                    clock_ns - self.sessions[sid].stats.arrival_ns;
-                active.push(sid);
-            }
-            serve.peak_active = serve.peak_active.max(active.len());
-            if active.is_empty() {
-                // idle server: jump to the next arrival
-                assert!(next_arrival < n, "no active, no waiting, not done");
-                clock_ns = clock_ns.max(self.sessions[next_arrival].stats.arrival_ns);
-                continue;
-            }
-            // one decode round: one token per active session, serially on
-            // the shared device; rotate the start slot so no session is
-            // systematically last in the round.
-            let round_start = clock_ns;
-            let k = active.len();
-            let rot = round % k;
-            let mut leaving: Vec<usize> = Vec::new();
-            for i in 0..k {
-                let sid = active[(rot + i) % k];
-                let cache_idx = if self.cfg.shared_cache { 0 } else { sid };
-                let cache = &mut self.caches[cache_idx];
-                if self.cfg.shared_cache {
-                    cache.set_session(sid as u32);
-                }
-                let sess = &mut self.sessions[sid];
-                let tok = &sess.trace.tokens[sess.next_token];
-                let io = sess.pipeline.step_token(cache, sim, tok);
-                clock_ns += io.stall_ns + self.compute_ns_per_token;
-                let latency = clock_ns - round_start;
-                sess.stats.record_token(&io, latency);
-                serve.all_latency_ns.add(latency);
-                agg.record(&io, self.bundle_bytes);
-                agg.record_compute(self.compute_ns_per_token);
-                sess.next_token += 1;
-                if sess.next_token == sess.trace.n_tokens() {
-                    sess.stats.finished_ns = clock_ns;
-                    leaving.push(sid);
-                }
-            }
-            // sessions leave between tokens; their slots refill next round
-            active.retain(|sid| !leaving.contains(sid));
-            done += leaving.len();
-            round += 1;
+        let active = Vec::with_capacity(cfg.sessions);
+        let demands = Vec::with_capacity(cfg.sessions);
+        Self {
+            cfg,
+            sessions,
+            caches,
+            compute_ns_per_token,
+            bundle_bytes,
+            overlapped: false,
+            compute_ns_per_layer: 0.0,
+            arbiter,
+            agg,
+            serve,
+            waiting,
+            anchor: Instant::now(),
+            clock_ns: 0.0,
+            next_arrival: 0,
+            active,
+            demands,
+            done: 0,
+            round: 0,
         }
+    }
+
+    /// Switch rounds to the overlapped (prefetch-capable) pipeline:
+    /// tokens step through `step_token_overlapped` with this per-layer
+    /// compute window, and a [`PrefetchArbiter`] divides
+    /// `global_budget_bytes` of speculation across the round's active
+    /// sessions before any token is served.
+    pub fn enable_prefetch(&mut self, compute_ns_per_layer: f64, global_budget_bytes: usize) {
+        self.overlapped = true;
+        self.compute_ns_per_layer = compute_ns_per_layer;
+        self.arbiter = PrefetchArbiter::new(self.cfg.arbiter, global_budget_bytes);
+        self.arbiter.reserve(self.cfg.sessions);
+    }
+
+    /// True once every session has decoded its last token.
+    pub fn is_done(&self) -> bool {
+        self.done == self.cfg.sessions
+    }
+
+    /// Divide the global speculative budget across this round's active
+    /// sessions and install the grants before any token is served. A
+    /// session's demand is its configured per-submission budget; its
+    /// urgency (deadline policy) is its observed mean serve latency.
+    fn arbitrate_round(&mut self) {
+        self.demands.clear();
+        for &sid in &self.active {
+            let s = &self.sessions[sid];
+            self.demands.push(SessionDemand {
+                demand_bytes: s.pipeline.prefetch_budget_bytes(),
+                mean_latency_ns: s.stats.mean_latency_ns(),
+            });
+        }
+        let grants = self.arbiter.arbitrate(&self.demands);
+        for (i, &sid) in self.active.iter().enumerate() {
+            self.sessions[sid].pipeline.set_prefetch_grant(Some(grants[i]));
+        }
+    }
+
+    /// Advance the simulation by one scheduler iteration: admit due
+    /// arrivals, then either serve one decode round (one token per
+    /// active session, serially on the shared device, start slot
+    /// rotated round-robin) or jump the clock to the next arrival.
+    /// Returns false once every session has finished.
+    pub fn step_round(&mut self, sim: &mut UfsSim) -> bool {
+        let n = self.cfg.sessions;
+        if self.done == n {
+            return false;
+        }
+        // arrivals due by now enter the admission queue
+        while self.next_arrival < n
+            && self.sessions[self.next_arrival].stats.arrival_ns <= self.clock_ns
+        {
+            self.waiting.push(self.next_arrival, self.anchor);
+            self.next_arrival += 1;
+        }
+        // continuous batching: free slots admit the oldest waiters
+        let free = self.cfg.max_concurrent - self.active.len();
+        for sid in self.waiting.pop_upto(free) {
+            self.sessions[sid].stats.queue_delay_ns =
+                self.clock_ns - self.sessions[sid].stats.arrival_ns;
+            self.active.push(sid);
+        }
+        self.serve.peak_active = self.serve.peak_active.max(self.active.len());
+        if self.active.is_empty() {
+            // idle server: jump to the next arrival
+            assert!(self.next_arrival < n, "no active, no waiting, not done");
+            self.clock_ns =
+                self.clock_ns.max(self.sessions[self.next_arrival].stats.arrival_ns);
+            if self.overlapped {
+                // the device frontier idles through the same gap — an
+                // overlapped submit after the jump must not hide work
+                // under time nobody computed through
+                sim.advance_to(self.clock_ns);
+            }
+            return true;
+        }
+        if self.overlapped {
+            self.arbitrate_round();
+        }
+        let round_start = self.clock_ns;
+        let k = self.active.len();
+        let rot = self.round % k;
+        for i in 0..k {
+            let sid = self.active[(rot + i) % k];
+            let cache_idx = if self.cfg.shared_cache { 0 } else { sid };
+            let cache = &mut self.caches[cache_idx];
+            if self.cfg.shared_cache {
+                cache.set_session(sid as u32);
+            }
+            let sess = &mut self.sessions[sid];
+            let tok = &sess.trace.tokens[sess.next_token];
+            // the i-th session's token starts only after its round
+            // predecessors finish on the shared device
+            let served_at = self.clock_ns;
+            let io = if self.overlapped {
+                sess.pipeline.step_token_overlapped(
+                    cache,
+                    sim,
+                    tok,
+                    self.compute_ns_per_layer,
+                )
+            } else {
+                sess.pipeline.step_token(cache, sim, tok)
+            };
+            self.clock_ns += io.stall_ns + self.compute_ns_per_token;
+            let latency = self.clock_ns - round_start;
+            sess.stats.record_token(&io, latency);
+            sess.stats.record_service_split(
+                io.stall_ns + self.compute_ns_per_token,
+                served_at - round_start,
+            );
+            self.serve.all_latency_ns.add(latency);
+            self.agg.record(&io, self.bundle_bytes);
+            self.agg.record_compute(self.compute_ns_per_token);
+            sess.next_token += 1;
+            if sess.next_token == sess.trace.n_tokens() {
+                sess.stats.finished_ns = self.clock_ns;
+                self.done += 1;
+            }
+        }
+        // sessions leave between tokens; their slots refill next round.
+        // Linear scan (no per-round scratch list, no quadratic
+        // `contains` probe): a session stays active iff it has tokens
+        // left.
+        let sessions = &self.sessions;
+        self.active
+            .retain(|&sid| sessions[sid].next_token < sessions[sid].trace.n_tokens());
+        self.round += 1;
+        self.done < n
+    }
+
+    /// Seal the run: makespan, cache totals, per-session stats.
+    pub fn finish(self) -> (RunMetrics, ServeMetrics) {
+        let SessionManager { sessions, caches, clock_ns, agg, mut serve, .. } = self;
         serve.makespan_ns = clock_ns;
-        for c in &self.caches {
+        for c in &caches {
             serve.cache_hits += c.hits;
             serve.cache_cross_hits += c.cross_hits;
         }
-        serve.sessions = self.sessions.into_iter().map(|s| s.stats).collect();
+        serve.sessions = sessions.into_iter().map(|s| s.stats).collect();
         (agg, serve)
+    }
+
+    /// Run every session to completion against the shared flash
+    /// timeline; returns (aggregate run metrics, serve metrics).
+    pub fn run(mut self, sim: &mut UfsSim) -> (RunMetrics, ServeMetrics) {
+        while self.step_round(sim) {}
+        self.finish()
     }
 }
 
 /// Run a full serving simulation for a workload: placement once (one
 /// model in flash serves everyone), one pipeline + trace per session,
 /// one shared `UfsSim`, and a shared cache or equal-total private
-/// partitions. Synchronous flash timeline only — speculative prefetch
-/// under contention is future work (ROADMAP).
+/// partitions. With `w.prefetch.enabled` every session runs the
+/// overlapped pipeline — speculation and demand from all sessions
+/// contend through the shared device frontier — and a
+/// [`PrefetchArbiter`] divides the global speculative byte budget
+/// across the round's active sessions (`cfg.arbiter`,
+/// `cfg.prefetch_global_budget`).
 pub fn run_serve(
     w: &Workload,
     system: System,
@@ -244,13 +392,24 @@ pub fn run_serve(
         "dense streaming (llamacpp) has no per-session sparsity to share; \
          run it single-stream"
     );
-    anyhow::ensure!(
-        !w.prefetch.enabled,
-        "the serving simulation runs the synchronous flash timeline; \
-         disable prefetch"
-    );
     let calib = w.calibration_trace();
-    let (layouts, placement_secs) = layouts_for(system, &calib, w.knn, w.threads);
+    let overlapped = w.prefetch.enabled;
+    // prefetch-enabled ripple runs reuse the single-stream shared-scan
+    // construction, so `sessions == 1` replays the single-stream
+    // overlapped experiment bit-for-bit (pinned by harness_golden)
+    let mut prefetcher: Option<Prefetcher> = None;
+    let (layouts, placement_secs) = if overlapped && spec.ripple_placement {
+        let t0 = Instant::now();
+        let (layouts, pf) = workloads::ripple_overlapped_artifacts(w, &calib);
+        prefetcher = Some(pf);
+        (layouts, t0.elapsed().as_secs_f64())
+    } else {
+        layouts_for(system, &calib, w.knn, w.threads)
+    };
+    if overlapped && prefetcher.is_none() {
+        // non-ripple placement: no shared scan to reuse
+        prefetcher = Some(Prefetcher::from_trace(&calib, w.prefetch.clone(), w.threads));
+    }
     let space = neuron_space(w);
     let bundle_bytes = space.bundle_bytes;
     let pcfg = workloads::pipeline_config(spec, w, None);
@@ -272,20 +431,32 @@ pub fn run_serve(
         .collect::<anyhow::Result<_>>()?;
     let streams: Vec<(IoPipeline, Trace)> = (0..cfg.sessions)
         .map(|sid| {
-            (
-                IoPipeline::new(pcfg.clone(), space.clone(), layouts.clone()),
-                w.session_eval_trace(&w.dataset, sid),
-            )
+            let mut pipeline = IoPipeline::new(pcfg.clone(), space.clone(), layouts.clone());
+            if let Some(pf) = &prefetcher {
+                pipeline.set_prefetcher(Some(pf.clone()));
+            }
+            (pipeline, w.session_eval_trace(&w.dataset, sid))
         })
         .collect();
     let compute_ns_per_token = w.compute_ns_per_layer * w.sim_layers as f64;
     let mut sim = UfsSim::new(w.device.clone(), space.image_bytes());
-    let manager =
+    let mut manager =
         SessionManager::new(cfg.clone(), streams, caches, compute_ns_per_token, bundle_bytes);
+    if overlapped {
+        let global = cfg
+            .prefetch_global_budget
+            .unwrap_or_else(|| w.prefetch.budget_bytes.saturating_mul(cfg.sessions));
+        manager.enable_prefetch(w.compute_ns_per_layer, global);
+    }
     let t_decode = Instant::now();
     let (metrics, mut serve) = manager.run(&mut sim);
     let decode_wall_secs = t_decode.elapsed().as_secs_f64();
-    let summary = serve.summary(w.layer_scale(), metrics.cache_hit_ratio());
+    let mut summary = serve.summary(w.layer_scale(), metrics.cache_hit_ratio());
+    if overlapped {
+        summary.prefetch_hit_bundles = metrics.totals.prefetch_hit_bundles;
+        summary.prefetch_wasted_bundles = metrics.totals.prefetch_wasted_bundles;
+        summary.session_prefetch = serve.prefetch_attribution(w.layer_scale(), bundle_bytes);
+    }
     Ok(ServeOutcome {
         metrics,
         serve,
@@ -344,6 +515,7 @@ mod tests {
             max_concurrent: 4,
             arrival_spacing_ns: 0.0,
             shared_cache: true,
+            ..Default::default()
         });
         let spread = tiny_serve(ServeConfig {
             sessions: 4,
@@ -351,6 +523,7 @@ mod tests {
             // huge spacing: sessions run essentially alone
             arrival_spacing_ns: 1e12,
             shared_cache: true,
+            ..Default::default()
         });
         assert!(
             spread.summary.p95_ms <= packed.summary.p95_ms,
@@ -378,14 +551,73 @@ mod tests {
     }
 
     #[test]
-    fn serve_rejects_dense_and_prefetch() {
+    fn serve_rejects_dense() {
         let mut w = tiny_workload();
         w.eval_tokens = 4;
         let dense = SystemSpec::of(System::LlamaCpp, w.model.ffn_linears);
         assert!(run_serve(&w, System::LlamaCpp, dense, &ServeConfig::default()).is_err());
-        let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+    }
+
+    fn tiny_prefetch_serve(cfg: ServeConfig) -> ServeOutcome {
+        let mut w = tiny_workload();
+        w.eval_tokens = 12;
         w.prefetch.enabled = true;
-        assert!(run_serve(&w, System::Ripple, spec, &ServeConfig::default()).is_err());
+        let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+        run_serve(&w, System::Ripple, spec, &cfg).unwrap()
+    }
+
+    #[test]
+    fn prefetch_serve_attributes_speculation_per_session() {
+        let out = tiny_prefetch_serve(ServeConfig { sessions: 3, ..Default::default() });
+        assert_eq!(out.summary.session_prefetch.len(), 3);
+        // per-session attribution must sum to the aggregate totals
+        let hits: u64 =
+            out.summary.session_prefetch.iter().map(|r| r.prefetch_hit_bundles).sum();
+        let waste: u64 =
+            out.summary.session_prefetch.iter().map(|r| r.prefetch_wasted_bundles).sum();
+        assert_eq!(hits, out.metrics.totals.prefetch_hit_bundles);
+        assert_eq!(waste, out.metrics.totals.prefetch_wasted_bundles);
+        assert_eq!(out.summary.prefetch_hit_bundles, hits);
+        assert_eq!(out.summary.prefetch_wasted_bundles, waste);
+        // the latency split reconstructs each session's mean latency
+        for s in &out.serve.sessions {
+            let split = s.mean_service_ns() + s.mean_round_queue_ns();
+            assert!(
+                (split - s.mean_latency_ns()).abs() < 1e-6 * s.mean_latency_ns().max(1.0),
+                "split {split} vs latency {}",
+                s.mean_latency_ns()
+            );
+        }
+    }
+
+    #[test]
+    fn prefetch_off_summary_carries_no_attribution() {
+        let out = tiny_serve(ServeConfig { sessions: 2, ..Default::default() });
+        assert!(out.summary.session_prefetch.is_empty());
+        assert_eq!(out.summary.prefetch_hit_bundles, 0);
+        assert_eq!(out.summary.prefetch_wasted_bundles, 0);
+    }
+
+    #[test]
+    fn deadline_arbiter_serve_is_deterministic() {
+        let cfg = ServeConfig {
+            sessions: 3,
+            arbiter: ArbiterPolicy::DeadlineAware { target_ns: 5e5 },
+            prefetch_global_budget: Some(64 * 1024),
+            ..Default::default()
+        };
+        let a = tiny_prefetch_serve(cfg.clone());
+        let b = tiny_prefetch_serve(cfg);
+        assert_eq!(
+            a.metrics.totals.elapsed_ns.to_bits(),
+            b.metrics.totals.elapsed_ns.to_bits()
+        );
+        assert_eq!(a.metrics.totals.bytes, b.metrics.totals.bytes);
+        assert_eq!(a.summary.p99_ms.to_bits(), b.summary.p99_ms.to_bits());
+        assert_eq!(
+            a.summary.prefetch_hit_bundles + a.summary.prefetch_wasted_bundles,
+            b.summary.prefetch_hit_bundles + b.summary.prefetch_wasted_bundles
+        );
     }
 
     #[test]

@@ -8,12 +8,13 @@
 
 use crate::bench::workloads::System;
 use crate::cache::Admission;
+use crate::coordinator::ArbiterPolicy;
 
 use super::scenario::{PrefetchPoint, ScenarioMatrix, ScenarioSpec, ServePoint};
 
 /// Every preset name `preset` accepts.
 pub fn preset_names() -> &'static [&'static str] {
-    &["smoke", "fig01", "fig10", "fig18", "ablations", "serve", "perf"]
+    &["smoke", "fig01", "fig10", "fig18", "ablations", "serve", "serve-prefetch", "perf"]
 }
 
 /// Resolve a preset name to its matrix.
@@ -25,6 +26,7 @@ pub fn preset(name: &str) -> anyhow::Result<ScenarioMatrix> {
         "fig18" => fig18(),
         "ablations" => ablations(),
         "serve" => serve(),
+        "serve-prefetch" => serve_prefetch(),
         "perf" => perf(),
         _ => anyhow::bail!(
             "unknown preset `{name}` (available: {})",
@@ -133,6 +135,54 @@ fn serve() -> ScenarioMatrix {
         }
     }
     m.serve = points;
+    m
+}
+
+/// Multi-session speculative prefetch under contention: {sync,
+/// 256 KiB prefetch} × session count on shared-cache RIPPLE points,
+/// plus hand-written arbiter-policy × global-budget rows at the
+/// 4-session maximum-contention point. The sync rows are the
+/// prefetch-off contention baselines the report deltas anchor on; the
+/// `s1` prefetch row is the continuity anchor that reduces bit-for-bit
+/// to the single-stream overlapped experiment (pinned by
+/// `rust/tests/harness_golden.rs`).
+fn serve_prefetch() -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new("serve-prefetch");
+    m.systems = vec![System::Ripple];
+    m.prefetch = vec![PrefetchPoint::sync(), PrefetchPoint::budget_kb(256)];
+    m.serve = vec![
+        Some(ServePoint::shared(1)),
+        Some(ServePoint::shared(2)),
+        Some(ServePoint::shared(4)),
+        Some(ServePoint::shared(8)),
+    ];
+    // product rows stay on the fair-share default (arbiter knobs are
+    // rejected on the sync rows); policy and budget variants are
+    // hand-written on the contended 4-session point
+    for (label, point) in [
+        (
+            "s4-deadline",
+            ServePoint::shared(4)
+                .with_arbiter(ArbiterPolicy::DeadlineAware { target_ns: 2e6 }),
+        ),
+        (
+            "s4-fair-g128",
+            ServePoint::shared(4)
+                .with_arbiter(ArbiterPolicy::FairShare)
+                .with_global_budget(128 * 1024),
+        ),
+        (
+            "s4-deadline-g128",
+            ServePoint::shared(4)
+                .with_arbiter(ArbiterPolicy::DeadlineAware { target_ns: 2e6 })
+                .with_global_budget(128 * 1024),
+        ),
+    ] {
+        let mut s = ScenarioSpec::new(label, "OPT-350M", System::Ripple);
+        s.prefetch = PrefetchPoint::budget_kb(256);
+        s.serve = Some(point);
+        m.extra.push(s);
+    }
     m
 }
 
@@ -278,6 +328,33 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn serve_prefetch_preset_sweeps_arbiter_budget_and_sessions() {
+        let specs = preset("serve-prefetch").unwrap().expand();
+        // {sync, pf256KB} x {1, 2, 4, 8} sessions + 3 arbiter extras
+        assert_eq!(specs.len(), 2 * 4 + 3);
+        assert!(specs.iter().all(|s| s.serve.is_some()));
+        // sync rows are the prefetch-off contention baselines
+        assert_eq!(specs.iter().filter(|s| !s.prefetch.enabled).count(), 4);
+        // the single-session prefetch row is the single-stream anchor
+        assert!(specs
+            .iter()
+            .any(|s| s.prefetch.enabled && s.serve.unwrap().sessions == 1));
+        // both policies and an explicit global budget appear
+        assert!(specs.iter().any(|s| matches!(
+            s.serve.unwrap().arbiter,
+            Some(ArbiterPolicy::DeadlineAware { .. })
+        )));
+        assert!(specs
+            .iter()
+            .any(|s| s.serve.unwrap().prefetch_global_budget == Some(128 * 1024)));
+        // every row passes workload validation
+        for s in &specs {
+            s.workload().unwrap();
+        }
+        assert_eq!(specs[0].seed, 7, "rows run on the bench seed");
     }
 
     #[test]

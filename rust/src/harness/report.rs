@@ -251,6 +251,32 @@ impl SweepReport {
             out.push_str("|---|---|---|---|---|---|---|\n");
             out.push_str(&deltas);
         }
+        // per-session speculative-prefetch attribution, arbitrated rows only
+        let mut attrib = String::new();
+        for r in &rows {
+            let sv = r.outcome.serve.as_ref().unwrap();
+            for p in &sv.session_prefetch {
+                attrib.push_str(&format!(
+                    "| {} | {} | {} | {} | {:.0}% | {:.2} | {:.2} |\n",
+                    r.spec.name,
+                    p.id,
+                    p.prefetch_hit_bundles,
+                    p.prefetch_wasted_bundles,
+                    p.overlap_ratio * 100.0,
+                    p.mean_service_ms,
+                    p.mean_round_queue_ms,
+                ));
+            }
+        }
+        if !attrib.is_empty() {
+            out.push_str("\n### Speculative prefetch attribution (per session)\n\n");
+            out.push_str(
+                "| scenario | session | pf hit | pf wasted | overlap | service ms \
+                 | round queue ms |\n",
+            );
+            out.push_str("|---|---|---|---|---|---|---|\n");
+            out.push_str(&attrib);
+        }
     }
 
     /// Decode-throughput table (§Perf): simulated tokens per wall-clock
@@ -320,36 +346,97 @@ fn admission_label(a: Option<Admission>) -> String {
 }
 
 /// Serve-point spec object (`null` for single-stream scenarios).
+/// Arbiter knobs serialize only when explicitly set, so prefetch-off
+/// serve reports stay byte-identical to pre-arbiter baselines.
 fn serve_spec_json(spec: &ScenarioSpec) -> Json {
+    use crate::coordinator::ArbiterPolicy;
     match &spec.serve {
         None => Json::Null,
-        Some(sv) => json::obj(vec![
-            ("sessions", json::num(sv.sessions as f64)),
-            ("max_concurrent", json::num(sv.max_concurrent as f64)),
-            ("arrival_spacing_ms", json::num(sv.arrival_spacing_ms)),
-            ("shared_cache", Json::Bool(sv.shared_cache)),
-        ]),
+        Some(sv) => {
+            let mut fields = vec![
+                ("sessions", json::num(sv.sessions as f64)),
+                ("max_concurrent", json::num(sv.max_concurrent as f64)),
+                ("arrival_spacing_ms", json::num(sv.arrival_spacing_ms)),
+                ("shared_cache", Json::Bool(sv.shared_cache)),
+            ];
+            match sv.arbiter {
+                None => {}
+                Some(ArbiterPolicy::FairShare) => {
+                    fields.push(("arbiter", json::s("fair")));
+                }
+                Some(ArbiterPolicy::DeadlineAware { target_ns }) => {
+                    fields.push(("arbiter", json::s("deadline")));
+                    fields.push(("arbiter_deadline_target_ms", json::num(target_ns / 1e6)));
+                }
+            }
+            if let Some(b) = sv.prefetch_global_budget {
+                fields.push(("prefetch_global_budget_bytes", json::num(b as f64)));
+            }
+            json::obj(fields)
+        }
     }
 }
 
 /// Serve outcome object (`null` for single-stream scenarios).
+/// Per-session speculative-prefetch attribution serializes only for
+/// prefetch-enabled serve rows (`session_prefetch` non-empty), keeping
+/// synchronous-timeline rows byte-identical to pre-arbiter baselines.
 fn serve_metrics_json(r: &ScenarioResult) -> Json {
     match &r.outcome.serve {
         None => Json::Null,
-        Some(sv) => json::obj(vec![
-            ("sessions", json::num(sv.sessions as f64)),
-            ("peak_active", json::num(sv.peak_active as f64)),
-            ("tokens", json::num(sv.tokens as f64)),
-            ("p50_ms", json::num(sv.p50_ms)),
-            ("p95_ms", json::num(sv.p95_ms)),
-            ("p99_ms", json::num(sv.p99_ms)),
-            ("mean_ms", json::num(sv.mean_ms)),
-            ("mean_queue_delay_ms", json::num(sv.mean_queue_delay_ms)),
-            ("fairness", json::num(sv.fairness)),
-            ("cache_hit_ratio", json::num(sv.cache_hit_ratio)),
-            ("cross_session_hit_ratio", json::num(sv.cross_session_hit_ratio)),
-            ("makespan_ms", json::num(sv.makespan_ms)),
-        ]),
+        Some(sv) => {
+            let mut fields = vec![
+                ("sessions", json::num(sv.sessions as f64)),
+                ("peak_active", json::num(sv.peak_active as f64)),
+                ("tokens", json::num(sv.tokens as f64)),
+                ("p50_ms", json::num(sv.p50_ms)),
+                ("p95_ms", json::num(sv.p95_ms)),
+                ("p99_ms", json::num(sv.p99_ms)),
+                ("mean_ms", json::num(sv.mean_ms)),
+                ("mean_queue_delay_ms", json::num(sv.mean_queue_delay_ms)),
+                ("fairness", json::num(sv.fairness)),
+                ("cache_hit_ratio", json::num(sv.cache_hit_ratio)),
+                ("cross_session_hit_ratio", json::num(sv.cross_session_hit_ratio)),
+                ("makespan_ms", json::num(sv.makespan_ms)),
+            ];
+            if !sv.session_prefetch.is_empty() {
+                fields.push((
+                    "prefetch_hit_bundles",
+                    json::num(sv.prefetch_hit_bundles as f64),
+                ));
+                fields.push((
+                    "prefetch_wasted_bundles",
+                    json::num(sv.prefetch_wasted_bundles as f64),
+                ));
+                let per_session: Vec<Json> = sv
+                    .session_prefetch
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("id", json::num(p.id as f64)),
+                            (
+                                "prefetch_hit_bundles",
+                                json::num(p.prefetch_hit_bundles as f64),
+                            ),
+                            (
+                                "prefetch_wasted_bundles",
+                                json::num(p.prefetch_wasted_bundles as f64),
+                            ),
+                            ("prefetch_hit_bytes", json::num(p.prefetch_hit_bytes as f64)),
+                            (
+                                "prefetch_wasted_bytes",
+                                json::num(p.prefetch_wasted_bytes as f64),
+                            ),
+                            ("overlap_ratio", json::num(p.overlap_ratio)),
+                            ("mean_service_ms", json::num(p.mean_service_ms)),
+                            ("mean_round_queue_ms", json::num(p.mean_round_queue_ms)),
+                        ])
+                    })
+                    .collect();
+                fields.push(("session_prefetch", json::arr(per_session)));
+            }
+            json::obj(fields)
+        }
     }
 }
 
@@ -542,12 +629,7 @@ mod tests {
     fn fake_serve_result(name: &str, shared: bool, hit: f64, mean_ms: f64) -> ScenarioResult {
         use crate::harness::scenario::ServePoint;
         use crate::metrics::ServeSummary;
-        let point = ServePoint {
-            sessions: 4,
-            max_concurrent: 4,
-            arrival_spacing_ms: 0.0,
-            shared_cache: shared,
-        };
+        let point = ServePoint { shared_cache: shared, ..ServePoint::shared(4) };
         let mut r = fake_result(name, 1e6);
         r.spec.name = format!("{name}/{}", point.label());
         r.spec.serve = Some(point);
@@ -566,6 +648,7 @@ mod tests {
             cache_hit_ratio: hit,
             cross_session_hit_ratio: if shared { 0.3 } else { 0.0 },
             makespan_ms: 100.0,
+            ..Default::default()
         });
         r
     }
@@ -674,6 +757,11 @@ mod tests {
         assert!(text.contains("\"cross_session_hit_ratio\""));
         assert!(text.contains("\"p99_ms\""));
         assert!(text.contains("\"shared_cache\":true"));
+        // default points carry no arbiter knobs and no attribution —
+        // the serialized row matches pre-arbiter baselines byte-for-byte
+        assert!(!text.contains("\"arbiter\""));
+        assert!(!text.contains("\"prefetch_global_budget_bytes\""));
+        assert!(!text.contains("\"session_prefetch\""));
         // old baselines (io/e2e only) still parse the new schema
         let base = Baseline::parse(&text).unwrap();
         assert_eq!(base.len(), 2);
@@ -685,6 +773,63 @@ mod tests {
         assert!(md.contains("+20.0pp"), "{md}");
         assert!(md.contains("| shared |"));
         assert!(md.contains("| private |"));
+    }
+
+    #[test]
+    fn arbitrated_serve_rows_serialize_attribution_and_knobs() {
+        use crate::coordinator::ArbiterPolicy;
+        use crate::metrics::SessionPrefetchSummary;
+        let mut r = fake_serve_result("pf", true, 0.6, 2.0);
+        let point = r
+            .spec
+            .serve
+            .take()
+            .unwrap()
+            .with_arbiter(ArbiterPolicy::DeadlineAware { target_ns: 2e6 })
+            .with_global_budget(128 * 1024);
+        r.spec.serve = Some(point);
+        let sv = r.outcome.serve.as_mut().unwrap();
+        sv.prefetch_hit_bundles = 7;
+        sv.prefetch_wasted_bundles = 3;
+        sv.session_prefetch = vec![
+            SessionPrefetchSummary {
+                id: 0,
+                prefetch_hit_bundles: 4,
+                prefetch_wasted_bundles: 1,
+                prefetch_hit_bytes: 400,
+                prefetch_wasted_bytes: 100,
+                overlap_ratio: 0.5,
+                mean_service_ms: 1.5,
+                mean_round_queue_ms: 0.5,
+            },
+            SessionPrefetchSummary {
+                id: 1,
+                prefetch_hit_bundles: 3,
+                prefetch_wasted_bundles: 2,
+                prefetch_hit_bytes: 300,
+                prefetch_wasted_bytes: 200,
+                overlap_ratio: 0.25,
+                mean_service_ms: 1.75,
+                mean_round_queue_ms: 0.25,
+            },
+        ];
+        let report = SweepReport { name: "pf".to_string(), results: vec![r] };
+        let text = report.json_string();
+        assert!(text.contains("\"arbiter\":\"deadline\""), "{text}");
+        assert!(text.contains("\"arbiter_deadline_target_ms\":2"), "{text}");
+        assert!(text.contains("\"prefetch_global_budget_bytes\":131072"), "{text}");
+        assert!(text.contains("\"session_prefetch\":["), "{text}");
+        assert!(text.contains("\"mean_service_ms\""), "{text}");
+        assert!(text.contains("\"mean_round_queue_ms\""), "{text}");
+        // old baselines still parse the extended schema
+        let base = Baseline::parse(&text).unwrap();
+        assert_eq!(base.len(), 1);
+
+        let md = report.to_markdown(None);
+        assert!(md.contains("### Speculative prefetch attribution (per session)"), "{md}");
+        assert!(md.contains("| 0 | 4 | 1 | 50% |"), "{md}");
+        // serialization is still a pure function of the inputs
+        assert_eq!(text, report.json_string());
     }
 
     #[test]

@@ -112,22 +112,21 @@ fn run_serve_point(
     sspec: SystemSpec,
 ) -> anyhow::Result<ExperimentResult> {
     anyhow::ensure!(
-        !w.prefetch.enabled,
-        "scenario `{}`: serve points run the synchronous timeline; \
-         use a sync prefetch point",
-        spec.name
-    );
-    anyhow::ensure!(
         spec.admission.is_none() && spec.fixed_threshold.is_none(),
         "scenario `{}`: ablation knobs are not supported on serve points",
         spec.name
     );
-    let cfg = ServeConfig {
+    let mut cfg = ServeConfig {
         sessions: sv.sessions,
         max_concurrent: sv.max_concurrent,
         arrival_spacing_ns: sv.arrival_spacing_ms * 1e6,
         shared_cache: sv.shared_cache,
+        ..ServeConfig::default()
     };
+    if let Some(policy) = sv.arbiter {
+        cfg.arbiter = policy;
+    }
+    cfg.prefetch_global_budget = sv.prefetch_global_budget;
     let out = run_serve(w, spec.system, sspec, &cfg)
         .map_err(|e| anyhow::anyhow!("scenario `{}`: {e:#}", spec.name))?;
     Ok(ExperimentResult {
@@ -254,15 +253,10 @@ mod tests {
     #[test]
     fn serve_point_runs_and_reports_summary() {
         let mut s = tiny_spec("serve-2");
-        s.serve = Some(ServePoint {
-            sessions: 2,
-            max_concurrent: 2,
-            arrival_spacing_ms: 0.0,
-            shared_cache: true,
-        });
+        s.serve = Some(ServePoint { max_concurrent: 2, ..ServePoint::shared(2) });
         let r = run_scenario(&s, 1).unwrap();
         assert_eq!(r.metrics.tokens, 32, "2 sessions x 16 eval tokens");
-        let sv = r.serve.expect("serve summary");
+        let sv = r.serve.as_ref().expect("serve summary");
         assert_eq!(sv.sessions, 2);
         assert_eq!(sv.tokens, 32);
         assert!(sv.shared_cache);
@@ -271,17 +265,8 @@ mod tests {
     }
 
     #[test]
-    fn serve_point_rejects_prefetch_and_ablation_knobs() {
-        let sv = ServePoint {
-            sessions: 2,
-            max_concurrent: 2,
-            arrival_spacing_ms: 0.0,
-            shared_cache: true,
-        };
-        let mut s = tiny_spec("serve-pf");
-        s.serve = Some(sv);
-        s.prefetch = PrefetchPoint::budget_kb(64);
-        assert!(run_scenario(&s, 1).is_err());
+    fn serve_point_rejects_ablation_knobs_and_dense() {
+        let sv = ServePoint { max_concurrent: 2, ..ServePoint::shared(2) };
         let mut s = tiny_spec("serve-abl");
         s.serve = Some(sv);
         s.fixed_threshold = Some(4);
@@ -290,6 +275,29 @@ mod tests {
         s.serve = Some(sv);
         s.system = System::LlamaCpp;
         assert!(run_scenario(&s, 1).is_err());
+    }
+
+    #[test]
+    fn prefetch_serve_point_runs_overlapped_with_attribution() {
+        let mut s = tiny_spec("serve-pf");
+        s.prefetch = PrefetchPoint::budget_kb(64);
+        s.serve = Some(
+            ServePoint { max_concurrent: 2, ..ServePoint::shared(2) }
+                .with_arbiter(crate::coordinator::ArbiterPolicy::FairShare),
+        );
+        let r = run_scenario(&s, 1).unwrap();
+        let sv = r.serve.as_ref().expect("serve summary");
+        assert_eq!(sv.sessions, 2);
+        assert_eq!(sv.session_prefetch.len(), 2);
+        let hits: u64 = sv.session_prefetch.iter().map(|p| p.prefetch_hit_bundles).sum();
+        let waste: u64 =
+            sv.session_prefetch.iter().map(|p| p.prefetch_wasted_bundles).sum();
+        assert_eq!(hits, r.metrics.totals.prefetch_hit_bundles);
+        assert_eq!(waste, r.metrics.totals.prefetch_wasted_bundles);
+        assert!(
+            r.overlap_ratio() > 0.0,
+            "prefetch serve rows run the overlapped timeline"
+        );
     }
 
     #[test]

@@ -15,6 +15,7 @@
 use crate::bench::workloads::{System, SystemSpec, Workload};
 use crate::cache::Admission;
 use crate::config::{device_by_name, model_by_name, Precision};
+use crate::coordinator::ArbiterPolicy;
 use crate::trace::DatasetProfile;
 
 /// One point on the prefetch axis of a matrix.
@@ -64,13 +65,27 @@ pub struct ServePoint {
     pub arrival_spacing_ms: f64,
     /// Shared cache (true) vs private per-session partitions (false).
     pub shared_cache: bool,
+    /// Prefetch-budget arbiter policy override; `None` keeps the
+    /// fair-share default — and the historical label, so prefetch-off
+    /// serve rows keep matching old baselines.
+    pub arbiter: Option<ArbiterPolicy>,
+    /// Global speculative byte budget across sessions per round; `None`
+    /// defaults to per-session budget × sessions.
+    pub prefetch_global_budget: Option<usize>,
 }
 
 impl ServePoint {
     /// A `sessions`-user shared-cache point, 4 decode slots, arrivals
     /// packed at t=0 (the maximum-contention configuration).
     pub fn shared(sessions: usize) -> Self {
-        Self { sessions, max_concurrent: 4, arrival_spacing_ms: 0.0, shared_cache: true }
+        Self {
+            sessions,
+            max_concurrent: 4,
+            arrival_spacing_ms: 0.0,
+            shared_cache: true,
+            arbiter: None,
+            prefetch_global_budget: None,
+        }
     }
 
     /// The same point with private per-session caches (equal total
@@ -79,23 +94,60 @@ impl ServePoint {
         Self { shared_cache: false, ..Self::shared(sessions) }
     }
 
+    /// The same point with an explicit arbiter policy (prefetch-enabled
+    /// serve rows only).
+    pub fn with_arbiter(mut self, policy: ArbiterPolicy) -> Self {
+        self.arbiter = Some(policy);
+        self
+    }
+
+    /// The same point with an explicit global speculative byte budget.
+    pub fn with_global_budget(mut self, bytes: usize) -> Self {
+        self.prefetch_global_budget = Some(bytes);
+        self
+    }
+
+    /// Arbiter/budget label suffix; empty for default points so old
+    /// scenario names (and their baselines) stay unchanged.
+    fn arbiter_suffix(&self) -> String {
+        let mut out = String::new();
+        match self.arbiter {
+            None => {}
+            Some(ArbiterPolicy::FairShare) => out.push_str("-fair"),
+            Some(ArbiterPolicy::DeadlineAware { target_ns }) => {
+                out.push_str(&format!("-dl{}ms", target_ns / 1e6));
+            }
+        }
+        if let Some(b) = self.prefetch_global_budget {
+            out.push_str(&format!("-g{}KB", b / 1024));
+        }
+        out
+    }
+
     /// Stable label used in scenario names
-    /// (`s<N>c<slots>-a<ms>ms-<shared|priv>`).
+    /// (`s<N>c<slots>-a<ms>ms-<shared|priv>[-<arbiter>][-g<kb>KB]`).
     pub fn label(&self) -> String {
         format!(
-            "s{}c{}-a{}ms-{}",
+            "s{}c{}-a{}ms-{}{}",
             self.sessions,
             self.max_concurrent,
             self.arrival_spacing_ms,
-            if self.shared_cache { "shared" } else { "priv" }
+            if self.shared_cache { "shared" } else { "priv" },
+            self.arbiter_suffix()
         )
     }
 
     /// The label's sharing-independent prefix — shared and private rows
-    /// of the same (sessions, slots, arrival) point share it, which is
-    /// how the report pairs them for the delta table.
+    /// of the same (sessions, slots, arrival, arbiter) point share it,
+    /// which is how the report pairs them for the delta table.
     pub fn pair_key(&self) -> String {
-        format!("s{}c{}-a{}ms", self.sessions, self.max_concurrent, self.arrival_spacing_ms)
+        format!(
+            "s{}c{}-a{}ms{}",
+            self.sessions,
+            self.max_concurrent,
+            self.arrival_spacing_ms,
+            self.arbiter_suffix()
+        )
     }
 }
 
@@ -214,6 +266,22 @@ impl ScenarioSpec {
                     "scenario `{}`: arrival spacing must be finite and >= 0",
                     self.name
                 );
+            }
+            if (sv.arbiter.is_some() || sv.prefetch_global_budget.is_some())
+                && !self.prefetch.enabled
+            {
+                anyhow::bail!(
+                    "scenario `{}`: arbiter knobs need a prefetch-enabled point",
+                    self.name
+                );
+            }
+            if let Some(ArbiterPolicy::DeadlineAware { target_ns }) = sv.arbiter {
+                if !target_ns.is_finite() || target_ns <= 0.0 {
+                    anyhow::bail!(
+                        "scenario `{}`: deadline target must be finite and > 0",
+                        self.name
+                    );
+                }
             }
         }
         let model = model_by_name(&self.model)?;
@@ -567,6 +635,47 @@ mod tests {
         assert!(spec.workload().is_err());
         spec.serve = Some(ServePoint::shared(2));
         assert!(spec.workload().is_ok());
+        // arbiter knobs require a prefetch-enabled point
+        spec.serve = Some(ServePoint::shared(2).with_arbiter(ArbiterPolicy::FairShare));
+        assert!(spec.workload().is_err());
+        spec.serve = Some(ServePoint::shared(2).with_global_budget(64 * 1024));
+        assert!(spec.workload().is_err());
+        spec.prefetch = PrefetchPoint::budget_kb(64);
+        assert!(spec.workload().is_ok());
+        // deadline target must be positive and finite
+        spec.serve = Some(
+            ServePoint::shared(2)
+                .with_arbiter(ArbiterPolicy::DeadlineAware { target_ns: 0.0 }),
+        );
+        assert!(spec.workload().is_err());
+        spec.serve = Some(
+            ServePoint::shared(2)
+                .with_arbiter(ArbiterPolicy::DeadlineAware { target_ns: 1e6 }),
+        );
+        assert!(spec.workload().is_ok());
+    }
+
+    #[test]
+    fn arbiter_points_extend_labels_without_touching_defaults() {
+        // default points keep the historical label and pair key
+        assert_eq!(ServePoint::shared(4).label(), "s4c4-a0ms-shared");
+        assert_eq!(ServePoint::shared(4).pair_key(), "s4c4-a0ms");
+        let fair = ServePoint::shared(4)
+            .with_arbiter(ArbiterPolicy::FairShare)
+            .with_global_budget(128 * 1024);
+        assert_eq!(fair.label(), "s4c4-a0ms-shared-fair-g128KB");
+        let dl = ServePoint::private(2)
+            .with_arbiter(ArbiterPolicy::DeadlineAware { target_ns: 2e6 });
+        assert_eq!(dl.label(), "s2c4-a0ms-priv-dl2ms");
+        // shared/private partners still pair across the arbiter axis
+        assert_eq!(
+            fair.pair_key(),
+            ServePoint::private(4)
+                .with_arbiter(ArbiterPolicy::FairShare)
+                .with_global_budget(128 * 1024)
+                .pair_key()
+        );
+        assert_ne!(fair.pair_key(), ServePoint::shared(4).pair_key());
     }
 
     #[test]

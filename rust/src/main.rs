@@ -24,7 +24,7 @@ use anyhow::Result;
 
 use ripple::bench::workloads::{self, System, SystemSpec, Workload};
 use ripple::config::{device_by_name, devices, model_by_name, models};
-use ripple::coordinator::{run_serve, ServeConfig, Server, ServerOptions};
+use ripple::coordinator::{run_serve, ArbiterPolicy, ServeConfig, Server, ServerOptions};
 use ripple::engine::{Engine, EngineOptions};
 use ripple::harness;
 use ripple::runtime::default_artifacts_dir;
@@ -87,6 +87,12 @@ fn print_help() {
                    p99 latency, queueing delay, fairness, cross-session\n\
                    cache reuse); --private-cache splits the same total\n\
                    DRAM into per-session partitions for comparison\n\
+                   --sessions with --prefetch runs each stream on the\n\
+                   overlapped flash timeline; a per-round arbiter splits\n\
+                   one global speculative byte budget across sessions:\n\
+                   [--arbiter <fair|deadline>] [--deadline-target-ms <f>]\n\
+                   [--prefetch-global-budget-kb <n>] (default global\n\
+                   budget: per-session budget x sessions)\n\
          bench:    --preset <name> [--threads <n>] [--baseline <BENCH_x.json>]\n\
                    [--out <dir>] | --list\n\
                    runs a scenario matrix, prints the Markdown report and\n\
@@ -280,18 +286,45 @@ fn simulate(args: &Args) -> Result<()> {
 
 /// `simulate --sessions N`: the multi-session serving simulation —
 /// N continuous-batched decode streams through one shared DRAM cache
-/// and one shared flash timeline (DESIGN.md §Serving).
+/// and one shared flash timeline (DESIGN.md §Serving). With
+/// `--prefetch` each stream decodes on the overlapped timeline and a
+/// per-round arbiter divides one global speculative byte budget.
 fn simulate_serve(args: &Args, w: &Workload, system: System) -> Result<()> {
+    let arbiter = match args.get("arbiter") {
+        None => None,
+        Some("fair") => Some(ArbiterPolicy::FairShare),
+        Some("deadline") => Some(ArbiterPolicy::DeadlineAware {
+            target_ns: args.get_f64("deadline-target-ms", 2.0)? * 1e6,
+        }),
+        Some(other) => anyhow::bail!("--arbiter expects fair|deadline, got `{other}`"),
+    };
     anyhow::ensure!(
-        !w.prefetch.enabled,
-        "--sessions runs the synchronous flash timeline; drop --prefetch"
+        w.prefetch.enabled
+            || (arbiter.is_none() && args.get("prefetch-global-budget-kb").is_none()),
+        "--arbiter/--prefetch-global-budget-kb need --prefetch"
     );
-    let cfg = ServeConfig {
+    if let Some(ArbiterPolicy::DeadlineAware { target_ns }) = arbiter {
+        anyhow::ensure!(
+            target_ns.is_finite() && target_ns > 0.0,
+            "--deadline-target-ms must be positive"
+        );
+    }
+    let mut cfg = ServeConfig {
         sessions: args.get_usize("sessions", 4)?,
         max_concurrent: args.get_usize("max-concurrent", 4)?,
         arrival_spacing_ns: args.get_f64("session-arrival-ms", 0.0)? * 1e6,
         shared_cache: !args.flag("private-cache"),
+        ..ServeConfig::default()
     };
+    if let Some(policy) = arbiter {
+        cfg.arbiter = policy;
+    }
+    if let Some(kb) = args.get("prefetch-global-budget-kb") {
+        let kb: usize = kb
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--prefetch-global-budget-kb expects an integer"))?;
+        cfg.prefetch_global_budget = Some(kb * 1024);
+    }
     let sspec = SystemSpec::of(system, w.model.ffn_linears);
     let out = run_serve(w, system, sspec, &cfg)?;
     let scale = w.layer_scale();
@@ -333,6 +366,27 @@ fn simulate_serve(args: &Args, w: &Workload, system: System) -> Result<()> {
         sv.cross_session_hit_ratio * 100.0,
         sv.makespan_ms,
     );
+    if !sv.session_prefetch.is_empty() {
+        let mut pt = Table::new(&[
+            "session", "pf hit", "pf wasted", "overlap", "service ms/tok",
+            "round queue ms/tok",
+        ]);
+        for p in &sv.session_prefetch {
+            pt.row(&[
+                p.id.to_string(),
+                p.prefetch_hit_bundles.to_string(),
+                p.prefetch_wasted_bundles.to_string(),
+                format!("{:.0}%", p.overlap_ratio * 100.0),
+                format!("{:.2}", p.mean_service_ms),
+                format!("{:.2}", p.mean_round_queue_ms),
+            ]);
+        }
+        println!(
+            "\nspeculative prefetch: {} hit / {} wasted bundles across sessions",
+            sv.prefetch_hit_bundles, sv.prefetch_wasted_bundles
+        );
+        pt.print();
+    }
     Ok(())
 }
 

@@ -7,7 +7,7 @@
 
 pub mod serve;
 
-pub use serve::{ServeMetrics, ServeSummary, SessionStats};
+pub use serve::{ServeMetrics, ServeSummary, SessionPrefetchSummary, SessionStats};
 
 use crate::util::stats::{Percentiles, Summary};
 

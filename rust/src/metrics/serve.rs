@@ -31,6 +31,8 @@ pub struct SessionStats {
     /// compute), ns.
     pub latency_ns: Percentiles,
     sum_latency_ns: f64,
+    sum_service_ns: f64,
+    sum_round_queue_ns: f64,
 }
 
 impl SessionStats {
@@ -45,6 +47,8 @@ impl SessionStats {
             totals: TokenIo::default(),
             latency_ns: Percentiles::new(),
             sum_latency_ns: 0.0,
+            sum_service_ns: 0.0,
+            sum_round_queue_ns: 0.0,
         }
     }
 
@@ -56,9 +60,30 @@ impl SessionStats {
         self.sum_latency_ns += latency_ns;
     }
 
+    /// Attribute the same token's latency to its two components: the
+    /// session's *own service time* (flash stall + compute window) and
+    /// the *in-round queueing delay* it spent waiting for the round's
+    /// earlier sessions on the shared device. `service + queue` equals
+    /// the latency passed to [`record_token`] for the token.
+    pub fn record_service_split(&mut self, service_ns: f64, round_queue_ns: f64) {
+        self.sum_service_ns += service_ns;
+        self.sum_round_queue_ns += round_queue_ns;
+    }
+
     /// Mean per-token serve latency, ns.
     pub fn mean_latency_ns(&self) -> f64 {
         if self.tokens == 0 { 0.0 } else { self.sum_latency_ns / self.tokens as f64 }
+    }
+
+    /// Mean own-service time per token (stall + compute), ns.
+    pub fn mean_service_ns(&self) -> f64 {
+        if self.tokens == 0 { 0.0 } else { self.sum_service_ns / self.tokens as f64 }
+    }
+
+    /// Mean in-round queueing delay per token, ns: time the session's
+    /// token spent behind its round predecessors' service.
+    pub fn mean_round_queue_ns(&self) -> f64 {
+        if self.tokens == 0 { 0.0 } else { self.sum_round_queue_ns / self.tokens as f64 }
     }
 }
 
@@ -131,6 +156,42 @@ impl ServeMetrics {
         }
     }
 
+    /// Per-session speculative-prefetch and latency-split attribution,
+    /// full-model-scaled like [`ServeMetrics::summary`]. Only
+    /// prefetch-enabled serve runs attach this to their summary;
+    /// prefetch-off summaries keep the historical shape (and their
+    /// report JSON stays byte-identical).
+    pub fn prefetch_attribution(
+        &self,
+        layer_scale: f64,
+        bundle_bytes: usize,
+    ) -> Vec<SessionPrefetchSummary> {
+        let ms = |ns: f64| ns * layer_scale / 1e6;
+        self.sessions
+            .iter()
+            .map(|s| {
+                let busy = s.totals.elapsed_ns;
+                let overlap = if busy == 0.0 {
+                    0.0
+                } else {
+                    (1.0 - s.totals.stall_ns / busy).max(0.0)
+                };
+                SessionPrefetchSummary {
+                    id: s.id,
+                    prefetch_hit_bundles: s.totals.prefetch_hit_bundles,
+                    prefetch_wasted_bundles: s.totals.prefetch_wasted_bundles,
+                    prefetch_hit_bytes: s.totals.prefetch_hit_bundles
+                        * bundle_bytes as u64,
+                    prefetch_wasted_bytes: s.totals.prefetch_wasted_bundles
+                        * bundle_bytes as u64,
+                    overlap_ratio: overlap,
+                    mean_service_ms: ms(s.mean_service_ns()),
+                    mean_round_queue_ms: ms(s.mean_round_queue_ns()),
+                }
+            })
+            .collect()
+    }
+
     /// Condense into the flat summary the harness reports serialize.
     /// `layer_scale` lifts per-representative-layer latencies to the
     /// full model, exactly like `ExperimentResult::latency_ms`;
@@ -158,14 +219,43 @@ impl ServeMetrics {
             cache_hit_ratio,
             cross_session_hit_ratio: self.cross_session_hit_ratio(),
             makespan_ms: ms(self.makespan_ns),
+            // prefetch-enabled callers attach attribution afterwards
+            // (see `prefetch_attribution`); the defaults keep
+            // prefetch-off summaries in the historical shape
+            prefetch_hit_bundles: 0,
+            prefetch_wasted_bundles: 0,
+            session_prefetch: Vec::new(),
         }
     }
+}
+
+/// One session's speculative-prefetch attribution in a serve summary:
+/// what its share of the arbitrated budget bought (hits), what it
+/// burned (waste), and where its serve latency went.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SessionPrefetchSummary {
+    /// Session id.
+    pub id: usize,
+    /// Demanded bundles served by the session's in-flight speculation.
+    pub prefetch_hit_bundles: u64,
+    /// Speculative bundles the session read but never demanded.
+    pub prefetch_wasted_bundles: u64,
+    /// `prefetch_hit_bundles` in bytes.
+    pub prefetch_hit_bytes: u64,
+    /// `prefetch_wasted_bundles` in bytes.
+    pub prefetch_wasted_bytes: u64,
+    /// Fraction of the session's flash busy time hidden under compute.
+    pub overlap_ratio: f64,
+    /// Full-model mean own-service time per token (stall + compute), ms.
+    pub mean_service_ms: f64,
+    /// Full-model mean in-round queueing delay per token, ms.
+    pub mean_round_queue_ms: f64,
 }
 
 /// Flat, full-model-scaled serve summary carried by `ExperimentResult`
 /// and serialized into `BENCH_serve.json` (all simulated quantities —
 /// deterministic).
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServeSummary {
     /// Number of sessions served.
     pub sessions: usize,
@@ -195,6 +285,15 @@ pub struct ServeSummary {
     pub cross_session_hit_ratio: f64,
     /// Full-model virtual makespan, ms.
     pub makespan_ms: f64,
+    /// Aggregate speculative hits across sessions, bundles (0 for
+    /// prefetch-off runs).
+    pub prefetch_hit_bundles: u64,
+    /// Aggregate wasted speculation across sessions, bundles.
+    pub prefetch_wasted_bundles: u64,
+    /// Per-session attribution rows; empty for prefetch-off runs, which
+    /// keeps their serialized reports byte-identical to the historical
+    /// schema.
+    pub session_prefetch: Vec<SessionPrefetchSummary>,
 }
 
 #[cfg(test)]
@@ -250,6 +349,46 @@ mod tests {
         let s = m.summary(2.0, 0.0);
         assert_eq!(s.tokens, 0);
         assert_eq!(s.p99_ms, 0.0);
+    }
+
+    #[test]
+    fn service_split_means_reconstruct_latency() {
+        let mut s = SessionStats::new(0, 0.0);
+        // token 1: 1.5ms own service after 0.5ms behind the round
+        s.record_token(&tok(1e6), 2e6);
+        s.record_service_split(1.5e6, 0.5e6);
+        // token 2: 3ms own service, served first in its round
+        s.record_token(&tok(1e6), 3e6);
+        s.record_service_split(3e6, 0.0);
+        assert!((s.mean_service_ns() - 2.25e6).abs() < 1e-9);
+        assert!((s.mean_round_queue_ns() - 0.25e6).abs() < 1e-9);
+        assert!(
+            (s.mean_service_ns() + s.mean_round_queue_ns() - s.mean_latency_ns()).abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn prefetch_attribution_scales_and_counts_per_session() {
+        let mut m = ServeMetrics::default();
+        let mut s = SessionStats::new(0, 0.0);
+        let mut t = tok(2e6);
+        t.stall_ns = 0.5e6; // 75% of flash time hidden
+        t.prefetch_hit_bundles = 6;
+        t.prefetch_wasted_bundles = 2;
+        s.record_token(&t, 1e6);
+        s.record_service_split(1e6, 0.0);
+        m.sessions.push(s);
+        let rows = m.prefetch_attribution(2.0, 100);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].prefetch_hit_bundles, 6);
+        assert_eq!(rows[0].prefetch_wasted_bundles, 2);
+        assert_eq!(rows[0].prefetch_hit_bytes, 600);
+        assert_eq!(rows[0].prefetch_wasted_bytes, 200);
+        assert!((rows[0].overlap_ratio - 0.75).abs() < 1e-12);
+        // ns → full-model ms with layer_scale 2
+        assert!((rows[0].mean_service_ms - 2.0).abs() < 1e-12);
+        assert_eq!(rows[0].mean_round_queue_ms, 0.0);
     }
 
     #[test]

@@ -166,6 +166,10 @@ pub struct IoPipeline {
     layouts: Vec<Layout>,
     adaptive: AdaptiveCollapse,
     prefetcher: Option<Prefetcher>,
+    /// Per-round byte grant from a serving arbiter: caps each
+    /// speculative submission below the configured budget. `None`
+    /// (single-tenant) leaves the configured budget untouched.
+    prefetch_grant: Option<usize>,
     /// Speculative batches in flight, indexed by target layer.
     outstanding: Vec<Option<OutstandingPrefetch>>,
     /// Previous token's activation set per layer — predictor seed.
@@ -233,6 +237,7 @@ impl IoPipeline {
             layouts,
             adaptive,
             prefetcher: None,
+            prefetch_grant: None,
             outstanding,
             last_actives,
             scratch,
@@ -288,6 +293,21 @@ impl IoPipeline {
 
     pub fn has_prefetcher(&self) -> bool {
         self.prefetcher.is_some()
+    }
+
+    /// The configured per-submission speculative budget in bytes (the
+    /// arbiter's notion of this stream's demand); 0 with no prefetcher.
+    pub fn prefetch_budget_bytes(&self) -> usize {
+        self.prefetcher.as_ref().map_or(0, |p| p.config().budget_bytes)
+    }
+
+    /// Cap speculative submissions at `grant` bytes until the next call
+    /// (a serving arbiter's per-round share of the global budget). The
+    /// cap only ever shrinks the configured budget; a grant at or above
+    /// `prefetch_budget_bytes` leaves behaviour bit-identical to the
+    /// un-arbitrated pipeline. `None` removes the cap.
+    pub fn set_prefetch_grant(&mut self, grant: Option<usize>) {
+        self.prefetch_grant = grant;
     }
 
     /// Speculative batches currently in flight.
@@ -375,7 +395,12 @@ impl IoPipeline {
         let Some(pf) = self.prefetcher.as_ref() else {
             return;
         };
-        let budget_slots = pf.config().budget_slots(self.cfg.bundle_bytes);
+        let mut budget_slots = pf.config().budget_slots(self.cfg.bundle_bytes);
+        if let Some(grant) = self.prefetch_grant {
+            let grant_slots =
+                if self.cfg.bundle_bytes == 0 { 0 } else { grant / self.cfg.bundle_bytes };
+            budget_slots = budget_slots.min(grant_slots);
+        }
         if budget_slots == 0 {
             return;
         }
@@ -879,5 +904,44 @@ mod tests {
         let io = p.complete_layer(&mut cache, &plan1, t1, &mut sim);
         assert_eq!(io.prefetch_hit_bundles, plan1.prefetched.len() as u64);
         assert_eq!(p.outstanding_prefetches(), 0);
+    }
+
+    #[test]
+    fn prefetch_grant_caps_and_full_grant_is_identity() {
+        // grant 0: speculation is suppressed entirely
+        let (mut p, cache, mut sim, _eval) = mk_prefetching_pipeline(0, 16 * 128);
+        p.set_prefetch_grant(Some(0));
+        p.prefetch_layer(&cache, &mut sim, 1, &[1, 2, 3]);
+        assert_eq!(p.outstanding_prefetches(), 0);
+        assert_eq!(sim.stats().total_batches, 0);
+
+        // a grant at the configured budget replays the un-arbitrated
+        // pipeline bit-for-bit
+        let (mut a, mut cache_a, mut sim_a, eval) = mk_prefetching_pipeline(32, 16 * 128);
+        let (mut b, mut cache_b, mut sim_b, _) = mk_prefetching_pipeline(32, 16 * 128);
+        b.set_prefetch_grant(Some(16 * 128));
+        for t in &eval.tokens {
+            a.step_token_overlapped(&mut cache_a, &mut sim_a, t, 150_000.0);
+            b.step_token_overlapped(&mut cache_b, &mut sim_b, t, 150_000.0);
+        }
+        assert_eq!(sim_a.clock_ns().to_bits(), sim_b.clock_ns().to_bits());
+        assert_eq!(sim_a.stats().total_commands, sim_b.stats().total_commands);
+        assert_eq!(sim_a.stats().total_bytes, sim_b.stats().total_bytes);
+
+        // a tighter grant shrinks speculative traffic (cache capacity 0
+        // so warmth effects cannot mask the cap)
+        let (mut full, mut cache_f, mut sim_f, eval) = mk_prefetching_pipeline(0, 16 * 128);
+        let (mut capped, mut cache_g, mut sim_g, _) = mk_prefetching_pipeline(0, 16 * 128);
+        capped.set_prefetch_grant(Some(4 * 128));
+        for t in &eval.tokens {
+            full.step_token_overlapped(&mut cache_f, &mut sim_f, t, 150_000.0);
+            capped.step_token_overlapped(&mut cache_g, &mut sim_g, t, 150_000.0);
+        }
+        assert!(
+            sim_g.stats().total_bytes < sim_f.stats().total_bytes,
+            "4-slot grant should read less than the 16-slot budget: {} vs {}",
+            sim_g.stats().total_bytes,
+            sim_f.stats().total_bytes
+        );
     }
 }

@@ -65,13 +65,21 @@ impl Default for PrefetchConfig {
 }
 
 impl PrefetchConfig {
-    /// Budget expressed in bundles for a given bundle size.
+    /// Budget expressed in bundles for a given bundle size. A zero
+    /// bundle size has no valid slot to speculate on, so the budget is
+    /// zero — not `budget_bytes` whole slots.
     pub fn budget_slots(&self, bundle_bytes: usize) -> usize {
-        self.budget_bytes / bundle_bytes.max(1)
+        if bundle_bytes == 0 {
+            return 0;
+        }
+        self.budget_bytes / bundle_bytes
     }
 }
 
-/// Per-layer co-activation predictor for speculative reads.
+/// Per-layer co-activation predictor for speculative reads. Cloning is
+/// cheap relative to construction (no trace rescan) and gives every
+/// serving session its own predictor over the shared calibration scan.
+#[derive(Clone)]
 pub struct Prefetcher {
     cfg: PrefetchConfig,
     per_layer: usize,
@@ -347,6 +355,7 @@ mod tests {
     fn budget_slots_math() {
         let c = PrefetchConfig { budget_bytes: 10_000, ..Default::default() };
         assert_eq!(c.budget_slots(1000), 10);
-        assert_eq!(c.budget_slots(0), 10_000);
+        // degenerate bundle size: nothing valid to speculate on
+        assert_eq!(c.budget_slots(0), 0);
     }
 }

@@ -67,6 +67,13 @@ impl Percentiles {
         self.sorted = false;
     }
 
+    /// Pre-size for `n` further samples so recording stays off the
+    /// allocator (the zero-alloc serve gate records per-token latencies
+    /// through here).
+    pub fn reserve(&mut self, n: usize) {
+        self.xs.reserve(n);
+    }
+
     pub fn len(&self) -> usize {
         self.xs.len()
     }

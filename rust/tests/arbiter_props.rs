@@ -1,0 +1,171 @@
+//! Property tests for the speculative-prefetch budget arbiter
+//! (DESIGN.md §Serving): randomized demand vectors (hand-rolled LCG, no
+//! external proptest crate) checked against the arbiter's contract, plus
+//! the end-to-end attribution invariant through `run_serve`.
+//!
+//! Invariants:
+//! * budget conservation: grants never exceed per-session demand, and
+//!   they sum to exactly `min(global_budget, Σ demand)` — the arbiter is
+//!   work-conserving under both policies;
+//! * fair-share equity: identical sessions receive identical grants up
+//!   to one byte of integer remainder;
+//! * attribution closure: per-session prefetch hit/waste counts sum to
+//!   the aggregate `RunMetrics` totals for the whole serve run.
+
+use ripple::bench::workloads::{tiny_workload, System, SystemSpec};
+use ripple::coordinator::{
+    run_serve, ArbiterPolicy, PrefetchArbiter, ServeConfig, SessionDemand,
+};
+
+/// Deterministic 64-bit LCG (Knuth MMIX constants).
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    /// Uniform-ish value in `[0, bound)` (bound > 0).
+    fn below(&mut self, bound: u64) -> u64 {
+        (self.next() >> 11) % bound
+    }
+}
+
+fn policies() -> [ArbiterPolicy; 3] {
+    [
+        ArbiterPolicy::FairShare,
+        ArbiterPolicy::DeadlineAware { target_ns: 1e6 },
+        ArbiterPolicy::DeadlineAware { target_ns: 5e4 },
+    ]
+}
+
+#[test]
+fn grants_conserve_the_budget_under_both_policies() {
+    let mut rng = Lcg(0x5EED_0001);
+    for policy in policies() {
+        for trial in 0..200 {
+            let n = 1 + rng.below(8) as usize;
+            let global = rng.below(1 << 20) as usize;
+            let demands: Vec<SessionDemand> = (0..n)
+                .map(|_| SessionDemand {
+                    demand_bytes: rng.below(256 * 1024) as usize,
+                    mean_latency_ns: rng.below(4_000_000) as f64,
+                })
+                .collect();
+            let mut arb = PrefetchArbiter::new(policy, global);
+            let grants = arb.arbitrate(&demands).to_vec();
+
+            assert_eq!(grants.len(), demands.len());
+            for (g, d) in grants.iter().zip(&demands) {
+                assert!(
+                    *g <= d.demand_bytes,
+                    "{policy:?} trial {trial}: grant {g} exceeds demand {}",
+                    d.demand_bytes
+                );
+            }
+            let total_demand: usize = demands.iter().map(|d| d.demand_bytes).sum();
+            let granted: usize = grants.iter().sum();
+            // work conservation: the arbiter hands out every byte it can
+            assert_eq!(
+                granted,
+                global.min(total_demand),
+                "{policy:?} trial {trial}: granted {granted} of budget {global}, \
+                 demand {total_demand}"
+            );
+            // determinism: the same round arbitrates identically
+            assert_eq!(arb.arbitrate(&demands), &grants[..]);
+        }
+    }
+}
+
+#[test]
+fn unconstrained_rounds_grant_full_demand() {
+    let mut rng = Lcg(0x5EED_0002);
+    for policy in policies() {
+        for _ in 0..100 {
+            let n = 1 + rng.below(6) as usize;
+            let demands: Vec<SessionDemand> = (0..n)
+                .map(|_| SessionDemand {
+                    demand_bytes: rng.below(64 * 1024) as usize,
+                    mean_latency_ns: rng.below(4_000_000) as f64,
+                })
+                .collect();
+            let total: usize = demands.iter().map(|d| d.demand_bytes).sum();
+            // budget at least the total demand: nobody is cut
+            let mut arb = PrefetchArbiter::new(policy, total + rng.below(4096) as usize);
+            let grants = arb.arbitrate(&demands);
+            let want: Vec<usize> = demands.iter().map(|d| d.demand_bytes).collect();
+            assert_eq!(grants, &want[..], "{policy:?} cut an unconstrained round");
+        }
+    }
+}
+
+#[test]
+fn fair_share_treats_identical_sessions_identically() {
+    let mut rng = Lcg(0x5EED_0003);
+    for _ in 0..200 {
+        let n = 2 + rng.below(7) as usize;
+        let demand = 1 + rng.below(128 * 1024) as usize;
+        let global = rng.below(1 << 20) as usize;
+        let demands =
+            vec![SessionDemand { demand_bytes: demand, mean_latency_ns: 7e5 }; n];
+        let mut arb = PrefetchArbiter::new(ArbiterPolicy::FairShare, global);
+        let grants = arb.arbitrate(&demands);
+        let (lo, hi) =
+            (*grants.iter().min().unwrap(), *grants.iter().max().unwrap());
+        assert!(
+            hi - lo <= 1,
+            "identical sessions diverged: {grants:?} (demand {demand}, \
+             budget {global})"
+        );
+    }
+}
+
+#[test]
+fn serve_attribution_sums_to_aggregate_totals() {
+    // end-to-end: for several contention shapes, the per-session
+    // hit/waste attribution must account for every speculated bundle
+    // the aggregate metrics saw.
+    let mut w = tiny_workload();
+    w.eval_tokens = 8;
+    w.prefetch.enabled = true;
+    for (sessions, policy) in [
+        (1, ArbiterPolicy::FairShare),
+        (3, ArbiterPolicy::FairShare),
+        (3, ArbiterPolicy::DeadlineAware { target_ns: 5e5 }),
+    ] {
+        let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+        let cfg = ServeConfig { sessions, arbiter: policy, ..ServeConfig::default() };
+        let out = run_serve(&w, System::Ripple, spec, &cfg).unwrap();
+        assert_eq!(out.summary.session_prefetch.len(), sessions);
+        let hit: u64 = out
+            .summary
+            .session_prefetch
+            .iter()
+            .map(|p| p.prefetch_hit_bundles)
+            .sum();
+        let waste: u64 = out
+            .summary
+            .session_prefetch
+            .iter()
+            .map(|p| p.prefetch_wasted_bundles)
+            .sum();
+        assert_eq!(hit, out.metrics.totals.prefetch_hit_bundles, "{policy:?}");
+        assert_eq!(waste, out.metrics.totals.prefetch_wasted_bundles, "{policy:?}");
+        let hit_bytes: u64 = out
+            .summary
+            .session_prefetch
+            .iter()
+            .map(|p| p.prefetch_hit_bytes)
+            .sum();
+        assert_eq!(
+            hit_bytes,
+            out.metrics.totals.prefetch_hit_bundles * out.bundle_bytes as u64,
+            "{policy:?}"
+        );
+    }
+}

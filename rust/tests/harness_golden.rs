@@ -140,6 +140,80 @@ fn serve_single_session_reproduces_single_stream_metrics_bit_for_bit() {
 }
 
 #[test]
+fn prefetch_serve_single_session_reproduces_overlapped_stream_bit_for_bit() {
+    // the overlapped (speculative prefetch) single stream, shrunk
+    // identically on both sides — sessions == 1 under the arbiter must
+    // reduce to it exactly: one session's fair share IS the full budget
+    let mut plain = ScenarioSpec::new("plain-pf", "OPT-350M", System::Ripple);
+    plain.calib_tokens = 64;
+    plain.eval_tokens = 16;
+    plain.sim_layers = 2;
+    plain.knn = 8;
+    plain.prefetch = PrefetchPoint::budget_kb(64);
+    let direct = run_scenario(&plain, 2).unwrap();
+    assert!(direct.serve.is_none());
+    assert!(direct.overlap_ratio() > 0.0, "the overlapped anchor must overlap");
+
+    let mut via = plain.clone();
+    via.name = "serve-pf-anchor".to_string();
+    via.serve = Some(ServePoint::shared(1));
+    let served = run_scenario(&via, 2).unwrap();
+
+    let (a, b) = (&direct.metrics, &served.metrics);
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.totals.commands, b.totals.commands);
+    assert_eq!(a.totals.bytes, b.totals.bytes);
+    assert_eq!(a.totals.demanded_bundles, b.totals.demanded_bundles);
+    assert_eq!(a.totals.cached_bundles, b.totals.cached_bundles);
+    assert_eq!(a.totals.read_bundles, b.totals.read_bundles);
+    assert_eq!(a.totals.prefetch_hit_bundles, b.totals.prefetch_hit_bundles);
+    assert_eq!(a.totals.prefetch_wasted_bundles, b.totals.prefetch_wasted_bundles);
+    assert_eq!(a.totals.elapsed_ns.to_bits(), b.totals.elapsed_ns.to_bits());
+    assert_eq!(a.totals.stall_ns.to_bits(), b.totals.stall_ns.to_bits());
+    assert_eq!(a.compute_ns.to_bits(), b.compute_ns.to_bits());
+    assert_eq!(direct.e2e_ms().to_bits(), served.e2e_ms().to_bits());
+    assert_eq!(direct.latency_ms().to_bits(), served.latency_ms().to_bits());
+    // the serve summary attributes the whole stream to session 0
+    let sv = served.serve.expect("serve summary");
+    assert_eq!(sv.sessions, 1);
+    assert_eq!(sv.session_prefetch.len(), 1);
+    assert_eq!(
+        sv.session_prefetch[0].prefetch_hit_bundles,
+        a.totals.prefetch_hit_bundles
+    );
+    assert_eq!(sv.prefetch_hit_bundles, a.totals.prefetch_hit_bundles);
+}
+
+#[test]
+fn serve_prefetch_json_byte_identical_across_thread_counts() {
+    // arbitrated serve rows, shrunk to test scale: the report (with the
+    // attribution keys) must stay a pure function of the spec
+    let mut m = preset("serve-prefetch").unwrap();
+    m.prefetch = vec![PrefetchPoint::budget_kb(64)];
+    m.serve = vec![
+        Some(ServePoint::shared(2)),
+        Some(
+            ServePoint::shared(2)
+                .with_arbiter(ripple::coordinator::ArbiterPolicy::DeadlineAware {
+                    target_ns: 2e6,
+                })
+                .with_global_budget(96 * 1024),
+        ),
+    ];
+    m.extra.clear();
+    m.scale_down(48, 12, 2, 8);
+    let a = run_matrix(&m, 1).unwrap();
+    let b = run_matrix(&m, 8).unwrap();
+    let (ja, jb) = (a.json_string(), b.json_string());
+    assert_eq!(ja, jb, "serve-prefetch JSON must be byte-identical across threads");
+    assert!(ja.contains("\"session_prefetch\":["));
+    assert!(ja.contains("\"arbiter\":\"deadline\""));
+    assert!(ja.contains("\"prefetch_global_budget_bytes\":98304"));
+    assert!(ja.contains("\"mean_service_ms\""));
+    assert_eq!(a.results.len(), 2);
+}
+
+#[test]
 fn smoke_report_baselines_against_itself_with_zero_deltas() {
     let mut m = preset("smoke").unwrap();
     m.models = vec!["opt-micro".to_string()];

@@ -33,7 +33,25 @@ fn run(shared: bool, sessions: usize) -> ServeOutcome {
         max_concurrent: sessions,
         arrival_spacing_ns: 0.0,
         shared_cache: shared,
+        ..ServeConfig::default()
     };
+    run_serve(&w, System::Ripple, spec, &cfg).unwrap()
+}
+
+/// Same hot-overlap workload with speculative prefetch enabled: every
+/// session decodes on the overlapped flash timeline and the arbiter
+/// splits the global speculative budget each round.
+fn run_prefetch(sessions: usize, cfg_mut: impl FnOnce(&mut ServeConfig)) -> ServeOutcome {
+    let (mut w, spec) = serve_workload();
+    w.prefetch.enabled = true;
+    let mut cfg = ServeConfig {
+        sessions,
+        max_concurrent: sessions,
+        arrival_spacing_ns: 0.0,
+        shared_cache: true,
+        ..ServeConfig::default()
+    };
+    cfg_mut(&mut cfg);
     run_serve(&w, System::Ripple, spec, &cfg).unwrap()
 }
 
@@ -89,6 +107,7 @@ fn continuous_batching_joins_and_leaves_between_tokens() {
         // so far apart that the queue never forms
         arrival_spacing_ns: 1e5,
         shared_cache: true,
+        ..ServeConfig::default()
     };
     let out = run_serve(&w, System::Ripple, spec, &cfg).unwrap();
 
@@ -138,6 +157,77 @@ fn serving_contention_raises_tail_latency() {
         packed.summary.makespan_ms,
         4.0 * alone.summary.makespan_ms
     );
+}
+
+#[test]
+fn speculative_prefetch_improves_contended_serving() {
+    let off = run(true, 4);
+    let on = run_prefetch(4, |_| {});
+
+    // same total work either way
+    assert_eq!(on.metrics.tokens, off.metrics.tokens);
+
+    // speculation hides flash reads under compute: mean and tail improve
+    // under maximum contention (4 packed sessions, one serial device)
+    assert!(
+        on.summary.mean_ms < off.summary.mean_ms,
+        "prefetch did not improve contended mean: {:.3} vs {:.3} ms",
+        on.summary.mean_ms,
+        off.summary.mean_ms
+    );
+    assert!(
+        on.summary.p95_ms <= off.summary.p95_ms,
+        "prefetch did not improve contended p95: {:.3} vs {:.3} ms",
+        on.summary.p95_ms,
+        off.summary.p95_ms
+    );
+    assert!(on.metrics.overlap_ratio() > 0.0);
+
+    // attribution rides along: per-session rows exist and their bundle
+    // counts sum to the aggregate totals
+    assert_eq!(on.summary.session_prefetch.len(), 4);
+    let hit: u64 = on.summary.session_prefetch.iter().map(|p| p.prefetch_hit_bundles).sum();
+    let waste: u64 =
+        on.summary.session_prefetch.iter().map(|p| p.prefetch_wasted_bundles).sum();
+    assert_eq!(hit, on.metrics.totals.prefetch_hit_bundles);
+    assert_eq!(waste, on.metrics.totals.prefetch_wasted_bundles);
+    assert_eq!(hit, on.summary.prefetch_hit_bundles);
+    assert_eq!(waste, on.summary.prefetch_wasted_bundles);
+    assert!(hit > 0, "hot-overlap sessions must land speculative hits");
+
+    // the prefetch-off summary carries no attribution (stable schema)
+    assert!(off.summary.session_prefetch.is_empty());
+    assert_eq!(off.summary.prefetch_hit_bundles, 0);
+}
+
+#[test]
+fn zero_global_budget_disables_all_speculation() {
+    let out = run_prefetch(3, |cfg| cfg.prefetch_global_budget = Some(0));
+    // every round's grant is 0 bytes -> no speculative reads anywhere
+    assert_eq!(out.metrics.totals.prefetch_hit_bundles, 0);
+    assert_eq!(out.metrics.totals.prefetch_wasted_bundles, 0);
+    assert_eq!(out.metrics.tokens, 3 * 24);
+    // attribution rows still exist (the run was overlapped) but are empty
+    assert_eq!(out.summary.session_prefetch.len(), 3);
+    for p in &out.summary.session_prefetch {
+        assert_eq!(p.prefetch_hit_bundles, 0);
+        assert_eq!(p.prefetch_wasted_bundles, 0);
+    }
+}
+
+#[test]
+fn prefetch_serve_outcome_is_deterministic_run_to_run() {
+    let a = run_prefetch(3, |_| {});
+    let b = run_prefetch(3, |_| {});
+    assert_eq!(
+        a.metrics.totals.elapsed_ns.to_bits(),
+        b.metrics.totals.elapsed_ns.to_bits()
+    );
+    assert_eq!(a.metrics.totals.bytes, b.metrics.totals.bytes);
+    assert_eq!(a.metrics.totals.prefetch_hit_bundles, b.metrics.totals.prefetch_hit_bundles);
+    assert_eq!(a.summary.p50_ms.to_bits(), b.summary.p50_ms.to_bits());
+    assert_eq!(a.summary.makespan_ms.to_bits(), b.summary.makespan_ms.to_bits());
+    assert_eq!(a.summary.session_prefetch, b.summary.session_prefetch);
 }
 
 #[test]

@@ -15,9 +15,11 @@ use std::alloc::{GlobalAlloc, Layout, System as SystemAlloc};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use ripple::bench::workloads::{
-    bench_workload, layouts_for, pipeline_with, System, SystemSpec, Workload,
+    bench_workload, cache_capacity, layouts_for, neuron_space, pipeline_config,
+    pipeline_with, System, SystemSpec, Workload,
 };
-use ripple::cache::NeuronCache;
+use ripple::cache::{KeySpace, NeuronCache};
+use ripple::coordinator::{ServeConfig, SessionManager};
 use ripple::flash::UfsSim;
 use ripple::pipeline::IoPipeline;
 use ripple::prefetch::Prefetcher;
@@ -103,6 +105,47 @@ fn build(w: &Workload) -> (IoPipeline, NeuronCache, UfsSim, Trace) {
     (pipeline, cache, sim, eval)
 }
 
+/// Mirror `run_serve`'s construction for a manager the serve gate can
+/// drive round-by-round (shared cache, all sessions arriving at t=0).
+fn build_serve(w: &Workload, sessions: usize) -> (SessionManager, UfsSim) {
+    let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+    let calib = w.calibration_trace();
+    let (layouts, _) = layouts_for(System::Ripple, &calib, w.knn, w.threads);
+    let space = neuron_space(w);
+    let bundle_bytes = space.bundle_bytes;
+    let pcfg = pipeline_config(spec, w, None);
+    let keys = KeySpace::of(&space);
+    let cache =
+        NeuronCache::from_config(spec.cache_policy, cache_capacity(w), keys, w.seed)
+            .unwrap();
+    let pf = w
+        .prefetch
+        .enabled
+        .then(|| Prefetcher::from_trace(&calib, w.prefetch.clone(), w.threads));
+    let streams = (0..sessions)
+        .map(|sid| {
+            let mut p = IoPipeline::new(pcfg.clone(), space.clone(), layouts.clone());
+            if let Some(pf) = &pf {
+                p.set_prefetcher(Some(pf.clone()));
+            }
+            (p, w.session_eval_trace(&w.dataset, sid))
+        })
+        .collect();
+    let cfg = ServeConfig { sessions, max_concurrent: sessions, ..ServeConfig::default() };
+    let sim = UfsSim::new(w.device.clone(), space.image_bytes());
+    let mut m = SessionManager::new(
+        cfg,
+        streams,
+        vec![cache],
+        w.compute_ns_per_layer * w.sim_layers as f64,
+        bundle_bytes,
+    );
+    if w.prefetch.enabled {
+        m.enable_prefetch(w.compute_ns_per_layer, w.prefetch.budget_bytes * sessions);
+    }
+    (m, sim)
+}
+
 /// One test fn on purpose: the global counter must never observe a
 /// concurrent sibling test's allocations, and a single-test binary has
 /// no worker threads racing the counting window.
@@ -146,4 +189,39 @@ fn decode_step_is_allocation_free_after_warmup() {
         steady, 0,
         "overlapped decode hot path allocated {steady} times after warmup"
     );
+
+    // --- steady-state multi-session serve round (synchronous) -----------
+    // All manager loop state is hoisted and every recorder pre-sized, so
+    // a full decode round — admission scan, one token per session on the
+    // shared device, linear departure — touches the allocator not at all.
+    let w = fig10_workload();
+    let (mut manager, mut serve_sim) = build_serve(&w, 3);
+    for _ in 0..20 {
+        assert!(manager.step_round(&mut serve_sim), "warmup ended early");
+    }
+    let steady = count_allocs(|| {
+        manager.step_round(&mut serve_sim);
+    });
+    assert_eq!(
+        steady, 0,
+        "steady-state serve round allocated {steady} times after warmup"
+    );
+    assert!(!manager.is_done(), "the gated round must be mid-run, not the finale");
+
+    // --- steady-state serve round, overlapped + arbiter ------------------
+    let mut w = fig10_workload();
+    w.prefetch.enabled = true;
+    w.prefetch.budget_bytes = 32 * w.model.bundle_bytes(w.precision);
+    let (mut manager, mut serve_sim) = build_serve(&w, 3);
+    for _ in 0..20 {
+        assert!(manager.step_round(&mut serve_sim), "warmup ended early");
+    }
+    let steady = count_allocs(|| {
+        manager.step_round(&mut serve_sim);
+    });
+    assert_eq!(
+        steady, 0,
+        "steady-state arbitrated serve round allocated {steady} times after warmup"
+    );
+    assert!(!manager.is_done(), "the gated round must be mid-run, not the finale");
 }
