@@ -27,7 +27,7 @@
 use crate::cache::{Admission, KeySpace, NeuronCache, S3Fifo};
 use crate::config::{DeviceConfig, ModelConfig, Precision};
 use crate::flash::UfsSim;
-use crate::metrics::{RunMetrics, ServeSummary};
+use crate::metrics::{FleetSummary, RunMetrics, ServeSummary};
 use crate::neuron::{Layout, NeuronSpace};
 use crate::pipeline::{IoPipeline, PipelineConfig};
 use crate::placement::{self, GreedyParams};
@@ -219,6 +219,8 @@ pub struct ExperimentResult {
     pub bundle_bytes: usize,
     /// Multi-session serving summary (`None` for single-stream runs).
     pub serve: Option<ServeSummary>,
+    /// Fleet-level open-loop summary (`None` except for fleet rows).
+    pub fleet: Option<FleetSummary>,
 }
 
 impl ExperimentResult {
@@ -541,6 +543,7 @@ fn run_inner(
         layer_scale: w.layer_scale(),
         bundle_bytes,
         serve: None,
+        fleet: None,
     })
 }
 

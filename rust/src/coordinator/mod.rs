@@ -1,6 +1,7 @@
 //! L3 serving coordinator: request types, dynamic batcher, replica
-//! router, the threaded serving loop, and the deterministic
-//! multi-session serving simulation ([`session`]).
+//! router, the threaded serving loop, the deterministic multi-session
+//! serving simulation ([`session`]), and the event-driven fleet-scale
+//! simulator with open-loop traffic ([`fleet`]).
 //!
 //! Topology: a single dispatcher thread runs the `Batcher` and `Router`;
 //! each worker thread owns one `Engine` (PJRT handles are not `Send`, so
@@ -16,12 +17,17 @@
 
 pub mod arbiter;
 mod batcher;
+pub mod fleet;
 mod router;
 pub mod session;
 pub mod tcp;
 
 pub use arbiter::{ArbiterPolicy, PrefetchArbiter, SessionDemand};
 pub use batcher::{Batcher, BatcherConfig};
+pub use fleet::{
+    run_fleet, EventHeap, FleetConfig, FleetEvent, FleetManager, FleetOutcome, FleetScheduler,
+    FleetStats,
+};
 pub use router::Router;
 pub use session::{run_serve, ServeConfig, ServeOutcome, SessionManager};
 pub use tcp::{TcpClient, TcpFrontend};

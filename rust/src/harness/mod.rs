@@ -8,8 +8,10 @@
 //!   [`ScenarioMatrix`] (axes + cartesian-product expansion),
 //! * [`presets`] — named matrices reproducing the paper figures
 //!   (`smoke`, `fig01`, `fig10`, `fig18`, `ablations`) plus the
-//!   multi-session `serve` contention sweep and the `perf`
-//!   decode-throughput proof (wall-clock tokens/sec, Markdown-only),
+//!   multi-session `serve` contention sweep, the open-loop `fleet`
+//!   sweep (arrival process × scheduler × admission bound) and the
+//!   `perf` decode-throughput proof (wall-clock tokens/sec,
+//!   Markdown-only),
 //! * [`runner`] — the multi-threaded sweep executor (results are
 //!   thread-count invariant),
 //! * [`report`] — stable-schema `BENCH_<name>.json` plus Markdown with
@@ -32,4 +34,7 @@ pub use presets::{preset, preset_names};
 pub use report::{delta_pct, Baseline, BaselineMetrics, ScenarioResult, SweepReport};
 pub use report::{fmt_delta, SCHEMA_VERSION};
 pub use runner::{default_threads, run_matrix, run_scenario};
-pub use scenario::{derive_seed, PrefetchPoint, ScenarioMatrix, ScenarioSpec, ServePoint};
+pub use scenario::{
+    derive_seed, ArrivalSpec, FleetPoint, PrefetchPoint, ScenarioMatrix, ScenarioSpec,
+    ServePoint,
+};

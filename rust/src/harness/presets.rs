@@ -8,13 +8,25 @@
 
 use crate::bench::workloads::System;
 use crate::cache::Admission;
-use crate::coordinator::ArbiterPolicy;
+use crate::coordinator::{ArbiterPolicy, FleetScheduler};
 
-use super::scenario::{PrefetchPoint, ScenarioMatrix, ScenarioSpec, ServePoint};
+use super::scenario::{
+    ArrivalSpec, FleetPoint, PrefetchPoint, ScenarioMatrix, ScenarioSpec, ServePoint,
+};
 
 /// Every preset name `preset` accepts.
 pub fn preset_names() -> &'static [&'static str] {
-    &["smoke", "fig01", "fig10", "fig18", "ablations", "serve", "serve-prefetch", "perf"]
+    &[
+        "smoke",
+        "fig01",
+        "fig10",
+        "fig18",
+        "ablations",
+        "serve",
+        "serve-prefetch",
+        "fleet",
+        "perf",
+    ]
 }
 
 /// Resolve a preset name to its matrix.
@@ -27,6 +39,7 @@ pub fn preset(name: &str) -> anyhow::Result<ScenarioMatrix> {
         "ablations" => ablations(),
         "serve" => serve(),
         "serve-prefetch" => serve_prefetch(),
+        "fleet" => fleet(),
         "perf" => perf(),
         _ => anyhow::bail!(
             "unknown preset `{name}` (available: {})",
@@ -183,6 +196,56 @@ fn serve_prefetch() -> ScenarioMatrix {
         s.serve = Some(point);
         m.extra.push(s);
     }
+    m
+}
+
+/// Fleet-scale open-loop serving sweep (DESIGN.md §Fleet) on the
+/// AOT-served opt-micro model, synchronous timeline: a fixed-spacing
+/// FIFO anchor (the degenerate configuration `harness_golden` pins
+/// bit-for-bit to the round-based serve path), a Poisson load ramp
+/// under both schedulers with a 40 ms SLO, bursty and diurnal traffic
+/// shapes, a bounded-admission overload point, and one 10k-session
+/// stress point behind an admission bound.
+fn fleet() -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new("fleet");
+    m.models = vec!["opt-micro".to_string()];
+    m.systems = vec![System::Ripple];
+    // short per-session streams keep the 10k-session point tractable
+    m.scale_down(96, 4, 2, 16);
+    let mut points = vec![Some(FleetPoint::fixed(8, 0.0))];
+    for sched in [FleetScheduler::Fifo, FleetScheduler::ShortestRemaining] {
+        for per_s in [200.0, 1000.0, 4000.0] {
+            points.push(Some(
+                FleetPoint::poisson(64, per_s).with_scheduler(sched).with_slo_ms(40.0),
+            ));
+        }
+    }
+    points.push(Some(
+        FleetPoint {
+            arrival: ArrivalSpec::Bursty { per_s: 1000.0, burst: 8 },
+            ..FleetPoint::fixed(64, 0.0)
+        }
+        .with_slo_ms(40.0),
+    ));
+    points.push(Some(
+        FleetPoint {
+            arrival: ArrivalSpec::Diurnal { per_s: 1000.0, period_s: 0.05, depth: 0.8 },
+            ..FleetPoint::fixed(64, 0.0)
+        }
+        .with_slo_ms(40.0),
+    ));
+    points.push(Some(FleetPoint::poisson(64, 4000.0).with_bound(16).with_slo_ms(40.0)));
+    m.fleet = points;
+    // the 10k-session stress point rides as a hand-written extra with a
+    // 2-token stream so the whole preset stays CI-sized
+    let mut s = ScenarioSpec::new("stress", "opt-micro", System::Ripple);
+    s.calib_tokens = 96;
+    s.eval_tokens = 2;
+    s.sim_layers = 2;
+    s.knn = 16;
+    s.fleet =
+        Some(FleetPoint::poisson(10_000, 20_000.0).with_bound(2_048).with_slo_ms(40.0));
+    m.extra.push(s);
     m
 }
 
@@ -355,6 +418,40 @@ mod tests {
             s.workload().unwrap();
         }
         assert_eq!(specs[0].seed, 7, "rows run on the bench seed");
+    }
+
+    #[test]
+    fn fleet_preset_covers_the_open_loop_axes() {
+        let specs = preset("fleet").unwrap().expand();
+        // anchor + 2 schedulers x 3 rates + bursty + diurnal + bounded
+        // product rows, then the 10k-session stress extra
+        assert_eq!(specs.len(), 1 + 2 * 3 + 3 + 1);
+        assert!(specs.iter().all(|s| s.fleet.is_some() && !s.prefetch.enabled));
+        let anchor = specs[0].fleet.unwrap();
+        assert_eq!(anchor.arrival, ArrivalSpec::Fixed { spacing_ms: 0.0 });
+        assert_eq!(anchor.scheduler, FleetScheduler::Fifo);
+        assert!(anchor.admission_bound.is_none() && anchor.slo_ms.is_none());
+        assert!(specs
+            .iter()
+            .any(|s| s.fleet.unwrap().scheduler == FleetScheduler::ShortestRemaining));
+        assert!(specs
+            .iter()
+            .any(|s| matches!(s.fleet.unwrap().arrival, ArrivalSpec::Bursty { .. })));
+        assert!(specs
+            .iter()
+            .any(|s| matches!(s.fleet.unwrap().arrival, ArrivalSpec::Diurnal { .. })));
+        assert!(specs
+            .iter()
+            .any(|s| s.fleet.unwrap().admission_bound.is_some()
+                && s.fleet.unwrap().sessions == 64));
+        let stress = specs.iter().find(|s| s.name == "stress").unwrap();
+        assert_eq!(stress.fleet.unwrap().sessions, 10_000);
+        assert_eq!(stress.eval_tokens, 2, "stress point stays tractable");
+        // every row passes workload validation
+        for s in &specs {
+            s.workload().unwrap();
+        }
+        assert_eq!(specs[0].seed, 7, "fleet rows run on the bench seed");
     }
 
     #[test]

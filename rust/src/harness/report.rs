@@ -120,6 +120,7 @@ impl SweepReport {
             ));
         }
         self.push_serving_sections(&mut out);
+        self.push_fleet_sections(&mut out);
         self.push_throughput_section(&mut out);
         if let Some(base) = baseline {
             out.push_str(&format!("\n## vs baseline `{}`\n\n", base.name));
@@ -221,12 +222,16 @@ impl SweepReport {
         let mut deltas = String::new();
         for r in &rows {
             let sv = r.outcome.serve.as_ref().unwrap();
-            if !sv.shared_cache {
+            // fleet rows surface a ServeSummary but have no ServePoint,
+            // so they never participate in the shared/private pairing
+            if !sv.shared_cache || r.spec.serve.is_none() {
                 continue;
             }
             let id = pair_id(r);
             let Some(partner) = rows.iter().find(|o| {
-                !o.outcome.serve.as_ref().unwrap().shared_cache && pair_id(o) == id
+                o.spec.serve.is_some()
+                    && !o.outcome.serve.as_ref().unwrap().shared_cache
+                    && pair_id(o) == id
             }) else {
                 continue;
             };
@@ -276,6 +281,84 @@ impl SweepReport {
             );
             out.push_str("|---|---|---|---|---|---|---|\n");
             out.push_str(&attrib);
+        }
+    }
+
+    /// Fleet sections (DESIGN.md §Fleet): the per-scenario open-loop
+    /// table and, for groups of rows that differ only in arrival
+    /// shape/rate (same [`FleetPoint::ramp_key`]), a load-ramp table
+    /// showing how goodput and tail latency degrade with offered load.
+    fn push_fleet_sections(&self, out: &mut String) {
+        let rows: Vec<&ScenarioResult> = self
+            .results
+            .iter()
+            .filter(|r| r.outcome.fleet.is_some() && r.spec.fleet.is_some())
+            .collect();
+        if rows.is_empty() {
+            return;
+        }
+        let slo_cell = |fs: &crate::metrics::FleetSummary| -> String {
+            if fs.slo_ms > 0.0 {
+                format!("{:.1}%", fs.slo_violation_rate * 100.0)
+            } else {
+                "-".to_string()
+            }
+        };
+        out.push_str("\n## Fleet (open-loop, event-driven)\n\n");
+        out.push_str(
+            "| scenario | arrival | sched | offered | admitted | rejected | done \
+             | goodput tok/s | p99 ms | p99.9 ms | SLO viol | reject |\n",
+        );
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+        for &r in &rows {
+            let fl = r.spec.fleet.as_ref().unwrap();
+            let fs = r.outcome.fleet.as_ref().unwrap();
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} | {:.0} | {:.2} | {:.2} | {} \
+                 | {:.1}% |\n",
+                r.spec.name,
+                fl.arrival.label(),
+                fl.scheduler.key(),
+                fs.offered_sessions,
+                fs.admitted_sessions,
+                fs.rejected_sessions,
+                fs.completed_sessions,
+                fs.goodput_tokens_per_s,
+                fs.p99_ms,
+                fs.p999_ms,
+                slo_cell(fs),
+                fs.rejection_rate * 100.0,
+            ));
+        }
+        // load ramps: rows sharing everything but the arrival fragment,
+        // grouped in expansion order
+        let mut groups: Vec<(String, Vec<&ScenarioResult>)> = Vec::new();
+        for &r in &rows {
+            let key = r.spec.fleet.as_ref().unwrap().ramp_key();
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, members)) => members.push(r),
+                None => groups.push((key, vec![r])),
+            }
+        }
+        for (key, members) in groups.iter().filter(|(_, m)| m.len() > 1) {
+            out.push_str(&format!("\n### Load ramp `{key}`\n\n"));
+            out.push_str(
+                "| arrival | goodput tok/s | p99 ms | p99.9 ms | SLO viol | reject |\n",
+            );
+            out.push_str("|---|---|---|---|---|---|\n");
+            for &r in members {
+                let fl = r.spec.fleet.as_ref().unwrap();
+                let fs = r.outcome.fleet.as_ref().unwrap();
+                out.push_str(&format!(
+                    "| {} | {:.0} | {:.2} | {:.2} | {} | {:.1}% |\n",
+                    fl.arrival.label(),
+                    fs.goodput_tokens_per_s,
+                    fs.p99_ms,
+                    fs.p999_ms,
+                    slo_cell(fs),
+                    fs.rejection_rate * 100.0,
+                ));
+            }
         }
     }
 
@@ -330,6 +413,9 @@ fn config_label(spec: &ScenarioSpec) -> String {
     }
     if let Some(sv) = &spec.serve {
         parts.push(sv.label());
+    }
+    if let Some(fl) = &spec.fleet {
+        parts.push(fl.label());
     }
     parts.join(" ")
 }
@@ -399,6 +485,12 @@ fn serve_metrics_json(r: &ScenarioResult) -> Json {
                 ("cross_session_hit_ratio", json::num(sv.cross_session_hit_ratio)),
                 ("makespan_ms", json::num(sv.makespan_ms)),
             ];
+            // p99.9 serializes only on fleet rows: the tail is the point
+            // of the open-loop sweep, and gating it keeps every
+            // pre-fleet serve report byte-identical
+            if r.outcome.fleet.is_some() {
+                fields.push(("p999_ms", json::num(sv.p999_ms)));
+            }
             if !sv.session_prefetch.is_empty() {
                 fields.push((
                     "prefetch_hit_bundles",
@@ -440,10 +532,59 @@ fn serve_metrics_json(r: &ScenarioResult) -> Json {
     }
 }
 
+/// Fleet-point spec echo. Unlike `serve`, the key itself is gated —
+/// it exists only on fleet rows — so this never serializes `null` and
+/// historical reports stay byte-identical.
+fn fleet_spec_json(spec: &ScenarioSpec) -> Json {
+    let fl = spec.fleet.as_ref().expect("fleet_spec_json requires a fleet row");
+    let mut fields = vec![
+        ("sessions", json::num(fl.sessions as f64)),
+        ("max_concurrent", json::num(fl.max_concurrent as f64)),
+        ("arrival", json::s(&fl.arrival.label())),
+        ("scheduler", json::s(fl.scheduler.key())),
+    ];
+    if let Some(b) = fl.admission_bound {
+        fields.push(("admission_bound", json::num(b as f64)));
+    }
+    if let Some(ms) = fl.slo_ms {
+        fields.push(("slo_ms", json::num(ms)));
+    }
+    json::obj(fields)
+}
+
+/// Fleet outcome object (gated key, fleet rows only). SLO keys
+/// serialize only when an SLO was configured, so no-SLO sweeps carry
+/// no always-zero fields.
+fn fleet_metrics_json(r: &ScenarioResult) -> Json {
+    let fs = r.outcome.fleet.as_ref().expect("fleet_metrics_json requires a fleet row");
+    let mut fields = vec![
+        ("offered_sessions", json::num(fs.offered_sessions as f64)),
+        ("admitted_sessions", json::num(fs.admitted_sessions as f64)),
+        ("rejected_sessions", json::num(fs.rejected_sessions as f64)),
+        ("completed_sessions", json::num(fs.completed_sessions as f64)),
+        ("offered_tokens", json::num(fs.offered_tokens as f64)),
+        ("completed_tokens", json::num(fs.completed_tokens as f64)),
+        ("rejected_tokens", json::num(fs.rejected_tokens as f64)),
+        ("rejection_rate", json::num(fs.rejection_rate)),
+        ("goodput_tokens_per_s", json::num(fs.goodput_tokens_per_s)),
+        ("p99_ms", json::num(fs.p99_ms)),
+        ("p999_ms", json::num(fs.p999_ms)),
+        ("arrival_events", json::num(fs.arrival_events as f64)),
+        ("token_events", json::num(fs.token_events as f64)),
+        ("ticket_events", json::num(fs.ticket_events as f64)),
+    ];
+    if fs.slo_ms > 0.0 {
+        fields.push(("slo_ms", json::num(fs.slo_ms)));
+        fields.push(("slo_violations", json::num(fs.slo_violations as f64)));
+        fields.push(("slo_violation_rate", json::num(fs.slo_violation_rate)));
+    }
+    json::obj(fields)
+}
+
 fn scenario_json(r: &ScenarioResult) -> Json {
     let spec = &r.spec;
     let m = &r.outcome.metrics;
-    json::obj(vec![
+    let mut fields = vec![
         ("name", json::s(&spec.name)),
         ("model", json::s(&spec.model)),
         ("device", json::s(&spec.device)),
@@ -483,32 +624,39 @@ fn scenario_json(r: &ScenarioResult) -> Json {
         ("admission", json::s(&admission_label(spec.admission))),
         ("serve", serve_spec_json(spec)),
         ("serve_metrics", serve_metrics_json(r)),
-        (
-            "metrics",
-            json::obj(vec![
-                ("tokens", json::num(m.tokens as f64)),
-                ("io_ms_per_token", json::num(r.io_ms())),
-                ("e2e_ms_per_token", json::num(r.e2e_ms())),
-                ("stall_ms_per_token", json::num(r.stall_ms())),
-                ("overlap_ratio", json::num(m.overlap_ratio())),
-                ("cache_hit_ratio", json::num(m.cache_hit_ratio())),
-                ("prefetch_hit_ratio", json::num(m.prefetch_hit_ratio())),
-                ("prefetch_hit_bundles", json::num(m.totals.prefetch_hit_bundles as f64)),
-                (
-                    "prefetch_wasted_bundles",
-                    json::num(m.totals.prefetch_wasted_bundles as f64),
-                ),
-                ("commands_per_token", json::num(r.commands_per_token())),
-                ("io_mb_per_token", json::num(r.io_mb_per_token())),
-                ("mean_access_len", json::num(m.mean_access_len())),
-                ("iops", json::num(m.iops())),
-                ("effective_bandwidth_mbps", json::num(m.effective_bandwidth() / 1e6)),
-                ("raw_bandwidth_mbps", json::num(m.raw_bandwidth() / 1e6)),
-                ("bundle_bytes", json::num(r.outcome.bundle_bytes as f64)),
-                ("layer_scale", json::num(r.outcome.layer_scale)),
-            ]),
-        ),
-    ])
+    ];
+    // fleet keys exist only on fleet rows (SCHEMA_VERSION stays 2:
+    // non-fleet documents are byte-identical to pre-fleet builds)
+    if spec.fleet.is_some() {
+        fields.push(("fleet", fleet_spec_json(spec)));
+        fields.push(("fleet_metrics", fleet_metrics_json(r)));
+    }
+    fields.push((
+        "metrics",
+        json::obj(vec![
+            ("tokens", json::num(m.tokens as f64)),
+            ("io_ms_per_token", json::num(r.io_ms())),
+            ("e2e_ms_per_token", json::num(r.e2e_ms())),
+            ("stall_ms_per_token", json::num(r.stall_ms())),
+            ("overlap_ratio", json::num(m.overlap_ratio())),
+            ("cache_hit_ratio", json::num(m.cache_hit_ratio())),
+            ("prefetch_hit_ratio", json::num(m.prefetch_hit_ratio())),
+            ("prefetch_hit_bundles", json::num(m.totals.prefetch_hit_bundles as f64)),
+            (
+                "prefetch_wasted_bundles",
+                json::num(m.totals.prefetch_wasted_bundles as f64),
+            ),
+            ("commands_per_token", json::num(r.commands_per_token())),
+            ("io_mb_per_token", json::num(r.io_mb_per_token())),
+            ("mean_access_len", json::num(m.mean_access_len())),
+            ("iops", json::num(m.iops())),
+            ("effective_bandwidth_mbps", json::num(m.effective_bandwidth() / 1e6)),
+            ("raw_bandwidth_mbps", json::num(m.raw_bandwidth() / 1e6)),
+            ("bundle_bytes", json::num(r.outcome.bundle_bytes as f64)),
+            ("layer_scale", json::num(r.outcome.layer_scale)),
+        ]),
+    ));
+    json::obj(fields)
 }
 
 /// Per-scenario metrics loaded back from a prior `BENCH_*.json` —
@@ -622,6 +770,7 @@ mod tests {
                 layer_scale: 2.0,
                 bundle_bytes: 100,
                 serve: None,
+                fleet: None,
             },
         }
     }
@@ -648,6 +797,50 @@ mod tests {
             cache_hit_ratio: hit,
             cross_session_hit_ratio: if shared { 0.3 } else { 0.0 },
             makespan_ms: 100.0,
+            ..Default::default()
+        });
+        r
+    }
+
+    fn fake_fleet_result(name: &str, per_s: f64, slo: Option<f64>) -> ScenarioResult {
+        use crate::harness::scenario::FleetPoint;
+        use crate::metrics::{FleetSummary, ServeSummary};
+        let mut point = FleetPoint::poisson(8, per_s);
+        if let Some(ms) = slo {
+            point = point.with_slo_ms(ms);
+        }
+        let mut r = fake_result(name, 1e6);
+        r.spec.name = format!("{name}/{}", point.label());
+        r.spec.fleet = Some(point);
+        r.outcome.serve = Some(ServeSummary {
+            sessions: 8,
+            max_concurrent: 4,
+            peak_active: 4,
+            shared_cache: true,
+            tokens: 96,
+            p50_ms: 1.0,
+            p95_ms: 2.0,
+            p99_ms: 3.0,
+            p999_ms: 3.5,
+            mean_ms: 1.2,
+            makespan_ms: 50.0,
+            ..Default::default()
+        });
+        r.outcome.fleet = Some(FleetSummary {
+            offered_sessions: 8,
+            admitted_sessions: 8,
+            completed_sessions: 8,
+            offered_tokens: 96,
+            completed_tokens: 96,
+            goodput_tokens_per_s: 1900.0 + per_s,
+            slo_ms: slo.unwrap_or(0.0),
+            slo_violations: if slo.is_some() { 4 } else { 0 },
+            slo_violation_rate: if slo.is_some() { 4.0 / 96.0 } else { 0.0 },
+            p99_ms: 3.0,
+            p999_ms: 3.5,
+            arrival_events: 8,
+            token_events: 96,
+            ticket_events: 12,
             ..Default::default()
         });
         r
@@ -830,6 +1023,66 @@ mod tests {
         assert!(md.contains("| 0 | 4 | 1 | 50% |"), "{md}");
         // serialization is still a pure function of the inputs
         assert_eq!(text, report.json_string());
+    }
+
+    #[test]
+    fn fleet_rows_serialize_gated_keys_and_ramp_table() {
+        let report = SweepReport {
+            name: "fleet".to_string(),
+            results: vec![
+                fake_fleet_result("a", 100.0, Some(40.0)),
+                fake_fleet_result("a", 200.0, Some(40.0)),
+            ],
+        };
+        let text = report.json_string();
+        assert!(text.contains("\"fleet\":{"), "{text}");
+        assert!(text.contains("\"fleet_metrics\":{"), "{text}");
+        assert!(text.contains("\"goodput_tokens_per_s\""), "{text}");
+        assert!(text.contains("\"p999_ms\""), "{text}");
+        assert!(text.contains("\"slo_violation_rate\""), "{text}");
+        assert!(text.contains("\"scheduler\":\"fifo\""), "{text}");
+        assert!(text.contains("\"arrival\":\"po100\""), "{text}");
+        // old baselines (io/e2e only) still parse the extended schema
+        let base = Baseline::parse(&text).unwrap();
+        assert_eq!(base.len(), 2);
+        // serialization stays a pure function of the inputs
+        assert_eq!(text, report.json_string());
+
+        let md = report.to_markdown(None);
+        assert!(md.contains("## Fleet (open-loop, event-driven)"), "{md}");
+        // the two rows differ only by arrival rate -> one load ramp
+        assert!(md.contains("### Load ramp `f8c4-fifo-slo40ms`"), "{md}");
+        assert!(md.contains("| po100 |"), "{md}");
+        assert!(md.contains("| po200 |"), "{md}");
+    }
+
+    #[test]
+    fn non_fleet_rows_never_grow_fleet_keys() {
+        // the schema gate keeps historical BENCH json byte-stable:
+        // serve + single-stream rows carry neither fleet keys nor p999
+        let report = SweepReport {
+            name: "serve".to_string(),
+            results: vec![fake_result("a", 1e6), fake_serve_result("b", true, 0.6, 2.0)],
+        };
+        let text = report.json_string();
+        assert!(!text.contains("\"fleet\""), "{text}");
+        assert!(!text.contains("\"fleet_metrics\""), "{text}");
+        assert!(!text.contains("\"p999_ms\""), "{text}");
+        let md = report.to_markdown(None);
+        assert!(!md.contains("## Fleet"), "{md}");
+        assert!(!md.contains("Load ramp"), "{md}");
+
+        // a fleet row without an SLO omits the SLO keys too
+        let no_slo = SweepReport {
+            name: "fleet".to_string(),
+            results: vec![fake_fleet_result("a", 100.0, None)],
+        };
+        let text = no_slo.json_string();
+        assert!(text.contains("\"fleet_metrics\""), "{text}");
+        assert!(!text.contains("\"slo_violation_rate\""), "{text}");
+        assert!(!text.contains("\"slo_ms\""), "{text}");
+        // single ramp member -> no ramp table
+        assert!(!no_slo.to_markdown(None).contains("Load ramp"));
     }
 
     #[test]

@@ -15,8 +15,8 @@
 use crate::bench::workloads::{System, SystemSpec, Workload};
 use crate::cache::Admission;
 use crate::config::{device_by_name, model_by_name, Precision};
-use crate::coordinator::ArbiterPolicy;
-use crate::trace::DatasetProfile;
+use crate::coordinator::{ArbiterPolicy, FleetScheduler};
+use crate::trace::{ArrivalProcess, DatasetProfile};
 
 /// One point on the prefetch axis of a matrix.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -151,6 +151,201 @@ impl ServePoint {
     }
 }
 
+/// One point on the arrival axis of a fleet sweep — the open-loop
+/// traffic shape, in harness units (ms / per-second; the runner
+/// converts to the simulator's raw ns).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalSpec {
+    /// Deterministic grid: session `i` arrives at `i * spacing_ms`
+    /// (spacing 0 = everyone at t=0 — the `SessionManager` shape).
+    Fixed {
+        /// Gap between consecutive arrivals, ms (raw sim time).
+        spacing_ms: f64,
+    },
+    /// Poisson process at `per_s` arrivals per virtual second.
+    Poisson {
+        /// Mean arrival rate, 1/s.
+        per_s: f64,
+    },
+    /// Bursts of `burst` coincident arrivals, Poisson-spaced so the
+    /// long-run mean stays `per_s`.
+    Bursty {
+        /// Mean arrival rate, 1/s.
+        per_s: f64,
+        /// Sessions per burst (>= 1).
+        burst: usize,
+    },
+    /// Sinusoidally-modulated Poisson (thinning) with period `period_s`
+    /// and relative swing `depth` in [0, 1].
+    Diurnal {
+        /// Mean arrival rate, 1/s.
+        per_s: f64,
+        /// Modulation period, virtual seconds.
+        period_s: f64,
+        /// Relative swing in [0, 1].
+        depth: f64,
+    },
+}
+
+impl ArrivalSpec {
+    /// Stable label fragment used in scenario names.
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalSpec::Fixed { spacing_ms } => format!("fx{spacing_ms}ms"),
+            ArrivalSpec::Poisson { per_s } => format!("po{per_s}"),
+            ArrivalSpec::Bursty { per_s, burst } => format!("bu{per_s}x{burst}"),
+            ArrivalSpec::Diurnal { per_s, period_s, depth } => {
+                format!("di{per_s}p{period_s}d{depth}")
+            }
+        }
+    }
+
+    /// Convert to the simulator's raw-ns arrival process.
+    pub fn process(&self) -> ArrivalProcess {
+        match *self {
+            ArrivalSpec::Fixed { spacing_ms } => {
+                ArrivalProcess::Fixed { spacing_ns: spacing_ms * 1e6 }
+            }
+            ArrivalSpec::Poisson { per_s } => ArrivalProcess::Poisson { rate_per_s: per_s },
+            ArrivalSpec::Bursty { per_s, burst } => {
+                ArrivalProcess::Bursty { rate_per_s: per_s, burst }
+            }
+            ArrivalSpec::Diurnal { per_s, period_s, depth } => {
+                ArrivalProcess::Diurnal { rate_per_s: per_s, period_s, depth }
+            }
+        }
+    }
+
+    /// Validate the shape parameters (names the scenario on failure).
+    fn validate(&self, scenario: &str) -> anyhow::Result<()> {
+        match *self {
+            ArrivalSpec::Fixed { spacing_ms } => {
+                anyhow::ensure!(
+                    spacing_ms.is_finite() && spacing_ms >= 0.0,
+                    "scenario `{scenario}`: fixed arrival spacing must be finite and >= 0"
+                );
+            }
+            ArrivalSpec::Poisson { per_s } => {
+                anyhow::ensure!(
+                    per_s.is_finite() && per_s > 0.0,
+                    "scenario `{scenario}`: Poisson arrival rate must be finite and > 0"
+                );
+            }
+            ArrivalSpec::Bursty { per_s, burst } => {
+                anyhow::ensure!(
+                    per_s.is_finite() && per_s > 0.0 && burst >= 1,
+                    "scenario `{scenario}`: bursty arrivals need rate > 0 and burst >= 1"
+                );
+            }
+            ArrivalSpec::Diurnal { per_s, period_s, depth } => {
+                anyhow::ensure!(
+                    per_s.is_finite()
+                        && per_s > 0.0
+                        && period_s.is_finite()
+                        && period_s > 0.0
+                        && (0.0..=1.0).contains(&depth),
+                    "scenario `{scenario}`: diurnal arrivals need rate > 0, \
+                     period > 0, depth in [0, 1]"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One point on the fleet axis of a matrix (DESIGN.md §Fleet): the
+/// event-driven open-loop serving simulation — arrival process ×
+/// scheduler × admission bound × SLO over a shared cache and flash
+/// timeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FleetPoint {
+    /// Sessions the arrival process offers.
+    pub sessions: usize,
+    /// Decode slots (continuous-batch width).
+    pub max_concurrent: usize,
+    /// Open-loop arrival shape.
+    pub arrival: ArrivalSpec,
+    /// Serve-order policy.
+    pub scheduler: FleetScheduler,
+    /// Admission bound (max sessions waiting); `None` = unbounded.
+    pub admission_bound: Option<usize>,
+    /// Per-token SLO in full-model ms; `None` = no SLO accounting.
+    pub slo_ms: Option<f64>,
+}
+
+impl FleetPoint {
+    /// A fixed-spacing FIFO point with 4 decode slots and unbounded
+    /// admission — spacing 0 is the degenerate configuration pinned
+    /// bit-for-bit to the round-based serve path.
+    pub fn fixed(sessions: usize, spacing_ms: f64) -> Self {
+        Self {
+            sessions,
+            max_concurrent: 4,
+            arrival: ArrivalSpec::Fixed { spacing_ms },
+            scheduler: FleetScheduler::Fifo,
+            admission_bound: None,
+            slo_ms: None,
+        }
+    }
+
+    /// A Poisson-arrival FIFO point at `per_s` arrivals per virtual
+    /// second, 4 decode slots, unbounded admission.
+    pub fn poisson(sessions: usize, per_s: f64) -> Self {
+        Self { arrival: ArrivalSpec::Poisson { per_s }, ..Self::fixed(sessions, 0.0) }
+    }
+
+    /// The same point under a different scheduler.
+    pub fn with_scheduler(mut self, scheduler: FleetScheduler) -> Self {
+        self.scheduler = scheduler;
+        self
+    }
+
+    /// The same point with a bounded admission queue.
+    pub fn with_bound(mut self, bound: usize) -> Self {
+        self.admission_bound = Some(bound);
+        self
+    }
+
+    /// The same point with a per-token SLO (full-model ms).
+    pub fn with_slo_ms(mut self, ms: f64) -> Self {
+        self.slo_ms = Some(ms);
+        self
+    }
+
+    /// Stable label used in scenario names
+    /// (`f<N>c<slots>-<arrival>-<sched>[-q<bound>][-slo<ms>ms]`).
+    pub fn label(&self) -> String {
+        let mut out = format!(
+            "f{}c{}-{}-{}",
+            self.sessions,
+            self.max_concurrent,
+            self.arrival.label(),
+            self.scheduler.key()
+        );
+        if let Some(b) = self.admission_bound {
+            out.push_str(&format!("-q{b}"));
+        }
+        if let Some(ms) = self.slo_ms {
+            out.push_str(&format!("-slo{ms}ms"));
+        }
+        out
+    }
+
+    /// The label minus the arrival fragment — rows differing only in
+    /// traffic shape/rate share it, which is how the report groups a
+    /// load ramp into one table.
+    pub fn ramp_key(&self) -> String {
+        let mut out = format!("f{}c{}-{}", self.sessions, self.max_concurrent, self.scheduler.key());
+        if let Some(b) = self.admission_bound {
+            out.push_str(&format!("-q{b}"));
+        }
+        if let Some(ms) = self.slo_ms {
+            out.push_str(&format!("-slo{ms}ms"));
+        }
+        out
+    }
+}
+
 /// One fully-resolved experiment point of a sweep.
 ///
 /// Field defaults (see [`ScenarioSpec::new`]) match the historical
@@ -201,6 +396,9 @@ pub struct ScenarioSpec {
     /// Multi-session serving point; `None` = the historical
     /// single-stream experiment.
     pub serve: Option<ServePoint>,
+    /// Event-driven open-loop fleet point; `None` = no fleet run.
+    /// Mutually exclusive with `serve` and the ablation knobs.
+    pub fleet: Option<FleetPoint>,
 }
 
 impl ScenarioSpec {
@@ -225,6 +423,7 @@ impl ScenarioSpec {
             fixed_threshold: None,
             admission: None,
             serve: None,
+            fleet: None,
         }
     }
 
@@ -282,6 +481,36 @@ impl ScenarioSpec {
                         self.name
                     );
                 }
+            }
+        }
+        if let Some(fl) = &self.fleet {
+            if self.serve.is_some() {
+                anyhow::bail!(
+                    "scenario `{}`: fleet and serve points are mutually exclusive",
+                    self.name
+                );
+            }
+            if self.fixed_threshold.is_some() || self.admission.is_some() {
+                anyhow::bail!(
+                    "scenario `{}`: fleet points don't compose with the \
+                     ablation custom-pipeline knobs",
+                    self.name
+                );
+            }
+            if fl.sessions == 0 || fl.max_concurrent == 0 {
+                anyhow::bail!(
+                    "scenario `{}`: fleet point needs sessions >= 1 and \
+                     max_concurrent >= 1",
+                    self.name
+                );
+            }
+            fl.arrival.validate(&self.name)?;
+            if let Some(ms) = fl.slo_ms {
+                anyhow::ensure!(
+                    ms.is_finite() && ms > 0.0,
+                    "scenario `{}`: fleet SLO must be finite and > 0",
+                    self.name
+                );
             }
         }
         let model = model_by_name(&self.model)?;
@@ -365,6 +594,9 @@ pub struct ScenarioMatrix {
     /// Serving axis (`None` = single-stream; names stay unchanged for
     /// `None`, so pre-serve baselines keep matching).
     pub serve: Vec<Option<ServePoint>>,
+    /// Fleet axis (`None` = no fleet run; names stay unchanged for
+    /// `None`, so pre-fleet baselines keep matching). Innermost axis.
+    pub fleet: Vec<Option<FleetPoint>>,
     /// Calibration tokens applied to every product scenario.
     pub calib_tokens: usize,
     /// Eval tokens applied to every product scenario.
@@ -400,6 +632,7 @@ impl ScenarioMatrix {
             collapse: vec![None],
             prefetch: vec![PrefetchPoint::sync()],
             serve: vec![None],
+            fleet: vec![None],
             calib_tokens: 256,
             eval_tokens: 64,
             sim_layers: 2,
@@ -440,18 +673,21 @@ impl ScenarioMatrix {
                                 for &ratio in &self.cache_ratios {
                                     for &pf in &self.prefetch {
                                         for &sv in &self.serve {
-                                            let point = self.point(
-                                                model,
-                                                device,
-                                                dataset,
-                                                system,
-                                                policy,
-                                                collapse,
-                                                ratio,
-                                                pf,
-                                                sv,
-                                            );
-                                            out.push(point);
+                                            for &fl in &self.fleet {
+                                                let point = self.point(
+                                                    model,
+                                                    device,
+                                                    dataset,
+                                                    system,
+                                                    policy,
+                                                    collapse,
+                                                    ratio,
+                                                    pf,
+                                                    sv,
+                                                    fl,
+                                                );
+                                                out.push(point);
+                                            }
                                         }
                                     }
                                 }
@@ -477,6 +713,7 @@ impl ScenarioMatrix {
         ratio: f64,
         pf: PrefetchPoint,
         sv: Option<ServePoint>,
+        fl: Option<FleetPoint>,
     ) -> ScenarioSpec {
         let pol = policy.as_deref().unwrap_or("default");
         let col = match collapse {
@@ -494,6 +731,10 @@ impl ScenarioMatrix {
             name.push('/');
             name.push_str(&sv.label());
         }
+        if let Some(fl) = &fl {
+            name.push('/');
+            name.push_str(&fl.label());
+        }
         let mut s = ScenarioSpec::new(&name, model, system);
         s.device = device.to_string();
         s.dataset = dataset.to_string();
@@ -502,6 +743,7 @@ impl ScenarioMatrix {
         s.cache_ratio = ratio;
         s.prefetch = pf;
         s.serve = sv;
+        s.fleet = fl;
         s.calib_tokens = self.calib_tokens;
         s.eval_tokens = self.eval_tokens;
         s.sim_layers = self.sim_layers;
@@ -676,6 +918,74 @@ mod tests {
                 .pair_key()
         );
         assert_ne!(fair.pair_key(), ServePoint::shared(4).pair_key());
+    }
+
+    #[test]
+    fn fleet_axis_expands_with_stable_labels() {
+        let mut m = ScenarioMatrix::new("t");
+        m.fleet = vec![
+            None,
+            Some(FleetPoint::fixed(8, 0.0)),
+            Some(
+                FleetPoint::poisson(64, 200.0)
+                    .with_scheduler(FleetScheduler::ShortestRemaining)
+                    .with_bound(16)
+                    .with_slo_ms(40.0),
+            ),
+        ];
+        let specs = m.expand();
+        assert_eq!(specs.len(), 3);
+        // non-fleet names are unchanged by the new axis
+        assert!(specs[0].name.ends_with("sync"), "{}", specs[0].name);
+        assert!(specs[0].fleet.is_none());
+        assert!(specs[1].name.ends_with("f8c4-fx0ms-fifo"), "{}", specs[1].name);
+        assert!(
+            specs[2].name.ends_with("f64c4-po200-srt-q16-slo40ms"),
+            "{}",
+            specs[2].name
+        );
+        assert_eq!(specs[2].fleet.unwrap().sessions, 64);
+        // rows differing only in arrival share the ramp key
+        assert_eq!(
+            FleetPoint::poisson(8, 100.0).ramp_key(),
+            FleetPoint::poisson(8, 400.0).ramp_key()
+        );
+        assert_ne!(
+            FleetPoint::poisson(8, 100.0).ramp_key(),
+            FleetPoint::poisson(8, 100.0).with_bound(4).ramp_key()
+        );
+    }
+
+    #[test]
+    fn workload_rejects_bad_fleet_points() {
+        let mut spec = ScenarioSpec::new("x", "OPT-350M", System::Ripple);
+        spec.fleet = Some(FleetPoint { sessions: 0, ..FleetPoint::fixed(1, 0.0) });
+        assert!(spec.workload().is_err());
+        spec.fleet = Some(FleetPoint::fixed(2, -1.0));
+        assert!(spec.workload().is_err());
+        spec.fleet = Some(FleetPoint::poisson(2, 0.0));
+        assert!(spec.workload().is_err());
+        spec.fleet = Some(FleetPoint {
+            arrival: ArrivalSpec::Bursty { per_s: 100.0, burst: 0 },
+            ..FleetPoint::fixed(2, 0.0)
+        });
+        assert!(spec.workload().is_err());
+        spec.fleet = Some(FleetPoint {
+            arrival: ArrivalSpec::Diurnal { per_s: 100.0, period_s: 1.0, depth: 2.0 },
+            ..FleetPoint::fixed(2, 0.0)
+        });
+        assert!(spec.workload().is_err());
+        spec.fleet = Some(FleetPoint::poisson(2, 100.0).with_slo_ms(0.0));
+        assert!(spec.workload().is_err());
+        spec.fleet = Some(FleetPoint::poisson(2, 100.0).with_slo_ms(25.0));
+        assert!(spec.workload().is_ok());
+        // fleet and serve are mutually exclusive
+        spec.serve = Some(ServePoint::shared(2));
+        assert!(spec.workload().is_err());
+        spec.serve = None;
+        // and the ablation custom-pipeline knobs don't compose
+        spec.fixed_threshold = Some(4);
+        assert!(spec.workload().is_err());
     }
 
     #[test]

@@ -24,17 +24,21 @@ use anyhow::Result;
 
 use ripple::bench::workloads::{self, System, SystemSpec, Workload};
 use ripple::config::{device_by_name, devices, model_by_name, models};
-use ripple::coordinator::{run_serve, ArbiterPolicy, ServeConfig, Server, ServerOptions};
+use ripple::coordinator::{
+    run_fleet, run_serve, ArbiterPolicy, FleetConfig, FleetScheduler, ServeConfig, Server,
+    ServerOptions,
+};
 use ripple::engine::{Engine, EngineOptions};
 use ripple::harness;
 use ripple::runtime::default_artifacts_dir;
-use ripple::trace::DatasetProfile;
+use ripple::trace::{ArrivalProcess, DatasetProfile};
 use ripple::util::cli::Args;
 use ripple::util::stats::Table;
 
 fn main() {
     let args = Args::from_env(&[
         "dense",
+        "fleet",
         "help",
         "list",
         "no-collapse",
@@ -93,6 +97,17 @@ fn print_help() {
                    [--arbiter <fair|deadline>] [--deadline-target-ms <f>]\n\
                    [--prefetch-global-budget-kb <n>] (default global\n\
                    budget: per-session budget x sessions)\n\
+                   --fleet: event-driven open-loop fleet simulation —\n\
+                   sessions arrive by a stochastic process instead of\n\
+                   all at once; an admission bound may reject them and\n\
+                   a scheduler orders each decode round:\n\
+                   [--fleet] [--sessions <n>] [--max-concurrent <slots>]\n\
+                   [--arrival <fixed|poisson|bursty|diurnal>]\n\
+                   [--arrival-rate <per-s>] [--arrival-spacing-ms <gap>]\n\
+                   [--burst <n>] [--period-s <f>] [--depth <f>]\n\
+                   [--scheduler <fifo|srt>] [--admission-bound <n>]\n\
+                   [--slo-ms <f>]; with --prefetch the fleet decodes on\n\
+                   the overlapped timeline under fair-share arbitration\n\
          bench:    --preset <name> [--threads <n>] [--baseline <BENCH_x.json>]\n\
                    [--out <dir>] | --list\n\
                    runs a scenario matrix, prints the Markdown report and\n\
@@ -262,6 +277,9 @@ fn simulate(args: &Args) -> Result<()> {
         !args.flag("sessions"),
         "--sessions needs a value (e.g. --sessions 4)"
     );
+    if args.flag("fleet") {
+        return simulate_fleet(args, &w, system);
+    }
     if args.get("sessions").is_some() {
         return simulate_serve(args, &w, system);
     }
@@ -387,6 +405,114 @@ fn simulate_serve(args: &Args, w: &Workload, system: System) -> Result<()> {
         );
         pt.print();
     }
+    Ok(())
+}
+
+/// `simulate --fleet`: the event-driven open-loop fleet simulation
+/// (DESIGN.md §Fleet) — sessions arrive by a stochastic process, an
+/// admission bound may reject them, and a scheduler orders each decode
+/// round over one shared DRAM cache and one flash timeline.
+fn simulate_fleet(args: &Args, w: &Workload, system: System) -> Result<()> {
+    let rate = args.get_f64("arrival-rate", 1000.0)?;
+    let arrival = match args.get_or("arrival", "poisson") {
+        "fixed" => ArrivalProcess::Fixed {
+            spacing_ns: args.get_f64("arrival-spacing-ms", 0.0)? * 1e6,
+        },
+        "poisson" => ArrivalProcess::Poisson { rate_per_s: rate },
+        "bursty" => {
+            ArrivalProcess::Bursty { rate_per_s: rate, burst: args.get_usize("burst", 4)? }
+        }
+        "diurnal" => ArrivalProcess::Diurnal {
+            rate_per_s: rate,
+            period_s: args.get_f64("period-s", 0.1)?,
+            depth: args.get_f64("depth", 0.5)?,
+        },
+        other => {
+            anyhow::bail!("--arrival expects fixed|poisson|bursty|diurnal, got `{other}`")
+        }
+    };
+    let scheduler = match args.get_or("scheduler", "fifo") {
+        "fifo" => FleetScheduler::Fifo,
+        "srt" => FleetScheduler::ShortestRemaining,
+        other => anyhow::bail!("--scheduler expects fifo|srt, got `{other}`"),
+    };
+    let scale = w.layer_scale();
+    let mut cfg = FleetConfig {
+        sessions: args.get_usize("sessions", 16)?,
+        max_concurrent: args.get_usize("max-concurrent", 4)?,
+        arrival,
+        arrival_seed: w.seed,
+        scheduler,
+        ..FleetConfig::default()
+    };
+    if let Some(b) = args.get("admission-bound") {
+        let b: usize = b
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--admission-bound expects an integer"))?;
+        cfg.admission_bound = Some(b);
+    }
+    if let Some(ms) = args.get("slo-ms") {
+        let ms: f64 =
+            ms.parse().map_err(|_| anyhow::anyhow!("--slo-ms expects a number"))?;
+        anyhow::ensure!(ms.is_finite() && ms > 0.0, "--slo-ms must be positive");
+        // the SLO is given in full-model ms; the simulator compares
+        // raw per-representative-layer ns
+        cfg.slo_ns = ms * 1e6 / scale;
+    }
+    if let Some(kb) = args.get("prefetch-global-budget-kb") {
+        anyhow::ensure!(
+            w.prefetch.enabled,
+            "--prefetch-global-budget-kb needs --prefetch"
+        );
+        let kb: usize = kb.parse().map_err(|_| {
+            anyhow::anyhow!("--prefetch-global-budget-kb expects an integer")
+        })?;
+        cfg.prefetch_global_budget = Some(kb * 1024);
+    }
+    let sspec = SystemSpec::of(system, w.model.ffn_linears);
+    let out = run_fleet(w, system, sspec, &cfg)?;
+    let fs = &out.fleet;
+    let sv = &out.summary;
+    println!(
+        "offered {} sessions / {} tokens ({} slots, {} scheduler, peak {} active): \
+         admitted {}, rejected {} ({:.1}%), completed {} sessions / {} tokens",
+        fs.offered_sessions,
+        fs.offered_tokens,
+        sv.max_concurrent,
+        cfg.scheduler.key(),
+        sv.peak_active,
+        fs.admitted_sessions,
+        fs.rejected_sessions,
+        fs.rejection_rate * 100.0,
+        fs.completed_sessions,
+        fs.completed_tokens,
+    );
+    println!(
+        "goodput {:.0} tok/s, p50/p95/p99/p99.9 {:.2}/{:.2}/{:.2}/{:.2} ms/token, \
+         mean queue {:.2} ms, agg cache hit {:.1}% (cross-session {:.1}%), \
+         makespan {:.1} ms",
+        fs.goodput_tokens_per_s,
+        sv.p50_ms,
+        sv.p95_ms,
+        sv.p99_ms,
+        sv.p999_ms,
+        sv.mean_queue_delay_ms,
+        sv.cache_hit_ratio * 100.0,
+        sv.cross_session_hit_ratio * 100.0,
+        sv.makespan_ms,
+    );
+    if fs.slo_ms > 0.0 {
+        println!(
+            "SLO {:.1} ms/token: {} violations ({:.2}% of completed tokens)",
+            fs.slo_ms,
+            fs.slo_violations,
+            fs.slo_violation_rate * 100.0,
+        );
+    }
+    println!(
+        "event heap retired {} arrivals + {} token completions + {} flash tickets",
+        fs.arrival_events, fs.token_events, fs.ticket_events,
+    );
     Ok(())
 }
 

@@ -1,0 +1,88 @@
+//! Fleet-level serving statistics for the event-driven open-loop
+//! simulator (DESIGN.md §Fleet): admission/rejection accounting,
+//! SLO-violation rates, goodput, and the event counters the property
+//! battery audits. Per-token latency tails ride on [`super::ServeSummary`]
+//! (p99 / p99.9); this summary carries what the round-based serve path
+//! has no notion of — open-loop load that the server may *refuse*.
+
+/// Flat fleet summary carried by `ExperimentResult` and serialized into
+/// `BENCH_fleet.json` as the schema-gated `fleet_metrics` object (the
+/// keys exist only on fleet rows, so historical reports stay
+/// byte-identical).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FleetSummary {
+    /// Sessions the arrival process offered.
+    pub offered_sessions: usize,
+    /// Sessions admitted past the bounded queue.
+    pub admitted_sessions: usize,
+    /// Sessions turned away at admission (queue at its bound).
+    pub rejected_sessions: usize,
+    /// Admitted sessions that decoded their full token stream.
+    pub completed_sessions: usize,
+    /// Tokens across all offered sessions.
+    pub offered_tokens: u64,
+    /// Tokens actually decoded.
+    pub completed_tokens: u64,
+    /// Tokens refused with their rejected session.
+    pub rejected_tokens: u64,
+    /// `rejected_sessions / offered_sessions`.
+    pub rejection_rate: f64,
+    /// SLO-meeting tokens per virtual second of makespan (raw sim time,
+    /// same axis as `ServeMetrics::throughput_tokens_per_s`). With no
+    /// SLO configured every completed token counts.
+    pub goodput_tokens_per_s: f64,
+    /// Per-token latency SLO, full-model ms (0.0 = no SLO configured).
+    pub slo_ms: f64,
+    /// Completed tokens whose serve latency exceeded the SLO.
+    pub slo_violations: u64,
+    /// `slo_violations / completed_tokens`.
+    pub slo_violation_rate: f64,
+    /// Full-model p99 token serve latency, ms (mirrors the serve summary
+    /// so fleet tables are self-contained).
+    pub p99_ms: f64,
+    /// Full-model p99.9 token serve latency, ms.
+    pub p999_ms: f64,
+    /// Session-arrival events retired by the event heap.
+    pub arrival_events: u64,
+    /// Per-token compute-completion events retired.
+    pub token_events: u64,
+    /// Flash ticket-completion events retired.
+    pub ticket_events: u64,
+}
+
+impl FleetSummary {
+    /// Offered load is conserved: every offered token was either decoded
+    /// or rejected, and every offered session resolved one way.
+    pub fn conserves_load(&self) -> bool {
+        self.offered_tokens == self.completed_tokens + self.rejected_tokens
+            && self.offered_sessions == self.admitted_sessions + self.rejected_sessions
+            && self.completed_sessions <= self.admitted_sessions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_conservative() {
+        assert!(FleetSummary::default().conserves_load());
+    }
+
+    #[test]
+    fn conservation_detects_leaks() {
+        let ok = FleetSummary {
+            offered_sessions: 4,
+            admitted_sessions: 3,
+            rejected_sessions: 1,
+            completed_sessions: 3,
+            offered_tokens: 40,
+            completed_tokens: 30,
+            rejected_tokens: 10,
+            ..Default::default()
+        };
+        assert!(ok.conserves_load());
+        let leak = FleetSummary { completed_tokens: 29, ..ok };
+        assert!(!leak.conserves_load());
+    }
+}

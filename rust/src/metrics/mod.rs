@@ -5,8 +5,10 @@
 //! per-session serving statistics of the multi-session simulation
 //! ([`serve`]).
 
+pub mod fleet;
 pub mod serve;
 
+pub use fleet::FleetSummary;
 pub use serve::{ServeMetrics, ServeSummary, SessionPrefetchSummary, SessionStats};
 
 use crate::util::stats::{Percentiles, Summary};

@@ -199,10 +199,11 @@ impl ServeMetrics {
     /// the run (computed by the caller from its `RunMetrics`).
     pub fn summary(&mut self, layer_scale: f64, cache_hit_ratio: f64) -> ServeSummary {
         let ms = |ns: f64| ns * layer_scale / 1e6;
-        let (p50, p95, p99) = (
+        let (p50, p95, p99, p999) = (
             self.all_latency_ns.percentile(50.0),
             self.all_latency_ns.percentile(95.0),
             self.all_latency_ns.percentile(99.0),
+            self.all_latency_ns.p999(),
         );
         ServeSummary {
             sessions: self.sessions.len(),
@@ -213,6 +214,7 @@ impl ServeMetrics {
             p50_ms: ms(p50),
             p95_ms: ms(p95),
             p99_ms: ms(p99),
+            p999_ms: ms(p999),
             mean_ms: ms(self.all_latency_ns.mean()),
             mean_queue_delay_ms: ms(self.mean_queue_delay_ns()),
             fairness: self.fairness(),
@@ -273,6 +275,10 @@ pub struct ServeSummary {
     pub p95_ms: f64,
     /// Full-model p99 token serve latency, ms.
     pub p99_ms: f64,
+    /// Full-model p99.9 token serve latency, ms. Serialized only for
+    /// fleet rows (`fleet_metrics`), so historical serve JSON stays
+    /// byte-identical.
+    pub p999_ms: f64,
     /// Full-model mean token serve latency, ms.
     pub mean_ms: f64,
     /// Full-model mean admission queueing delay, ms.
@@ -404,6 +410,8 @@ mod tests {
         m.cache_cross_hits = 2;
         let sum = m.summary(3.0, 0.4);
         assert!((sum.p50_ms - 6.0).abs() < 1e-9);
+        // single sample: every tail percentile collapses onto it
+        assert_eq!(sum.p999_ms.to_bits(), sum.p99_ms.to_bits());
         assert!((sum.makespan_ms - 6.0).abs() < 1e-9);
         assert!((sum.cross_session_hit_ratio - 0.25).abs() < 1e-12);
         assert!((sum.cache_hit_ratio - 0.4).abs() < 1e-12);

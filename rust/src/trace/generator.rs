@@ -188,6 +188,129 @@ impl TraceGen {
     }
 }
 
+/// Open-loop arrival process for the fleet simulator (DESIGN.md §Fleet).
+///
+/// Times are virtual nanoseconds on the same axis as the serving sim's
+/// `clock_ns`. Every process is generated deterministically from a
+/// [`Rng`] stream, so a fleet sweep point is a pure function of its
+/// seed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Deterministic spacing: session `i` arrives at exactly
+    /// `i * spacing_ns` (the closed-loop shape `SessionManager` uses,
+    /// kept bit-compatible for the golden reduction test).
+    Fixed {
+        /// Gap between consecutive arrivals, virtual ns.
+        spacing_ns: f64,
+    },
+    /// Memoryless Poisson stream: exponential inter-arrival gaps.
+    Poisson {
+        /// Mean arrival rate, sessions per virtual second.
+        rate_per_s: f64,
+    },
+    /// Bursty traffic: bursts of `burst` *coincident* arrivals, with
+    /// exponential gaps between bursts sized so the long-run mean rate
+    /// stays `rate_per_s`. The coincident timestamps deliberately
+    /// exercise event-heap tie-breaking.
+    Bursty {
+        /// Long-run mean arrival rate, sessions per virtual second.
+        rate_per_s: f64,
+        /// Arrivals per burst (>= 1; 1 degenerates to Poisson).
+        burst: usize,
+    },
+    /// Diurnal load curve: a Poisson process whose instantaneous rate
+    /// swings sinusoidally around `rate_per_s`, sampled by thinning a
+    /// homogeneous process at the peak rate.
+    Diurnal {
+        /// Mean arrival rate, sessions per virtual second.
+        rate_per_s: f64,
+        /// Period of one load cycle, virtual seconds.
+        period_s: f64,
+        /// Swing amplitude in `[0, 1]`: instantaneous rate is
+        /// `rate * (1 + depth * sin(2*pi*t/period))`.
+        depth: f64,
+    },
+}
+
+/// Stateful generator yielding one monotone non-decreasing arrival time
+/// per call. `Fixed` is index-based (`i as f64 * spacing_ns`, not an
+/// accumulated sum) so it reproduces `SessionManager`'s arrival grid
+/// bit-for-bit.
+pub struct ArrivalGen {
+    process: ArrivalProcess,
+    rng: Rng,
+    t_ns: f64,
+    idx: u64,
+    burst_left: usize,
+}
+
+impl ArrivalGen {
+    pub fn new(process: ArrivalProcess, seed: u64) -> Self {
+        match process {
+            ArrivalProcess::Fixed { spacing_ns } => {
+                assert!(spacing_ns.is_finite() && spacing_ns >= 0.0);
+            }
+            ArrivalProcess::Poisson { rate_per_s } => {
+                assert!(rate_per_s.is_finite() && rate_per_s > 0.0);
+            }
+            ArrivalProcess::Bursty { rate_per_s, burst } => {
+                assert!(rate_per_s.is_finite() && rate_per_s > 0.0);
+                assert!(burst >= 1);
+            }
+            ArrivalProcess::Diurnal { rate_per_s, period_s, depth } => {
+                assert!(rate_per_s.is_finite() && rate_per_s > 0.0);
+                assert!(period_s.is_finite() && period_s > 0.0);
+                assert!((0.0..=1.0).contains(&depth));
+            }
+        }
+        Self { process, rng: Rng::new(seed), t_ns: 0.0, idx: 0, burst_left: 0 }
+    }
+
+    /// Exponential gap with the given rate (events per ns). `1 - u` keeps
+    /// the argument of `ln` strictly positive.
+    fn exp_gap(&mut self, rate_per_ns: f64) -> f64 {
+        -(1.0 - self.rng.f64()).ln() / rate_per_ns
+    }
+
+    /// Next arrival time, virtual ns (non-decreasing across calls).
+    pub fn next_ns(&mut self) -> f64 {
+        match self.process {
+            ArrivalProcess::Fixed { spacing_ns } => {
+                let t = self.idx as f64 * spacing_ns;
+                self.idx += 1;
+                t
+            }
+            ArrivalProcess::Poisson { rate_per_s } => {
+                self.t_ns += self.exp_gap(rate_per_s / 1e9);
+                self.t_ns
+            }
+            ArrivalProcess::Bursty { rate_per_s, burst } => {
+                if self.burst_left == 0 {
+                    // bursts arrive at rate/burst so the mean stays put
+                    self.t_ns += self.exp_gap(rate_per_s / burst as f64 / 1e9);
+                    self.burst_left = burst;
+                }
+                self.burst_left -= 1;
+                self.t_ns
+            }
+            ArrivalProcess::Diurnal { rate_per_s, period_s, depth } => {
+                // thinning: candidates at the peak rate, accepted with
+                // probability rate(t)/peak — exact for rate(t) <= peak
+                let peak_per_ns = rate_per_s * (1.0 + depth) / 1e9;
+                loop {
+                    self.t_ns += self.exp_gap(peak_per_ns);
+                    let phase = 2.0 * std::f64::consts::PI * self.t_ns
+                        / (period_s * 1e9);
+                    let accept = (1.0 + depth * phase.sin()) / (1.0 + depth);
+                    if self.rng.f64() < accept {
+                        return self.t_ns;
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,5 +389,100 @@ mod tests {
         assert_eq!(tr.n_layers, 2);
         let sp = tr.sparsity();
         assert!(sp > 0.0 && sp < 0.5, "sparsity={sp}");
+    }
+
+    // ---- open-loop arrival processes -----------------------------------
+
+    fn arrivals(p: ArrivalProcess, seed: u64, n: usize) -> Vec<f64> {
+        let mut g = ArrivalGen::new(p, seed);
+        (0..n).map(|_| g.next_ns()).collect()
+    }
+
+    fn all_processes() -> Vec<ArrivalProcess> {
+        vec![
+            ArrivalProcess::Fixed { spacing_ns: 2.5e6 },
+            ArrivalProcess::Poisson { rate_per_s: 1_000.0 },
+            ArrivalProcess::Bursty { rate_per_s: 1_000.0, burst: 8 },
+            ArrivalProcess::Diurnal { rate_per_s: 1_000.0, period_s: 0.5, depth: 0.8 },
+        ]
+    }
+
+    #[test]
+    fn arrivals_deterministic_given_seed() {
+        for p in all_processes() {
+            let a = arrivals(p, 42, 500);
+            let b = arrivals(p, 42, 500);
+            assert!(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{p:?}: same seed must replay the exact sequence"
+            );
+            // a different seed moves every stochastic process
+            if !matches!(p, ArrivalProcess::Fixed { .. }) {
+                let c = arrivals(p, 43, 500);
+                assert_ne!(a, c, "{p:?}: seed must matter");
+            }
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_nonnegative() {
+        for p in all_processes() {
+            let a = arrivals(p, 7, 2_000);
+            assert!(a[0] >= 0.0);
+            assert!(
+                a.windows(2).all(|w| w[0] <= w[1]),
+                "{p:?}: arrival times must be non-decreasing"
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_matches_session_manager_grid_bitwise() {
+        // the golden reduction depends on `i as f64 * spacing`, not an
+        // accumulated sum (which rounds differently)
+        let spacing = 0.3e6;
+        let a = arrivals(ArrivalProcess::Fixed { spacing_ns: spacing }, 0, 64);
+        for (i, t) in a.iter().enumerate() {
+            assert_eq!(t.to_bits(), (i as f64 * spacing).to_bits());
+        }
+    }
+
+    #[test]
+    fn poisson_empirical_mean_within_tolerance() {
+        // rate 1000/s => mean gap 1e6 ns; 8000 samples keep the sample
+        // mean within ~4 sigma of 10%
+        let a = arrivals(ArrivalProcess::Poisson { rate_per_s: 1_000.0 }, 11, 8_000);
+        let mean_gap = a.last().unwrap() / (a.len() - 1) as f64;
+        assert!(
+            (0.9e6..1.1e6).contains(&mean_gap),
+            "poisson mean inter-arrival {mean_gap} ns, want ~1e6"
+        );
+    }
+
+    #[test]
+    fn bursty_emits_coincident_groups_at_the_target_rate() {
+        let p = ArrivalProcess::Bursty { rate_per_s: 1_000.0, burst: 8 };
+        let a = arrivals(p, 5, 8_000);
+        // arrivals come in groups of exactly `burst` equal timestamps
+        for chunk in a.chunks(8) {
+            assert!(chunk.iter().all(|t| t.to_bits() == chunk[0].to_bits()));
+        }
+        assert!(a[7] < a[8], "distinct bursts must be separated in time");
+        // long-run mean rate stays ~rate_per_s
+        let mean_gap = a.last().unwrap() / (a.len() - 1) as f64;
+        assert!((0.85e6..1.15e6).contains(&mean_gap), "bursty mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn diurnal_mean_rate_stays_near_nominal() {
+        // thinning preserves the mean: over whole periods the time-average
+        // of rate*(1 + depth*sin) is the nominal rate
+        let p = ArrivalProcess::Diurnal { rate_per_s: 1_000.0, period_s: 0.1, depth: 0.9 };
+        let a = arrivals(p, 13, 10_000);
+        let mean_gap = a.last().unwrap() / (a.len() - 1) as f64;
+        assert!(
+            (0.85e6..1.15e6).contains(&mean_gap),
+            "diurnal mean inter-arrival {mean_gap} ns, want ~1e6"
+        );
     }
 }

@@ -8,7 +8,7 @@
 
 pub mod generator;
 
-pub use generator::{DatasetProfile, LayerTraceGen, TraceGen};
+pub use generator::{ArrivalGen, ArrivalProcess, DatasetProfile, LayerTraceGen, TraceGen};
 
 use crate::neuron::BundleId;
 

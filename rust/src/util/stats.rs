@@ -95,6 +95,13 @@ impl Percentiles {
         self.xs[rank.min(self.xs.len() - 1)]
     }
 
+    /// The p99.9 tail (fleet SLO accounting). Nearest-rank like every
+    /// other percentile here: below ~500 samples the 99.9th rank rounds
+    /// to the last element, so p99 == p99.9 == max for small N.
+    pub fn p999(&mut self) -> f64 {
+        self.percentile(99.9)
+    }
+
     pub fn mean(&self) -> f64 {
         if self.xs.is_empty() {
             0.0
@@ -268,6 +275,38 @@ mod tests {
         assert_eq!(p.percentile(50.0), 50.0);
         assert_eq!(p.percentile(99.0), 99.0);
         assert_eq!(p.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn p999_equals_p99_equals_max_for_small_n() {
+        // nearest-rank: until the sample count resolves the 99.9th
+        // (and 99th) rank, both tails collapse onto the max
+        for n in 1..=10 {
+            let mut p = Percentiles::new();
+            for i in 0..n {
+                p.add(i as f64);
+            }
+            let max = (n - 1) as f64;
+            assert_eq!(p.percentile(99.0), max, "n={n}");
+            assert_eq!(p.p999(), max, "n={n}");
+        }
+    }
+
+    #[test]
+    fn p999_separates_from_p99_at_scale() {
+        let mut p = Percentiles::new();
+        for i in 0..10_000 {
+            p.add(i as f64);
+        }
+        assert_eq!(p.percentile(99.0), 9899.0);
+        assert_eq!(p.p999(), 9989.0);
+        assert_eq!(p.percentile(100.0), 9999.0);
+    }
+
+    #[test]
+    fn p999_empty_is_zero() {
+        let mut p = Percentiles::new();
+        assert_eq!(p.p999(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Property battery for the event-driven fleet simulator
+//! (DESIGN.md §Fleet): a hand-rolled LCG (no external proptest crate,
+//! same style as `arbiter_props.rs`) drives randomized event multisets
+//! and fleet configurations against the simulator's structural
+//! contracts.
+//!
+//! Invariants:
+//! * heap order: for any multiset of events, pop order is the unique
+//!   `(t_ns, kind, sid)` total order — independent of insertion order,
+//!   with nothing lost or duplicated across tie-breaks;
+//! * event-time monotonicity: the retired-event log of a full fleet run
+//!   never steps backwards in virtual time;
+//! * conservation: every offered token is decoded or rejected, every
+//!   offered session resolves exactly one way, and the event counts
+//!   close (arrival events == offered sessions, token events ==
+//!   completed tokens, log length == the sum of the kind counters);
+//! * determinism: rerunning a configuration reproduces the summary and
+//!   the retired-event log bit-for-bit.
+
+use ripple::bench::workloads::{tiny_workload, System, SystemSpec};
+use ripple::coordinator::fleet::{EVENT_ARRIVAL, EVENT_TICKET, EVENT_TOKEN};
+use ripple::coordinator::{run_fleet, EventHeap, FleetConfig, FleetEvent, FleetScheduler};
+use ripple::trace::ArrivalProcess;
+
+/// Deterministic 64-bit LCG (Knuth MMIX constants).
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    /// Uniform-ish value in `[0, bound)` (bound > 0).
+    fn below(&mut self, bound: u64) -> u64 {
+        (self.next() >> 11) % bound
+    }
+}
+
+/// The strict `(t_ns, kind, sid)` key the heap is specified to pop in.
+/// For the non-negative finite times used here, `f64::to_bits` order
+/// equals `total_cmp` order, so the key is a plain integer tuple.
+fn key(e: &FleetEvent) -> (u64, u8, u32) {
+    (e.t_ns.to_bits(), e.kind, e.sid)
+}
+
+fn drain(heap: &mut EventHeap) -> Vec<FleetEvent> {
+    let mut out = Vec::with_capacity(heap.len());
+    while let Some(e) = heap.pop() {
+        out.push(e);
+    }
+    out
+}
+
+#[test]
+fn heap_pop_order_is_total_and_insertion_order_independent() {
+    let mut rng = Lcg(0x5EED_F1E1);
+    for trial in 0..60 {
+        let n = 1 + rng.below(64) as usize;
+        let mut events: Vec<FleetEvent> = (0..n)
+            .map(|_| FleetEvent {
+                // few distinct times, kinds and ids -> plenty of exact
+                // ties to exercise the (kind, sid) tie-break
+                t_ns: rng.below(8) as f64 * 100.0,
+                kind: [EVENT_ARRIVAL, EVENT_TICKET, EVENT_TOKEN][rng.below(3) as usize],
+                sid: rng.below(6) as u32,
+            })
+            .collect();
+        let mut heap = EventHeap::with_capacity(n);
+        for &e in &events {
+            heap.push(e);
+        }
+        let popped = drain(&mut heap);
+        // no lost or duplicated events across tie-breaks ...
+        assert_eq!(popped.len(), n, "trial {trial}: lost or duplicated events");
+        // ... and pop order is exactly the sorted (t, kind, sid) order
+        let mut want = events.clone();
+        want.sort_by_key(key);
+        assert!(
+            want.iter().zip(&popped).all(|(a, b)| key(a) == key(b)),
+            "trial {trial}: pop order violates the (t, kind, sid) total order"
+        );
+        // Fisher-Yates shuffle, reinsert, repop: identical sequence
+        for i in (1..events.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            events.swap(i, j);
+        }
+        let mut heap = EventHeap::with_capacity(n);
+        for &e in &events {
+            heap.push(e);
+        }
+        let reshuffled = drain(&mut heap);
+        assert!(
+            popped.iter().zip(&reshuffled).all(|(a, b)| key(a) == key(b)),
+            "trial {trial}: pop order depends on insertion order"
+        );
+    }
+}
+
+/// A random-but-reproducible fleet configuration spanning every axis:
+/// all four arrival processes, both schedulers, bounded/unbounded
+/// admission, and no/loose/impossible SLOs.
+fn random_config(rng: &mut Lcg) -> FleetConfig {
+    let arrival = match rng.below(4) {
+        0 => ArrivalProcess::Fixed { spacing_ns: rng.below(3) as f64 * 250_000.0 },
+        1 => ArrivalProcess::Poisson { rate_per_s: 500.0 + rng.below(8_000) as f64 },
+        2 => ArrivalProcess::Bursty {
+            rate_per_s: 500.0 + rng.below(8_000) as f64,
+            burst: 1 + rng.below(4) as usize,
+        },
+        _ => ArrivalProcess::Diurnal {
+            rate_per_s: 500.0 + rng.below(8_000) as f64,
+            period_s: 0.002 + rng.below(50) as f64 * 1e-4,
+            depth: rng.below(100) as f64 / 100.0,
+        },
+    };
+    let scheduler = if rng.below(2) == 0 {
+        FleetScheduler::Fifo
+    } else {
+        FleetScheduler::ShortestRemaining
+    };
+    let admission_bound = match rng.below(3) {
+        0 => None,
+        _ => Some(rng.below(4) as usize),
+    };
+    let slo_ns = match rng.below(3) {
+        0 => f64::INFINITY,
+        1 => 50_000.0 + rng.below(2_000_000) as f64,
+        _ => 1.0, // tighter than any real token: everything violates
+    };
+    FleetConfig {
+        sessions: 2 + rng.below(9) as usize,
+        max_concurrent: 1 + rng.below(4) as usize,
+        arrival,
+        arrival_seed: rng.next(),
+        scheduler,
+        admission_bound,
+        slo_ns,
+        ..FleetConfig::default()
+    }
+}
+
+#[test]
+fn random_fleets_conserve_load_and_retire_monotone_events() {
+    let mut w = tiny_workload();
+    w.eval_tokens = 6;
+    let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+    let mut rng = Lcg(0x5EED_F1E2);
+    for trial in 0..8 {
+        let cfg = random_config(&mut rng);
+        let out = run_fleet(&w, System::Ripple, spec, &cfg).unwrap();
+        let fs = &out.fleet;
+        assert!(fs.conserves_load(), "trial {trial} ({cfg:?}): {fs:?}");
+        // the retired-event log never steps backwards in virtual time
+        let log = &out.stats.events;
+        assert!(
+            log.windows(2).all(|p| p[0].t_ns <= p[1].t_ns),
+            "trial {trial} ({cfg:?}): event log steps backwards in time"
+        );
+        // event counts close: nothing lost, nothing duplicated
+        assert_eq!(fs.arrival_events, fs.offered_sessions as u64, "trial {trial}");
+        assert_eq!(fs.token_events, fs.completed_tokens, "trial {trial}");
+        assert_eq!(
+            log.len() as u64,
+            fs.arrival_events + fs.token_events + fs.ticket_events,
+            "trial {trial}"
+        );
+        let count = |k: u8| log.iter().filter(|e| e.kind == k).count() as u64;
+        assert_eq!(count(EVENT_ARRIVAL), fs.arrival_events, "trial {trial}");
+        assert_eq!(count(EVENT_TOKEN), fs.token_events, "trial {trial}");
+        assert_eq!(count(EVENT_TICKET), fs.ticket_events, "trial {trial}");
+        // admitted streams are finite, so every admitted session ends
+        assert_eq!(fs.completed_sessions, fs.admitted_sessions, "trial {trial}");
+        // the fleet's token count is the aggregate recorder's
+        assert_eq!(fs.completed_tokens, out.metrics.tokens, "trial {trial}");
+        assert!(fs.slo_violations <= fs.completed_tokens, "trial {trial}");
+    }
+}
+
+#[test]
+fn reruns_reproduce_summaries_and_event_logs_bit_for_bit() {
+    let mut w = tiny_workload();
+    w.eval_tokens = 6;
+    let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+    let mut rng = Lcg(0x5EED_F1E3);
+    for trial in 0..4 {
+        let cfg = random_config(&mut rng);
+        let a = run_fleet(&w, System::Ripple, spec, &cfg).unwrap();
+        let b = run_fleet(&w, System::Ripple, spec, &cfg).unwrap();
+        assert_eq!(a.fleet, b.fleet, "trial {trial} ({cfg:?})");
+        assert_eq!(
+            a.summary.makespan_ms.to_bits(),
+            b.summary.makespan_ms.to_bits(),
+            "trial {trial}"
+        );
+        assert_eq!(
+            a.summary.p999_ms.to_bits(),
+            b.summary.p999_ms.to_bits(),
+            "trial {trial}"
+        );
+        assert_eq!(a.stats.events.len(), b.stats.events.len(), "trial {trial}");
+        assert!(
+            a.stats
+                .events
+                .iter()
+                .zip(&b.stats.events)
+                .all(|(x, y)| key(x) == key(y)),
+            "trial {trial}: retired-event logs diverge"
+        );
+    }
+}
+
+#[test]
+fn zero_admission_bound_rejects_every_session() {
+    // bound 0 means no session may ever wait; since slots are granted
+    // only from the waiting queue, the entire offered load is refused —
+    // and conservation still closes with zero completed tokens.
+    let mut w = tiny_workload();
+    w.eval_tokens = 4;
+    let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+    let cfg = FleetConfig {
+        sessions: 5,
+        admission_bound: Some(0),
+        arrival: ArrivalProcess::Poisson { rate_per_s: 2_000.0 },
+        arrival_seed: 11,
+        ..FleetConfig::default()
+    };
+    let out = run_fleet(&w, System::Ripple, spec, &cfg).unwrap();
+    let fs = &out.fleet;
+    assert_eq!(fs.rejected_sessions, 5);
+    assert_eq!(fs.admitted_sessions, 0);
+    assert_eq!(fs.completed_tokens, 0);
+    assert_eq!(fs.rejected_tokens, fs.offered_tokens);
+    assert!(fs.conserves_load());
+    assert_eq!(fs.arrival_events, 5);
+    assert_eq!(fs.token_events, 0);
+    assert!((fs.rejection_rate - 1.0).abs() < 1e-12);
+}

@@ -5,14 +5,21 @@
 //!   every later perf PR diffs against),
 //! * a scenario spec reproduces `run_experiment`'s metrics bit-for-bit
 //!   (so `bench --preset fig18` reports the same numbers as the
-//!   historical `benches/fig18_overlap.rs` loops), and
+//!   historical `benches/fig18_overlap.rs` loops),
+//! * the degenerate event-driven fleet (fixed spacing, FIFO, unbounded
+//!   admission) reproduces the round-based `run_serve` path bit-for-bit
+//!   — sync and speculative-prefetch variants — pinning the
+//!   discrete-event scheduler to the serving simulator it generalizes,
+//!   and
 //! * a report round-trips through `Baseline` with zero deltas.
 
-use ripple::bench::workloads::{bench_workload, run_experiment, System};
+use ripple::bench::workloads::{bench_workload, run_experiment, System, SystemSpec};
+use ripple::coordinator::{run_fleet, run_serve, FleetConfig, FleetScheduler, ServeConfig};
 use ripple::harness::{
-    preset, run_matrix, run_scenario, Baseline, PrefetchPoint, ScenarioSpec, ServePoint,
+    preset, run_matrix, run_scenario, Baseline, FleetPoint, PrefetchPoint, ScenarioSpec,
+    ServePoint,
 };
-use ripple::trace::DatasetProfile;
+use ripple::trace::{ArrivalProcess, DatasetProfile};
 
 #[test]
 fn fig10_json_byte_identical_across_thread_counts() {
@@ -211,6 +218,128 @@ fn serve_prefetch_json_byte_identical_across_thread_counts() {
     assert!(ja.contains("\"prefetch_global_budget_bytes\":98304"));
     assert!(ja.contains("\"mean_service_ms\""));
     assert_eq!(a.results.len(), 2);
+}
+
+/// The common shrink both sides of the fleet-vs-serve reductions use.
+fn golden_fleet_workload() -> ripple::bench::workloads::Workload {
+    let mut w = bench_workload("OPT-350M", 0, DatasetProfile::alpaca());
+    w.calib_tokens = 64;
+    w.eval_tokens = 16;
+    w.sim_layers = 2;
+    w.knn = 8;
+    w
+}
+
+#[test]
+fn fleet_degenerate_reduces_to_serve_bit_for_bit() {
+    // fixed spacing + FIFO + unbounded admission + no SLO is exactly
+    // the SessionManager serve shape: the event-driven scheduler must
+    // replay its f64 operations in the same order
+    let w = golden_fleet_workload();
+    let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+    let serve_cfg = ServeConfig {
+        sessions: 3,
+        max_concurrent: 2,
+        arrival_spacing_ns: 40_000.0,
+        ..ServeConfig::default()
+    };
+    let serve = run_serve(&w, System::Ripple, spec, &serve_cfg).unwrap();
+    let fleet_cfg = FleetConfig {
+        sessions: 3,
+        max_concurrent: 2,
+        arrival: ArrivalProcess::Fixed { spacing_ns: 40_000.0 },
+        ..FleetConfig::default()
+    };
+    let fleet = run_fleet(&w, System::Ripple, spec, &fleet_cfg).unwrap();
+    // the flat summary compares every f64; to_bits pins the tails even
+    // against -0.0 == 0.0 laxity in PartialEq
+    assert_eq!(fleet.summary, serve.summary);
+    assert_eq!(fleet.summary.makespan_ms.to_bits(), serve.summary.makespan_ms.to_bits());
+    assert_eq!(fleet.summary.p99_ms.to_bits(), serve.summary.p99_ms.to_bits());
+    assert_eq!(fleet.summary.p999_ms.to_bits(), serve.summary.p999_ms.to_bits());
+    assert_eq!(fleet.summary.mean_ms.to_bits(), serve.summary.mean_ms.to_bits());
+    let (a, b) = (&serve.metrics, &fleet.metrics);
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.totals.commands, b.totals.commands);
+    assert_eq!(a.totals.bytes, b.totals.bytes);
+    assert_eq!(a.totals.demanded_bundles, b.totals.demanded_bundles);
+    assert_eq!(a.totals.cached_bundles, b.totals.cached_bundles);
+    assert_eq!(a.totals.read_bundles, b.totals.read_bundles);
+    assert_eq!(a.totals.elapsed_ns.to_bits(), b.totals.elapsed_ns.to_bits());
+    assert_eq!(a.totals.stall_ns.to_bits(), b.totals.stall_ns.to_bits());
+    assert_eq!(a.compute_ns.to_bits(), b.compute_ns.to_bits());
+    assert_eq!(fleet.bundle_bytes, serve.bundle_bytes);
+    // the open-loop accounting is trivial here: everything completes
+    assert_eq!(fleet.fleet.rejected_sessions, 0);
+    assert_eq!(fleet.fleet.completed_tokens, a.tokens);
+    assert!(fleet.fleet.conserves_load());
+}
+
+#[test]
+fn fleet_degenerate_prefetch_reduces_to_arbitrated_serve_bit_for_bit() {
+    // the speculative variant: every session runs the overlapped
+    // pipeline under the fair-share arbiter on both paths
+    let mut w = golden_fleet_workload();
+    w.prefetch.enabled = true;
+    w.prefetch.budget_bytes = 64 * 1024;
+    let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+    let serve_cfg = ServeConfig { sessions: 2, max_concurrent: 2, ..ServeConfig::default() };
+    let serve = run_serve(&w, System::Ripple, spec, &serve_cfg).unwrap();
+    let fleet_cfg = FleetConfig { sessions: 2, max_concurrent: 2, ..FleetConfig::default() };
+    let fleet = run_fleet(&w, System::Ripple, spec, &fleet_cfg).unwrap();
+    // summary equality covers the per-session attribution rows too
+    assert_eq!(fleet.summary, serve.summary);
+    let (a, b) = (&serve.metrics, &fleet.metrics);
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.totals.commands, b.totals.commands);
+    assert_eq!(a.totals.bytes, b.totals.bytes);
+    assert_eq!(a.totals.prefetch_hit_bundles, b.totals.prefetch_hit_bundles);
+    assert_eq!(a.totals.prefetch_wasted_bundles, b.totals.prefetch_wasted_bundles);
+    assert_eq!(a.totals.elapsed_ns.to_bits(), b.totals.elapsed_ns.to_bits());
+    assert_eq!(a.totals.stall_ns.to_bits(), b.totals.stall_ns.to_bits());
+    assert_eq!(a.compute_ns.to_bits(), b.compute_ns.to_bits());
+    assert!(
+        a.totals.prefetch_hit_bundles + a.totals.prefetch_wasted_bundles > 0,
+        "the speculative anchor must actually speculate"
+    );
+}
+
+#[test]
+fn fleet_json_byte_identical_across_thread_counts() {
+    // the open-loop axes shrunk to test scale: a degenerate anchor, a
+    // two-rate Poisson ramp sharing one ramp key, and a bounded SRT row
+    let mut m = preset("fleet").unwrap();
+    m.extra.clear();
+    m.fleet = vec![
+        Some(FleetPoint::fixed(6, 0.0)),
+        Some(FleetPoint::poisson(6, 400.0).with_slo_ms(40.0)),
+        Some(FleetPoint::poisson(6, 1600.0).with_slo_ms(40.0)),
+        Some(
+            FleetPoint::poisson(6, 1600.0)
+                .with_scheduler(FleetScheduler::ShortestRemaining)
+                .with_bound(2)
+                .with_slo_ms(40.0),
+        ),
+    ];
+    m.scale_down(48, 4, 2, 8);
+    let a = run_matrix(&m, 1).unwrap();
+    let b = run_matrix(&m, 8).unwrap();
+    let (ja, jb) = (a.json_string(), b.json_string());
+    assert_eq!(ja, jb, "fleet JSON must be byte-identical across thread counts");
+    assert!(ja.contains("\"name\":\"fleet\""));
+    assert!(ja.contains("\"fleet\":{"));
+    assert!(ja.contains("\"fleet_metrics\":{"));
+    assert!(ja.contains("\"goodput_tokens_per_s\""));
+    assert!(ja.contains("\"p999_ms\""));
+    assert!(ja.contains("\"slo_violation_rate\""));
+    assert!(ja.contains("\"arrival\":\"po400\""));
+    assert_eq!(a.results.len(), 4);
+    // reruns are byte-identical too (the BENCH_fleet.json contract)
+    let again = run_matrix(&m, 8).unwrap();
+    assert_eq!(ja, again.json_string());
+    let md = a.to_markdown(None);
+    assert!(md.contains("## Fleet (open-loop, event-driven)"), "{md}");
+    assert!(md.contains("### Load ramp `f6c4-fifo-slo40ms`"), "{md}");
 }
 
 #[test]

@@ -6,7 +6,9 @@
 //! stream through the decode step must perform ZERO heap allocations —
 //! the dense slot-indexed caches, the step scratch arena, and the
 //! pooled speculation buffers together make the steady-state per-token
-//! path allocation- and hash-free.
+//! path allocation- and hash-free. The same gate covers the
+//! multi-session serve round and the event-driven fleet step (whose
+//! heap, retired-event log and queues are all pre-sized).
 //!
 //! This file is its own test binary on purpose: a `#[global_allocator]`
 //! is process-wide, and the counter must not race other test threads.
@@ -19,7 +21,7 @@ use ripple::bench::workloads::{
     pipeline_with, System, SystemSpec, Workload,
 };
 use ripple::cache::{KeySpace, NeuronCache};
-use ripple::coordinator::{ServeConfig, SessionManager};
+use ripple::coordinator::{FleetConfig, FleetManager, ServeConfig, SessionManager};
 use ripple::flash::UfsSim;
 use ripple::pipeline::IoPipeline;
 use ripple::prefetch::Prefetcher;
@@ -146,6 +148,48 @@ fn build_serve(w: &Workload, sessions: usize) -> (SessionManager, UfsSim) {
     (m, sim)
 }
 
+/// Mirror `run_fleet`'s construction for a manager the fleet gate can
+/// drive step-by-step (degenerate simultaneous arrivals, two decode
+/// slots, shared cache).
+fn build_fleet(w: &Workload, sessions: usize) -> (FleetManager, UfsSim) {
+    let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+    let calib = w.calibration_trace();
+    let (layouts, _) = layouts_for(System::Ripple, &calib, w.knn, w.threads);
+    let space = neuron_space(w);
+    let bundle_bytes = space.bundle_bytes;
+    let pcfg = pipeline_config(spec, w, None);
+    let keys = KeySpace::of(&space);
+    let cache =
+        NeuronCache::from_config(spec.cache_policy, cache_capacity(w), keys, w.seed)
+            .unwrap();
+    let pf = w
+        .prefetch
+        .enabled
+        .then(|| Prefetcher::from_trace(&calib, w.prefetch.clone(), w.threads));
+    let streams = (0..sessions)
+        .map(|sid| {
+            let mut p = IoPipeline::new(pcfg.clone(), space.clone(), layouts.clone());
+            if let Some(pf) = &pf {
+                p.set_prefetcher(Some(pf.clone()));
+            }
+            (p, w.session_eval_trace(&w.dataset, sid))
+        })
+        .collect();
+    let cfg = FleetConfig { sessions, max_concurrent: 2, ..FleetConfig::default() };
+    let sim = UfsSim::new(w.device.clone(), space.image_bytes());
+    let mut m = FleetManager::new(
+        cfg,
+        streams,
+        cache,
+        w.compute_ns_per_layer * w.sim_layers as f64,
+        bundle_bytes,
+    );
+    if w.prefetch.enabled {
+        m.enable_prefetch(w.compute_ns_per_layer, w.prefetch.budget_bytes * sessions);
+    }
+    (m, sim)
+}
+
 /// One test fn on purpose: the global counter must never observe a
 /// concurrent sibling test's allocations, and a single-test binary has
 /// no worker threads racing the counting window.
@@ -224,4 +268,40 @@ fn decode_step_is_allocation_free_after_warmup() {
         "steady-state arbitrated serve round allocated {steady} times after warmup"
     );
     assert!(!manager.is_done(), "the gated round must be mid-run, not the finale");
+
+    // --- steady-state fleet step (event-driven, synchronous) -------------
+    // The event heap, the retired-event log, the waiting/active queues
+    // and every recorder are pre-sized at construction, so one scheduler
+    // iteration — retire due events, grant slots, serve a round through
+    // the heap — touches the allocator not at all.
+    let w = fig10_workload();
+    let (mut fleet, mut fleet_sim) = build_fleet(&w, 4);
+    for _ in 0..20 {
+        assert!(fleet.step(&mut fleet_sim), "fleet warmup ended early");
+    }
+    let steady = count_allocs(|| {
+        fleet.step(&mut fleet_sim);
+    });
+    assert_eq!(
+        steady, 0,
+        "steady-state fleet step allocated {steady} times after warmup"
+    );
+    assert!(!fleet.is_done(), "the gated fleet step must be mid-run, not the finale");
+
+    // --- steady-state fleet step, overlapped + arbiter --------------------
+    let mut w = fig10_workload();
+    w.prefetch.enabled = true;
+    w.prefetch.budget_bytes = 32 * w.model.bundle_bytes(w.precision);
+    let (mut fleet, mut fleet_sim) = build_fleet(&w, 4);
+    for _ in 0..20 {
+        assert!(fleet.step(&mut fleet_sim), "fleet warmup ended early");
+    }
+    let steady = count_allocs(|| {
+        fleet.step(&mut fleet_sim);
+    });
+    assert_eq!(
+        steady, 0,
+        "steady-state arbitrated fleet step allocated {steady} times after warmup"
+    );
+    assert!(!fleet.is_done(), "the gated fleet step must be mid-run, not the finale");
 }
