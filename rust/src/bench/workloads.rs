@@ -221,6 +221,9 @@ pub struct ExperimentResult {
     pub serve: Option<ServeSummary>,
     /// Fleet-level open-loop summary (`None` except for fleet rows).
     pub fleet: Option<FleetSummary>,
+    /// Per-phase latency attribution from the flight recorder (`None`
+    /// unless the run was traced).
+    pub attribution: Option<crate::obs::AttributionSummary>,
 }
 
 impl ExperimentResult {
@@ -411,7 +414,20 @@ pub fn run_spec(
     spec: SystemSpec,
     eval_dataset: &DatasetProfile,
 ) -> anyhow::Result<ExperimentResult> {
-    run_inner(w, spec, eval_dataset, named_system(spec))
+    run_inner(w, spec, eval_dataset, named_system(spec), None)
+}
+
+/// Like [`run_spec`] but with a flight recorder attached to the flash
+/// device, the I/O pipeline, and the per-token decode loop. Tracing is
+/// observation-only: the simulated timeline is bit-identical to the
+/// untraced run.
+pub fn run_spec_traced(
+    w: &Workload,
+    spec: SystemSpec,
+    eval_dataset: &DatasetProfile,
+    trace: Option<&crate::obs::TraceHandle>,
+) -> anyhow::Result<ExperimentResult> {
+    run_inner(w, spec, eval_dataset, named_system(spec), trace)
 }
 
 fn named_system(spec: SystemSpec) -> System {
@@ -430,7 +446,7 @@ pub fn run_experiment_eval(
     system: System,
     eval_dataset: &DatasetProfile,
 ) -> anyhow::Result<ExperimentResult> {
-    run_inner(w, SystemSpec::of(system, w.model.ffn_linears), eval_dataset, system)
+    run_inner(w, SystemSpec::of(system, w.model.ffn_linears), eval_dataset, system, None)
 }
 
 /// Shared-scan construction for overlapped (prefetch-enabled) ripple
@@ -464,6 +480,7 @@ fn run_inner(
     spec: SystemSpec,
     eval_dataset: &DatasetProfile,
     report_as: System,
+    trace: Option<&crate::obs::TraceHandle>,
 ) -> anyhow::Result<ExperimentResult> {
     let calib = w.calibration_trace();
     // speculative prefetch learns from the same calibration trace as the
@@ -497,6 +514,10 @@ fn run_inner(
         };
         pipeline.set_prefetcher(Some(pf));
     }
+    if let Some(tr) = trace {
+        sim.set_trace(Some(tr.clone()));
+        pipeline.set_trace(Some(tr.clone()), 0);
+    }
 
     // dense baselines execute the full FFN per token; sparse systems pay
     // the sparse-deployment estimate — e2e comparisons across systems
@@ -517,6 +538,7 @@ fn run_inner(
     };
     let t_decode = std::time::Instant::now();
     for tok in &eval.tokens {
+        let step_start = sim.clock_ns();
         let t = if spec.dense {
             let mut t = pipeline.step_token(&mut cache, &mut sim, &dense_tok);
             // effective bandwidth counts only the neurons the model
@@ -533,6 +555,11 @@ fn run_inner(
         // compute happens either way; only the overlapped path lets the
         // flash timeline hide underneath it
         metrics.record_compute(compute_ns_per_layer * w.sim_layers as f64);
+        if let Some(tr) = trace {
+            let compute = compute_ns_per_layer * w.sim_layers as f64;
+            let stall = t.stall_ns;
+            tr.with(|rec| rec.token(0, step_start, 0.0, stall, compute, stall + compute));
+        }
     }
     let decode_wall_secs = t_decode.elapsed().as_secs_f64();
     Ok(ExperimentResult {
@@ -544,6 +571,7 @@ fn run_inner(
         bundle_bytes,
         serve: None,
         fleet: None,
+        attribution: None,
     })
 }
 

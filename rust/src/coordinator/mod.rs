@@ -25,11 +25,11 @@ pub mod tcp;
 pub use arbiter::{ArbiterPolicy, PrefetchArbiter, SessionDemand};
 pub use batcher::{Batcher, BatcherConfig};
 pub use fleet::{
-    run_fleet, EventHeap, FleetConfig, FleetEvent, FleetManager, FleetOutcome, FleetScheduler,
-    FleetStats,
+    run_fleet, run_fleet_traced, EventHeap, FleetConfig, FleetEvent, FleetManager, FleetOutcome,
+    FleetScheduler, FleetStats,
 };
 pub use router::Router;
-pub use session::{run_serve, ServeConfig, ServeOutcome, SessionManager};
+pub use session::{run_serve, run_serve_traced, ServeConfig, ServeOutcome, SessionManager};
 pub use tcp::{TcpClient, TcpFrontend};
 
 use std::sync::mpsc;

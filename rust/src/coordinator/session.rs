@@ -41,6 +41,7 @@ use crate::bench::workloads::{
 use crate::cache::{KeySpace, NeuronCache};
 use crate::flash::UfsSim;
 use crate::metrics::{RunMetrics, ServeMetrics, ServeSummary, SessionStats};
+use crate::obs::{MarkKind, Phase, TraceHandle, Track};
 use crate::pipeline::IoPipeline;
 use crate::prefetch::Prefetcher;
 use crate::trace::Trace;
@@ -142,6 +143,9 @@ pub struct SessionManager {
     demands: Vec<SessionDemand>,
     done: usize,
     round: usize,
+    /// Optional flight recorder: per-token phase spans, admission spans,
+    /// and arbiter grant marks. `None` records nothing.
+    trace: Option<TraceHandle>,
 }
 
 impl SessionManager {
@@ -218,7 +222,18 @@ impl SessionManager {
             demands,
             done: 0,
             round: 0,
+            trace: None,
         }
+    }
+
+    /// Attach (or detach) a flight recorder, propagating it to every
+    /// session's pipeline (each attributed to its own session track).
+    /// Tracing never changes scheduling, timing, or metrics.
+    pub fn set_trace(&mut self, trace: Option<TraceHandle>) {
+        for (sid, s) in self.sessions.iter_mut().enumerate() {
+            s.pipeline.set_trace(trace.clone(), sid as u32);
+        }
+        self.trace = trace;
     }
 
     /// Switch rounds to the overlapped (prefetch-capable) pipeline:
@@ -252,6 +267,20 @@ impl SessionManager {
             });
         }
         let grants = self.arbiter.arbitrate(&self.demands);
+        if let Some(trace) = &self.trace {
+            let now = self.clock_ns;
+            trace.with(|rec| {
+                for (i, &sid) in self.active.iter().enumerate() {
+                    rec.mark(
+                        Track::Arbiter,
+                        MarkKind::Grant,
+                        now,
+                        grants[i] as f64,
+                        sid as f64,
+                    );
+                }
+            });
+        }
         for (i, &sid) in self.active.iter().enumerate() {
             self.sessions[sid].pipeline.set_prefetch_grant(Some(grants[i]));
         }
@@ -279,6 +308,15 @@ impl SessionManager {
         for sid in self.waiting.pop_upto(free) {
             self.sessions[sid].stats.queue_delay_ns =
                 self.clock_ns - self.sessions[sid].stats.arrival_ns;
+            if let Some(trace) = &self.trace {
+                let arrival = self.sessions[sid].stats.arrival_ns;
+                let delay = self.sessions[sid].stats.queue_delay_ns;
+                let now = self.clock_ns;
+                trace.with(|rec| {
+                    rec.span(Track::Session(sid as u32), Phase::AdmissionQueue, arrival, delay);
+                    rec.mark(Track::Session(sid as u32), MarkKind::Admit, now, delay, 0.0);
+                });
+            }
             self.active.push(sid);
         }
         self.serve.peak_active = self.serve.peak_active.max(self.active.len());
@@ -330,6 +368,14 @@ impl SessionManager {
                 io.stall_ns + self.compute_ns_per_token,
                 served_at - round_start,
             );
+            if let Some(trace) = &self.trace {
+                let queue_ns = served_at - round_start;
+                let compute = self.compute_ns_per_token;
+                let t_sid = sid as u32;
+                trace.with(|rec| {
+                    rec.token(t_sid, round_start, queue_ns, io.stall_ns, compute, latency)
+                });
+            }
             self.serve.all_latency_ns.add(latency);
             self.agg.record(&io, self.bundle_bytes);
             self.agg.record_compute(self.compute_ns_per_token);
@@ -384,6 +430,20 @@ pub fn run_serve(
     system: System,
     spec: SystemSpec,
     cfg: &ServeConfig,
+) -> anyhow::Result<ServeOutcome> {
+    run_serve_traced(w, system, spec, cfg, None)
+}
+
+/// [`run_serve`] with an optional flight recorder attached to the shared
+/// flash sim and every session pipeline. `None` is exactly `run_serve`;
+/// `Some` records spans/marks without changing any metric (the recorder
+/// only observes virtual-time values the run already computes).
+pub fn run_serve_traced(
+    w: &Workload,
+    system: System,
+    spec: SystemSpec,
+    cfg: &ServeConfig,
+    trace: Option<&TraceHandle>,
 ) -> anyhow::Result<ServeOutcome> {
     anyhow::ensure!(cfg.sessions > 0, "serve needs at least one session");
     anyhow::ensure!(cfg.max_concurrent > 0, "serve needs at least one decode slot");
@@ -447,6 +507,10 @@ pub fn run_serve(
             .prefetch_global_budget
             .unwrap_or_else(|| w.prefetch.budget_bytes.saturating_mul(cfg.sessions));
         manager.enable_prefetch(w.compute_ns_per_layer, global);
+    }
+    if let Some(t) = trace {
+        sim.set_trace(Some(t.clone()));
+        manager.set_trace(Some(t.clone()));
     }
     let t_decode = Instant::now();
     let (metrics, mut serve) = manager.run(&mut sim);

@@ -36,6 +36,7 @@
 //! ones with speculative prefetch in flight — replays bit-identically.
 
 use crate::config::DeviceConfig;
+use crate::obs::{MarkKind, Phase, TraceHandle, Track};
 
 /// One read command: a contiguous byte extent in the flash image.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -134,6 +135,10 @@ pub struct UfsSim {
     /// mmap offload path; async (queued) mode models a proper io
     /// submission path (LLMFlash, RIPPLE).
     sync: bool,
+    /// Optional flight recorder: device-track service spans + ticket
+    /// lifecycle marks. `None` (the default) records nothing and leaves
+    /// every timing/accounting path byte-identical.
+    trace: Option<TraceHandle>,
 }
 
 impl UfsSim {
@@ -157,7 +162,15 @@ impl UfsSim {
             inflight: Vec::with_capacity(8),
             next_ticket: 0,
             sync: false,
+            trace: None,
         }
+    }
+
+    /// Attach (or detach) a flight recorder. Tracing records device-track
+    /// flash-service spans and ticket lifecycle marks; it never changes
+    /// timing or statistics.
+    pub fn set_trace(&mut self, trace: Option<TraceHandle>) {
+        self.trace = trace;
     }
 
     /// Switch to synchronous (queue-depth-1, mmap-fault) timing.
@@ -232,6 +245,19 @@ impl UfsSim {
             };
             let c = start + r.elapsed_ns;
             self.device_free_ns = c;
+            if let Some(trace) = &self.trace {
+                let submit_ns = self.clock_ns;
+                trace.with(|rec| {
+                    rec.span(Track::Device, Phase::FlashService, start, r.elapsed_ns);
+                    rec.mark(
+                        Track::Device,
+                        MarkKind::FlashSubmit,
+                        submit_ns,
+                        r.commands as f64,
+                        r.bytes as f64,
+                    );
+                });
+            }
             c
         };
         self.stats.total_commands += r.commands as u64;
@@ -274,6 +300,18 @@ impl UfsSim {
         }
         self.stats.total_stall_ns += stall;
         self.stats.total_hidden_ns += (inf.result.elapsed_ns - stall).max(0.0);
+        if let Some(trace) = &self.trace {
+            let now = self.clock_ns;
+            trace.with(|rec| {
+                rec.mark(
+                    Track::Device,
+                    MarkKind::FlashComplete,
+                    now,
+                    stall,
+                    inf.result.commands as f64,
+                );
+            });
+        }
         WaitOutcome { batch: inf.result, stall_ns: stall }
     }
 
@@ -285,7 +323,26 @@ impl UfsSim {
         if let Some(idx) = self.inflight.iter().position(|f| f.id == t.0) {
             let inf = self.inflight.swap_remove(idx);
             self.stats.total_hidden_ns += inf.result.elapsed_ns;
+            if let Some(trace) = &self.trace {
+                let now = self.clock_ns;
+                trace.with(|rec| {
+                    rec.mark(
+                        Track::Device,
+                        MarkKind::FlashDrop,
+                        now,
+                        inf.result.commands as f64,
+                        inf.result.bytes as f64,
+                    );
+                });
+            }
         }
+    }
+
+    /// Device service time of an in-flight batch (None once waited or
+    /// dropped). Lets tracing producers attribute a prefetch window
+    /// without re-running the timing model.
+    pub fn ticket_elapsed_ns(&self, t: Ticket) -> Option<f64> {
+        self.inflight.iter().find(|f| f.id == t.0).map(|f| f.result.elapsed_ns)
     }
 
     /// Advance the host clock by `ns` of (simulated) compute. In-flight

@@ -26,6 +26,7 @@ pub fn preset_names() -> &'static [&'static str] {
         "serve-prefetch",
         "fleet",
         "perf",
+        "trace",
     ]
 }
 
@@ -41,6 +42,7 @@ pub fn preset(name: &str) -> anyhow::Result<ScenarioMatrix> {
         "serve-prefetch" => serve_prefetch(),
         "fleet" => fleet(),
         "perf" => perf(),
+        "trace" => trace(),
         _ => anyhow::bail!(
             "unknown preset `{name}` (available: {})",
             preset_names().join("|")
@@ -271,6 +273,37 @@ fn perf() -> ScenarioMatrix {
     m
 }
 
+/// Flight-recorder demonstration preset (DESIGN.md §Observability):
+/// one traced scenario per decode path — synchronous single-stream,
+/// overlapped prefetch, arbitrated shared-cache serving, and open-loop
+/// fleet — all CI-sized. Every row sets `trace`, so the report carries
+/// the gated `attribution` objects and the Markdown attribution tables.
+fn trace() -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new("trace");
+    m.models.clear(); // every row is hand-written below
+    let small = |name: &str| {
+        let mut s = ScenarioSpec::new(name, "OPT-350M", System::Ripple);
+        s.calib_tokens = 96;
+        s.eval_tokens = 24;
+        s.sim_layers = 2;
+        s.knn = 16;
+        s.trace = true;
+        s
+    };
+    m.extra.push(small("trace-single"));
+    let mut pf = small("trace-prefetch");
+    pf.prefetch = PrefetchPoint::budget_kb(64);
+    m.extra.push(pf);
+    let mut sv = small("trace-serve");
+    sv.prefetch = PrefetchPoint::budget_kb(64);
+    sv.serve = Some(ServePoint::shared(4).with_arbiter(ArbiterPolicy::FairShare));
+    m.extra.push(sv);
+    let mut fl = small("trace-fleet");
+    fl.fleet = Some(FleetPoint::poisson(8, 1000.0).with_slo_ms(40.0));
+    m.extra.push(fl);
+    m
+}
+
 /// Design-choice ablations (DESIGN.md §Experiment-index): kNN width,
 /// fixed vs adaptive collapse threshold, linking admission segment_p,
 /// calibration budget — all on OPT-1.3B, synchronous timeline.
@@ -465,6 +498,28 @@ mod tests {
         let sv = specs.iter().find(|s| s.name == "perf-serve").unwrap();
         assert_eq!(sv.serve.unwrap().sessions, 4);
         assert_eq!(specs[0].seed, 7, "perf rows run on the bench seed");
+    }
+
+    #[test]
+    fn trace_preset_traces_every_decode_path() {
+        let specs = preset("trace").unwrap().expand();
+        assert_eq!(specs.len(), 4);
+        assert!(specs.iter().all(|s| s.trace));
+        assert!(specs.iter().any(|s| s.serve.is_some()));
+        assert!(specs.iter().any(|s| s.fleet.is_some()));
+        assert!(specs
+            .iter()
+            .any(|s| s.prefetch.enabled && s.serve.is_none() && s.fleet.is_none()));
+        // no other preset traces: untraced reports stay byte-identical
+        for name in preset_names().iter().filter(|&&n| n != "trace") {
+            assert!(
+                preset(name).unwrap().expand().iter().all(|s| !s.trace),
+                "{name} must stay untraced"
+            );
+        }
+        for s in &specs {
+            s.workload().unwrap();
+        }
     }
 
     #[test]

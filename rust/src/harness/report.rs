@@ -121,6 +121,7 @@ impl SweepReport {
         }
         self.push_serving_sections(&mut out);
         self.push_fleet_sections(&mut out);
+        self.push_attribution_sections(&mut out);
         self.push_throughput_section(&mut out);
         if let Some(base) = baseline {
             out.push_str(&format!("\n## vs baseline `{}`\n\n", base.name));
@@ -362,6 +363,79 @@ impl SweepReport {
         }
     }
 
+    /// Flight-recorder attribution sections (DESIGN.md §Observability):
+    /// per-scenario closure summary, the per-phase time split, and the
+    /// retained slowest-token chains. Rendered only when at least one
+    /// scenario ran with tracing enabled.
+    fn push_attribution_sections(&self, out: &mut String) {
+        let rows: Vec<&ScenarioResult> = self
+            .results
+            .iter()
+            .filter(|r| r.outcome.attribution.is_some())
+            .collect();
+        if rows.is_empty() {
+            return;
+        }
+        out.push_str("\n## Attribution (flight recorder)\n\n");
+        out.push_str(
+            "| scenario | tokens | accounted ms | latency ms | closure err ms \
+             | exact | spans | dropped |\n",
+        );
+        out.push_str("|---|---|---|---|---|---|---|---|\n");
+        for r in &rows {
+            let at = r.outcome.attribution.as_ref().unwrap();
+            out.push_str(&format!(
+                "| {} | {} | {:.3} | {:.3} | {:.6} | {}/{} | {} | {} |\n",
+                r.spec.name,
+                at.tokens,
+                at.accounted_ms,
+                at.latency_ms,
+                at.closure_error_ms,
+                at.exact_closures,
+                at.tokens,
+                at.spans_recorded,
+                at.spans_dropped + at.marks_dropped,
+            ));
+        }
+        out.push_str("\n### Time in phase\n\n");
+        out.push_str("| scenario | phase | count | total ms | mean ms | max ms |\n");
+        out.push_str("|---|---|---|---|---|---|\n");
+        for r in &rows {
+            let at = r.outcome.attribution.as_ref().unwrap();
+            for p in at.phases.iter().filter(|p| p.count > 0) {
+                out.push_str(&format!(
+                    "| {} | {} | {} | {:.3} | {:.4} | {:.4} |\n",
+                    r.spec.name, p.phase, p.count, p.total_ms, p.mean_ms, p.max_ms,
+                ));
+            }
+        }
+        let mut tail = String::new();
+        for r in &rows {
+            let at = r.outcome.attribution.as_ref().unwrap();
+            for t in &at.tail {
+                tail.push_str(&format!(
+                    "| {} | {} | {:.2} | {:.3} | {:.3} | {:.3} | {:.3} |\n",
+                    r.spec.name,
+                    t.sid,
+                    t.start_ms,
+                    t.queue_ms,
+                    t.stall_ms,
+                    t.compute_ms,
+                    t.latency_ms,
+                ));
+            }
+        }
+        if !tail.is_empty() {
+            out.push_str("\n### Slowest tokens (tail samples)\n\n");
+            out.push_str(
+                "| scenario | session | start ms | queue ms | stall ms \
+                 | compute ms | latency ms |\n",
+            );
+            out.push_str("|---|---|---|---|---|---|---|\n");
+            out.push_str(&tail);
+        }
+    }
+
     /// Decode-throughput table (§Perf): simulated tokens per wall-clock
     /// second of the decode loop. Wall time is machine-dependent, so
     /// this section exists ONLY in the Markdown — the JSON stays a pure
@@ -485,10 +559,11 @@ fn serve_metrics_json(r: &ScenarioResult) -> Json {
                 ("cross_session_hit_ratio", json::num(sv.cross_session_hit_ratio)),
                 ("makespan_ms", json::num(sv.makespan_ms)),
             ];
-            // p99.9 serializes only on fleet rows: the tail is the point
-            // of the open-loop sweep, and gating it keeps every
-            // pre-fleet serve report byte-identical
-            if r.outcome.fleet.is_some() {
+            // p99.9 serializes only on fleet rows and prefetch-attributed
+            // serve rows: the extreme tail is the point of both sweeps,
+            // and gating it keeps prefetch-off serve reports
+            // byte-identical to pre-fleet baselines
+            if r.outcome.fleet.is_some() || !sv.session_prefetch.is_empty() {
                 fields.push(("p999_ms", json::num(sv.p999_ms)));
             }
             if !sv.session_prefetch.is_empty() {
@@ -581,6 +656,51 @@ fn fleet_metrics_json(r: &ScenarioResult) -> Json {
     json::obj(fields)
 }
 
+/// Flight-recorder attribution object (gated key, traced rows only).
+/// Everything here is simulated virtual time scaled to full-model ms,
+/// so traced reports stay byte-deterministic like every other key.
+fn attribution_json(at: &crate::obs::AttributionSummary) -> Json {
+    let phases: Vec<Json> = at
+        .phases
+        .iter()
+        .map(|p| {
+            json::obj(vec![
+                ("phase", json::s(&p.phase)),
+                ("count", json::num(p.count as f64)),
+                ("total_ms", json::num(p.total_ms)),
+                ("mean_ms", json::num(p.mean_ms)),
+                ("max_ms", json::num(p.max_ms)),
+            ])
+        })
+        .collect();
+    let tail: Vec<Json> = at
+        .tail
+        .iter()
+        .map(|t| {
+            json::obj(vec![
+                ("sid", json::num(t.sid as f64)),
+                ("start_ms", json::num(t.start_ms)),
+                ("queue_ms", json::num(t.queue_ms)),
+                ("stall_ms", json::num(t.stall_ms)),
+                ("compute_ms", json::num(t.compute_ms)),
+                ("latency_ms", json::num(t.latency_ms)),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("tokens", json::num(at.tokens as f64)),
+        ("accounted_ms", json::num(at.accounted_ms)),
+        ("latency_ms", json::num(at.latency_ms)),
+        ("closure_error_ms", json::num(at.closure_error_ms)),
+        ("exact_closures", json::num(at.exact_closures as f64)),
+        ("spans_recorded", json::num(at.spans_recorded as f64)),
+        ("spans_dropped", json::num(at.spans_dropped as f64)),
+        ("marks_dropped", json::num(at.marks_dropped as f64)),
+        ("phases", json::arr(phases)),
+        ("tail", json::arr(tail)),
+    ])
+}
+
 fn scenario_json(r: &ScenarioResult) -> Json {
     let spec = &r.spec;
     let m = &r.outcome.metrics;
@@ -630,6 +750,11 @@ fn scenario_json(r: &ScenarioResult) -> Json {
     if spec.fleet.is_some() {
         fields.push(("fleet", fleet_spec_json(spec)));
         fields.push(("fleet_metrics", fleet_metrics_json(r)));
+    }
+    // the attribution key exists only on traced rows, so untraced
+    // reports stay byte-identical to pre-tracing builds
+    if let Some(at) = &r.outcome.attribution {
+        fields.push(("attribution", attribution_json(at)));
     }
     fields.push((
         "metrics",
@@ -771,6 +896,7 @@ mod tests {
                 bundle_bytes: 100,
                 serve: None,
                 fleet: None,
+                attribution: None,
             },
         }
     }
@@ -1014,6 +1140,8 @@ mod tests {
         assert!(text.contains("\"session_prefetch\":["), "{text}");
         assert!(text.contains("\"mean_service_ms\""), "{text}");
         assert!(text.contains("\"mean_round_queue_ms\""), "{text}");
+        // prefetch-attributed serve rows surface the extreme tail too
+        assert!(text.contains("\"p999_ms\""), "{text}");
         // old baselines still parse the extended schema
         let base = Baseline::parse(&text).unwrap();
         assert_eq!(base.len(), 1);
@@ -1068,6 +1196,7 @@ mod tests {
         assert!(!text.contains("\"fleet\""), "{text}");
         assert!(!text.contains("\"fleet_metrics\""), "{text}");
         assert!(!text.contains("\"p999_ms\""), "{text}");
+        assert!(!text.contains("\"attribution\""), "{text}");
         let md = report.to_markdown(None);
         assert!(!md.contains("## Fleet"), "{md}");
         assert!(!md.contains("Load ramp"), "{md}");
@@ -1083,6 +1212,72 @@ mod tests {
         assert!(!text.contains("\"slo_ms\""), "{text}");
         // single ramp member -> no ramp table
         assert!(!no_slo.to_markdown(None).contains("Load ramp"));
+    }
+
+    #[test]
+    fn traced_rows_serialize_attribution_and_render_sections() {
+        use crate::obs::{PhaseAttribution, TailToken};
+        let mut r = fake_result("traced", 1e6);
+        r.outcome.attribution = Some(crate::obs::AttributionSummary {
+            tokens: 1,
+            accounted_ms: 3.0,
+            latency_ms: 3.0,
+            closure_error_ms: 0.0,
+            exact_closures: 1,
+            spans_recorded: 3,
+            spans_dropped: 0,
+            marks_dropped: 0,
+            phases: vec![PhaseAttribution {
+                phase: "flash_queue".to_string(),
+                count: 1,
+                total_ms: 2.0,
+                mean_ms: 2.0,
+                max_ms: 2.0,
+            }],
+            tail: vec![TailToken {
+                sid: 0,
+                start_ms: 0.0,
+                queue_ms: 0.0,
+                stall_ms: 2.0,
+                compute_ms: 1.0,
+                latency_ms: 3.0,
+            }],
+        });
+        let report = SweepReport { name: "tr".to_string(), results: vec![r] };
+        let text = report.json_string();
+        assert!(text.contains("\"attribution\":{"), "{text}");
+        assert!(text.contains("\"exact_closures\":1"), "{text}");
+        assert!(text.contains("\"phase\":\"flash_queue\""), "{text}");
+        assert!(text.contains("\"tail\":["), "{text}");
+        // old baselines (io/e2e only) still parse the extended schema
+        let base = Baseline::parse(&text).unwrap();
+        assert_eq!(base.len(), 1);
+        // serialization stays a pure function of the inputs
+        assert_eq!(text, report.json_string());
+
+        let md = report.to_markdown(None);
+        assert!(md.contains("## Attribution (flight recorder)"), "{md}");
+        assert!(md.contains("### Time in phase"), "{md}");
+        assert!(md.contains("| traced | flash_queue | 1 |"), "{md}");
+        assert!(md.contains("### Slowest tokens (tail samples)"), "{md}");
+    }
+
+    #[test]
+    fn zero_token_rows_serialize_finite_numbers() {
+        // regression: a scenario that decoded zero tokens (or an empty
+        // traced recorder) must never leak NaN/inf into the report
+        let mut r = fake_result("empty", 1e6);
+        r.outcome.metrics = RunMetrics::new();
+        r.outcome.attribution = Some(Default::default());
+        let report = SweepReport { name: "z".to_string(), results: vec![r] };
+        let text = report.json_string();
+        assert!(!text.contains("NaN") && !text.contains("nan"), "{text}");
+        assert!(!text.contains("inf") && !text.contains("Infinity"), "{text}");
+        assert!(text.contains("\"tokens\":0"), "{text}");
+        // the document still parses as a baseline
+        assert!(Baseline::parse(&text).is_ok());
+        let md = report.to_markdown(None);
+        assert!(!md.contains("NaN") && !md.contains("inf"), "{md}");
     }
 
     #[test]

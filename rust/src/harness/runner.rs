@@ -12,9 +12,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::bench::workloads::{self, ExperimentResult, SystemSpec, Workload};
-use crate::coordinator::fleet::{run_fleet, FleetConfig};
-use crate::coordinator::session::{run_serve, ServeConfig};
+use crate::coordinator::fleet::{run_fleet_traced, FleetConfig};
+use crate::coordinator::session::{run_serve_traced, ServeConfig};
 use crate::metrics::RunMetrics;
+use crate::obs::{AttributionSummary, TraceConfig, TraceHandle};
 
 use super::report::{ScenarioResult, SweepReport};
 use super::scenario::{FleetPoint, ScenarioMatrix, ScenarioSpec, ServePoint};
@@ -98,18 +99,35 @@ pub fn run_scenario(spec: &ScenarioSpec, threads: usize) -> anyhow::Result<Exper
          use a sync prefetch point",
         spec.name
     );
+    // flight recorder: one per traced scenario, attached to every layer
+    // the scenario exercises (flash, pipeline, coordinator). Ablation
+    // rows stay untraced — their custom loop has no recorder hook and
+    // attribution would silently under-count.
+    let trace = if spec.trace {
+        Some(TraceHandle::new(TraceConfig::default()))
+    } else {
+        None
+    };
     if let Some(sv) = &spec.serve {
-        return run_serve_point(spec, sv, &w, sspec);
+        return run_serve_point(spec, sv, &w, sspec, trace.as_ref());
     }
     if let Some(fl) = &spec.fleet {
-        return run_fleet_point(spec, fl, &w, sspec);
+        return run_fleet_point(spec, fl, &w, sspec, trace.as_ref());
     }
     if spec.admission.is_some() || spec.fixed_threshold.is_some() {
         run_ablation(spec, &w, sspec)
     } else {
         let eval = w.dataset.clone();
-        workloads::run_spec(&w, sspec, &eval)
+        let mut r = workloads::run_spec_traced(&w, sspec, &eval, trace.as_ref())?;
+        r.attribution = attribution_of(trace.as_ref(), &w);
+        Ok(r)
     }
+}
+
+/// Fold a recorder (if any) into the report-facing attribution summary,
+/// scaled to full-model milliseconds like every other latency figure.
+fn attribution_of(trace: Option<&TraceHandle>, w: &Workload) -> Option<AttributionSummary> {
+    trace.map(|t| t.with(|rec| rec.attribution(w.layer_scale())))
 }
 
 /// Multi-session serving path (DESIGN.md §Serving): N sessions through
@@ -121,6 +139,7 @@ fn run_serve_point(
     sv: &ServePoint,
     w: &Workload,
     sspec: SystemSpec,
+    trace: Option<&TraceHandle>,
 ) -> anyhow::Result<ExperimentResult> {
     anyhow::ensure!(
         spec.admission.is_none() && spec.fixed_threshold.is_none(),
@@ -138,7 +157,7 @@ fn run_serve_point(
         cfg.arbiter = policy;
     }
     cfg.prefetch_global_budget = sv.prefetch_global_budget;
-    let out = run_serve(w, spec.system, sspec, &cfg)
+    let out = run_serve_traced(w, spec.system, sspec, &cfg, trace)
         .map_err(|e| anyhow::anyhow!("scenario `{}`: {e:#}", spec.name))?;
     Ok(ExperimentResult {
         system: spec.system,
@@ -149,6 +168,7 @@ fn run_serve_point(
         bundle_bytes: out.bundle_bytes,
         serve: Some(out.summary),
         fleet: None,
+        attribution: attribution_of(trace, w),
     })
 }
 
@@ -161,6 +181,7 @@ fn run_fleet_point(
     fl: &FleetPoint,
     w: &Workload,
     sspec: SystemSpec,
+    trace: Option<&TraceHandle>,
 ) -> anyhow::Result<ExperimentResult> {
     let cfg = FleetConfig {
         sessions: fl.sessions,
@@ -174,7 +195,7 @@ fn run_fleet_point(
         slo_ns: fl.slo_ms.map_or(f64::INFINITY, |ms| ms * 1e6 / w.layer_scale()),
         ..FleetConfig::default()
     };
-    let out = run_fleet(w, spec.system, sspec, &cfg)
+    let out = run_fleet_traced(w, spec.system, sspec, &cfg, trace)
         .map_err(|e| anyhow::anyhow!("scenario `{}`: {e:#}", spec.name))?;
     Ok(ExperimentResult {
         system: spec.system,
@@ -185,6 +206,7 @@ fn run_fleet_point(
         bundle_bytes: out.bundle_bytes,
         serve: Some(out.summary),
         fleet: Some(out.fleet),
+        attribution: attribution_of(trace, w),
     })
 }
 
@@ -224,6 +246,7 @@ fn run_ablation(
         bundle_bytes,
         serve: None,
         fleet: None,
+        attribution: None,
     })
 }
 
@@ -371,6 +394,44 @@ mod tests {
         // deterministic and thread-invariant like every other row
         let r2 = run_scenario(&s, 2).unwrap();
         assert_eq!(r.fleet, r2.fleet);
+    }
+
+    #[test]
+    fn traced_scenario_reports_attribution_and_untraced_stays_clean() {
+        let mut s = tiny_spec("traced");
+        s.trace = true;
+        let r = run_scenario(&s, 1).unwrap();
+        let at = r.attribution.as_ref().expect("traced rows carry attribution");
+        assert_eq!(at.tokens, r.metrics.tokens as u64);
+        // single-stream latencies are stall + compute by construction,
+        // so every token closes bit-for-bit
+        assert_eq!(at.exact_closures, at.tokens);
+        assert!(at.closure_error_ms.abs() < 1e-9);
+        assert!(at.accounted_ms > 0.0);
+        let mut u = tiny_spec("untraced");
+        u.trace = false;
+        assert!(run_scenario(&u, 1).unwrap().attribution.is_none());
+    }
+
+    #[test]
+    fn traced_serve_scenario_attribution_matches_latency_split() {
+        let mut s = tiny_spec("serve-traced");
+        s.trace = true;
+        s.serve = Some(ServePoint { max_concurrent: 2, ..ServePoint::shared(2) });
+        let r = run_scenario(&s, 1).unwrap();
+        let at = r.attribution.as_ref().expect("attribution");
+        assert_eq!(at.tokens, r.metrics.tokens as u64);
+        // the FlashQueue phase total is the run's stall total, bitwise
+        let stall_ms = r.metrics.totals.stall_ns * r.layer_scale / 1e6;
+        let flash_q = at
+            .phases
+            .iter()
+            .find(|p| p.phase == "flash_queue")
+            .expect("flash_queue phase");
+        assert_eq!(flash_q.total_ms.to_bits(), stall_ms.to_bits());
+        // bit-identical across repeated traced runs
+        let r2 = run_scenario(&s, 1).unwrap();
+        assert_eq!(r.attribution, r2.attribution);
     }
 
     #[test]

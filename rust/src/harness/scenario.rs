@@ -399,6 +399,10 @@ pub struct ScenarioSpec {
     /// Event-driven open-loop fleet point; `None` = no fleet run.
     /// Mutually exclusive with `serve` and the ablation knobs.
     pub fleet: Option<FleetPoint>,
+    /// Attach the flight recorder (DESIGN.md §Observability) and report
+    /// per-phase attribution. Off by default: untraced reports stay
+    /// byte-identical to pre-tracing builds.
+    pub trace: bool,
 }
 
 impl ScenarioSpec {
@@ -424,6 +428,7 @@ impl ScenarioSpec {
             admission: None,
             serve: None,
             fleet: None,
+            trace: false,
         }
     }
 

@@ -18,6 +18,7 @@ pub mod flash;
 pub mod harness;
 pub mod metrics;
 pub mod neuron;
+pub mod obs;
 pub mod persist;
 pub mod pipeline;
 pub mod placement;

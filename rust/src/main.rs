@@ -11,6 +11,9 @@
 //!   bench      run a named scenario-matrix preset and write the
 //!              `BENCH_<name>.json` / `.md` report (DESIGN.md
 //!              §Scenario-harness)
+//!   trace-check
+//!              validate a `--trace-out` Chrome-trace JSON file
+//!              (schema + monotone per-track timestamps)
 //!   devices / models
 //!              list the Table-2 / Table-3 configurations
 //!
@@ -25,11 +28,12 @@ use anyhow::Result;
 use ripple::bench::workloads::{self, System, SystemSpec, Workload};
 use ripple::config::{device_by_name, devices, model_by_name, models};
 use ripple::coordinator::{
-    run_fleet, run_serve, ArbiterPolicy, FleetConfig, FleetScheduler, ServeConfig, Server,
-    ServerOptions,
+    run_fleet_traced, run_serve_traced, ArbiterPolicy, FleetConfig, FleetScheduler,
+    ServeConfig, Server, ServerOptions,
 };
 use ripple::engine::{Engine, EngineOptions};
 use ripple::harness;
+use ripple::obs::{export, TraceConfig, TraceHandle};
 use ripple::runtime::default_artifacts_dir;
 use ripple::trace::{ArrivalProcess, DatasetProfile};
 use ripple::util::cli::Args;
@@ -52,6 +56,7 @@ fn main() {
         "place" => place(&args),
         "simulate" => simulate(&args),
         "bench" => bench(&args),
+        "trace-check" => trace_check(&args),
         "devices" => list_devices(),
         "models" => list_models(),
         _ => {
@@ -68,7 +73,8 @@ fn main() {
 fn print_help() {
     println!(
         "ripple — correlation-aware neuron management (paper reproduction)\n\n\
-         usage: ripple <serve|generate|place|simulate|bench|devices|models> [options]\n\n\
+         usage: ripple <serve|generate|place|simulate|bench|trace-check|devices|models> \
+         [options]\n\n\
          generate: --prompt <str> --tokens <n> [--dense]\n\
          serve:    --requests <n> --tokens <n> --workers <n> [--prefetch]\n\
                    --prefetch: workers speculatively read each next layer's\n\
@@ -108,13 +114,26 @@ fn print_help() {
                    [--scheduler <fifo|srt>] [--admission-bound <n>]\n\
                    [--slo-ms <f>]; with --prefetch the fleet decodes on\n\
                    the overlapped timeline under fair-share arbitration\n\
+                   [--trace-out <trace.json>] [--trace-tail <k>]\n\
+                   --trace-out: attach the flight recorder (observation-\n\
+                   only, timeline stays bit-identical) and export a\n\
+                   Chrome trace-event / Perfetto JSON file with one\n\
+                   track per session plus device and arbiter tracks;\n\
+                   --trace-tail keeps the K slowest token chains\n\
+                   (default 32); works on all three simulate paths\n\
          bench:    --preset <name> [--threads <n>] [--baseline <BENCH_x.json>]\n\
                    [--out <dir>] | --list\n\
                    runs a scenario matrix, prints the Markdown report and\n\
                    writes BENCH_<name>.json + .md under --out (default report/)\n\
                    --preset perf: decode-throughput proof — long eval\n\
                    streams whose wall-clock simulated-tokens/sec lands in\n\
-                   the Markdown report only (JSON stays deterministic)"
+                   the Markdown report only (JSON stays deterministic)\n\
+                   --preset trace: flight-recorder demo — every row runs\n\
+                   traced and the report carries per-phase attribution\n\
+         trace-check: <trace.json> — validate a --trace-out file\n\
+                   (parses, checks required keys, finite values and\n\
+                   monotone per-track timestamps; exits non-zero on\n\
+                   malformed traces)"
     );
 }
 
@@ -283,7 +302,10 @@ fn simulate(args: &Args) -> Result<()> {
     if args.get("sessions").is_some() {
         return simulate_serve(args, &w, system);
     }
-    let r = workloads::run_experiment(&w, system)?;
+    let trace = trace_handle_from(args)?;
+    let eval = w.dataset.clone();
+    let sspec = SystemSpec::of(system, w.model.ffn_linears);
+    let r = workloads::run_spec_traced(&w, sspec, &eval, trace.as_ref())?;
     let mut t = Table::new(&[
         "system", "io ms/token", "e2e ms/token", "overlap", "IOPS", "eff bw MB/s",
         "mean access len", "place s",
@@ -299,6 +321,65 @@ fn simulate(args: &Args) -> Result<()> {
         format!("{:.2}", r.placement_secs),
     ]);
     t.print();
+    finish_trace(args, trace.as_ref(), w.layer_scale())
+}
+
+/// Parse the `--trace-out` / `--trace-tail` knobs into an optional
+/// flight-recorder handle. `None` (the default) leaves every simulate
+/// path exactly as it was before tracing existed.
+fn trace_handle_from(args: &Args) -> Result<Option<TraceHandle>> {
+    if args.get("trace-out").is_none() {
+        anyhow::ensure!(
+            args.get("trace-tail").is_none(),
+            "--trace-tail needs --trace-out"
+        );
+        return Ok(None);
+    }
+    let cfg = TraceConfig {
+        tail_k: args.get_usize("trace-tail", TraceConfig::default().tail_k)?,
+        ..TraceConfig::default()
+    };
+    Ok(Some(TraceHandle::new(cfg)))
+}
+
+/// Print the recorder's closure summary and export the Chrome-trace
+/// JSON to the `--trace-out` path. No-op without a recorder.
+fn finish_trace(args: &Args, trace: Option<&TraceHandle>, layer_scale: f64) -> Result<()> {
+    let Some(t) = trace else { return Ok(()) };
+    let at = t.with(|rec| rec.attribution(layer_scale));
+    println!(
+        "\ntrace: {} tokens, {} spans ({} dropped), accounted {:.2} ms vs \
+         latency {:.2} ms (closure error {:.4} ms, {}/{} exact)",
+        at.tokens,
+        at.spans_recorded,
+        at.spans_dropped,
+        at.accounted_ms,
+        at.latency_ms,
+        at.closure_error_ms,
+        at.exact_closures,
+        at.tokens,
+    );
+    let path = args.get("trace-out").expect("finish_trace requires --trace-out");
+    let json = t.with(|rec| export::chrome_trace_json(rec));
+    std::fs::write(path, &json)
+        .map_err(|e| anyhow::anyhow!("writing trace `{path}`: {e}"))?;
+    println!("wrote {path} ({} bytes)", json.len());
+    Ok(())
+}
+
+/// `trace-check <file>`: validate a `--trace-out` JSON file.
+fn trace_check(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .or_else(|| args.get("file"))
+        .ok_or_else(|| anyhow::anyhow!("usage: ripple trace-check <trace.json>"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading trace `{path}`: {e}"))?;
+    let check = export::validate_chrome_trace(&text)
+        .map_err(|e| anyhow::anyhow!("trace `{path}` invalid: {e:#}"))?;
+    println!("{path}: OK ({} events across {} tracks)", check.events, check.tracks);
     Ok(())
 }
 
@@ -343,8 +424,9 @@ fn simulate_serve(args: &Args, w: &Workload, system: System) -> Result<()> {
             .map_err(|_| anyhow::anyhow!("--prefetch-global-budget-kb expects an integer"))?;
         cfg.prefetch_global_budget = Some(kb * 1024);
     }
+    let trace = trace_handle_from(args)?;
     let sspec = SystemSpec::of(system, w.model.ffn_linears);
-    let out = run_serve(w, system, sspec, &cfg)?;
+    let out = run_serve_traced(w, system, sspec, &cfg, trace.as_ref())?;
     let scale = w.layer_scale();
     let ms = |ns: f64| ns * scale / 1e6;
     let mut t = Table::new(&[
@@ -405,7 +487,7 @@ fn simulate_serve(args: &Args, w: &Workload, system: System) -> Result<()> {
         );
         pt.print();
     }
-    Ok(())
+    finish_trace(args, trace.as_ref(), scale)
 }
 
 /// `simulate --fleet`: the event-driven open-loop fleet simulation
@@ -469,8 +551,9 @@ fn simulate_fleet(args: &Args, w: &Workload, system: System) -> Result<()> {
         })?;
         cfg.prefetch_global_budget = Some(kb * 1024);
     }
+    let trace = trace_handle_from(args)?;
     let sspec = SystemSpec::of(system, w.model.ffn_linears);
-    let out = run_fleet(w, system, sspec, &cfg)?;
+    let out = run_fleet_traced(w, system, sspec, &cfg, trace.as_ref())?;
     let fs = &out.fleet;
     let sv = &out.summary;
     println!(
@@ -513,7 +596,7 @@ fn simulate_fleet(args: &Args, w: &Workload, system: System) -> Result<()> {
         "event heap retired {} arrivals + {} token completions + {} flash tickets",
         fs.arrival_events, fs.token_events, fs.ticket_events,
     );
-    Ok(())
+    finish_trace(args, trace.as_ref(), scale)
 }
 
 fn list_devices() -> Result<()> {

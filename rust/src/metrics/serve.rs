@@ -276,8 +276,9 @@ pub struct ServeSummary {
     /// Full-model p99 token serve latency, ms.
     pub p99_ms: f64,
     /// Full-model p99.9 token serve latency, ms. Serialized only for
-    /// fleet rows (`fleet_metrics`), so historical serve JSON stays
-    /// byte-identical.
+    /// fleet rows and prefetch-attributed serve rows (non-empty
+    /// `session_prefetch`), so prefetch-off serve JSON stays
+    /// byte-identical to historical reports.
     pub p999_ms: f64,
     /// Full-model mean token serve latency, ms.
     pub mean_ms: f64,

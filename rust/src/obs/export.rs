@@ -1,0 +1,228 @@
+//! Chrome trace-event (Perfetto) JSON export and validation.
+//!
+//! [`chrome_trace_json`] serializes a [`FlightRecorder`]'s retained spans
+//! and marks into the Chrome trace-event format understood by
+//! `ui.perfetto.dev` and `chrome://tracing`: one "thread" (track) per decode
+//! session plus dedicated device and arbiter tracks. The output is fully
+//! deterministic — virtual-time stamps, `BTreeMap`-ordered keys, and a
+//! stable event sort — so two runs of the same workload produce
+//! byte-identical trace files.
+//!
+//! [`validate_chrome_trace`] is the inverse used by the `trace-check` CLI
+//! subcommand and the CI `trace-smoke` job: it parses a trace file and
+//! checks it is well-formed against the subset of the schema we emit
+//! (metadata first, finite timestamps, non-negative durations, and
+//! monotonically non-decreasing timestamps within each track).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::{self, Json};
+
+use super::{FlightRecorder, Track};
+
+fn track_name(t: Track) -> String {
+    match t {
+        Track::Device => "device".to_string(),
+        Track::Arbiter => "arbiter".to_string(),
+        Track::Session(sid) => format!("session {sid}"),
+    }
+}
+
+/// Serialize the recorder's retained spans and marks as a Chrome
+/// trace-event JSON document.
+///
+/// Layout: a `traceEvents` array opening with one `"M"` thread-name
+/// metadata record per present track (ascending thread id), followed by
+/// `"X"` complete events for spans and `"i"` instant events for marks,
+/// stably sorted by (timestamp, spans-before-marks, recording order).
+/// Timestamps and durations are microseconds of virtual time (`ns / 1e3`),
+/// the unit the trace-event format expects.
+pub fn chrome_trace_json(rec: &FlightRecorder) -> String {
+    // (tid -> name) for every track that actually recorded something.
+    let mut tracks: BTreeMap<u64, String> = BTreeMap::new();
+    for sp in rec.spans() {
+        tracks.entry(sp.track.tid()).or_insert_with(|| track_name(sp.track));
+    }
+    for m in rec.marks() {
+        tracks.entry(m.track.tid()).or_insert_with(|| track_name(m.track));
+    }
+
+    // Sort key: (ts, source_rank [spans first], ring index).
+    let mut events: Vec<(f64, u8, usize, Json)> = Vec::new();
+    for (i, sp) in rec.spans().enumerate() {
+        events.push((
+            sp.t_ns,
+            0,
+            i,
+            json::obj(vec![
+                ("ph", json::s("X")),
+                ("pid", json::num(0.0)),
+                ("tid", json::num(sp.track.tid() as f64)),
+                ("ts", json::num(sp.t_ns / 1e3)),
+                ("dur", json::num(sp.dur_ns / 1e3)),
+                ("name", json::s(sp.phase.key())),
+                ("cat", json::s("phase")),
+            ]),
+        ));
+    }
+    for (i, m) in rec.marks().enumerate() {
+        events.push((
+            m.t_ns,
+            1,
+            i,
+            json::obj(vec![
+                ("ph", json::s("i")),
+                ("pid", json::num(0.0)),
+                ("tid", json::num(m.track.tid() as f64)),
+                ("ts", json::num(m.t_ns / 1e3)),
+                ("name", json::s(m.kind.key())),
+                ("s", json::s("t")),
+                (
+                    "args",
+                    json::obj(vec![
+                        ("value", json::num(m.value)),
+                        ("aux", json::num(m.aux)),
+                    ]),
+                ),
+            ]),
+        ));
+    }
+    events.sort_by(|a, b| {
+        a.0.total_cmp(&b.0)
+            .then(a.1.cmp(&b.1))
+            .then(a.2.cmp(&b.2))
+    });
+
+    let mut out: Vec<Json> = Vec::with_capacity(tracks.len() + events.len());
+    for (tid, name) in &tracks {
+        out.push(json::obj(vec![
+            ("ph", json::s("M")),
+            ("pid", json::num(0.0)),
+            ("tid", json::num(*tid as f64)),
+            ("name", json::s("thread_name")),
+            ("args", json::obj(vec![("name", json::s(name))])),
+        ]));
+    }
+    out.extend(events.into_iter().map(|e| e.3));
+
+    json::obj(vec![
+        ("displayTimeUnit", json::s("ms")),
+        ("traceEvents", Json::Arr(out)),
+    ])
+    .to_string()
+}
+
+/// Summary of a validated trace file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceCheck {
+    /// Non-metadata events (spans + instants) in the file.
+    pub events: usize,
+    /// Distinct (pid, tid) tracks carrying events.
+    pub tracks: usize,
+}
+
+/// Parse a Chrome trace-event JSON document and verify the invariants the
+/// exporter guarantees: a `traceEvents` array; every non-metadata event has
+/// a finite timestamp; `"X"` events have finite non-negative durations; and
+/// timestamps are monotonically non-decreasing within each (pid, tid)
+/// track.
+pub fn validate_chrome_trace(text: &str) -> Result<TraceCheck> {
+    let doc = Json::parse(text).map_err(|e| anyhow!("trace is not valid JSON: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("trace has no `traceEvents` array"))?;
+
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    let mut counted = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .req_str("ph")
+            .map_err(|e| anyhow!("event {i}: {e}"))?;
+        if ph == "M" {
+            continue;
+        }
+        let pid = ev.req_f64("pid").map_err(|e| anyhow!("event {i}: {e}"))? as u64;
+        let tid = ev.req_f64("tid").map_err(|e| anyhow!("event {i}: {e}"))? as u64;
+        let ts = ev.req_f64("ts").map_err(|e| anyhow!("event {i}: {e}"))?;
+        if !ts.is_finite() {
+            bail!("event {i}: non-finite timestamp");
+        }
+        if ph == "X" {
+            let dur = ev.req_f64("dur").map_err(|e| anyhow!("event {i}: {e}"))?;
+            if !dur.is_finite() || dur < 0.0 {
+                bail!("event {i}: bad duration {dur}");
+            }
+        }
+        if let Some(&prev) = last_ts.get(&(pid, tid)) {
+            if ts < prev {
+                bail!(
+                    "event {i}: timestamp {ts} regresses below {prev} on track (pid={pid}, tid={tid})"
+                );
+            }
+        }
+        last_ts.insert((pid, tid), ts);
+        counted += 1;
+    }
+    Ok(TraceCheck {
+        events: counted,
+        tracks: last_ts.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{MarkKind, Phase, TraceConfig};
+    use super::*;
+
+    #[test]
+    fn export_roundtrips_through_validator() {
+        let mut rec = FlightRecorder::new(TraceConfig::default());
+        rec.span(Track::Device, Phase::FlashService, 10.0, 5.0);
+        rec.mark(Track::Arbiter, MarkKind::Grant, 12.0, 4096.0, 0.0);
+        rec.token(0, 0.0, 1.0, 2.0, 3.0, 6.0);
+        let text = chrome_trace_json(&rec);
+        let chk = validate_chrome_trace(&text).unwrap();
+        // 3 token spans + 1 device span + 1 grant mark + 1 token_done mark.
+        assert_eq!(chk.events, 6);
+        assert_eq!(chk.tracks, 3);
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let build = || {
+            let mut rec = FlightRecorder::new(TraceConfig::default());
+            for i in 0..50 {
+                rec.token(i % 3, i as f64 * 10.0, 1.0, 2.0, 3.0, 6.0);
+            }
+            rec.span(Track::Device, Phase::FlashService, 7.0, 2.0);
+            chrome_trace_json(&rec)
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn validator_rejects_regressing_timestamps() {
+        let bad = r#"{"traceEvents":[
+            {"ph":"X","pid":0,"tid":1,"ts":10,"dur":1,"name":"a"},
+            {"ph":"X","pid":0,"tid":1,"ts":5,"dur":1,"name":"b"}
+        ]}"#;
+        assert!(validate_chrome_trace(bad).is_err());
+    }
+
+    #[test]
+    fn validator_rejects_negative_duration() {
+        let bad = r#"{"traceEvents":[
+            {"ph":"X","pid":0,"tid":1,"ts":10,"dur":-1,"name":"a"}
+        ]}"#;
+        assert!(validate_chrome_trace(bad).is_err());
+    }
+
+    #[test]
+    fn validator_rejects_non_json() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("{}").is_err());
+    }
+}

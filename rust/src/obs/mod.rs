@@ -1,0 +1,792 @@
+//! Flight-recorder tracing: zero-allocation span capture with per-phase
+//! latency attribution.
+//!
+//! The simulation stack argues about *where time goes* — I/O stalls versus
+//! compute overlap under an IOPS-constrained flash device — but summary
+//! metrics aggregate the event sequence away. This module records the event
+//! sequence itself: typed [`Span`]s (closed intervals on a track) and
+//! [`Mark`]s (instants with a payload) captured into pre-sized ring buffers
+//! so that the steady-state decode hot path stays allocation-free even with
+//! tracing enabled (gated by `zero_alloc_decode.rs`).
+//!
+//! Design rules (see DESIGN.md §Observability):
+//!
+//! - **Virtual time only.** Every timestamp is a simulator `clock_ns` value
+//!   (`f64` nanoseconds of virtual time). No wall clock is ever read, so two
+//!   runs of the same workload produce bit-identical traces and trace files
+//!   can be golden-tested.
+//! - **No allocation after construction.** [`FlightRecorder::new`] pre-sizes
+//!   every buffer ([`Ring`] spans/marks, fixed per-phase histograms, the
+//!   capacity-K tail sampler). Recording a span, mark, or token touches no
+//!   allocator.
+//! - **Closed spans only.** Producers compute a span's duration before
+//!   recording it; the recorder never stages open spans, so ring overflow
+//!   (overwrite-oldest) cannot corrupt an in-progress chain.
+//! - **Aggregates see everything.** [`SpanAggregate`] and the tail sampler
+//!   are updated on every record, independent of ring capacity, so
+//!   attribution totals are exact even when the raw ring has dropped events.
+//!
+//! The phase taxonomy mirrors the latency decomposition already reported by
+//! `metrics::serve::SessionStats`: per-token round-queue wait, flash stall,
+//! and compute, plus device-side flash service, speculative prefetch windows,
+//! and fleet admission queueing. Three identities tie the recorder to the
+//! existing accounting bit-for-bit (both sides accumulate the same `f64`
+//! values in the same order starting from `0.0`):
+//!
+//! - Σ `FlashQueue` span durations == `RunMetrics::totals.stall_ns`
+//! - Σ `Compute` span durations == `RunMetrics::compute_ns`
+//! - Σ `FlashService` span durations == `FlashStats::total_busy_ns`
+
+#![warn(missing_docs)]
+
+pub mod export;
+
+use std::sync::{Arc, Mutex};
+
+use crate::util::stats::Histogram;
+
+/// Phase of token service time a [`Span`] is attributed to.
+///
+/// Phases partition the latency decomposition: a token's end-to-end latency
+/// is round-queue wait, then flash stall, then compute; the device track
+/// independently records flash service windows; sessions additionally record
+/// admission queueing (serve/fleet) and speculative prefetch windows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Time a token's session spent waiting for earlier sessions in its
+    /// decode round (in-round queueing delay, `served_at - round_start`).
+    RoundQueue,
+    /// Time the token stalled on demand flash reads (`TokenIo::stall_ns`).
+    FlashQueue,
+    /// Time the flash device spent servicing a submitted batch
+    /// (`BatchResult::elapsed_ns`, charged on the device track).
+    FlashService,
+    /// Compute time for the token (`compute_ns_per_token`).
+    Compute,
+    /// Speculative prefetch service window for a layer (device time the
+    /// prefetch batch occupies, recorded on the issuing session's track).
+    Prefetch,
+    /// Time a session waited in the admission queue before being granted a
+    /// decode slot (`SessionStats::queue_delay_ns`).
+    AdmissionQueue,
+}
+
+impl Phase {
+    /// All phases in canonical report order.
+    pub const ALL: [Phase; 6] = [
+        Phase::FlashQueue,
+        Phase::FlashService,
+        Phase::Prefetch,
+        Phase::Compute,
+        Phase::RoundQueue,
+        Phase::AdmissionQueue,
+    ];
+
+    /// Dense index of this phase into per-phase arrays (`0..6`).
+    pub fn idx(self) -> usize {
+        match self {
+            Phase::FlashQueue => 0,
+            Phase::FlashService => 1,
+            Phase::Prefetch => 2,
+            Phase::Compute => 3,
+            Phase::RoundQueue => 4,
+            Phase::AdmissionQueue => 5,
+        }
+    }
+
+    /// Stable snake_case key used in JSON reports and trace event names.
+    pub fn key(self) -> &'static str {
+        match self {
+            Phase::FlashQueue => "flash_queue",
+            Phase::FlashService => "flash_service",
+            Phase::Prefetch => "prefetch",
+            Phase::Compute => "compute",
+            Phase::RoundQueue => "round_queue",
+            Phase::AdmissionQueue => "admission_queue",
+        }
+    }
+}
+
+/// Trace track (Perfetto "thread") an event belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Track {
+    /// The shared flash device timeline (service windows + ticket marks).
+    Device,
+    /// The prefetch arbiter (per-round grant decisions).
+    Arbiter,
+    /// One decode session, identified by its session id.
+    Session(u32),
+}
+
+impl Track {
+    /// Stable Chrome-trace thread id: device = 0, arbiter = 1,
+    /// session `sid` = `sid + 2`.
+    pub fn tid(self) -> u64 {
+        match self {
+            Track::Device => 0,
+            Track::Arbiter => 1,
+            Track::Session(sid) => sid as u64 + 2,
+        }
+    }
+}
+
+/// A closed interval on a track, attributed to a [`Phase`].
+///
+/// Timestamps and durations are virtual-time nanoseconds (unscaled sim
+/// units; the harness applies `layer_scale` only at report time).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Span {
+    /// Track the span belongs to.
+    pub track: Track,
+    /// Phase the span's duration is attributed to.
+    pub phase: Phase,
+    /// Start timestamp (virtual ns).
+    pub t_ns: f64,
+    /// Duration (virtual ns, `>= 0`).
+    pub dur_ns: f64,
+}
+
+/// Kind of instantaneous event recorded as a [`Mark`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MarkKind {
+    /// Flash batch submitted (device track; `value` = commands,
+    /// `aux` = bytes).
+    FlashSubmit,
+    /// Flash ticket waited to completion (device track; `value` = stall ns
+    /// the waiter observed, `aux` = commands).
+    FlashComplete,
+    /// Flash ticket dropped without waiting (device track).
+    FlashDrop,
+    /// Speculative prefetch batch submitted (session track;
+    /// `value` = target layer, `aux` = commands).
+    PrefetchSubmit,
+    /// Prefetched bundles consumed by the demand plan (session track;
+    /// `value` = hit bundles, `aux` = layer).
+    PrefetchHit,
+    /// Prefetched bundles wasted (session track; `value` = wasted bundles,
+    /// `aux` = layer).
+    PrefetchWaste,
+    /// Demand plan built for a layer (session track; `value` = layer,
+    /// `aux` = missed bundles).
+    Plan,
+    /// Layer plan committed to the cache (session track; `value` = layer).
+    Commit,
+    /// Arbiter granted a session speculative budget for a round (arbiter
+    /// track; `value` = granted bytes, `aux` = session id).
+    Grant,
+    /// Session arrival entered the admission queue (session track;
+    /// `value` = queue depth after enqueue).
+    Arrival,
+    /// Session granted a decode slot (session track; `value` = queue delay
+    /// ns it waited).
+    Admit,
+    /// Session arrival rejected by the admission bound (session track;
+    /// `value` = refused tokens).
+    Reject,
+    /// Token finished (session track; `value` = recorded latency ns,
+    /// `aux` = recorder-accounted phase sum ns).
+    TokenDone,
+}
+
+impl MarkKind {
+    /// Stable snake_case key used in trace event names.
+    pub fn key(self) -> &'static str {
+        match self {
+            MarkKind::FlashSubmit => "flash_submit",
+            MarkKind::FlashComplete => "flash_complete",
+            MarkKind::FlashDrop => "flash_drop",
+            MarkKind::PrefetchSubmit => "prefetch_submit",
+            MarkKind::PrefetchHit => "prefetch_hit",
+            MarkKind::PrefetchWaste => "prefetch_waste",
+            MarkKind::Plan => "plan",
+            MarkKind::Commit => "commit",
+            MarkKind::Grant => "grant",
+            MarkKind::Arrival => "arrival",
+            MarkKind::Admit => "admit",
+            MarkKind::Reject => "reject",
+            MarkKind::TokenDone => "token_done",
+        }
+    }
+}
+
+/// An instantaneous event on a track with up to two numeric payload slots.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mark {
+    /// Track the mark belongs to.
+    pub track: Track,
+    /// What happened.
+    pub kind: MarkKind,
+    /// Timestamp (virtual ns).
+    pub t_ns: f64,
+    /// Primary payload (meaning depends on [`MarkKind`]).
+    pub value: f64,
+    /// Secondary payload (meaning depends on [`MarkKind`]).
+    pub aux: f64,
+}
+
+/// Fixed-capacity overwrite-oldest ring buffer.
+///
+/// `push` past capacity overwrites the oldest element and bumps the
+/// [`dropped`](Ring::dropped) counter; it never allocates after
+/// construction. Iteration yields elements oldest to newest.
+#[derive(Clone, Debug)]
+pub struct Ring<T: Copy> {
+    items: Vec<T>,
+    head: usize,
+    dropped: u64,
+}
+
+impl<T: Copy> Ring<T> {
+    /// Create a ring holding at most `cap` elements (`cap > 0`).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "ring capacity must be positive");
+        Ring {
+            items: Vec::with_capacity(cap),
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Append an element, overwriting the oldest if the ring is full.
+    pub fn push(&mut self, v: T) {
+        if self.items.len() < self.items.capacity() {
+            self.items.push(v);
+        } else {
+            self.items[self.head] = v;
+            self.head = (self.head + 1) % self.items.len();
+            self.dropped += 1;
+        }
+    }
+
+    /// Number of elements currently retained.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Number of elements overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Iterate retained elements oldest to newest.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.items[self.head..].iter().chain(self.items[..self.head].iter())
+    }
+}
+
+/// Per-phase time-in-phase rollup, updated on every recorded span
+/// independent of ring capacity.
+#[derive(Clone, Debug)]
+pub struct SpanAggregate {
+    count: [u64; 6],
+    sum_ns: [f64; 6],
+    max_ns: [f64; 6],
+    hist: Vec<Histogram>,
+    tokens: u64,
+    accounted_ns: f64,
+    latency_ns: f64,
+    exact_closures: u64,
+}
+
+impl SpanAggregate {
+    /// Create an aggregate with one fixed-bucket histogram per phase
+    /// spanning `[0, hist_max_ns)`.
+    pub fn new(hist_max_ns: f64) -> Self {
+        SpanAggregate {
+            count: [0; 6],
+            sum_ns: [0.0; 6],
+            max_ns: [0.0; 6],
+            hist: Phase::ALL
+                .iter()
+                .map(|_| Histogram::new(0.0, hist_max_ns, 32))
+                .collect(),
+            tokens: 0,
+            accounted_ns: 0.0,
+            latency_ns: 0.0,
+            exact_closures: 0,
+        }
+    }
+
+    fn observe(&mut self, phase: Phase, dur_ns: f64) {
+        let i = phase.idx();
+        self.count[i] += 1;
+        self.sum_ns[i] += dur_ns;
+        if dur_ns > self.max_ns[i] {
+            self.max_ns[i] = dur_ns;
+        }
+        self.hist[i].add(dur_ns);
+    }
+
+    fn token(&mut self, accounted_ns: f64, latency_ns: f64) {
+        self.tokens += 1;
+        self.accounted_ns += accounted_ns;
+        self.latency_ns += latency_ns;
+        if accounted_ns.to_bits() == latency_ns.to_bits() {
+            self.exact_closures += 1;
+        }
+    }
+
+    /// Tokens recorded via [`FlightRecorder::token`].
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    /// Σ per-token `(queue + stall) + compute` phase sums (virtual ns).
+    pub fn accounted_ns(&self) -> f64 {
+        self.accounted_ns
+    }
+
+    /// Σ per-token latencies as reported by the producer (virtual ns).
+    pub fn latency_ns(&self) -> f64 {
+        self.latency_ns
+    }
+
+    /// Tokens whose phase sum equalled the reported latency bit-for-bit.
+    pub fn exact_closures(&self) -> u64 {
+        self.exact_closures
+    }
+
+    /// Total time attributed to `phase` (virtual ns).
+    pub fn phase_total_ns(&self, phase: Phase) -> f64 {
+        self.sum_ns[phase.idx()]
+    }
+
+    /// Number of spans attributed to `phase`.
+    pub fn phase_count(&self, phase: Phase) -> u64 {
+        self.count[phase.idx()]
+    }
+
+    /// Longest single span attributed to `phase` (virtual ns).
+    pub fn phase_max_ns(&self, phase: Phase) -> f64 {
+        self.max_ns[phase.idx()]
+    }
+
+    /// Time-in-phase histogram for `phase`.
+    pub fn histogram(&self, phase: Phase) -> &Histogram {
+        &self.hist[phase.idx()]
+    }
+}
+
+/// Full span chain for one token, retained by the tail sampler.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TokenChain {
+    /// Session id.
+    pub sid: u32,
+    /// Round start timestamp (virtual ns).
+    pub start_ns: f64,
+    /// In-round queueing delay (virtual ns).
+    pub queue_ns: f64,
+    /// Flash stall (virtual ns).
+    pub stall_ns: f64,
+    /// Compute time (virtual ns).
+    pub compute_ns: f64,
+    /// Reported end-to-end latency (virtual ns).
+    pub latency_ns: f64,
+}
+
+/// Capacity-K reservoir of the slowest tokens seen so far.
+///
+/// Deterministic: eviction scans for the current minimum-latency entry
+/// (first index on ties) and replaces it only when the candidate's latency
+/// is strictly greater. No randomness, no allocation after construction.
+#[derive(Clone, Debug)]
+pub struct TailSampler {
+    k: usize,
+    chains: Vec<TokenChain>,
+}
+
+impl TailSampler {
+    /// Create a sampler retaining the slowest `k` tokens (`k == 0` disables
+    /// retention).
+    pub fn new(k: usize) -> Self {
+        TailSampler {
+            k,
+            chains: Vec::with_capacity(k),
+        }
+    }
+
+    /// Offer a token chain; keeps it iff it is among the slowest `k`.
+    pub fn offer(&mut self, c: TokenChain) {
+        if self.k == 0 {
+            return;
+        }
+        if self.chains.len() < self.k {
+            self.chains.push(c);
+            return;
+        }
+        let mut min_i = 0;
+        for (i, ch) in self.chains.iter().enumerate() {
+            if ch.latency_ns < self.chains[min_i].latency_ns {
+                min_i = i;
+            }
+        }
+        if c.latency_ns > self.chains[min_i].latency_ns {
+            self.chains[min_i] = c;
+        }
+    }
+
+    /// Number of retained chains.
+    pub fn len(&self) -> usize {
+        self.chains.len()
+    }
+
+    /// True when no chains are retained.
+    pub fn is_empty(&self) -> bool {
+        self.chains.is_empty()
+    }
+
+    /// Retained chains sorted slowest-first (ties: earlier start, then
+    /// lower session id). Allocates; call only at export/summary time.
+    pub fn sorted(&self) -> Vec<TokenChain> {
+        let mut v = self.chains.clone();
+        v.sort_by(|a, b| {
+            b.latency_ns
+                .total_cmp(&a.latency_ns)
+                .then(a.start_ns.total_cmp(&b.start_ns))
+                .then(a.sid.cmp(&b.sid))
+        });
+        v
+    }
+}
+
+/// Sizing knobs for a [`FlightRecorder`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceConfig {
+    /// Span ring capacity (oldest spans are overwritten past this).
+    pub span_capacity: usize,
+    /// Mark ring capacity.
+    pub mark_capacity: usize,
+    /// Number of slowest-token chains the tail sampler retains.
+    pub tail_k: usize,
+    /// Upper bound of the per-phase histograms (virtual ns); durations at or
+    /// above land in the overflow counter.
+    pub hist_max_ns: f64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            span_capacity: 65536,
+            mark_capacity: 65536,
+            tail_k: 32,
+            hist_max_ns: 1e7,
+        }
+    }
+}
+
+/// The flight recorder: pre-sized span/mark rings plus always-exact
+/// aggregates and a tail sampler.
+#[derive(Clone, Debug)]
+pub struct FlightRecorder {
+    spans: Ring<Span>,
+    marks: Ring<Mark>,
+    agg: SpanAggregate,
+    tail: TailSampler,
+}
+
+impl FlightRecorder {
+    /// Create a recorder; all buffers are sized here and never grow.
+    pub fn new(cfg: TraceConfig) -> Self {
+        FlightRecorder {
+            spans: Ring::new(cfg.span_capacity),
+            marks: Ring::new(cfg.mark_capacity),
+            agg: SpanAggregate::new(cfg.hist_max_ns),
+            tail: TailSampler::new(cfg.tail_k),
+        }
+    }
+
+    /// Record a closed span and fold it into the per-phase aggregate.
+    pub fn span(&mut self, track: Track, phase: Phase, t_ns: f64, dur_ns: f64) {
+        self.agg.observe(phase, dur_ns);
+        self.spans.push(Span {
+            track,
+            phase,
+            t_ns,
+            dur_ns,
+        });
+    }
+
+    /// Record an instantaneous mark.
+    pub fn mark(&mut self, track: Track, kind: MarkKind, t_ns: f64, value: f64, aux: f64) {
+        self.marks.push(Mark {
+            track,
+            kind,
+            t_ns,
+            value,
+            aux,
+        });
+    }
+
+    /// Record one served token atomically: emits the RoundQueue, FlashQueue,
+    /// and Compute spans back-to-back on the session's track, a `TokenDone`
+    /// mark, the aggregate update, and a tail-sampler offer.
+    ///
+    /// `latency_ns` is the latency the producer reported; the recorder's own
+    /// phase sum is `(queue_ns + stall_ns) + compute_ns` (the parenthesis
+    /// order is load-bearing for the bit-for-bit closure property tests).
+    pub fn token(
+        &mut self,
+        sid: u32,
+        start_ns: f64,
+        queue_ns: f64,
+        stall_ns: f64,
+        compute_ns: f64,
+        latency_ns: f64,
+    ) {
+        let track = Track::Session(sid);
+        self.span(track, Phase::RoundQueue, start_ns, queue_ns);
+        self.span(track, Phase::FlashQueue, start_ns + queue_ns, stall_ns);
+        self.span(
+            track,
+            Phase::Compute,
+            start_ns + queue_ns + stall_ns,
+            compute_ns,
+        );
+        let accounted = (queue_ns + stall_ns) + compute_ns;
+        self.mark(
+            track,
+            MarkKind::TokenDone,
+            start_ns + accounted,
+            latency_ns,
+            accounted,
+        );
+        self.agg.token(accounted, latency_ns);
+        self.tail.offer(TokenChain {
+            sid,
+            start_ns,
+            queue_ns,
+            stall_ns,
+            compute_ns,
+            latency_ns,
+        });
+    }
+
+    /// Retained spans, oldest to newest.
+    pub fn spans(&self) -> impl Iterator<Item = &Span> {
+        self.spans.iter()
+    }
+
+    /// Retained marks, oldest to newest.
+    pub fn marks(&self) -> impl Iterator<Item = &Mark> {
+        self.marks.iter()
+    }
+
+    /// Number of spans overwritten by ring overflow.
+    pub fn spans_dropped(&self) -> u64 {
+        self.spans.dropped()
+    }
+
+    /// Number of marks overwritten by ring overflow.
+    pub fn marks_dropped(&self) -> u64 {
+        self.marks.dropped()
+    }
+
+    /// Number of spans currently retained in the ring.
+    pub fn spans_len(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// The always-exact per-phase rollup.
+    pub fn aggregate(&self) -> &SpanAggregate {
+        &self.agg
+    }
+
+    /// The slowest-token sampler.
+    pub fn tail(&self) -> &TailSampler {
+        &self.tail
+    }
+
+    /// Build the report-facing attribution summary. `layer_scale` converts
+    /// sim-layer virtual time to full-model time, matching the scaling the
+    /// harness applies to every other latency metric.
+    pub fn attribution(&self, layer_scale: f64) -> AttributionSummary {
+        let ms = |ns: f64| ns * layer_scale / 1e6;
+        let phases = Phase::ALL
+            .iter()
+            .map(|&p| {
+                let count = self.agg.phase_count(p);
+                let total = ms(self.agg.phase_total_ns(p));
+                PhaseAttribution {
+                    phase: p.key().to_string(),
+                    count,
+                    total_ms: total,
+                    mean_ms: if count == 0 { 0.0 } else { total / count as f64 },
+                    max_ms: ms(self.agg.phase_max_ns(p)),
+                }
+            })
+            .collect();
+        let tail = self
+            .tail
+            .sorted()
+            .into_iter()
+            .map(|c| TailToken {
+                sid: c.sid,
+                start_ms: ms(c.start_ns),
+                queue_ms: ms(c.queue_ns),
+                stall_ms: ms(c.stall_ns),
+                compute_ms: ms(c.compute_ns),
+                latency_ms: ms(c.latency_ns),
+            })
+            .collect();
+        AttributionSummary {
+            tokens: self.agg.tokens(),
+            accounted_ms: ms(self.agg.accounted_ns()),
+            latency_ms: ms(self.agg.latency_ns()),
+            closure_error_ms: ms(self.agg.latency_ns() - self.agg.accounted_ns()),
+            exact_closures: self.agg.exact_closures(),
+            spans_recorded: self.agg.count.iter().sum(),
+            spans_dropped: self.spans.dropped(),
+            marks_dropped: self.marks.dropped(),
+            phases,
+            tail,
+        }
+    }
+}
+
+/// Shared, clonable handle to a [`FlightRecorder`].
+///
+/// The recorder sits behind an `Arc<Mutex<..>>` so one handle can be
+/// threaded through the flash sim, every session pipeline, and the manager
+/// simultaneously. Locking an uncontended `std` mutex does not allocate, so
+/// the zero-alloc decode gates hold with tracing attached.
+#[derive(Clone, Debug)]
+pub struct TraceHandle(Arc<Mutex<FlightRecorder>>);
+
+impl TraceHandle {
+    /// Create a handle around a freshly constructed recorder.
+    pub fn new(cfg: TraceConfig) -> Self {
+        TraceHandle(Arc::new(Mutex::new(FlightRecorder::new(cfg))))
+    }
+
+    /// Run `f` with exclusive access to the recorder (poison-proof).
+    pub fn with<R>(&self, f: impl FnOnce(&mut FlightRecorder) -> R) -> R {
+        let mut guard = self.0.lock().unwrap_or_else(|e| e.into_inner());
+        f(&mut guard)
+    }
+}
+
+/// One row of the per-phase attribution table (report units: milliseconds
+/// of full-model time).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseAttribution {
+    /// Phase key (`flash_queue`, `flash_service`, `prefetch`, `compute`,
+    /// `round_queue`, `admission_queue`).
+    pub phase: String,
+    /// Number of spans attributed to this phase.
+    pub count: u64,
+    /// Total time in phase (ms).
+    pub total_ms: f64,
+    /// Mean span duration (ms; 0.0 when no spans).
+    pub mean_ms: f64,
+    /// Longest single span (ms).
+    pub max_ms: f64,
+}
+
+/// One retained slowest-token chain (report units: milliseconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TailToken {
+    /// Session id.
+    pub sid: u32,
+    /// Round start (ms since run start).
+    pub start_ms: f64,
+    /// In-round queueing delay (ms).
+    pub queue_ms: f64,
+    /// Flash stall (ms).
+    pub stall_ms: f64,
+    /// Compute (ms).
+    pub compute_ms: f64,
+    /// End-to-end latency (ms).
+    pub latency_ms: f64,
+}
+
+/// Report-facing rollup of a traced run: per-phase totals, closure
+/// cross-check against the producer-reported latencies, ring-drop
+/// accounting, and the slowest-token tail.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AttributionSummary {
+    /// Tokens recorded.
+    pub tokens: u64,
+    /// Σ per-token phase sums (ms).
+    pub accounted_ms: f64,
+    /// Σ producer-reported token latencies (ms).
+    pub latency_ms: f64,
+    /// `latency_ms - accounted_ms` (should be ~0; exactly 0 when every
+    /// closure was bit-exact).
+    pub closure_error_ms: f64,
+    /// Tokens whose phase sum equalled the reported latency bit-for-bit.
+    pub exact_closures: u64,
+    /// Spans folded into the aggregate (independent of ring drops).
+    pub spans_recorded: u64,
+    /// Spans lost to ring overflow (aggregates still counted them).
+    pub spans_dropped: u64,
+    /// Marks lost to ring overflow.
+    pub marks_dropped: u64,
+    /// Per-phase rollup in [`Phase::ALL`] order.
+    pub phases: Vec<PhaseAttribution>,
+    /// Slowest-token chains, slowest first.
+    pub tail: Vec<TailToken>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut r = Ring::new(3);
+        for i in 0..5 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let v: Vec<i32> = r.iter().copied().collect();
+        assert_eq!(v, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn token_closure_is_exact_by_construction() {
+        let mut rec = FlightRecorder::new(TraceConfig::default());
+        let (q, s, c) = (3.5, 7.25, 11.125);
+        let latency = (q + s) + c;
+        rec.token(0, 100.0, q, s, c, latency);
+        assert_eq!(rec.aggregate().tokens(), 1);
+        assert_eq!(rec.aggregate().exact_closures(), 1);
+        assert_eq!(
+            rec.aggregate().accounted_ns().to_bits(),
+            latency.to_bits()
+        );
+    }
+
+    #[test]
+    fn tail_sampler_keeps_slowest() {
+        let mut t = TailSampler::new(2);
+        for (i, lat) in [5.0, 9.0, 1.0, 7.0].iter().enumerate() {
+            t.offer(TokenChain {
+                sid: i as u32,
+                latency_ns: *lat,
+                ..TokenChain::default()
+            });
+        }
+        let v = t.sorted();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].latency_ns, 9.0);
+        assert_eq!(v[1].latency_ns, 7.0);
+    }
+
+    #[test]
+    fn attribution_scales_to_ms() {
+        let mut rec = FlightRecorder::new(TraceConfig::default());
+        rec.token(0, 0.0, 0.0, 2e6, 1e6, 3e6);
+        let a = rec.attribution(2.0);
+        assert_eq!(a.tokens, 1);
+        assert!((a.latency_ms - 6.0).abs() < 1e-12);
+        let stall = a.phases.iter().find(|p| p.phase == "flash_queue").unwrap();
+        assert!((stall.total_ms - 4.0).abs() < 1e-12);
+        assert_eq!(a.tail.len(), 1);
+    }
+}

@@ -40,6 +40,7 @@ use crate::config::RunConfig;
 use crate::flash::{ReadCmd, Ticket, UfsSim};
 use crate::metrics::TokenIo;
 use crate::neuron::{BundleId, Layout, NeuronSpace, Slot};
+use crate::obs::{MarkKind, Phase, TraceHandle, Track};
 use crate::prefetch::{PredictScratch, Prefetcher};
 
 #[derive(Clone, Debug)]
@@ -177,6 +178,11 @@ pub struct IoPipeline {
     last_actives: Vec<Vec<BundleId>>,
     /// Reusable per-token buffers (§Perf).
     scratch: StepScratch,
+    /// Optional flight recorder: speculation spans and plan/commit marks
+    /// on this stream's session track. `None` records nothing.
+    trace: Option<TraceHandle>,
+    /// Session id this pipeline's trace events are attributed to.
+    trace_sid: u32,
 }
 
 /// Lower planned runs to byte-level commands (sub_reads applied) into a
@@ -241,6 +247,30 @@ impl IoPipeline {
             outstanding,
             last_actives,
             scratch,
+            trace: None,
+            trace_sid: 0,
+        }
+    }
+
+    /// Attach (or detach) a flight recorder, attributing this stream's
+    /// events to session `sid`'s track. Tracing never changes planning,
+    /// timing, or cache behaviour.
+    pub fn set_trace(&mut self, trace: Option<TraceHandle>, sid: u32) {
+        self.trace = trace;
+        self.trace_sid = sid;
+    }
+
+    fn trace_mark(&self, kind: MarkKind, t_ns: f64, value: f64, aux: f64) {
+        if let Some(trace) = &self.trace {
+            let sid = self.trace_sid;
+            trace.with(|rec| rec.mark(Track::Session(sid), kind, t_ns, value, aux));
+        }
+    }
+
+    fn trace_span(&self, phase: Phase, t_ns: f64, dur_ns: f64) {
+        if let Some(trace) = &self.trace {
+            let sid = self.trace_sid;
+            trace.with(|rec| rec.span(Track::Session(sid), phase, t_ns, dur_ns));
         }
     }
 
@@ -444,6 +474,16 @@ impl IoPipeline {
             collapse_runs_into(&self.scratch.pf_base_runs, threshold, &mut runs);
             lower_runs_into(&self.cfg, &self.space, target, &runs, &mut self.scratch.pf_cmds);
             let ticket = sim.submit_batch(&self.scratch.pf_cmds);
+            if self.trace.is_some() {
+                let service_ns = sim.ticket_elapsed_ns(ticket).unwrap_or(0.0);
+                self.trace_span(Phase::Prefetch, sim.clock_ns(), service_ns);
+                self.trace_mark(
+                    MarkKind::PrefetchSubmit,
+                    sim.clock_ns(),
+                    target as f64,
+                    self.scratch.pf_cmds.len() as f64,
+                );
+            }
             self.outstanding[target] = Some(OutstandingPrefetch { runs, ticket });
         }
     }
@@ -472,6 +512,24 @@ impl IoPipeline {
         // only for slots it actually chose.
         io.extra_bundles = pf_extra;
         io.prefetch_wasted_bundles = (pf_total - pf_extra).saturating_sub(hits);
+        if self.trace.is_some() {
+            if hits > 0 {
+                self.trace_mark(
+                    MarkKind::PrefetchHit,
+                    sim.clock_ns(),
+                    hits as f64,
+                    plan.layer as f64,
+                );
+            }
+            if io.prefetch_wasted_bundles > 0 {
+                self.trace_mark(
+                    MarkKind::PrefetchWaste,
+                    sim.clock_ns(),
+                    io.prefetch_wasted_bundles as f64,
+                    plan.layer as f64,
+                );
+            }
+        }
         io.read_bundles = pf_total;
         io.commands = w.batch.commands as u64;
         io.bytes = w.batch.bytes as u64;
@@ -598,7 +656,18 @@ impl IoPipeline {
         let mut plan = std::mem::take(&mut self.scratch.plan);
         for (layer, act) in actives.iter().enumerate() {
             self.plan_layer_into(cache, layer, act, &mut plan);
+            if self.trace.is_some() {
+                self.trace_mark(
+                    MarkKind::Plan,
+                    sim.clock_ns(),
+                    layer as f64,
+                    plan.missed.len() as f64,
+                );
+            }
             tok.add(&self.commit_layer(cache, &plan, sim));
+            if self.trace.is_some() {
+                self.trace_mark(MarkKind::Commit, sim.clock_ns(), layer as f64, 0.0);
+            }
         }
         self.scratch.plan = plan;
         tok
@@ -624,11 +693,22 @@ impl IoPipeline {
         let mut plan = std::mem::take(&mut self.scratch.plan);
         for (layer, act) in actives.iter().enumerate() {
             self.plan_layer_into(cache, layer, act, &mut plan);
+            if self.trace.is_some() {
+                self.trace_mark(
+                    MarkKind::Plan,
+                    sim.clock_ns(),
+                    layer as f64,
+                    plan.missed.len() as f64,
+                );
+            }
             let ticket = self.submit_layer(&plan, sim);
             if layer + 1 < self.space.n_layers {
                 self.prefetch_layer(cache, sim, layer + 1, act);
             }
             tok.add(&self.complete_layer(cache, &plan, ticket, sim));
+            if self.trace.is_some() {
+                self.trace_mark(MarkKind::Commit, sim.clock_ns(), layer as f64, 0.0);
+            }
             if compute_ns_per_layer > 0.0 {
                 sim.advance_compute(compute_ns_per_layer);
             }

@@ -1,0 +1,337 @@
+//! Property and integration tests for the flight recorder (`ripple::obs`).
+//!
+//! The recorder's contract is accounting, not sampling: every span folds
+//! into the per-phase aggregate even when the retention ring overflows, and
+//! the phase sums close against the simulator's own metric totals
+//! *bit-for-bit*, because both sides accumulate the same `f64` values in
+//! the same order starting from `0.0`. These tests pin that contract:
+//!
+//! 1. Recorder-level closure: tokens driven with `latency := accounted`
+//!    close exactly, and phase sums match a shadow accumulator bitwise.
+//! 2. Ring overflow: oldest entries are overwritten, the drop counter is
+//!    exact, retained contents are the newest suffix in order, and the
+//!    aggregate still counts everything.
+//! 3. Tail sampling: the slowest-K reservoir is deterministic and matches
+//!    a brute-force top-K.
+//! 4. Flash integration: Σ `FlashService` span durations equals
+//!    `FlashStats::total_busy_ns` bitwise, and submit/complete/drop marks
+//!    count batches exactly.
+//! 5. Serve integration: with a recorder attached, Σ `FlashQueue` ==
+//!    `RunMetrics.totals.stall_ns` and Σ `Compute` == `RunMetrics.compute_ns`
+//!    bitwise, and the Chrome trace export is bit-identical across runs.
+
+use ripple::bench::workloads::{tiny_workload, System, SystemSpec};
+use ripple::coordinator::{run_serve_traced, ServeConfig, ServeOutcome};
+use ripple::flash::{ReadCmd, UfsSim};
+use ripple::obs::export::{chrome_trace_json, validate_chrome_trace};
+use ripple::obs::{
+    FlightRecorder, MarkKind, Phase, Ring, TailSampler, TokenChain, TraceConfig, TraceHandle,
+    Track,
+};
+
+/// Deterministic 64-bit LCG (Knuth MMIX constants) for generating test
+/// durations without `rand`.
+struct Lcg(u64);
+
+impl Lcg {
+    fn new(seed: u64) -> Self {
+        Lcg(seed)
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    /// Uniform duration in `[0, scale_ns)`.
+    fn dur(&mut self, scale_ns: f64) -> f64 {
+        let u = (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        u * scale_ns
+    }
+}
+
+// -----------------------------------------------------------------------
+// 1. Recorder-level closure
+// -----------------------------------------------------------------------
+
+#[test]
+fn constructed_tokens_close_bit_for_bit() {
+    let mut rec = FlightRecorder::new(TraceConfig::default());
+    let mut rng = Lcg::new(0x0b5e_7a11);
+    let n = 500u64;
+    // Shadow accumulators mirror exactly what the aggregate should hold.
+    let (mut sum_q, mut sum_s, mut sum_c) = (0.0f64, 0.0f64, 0.0f64);
+    let mut start = 0.0f64;
+    for i in 0..n {
+        let q = rng.dur(5e4);
+        let s = rng.dur(2e5);
+        let c = rng.dur(1e5);
+        // The producer reports latency == the recorder's own phase-sum
+        // expression, so every token must close exactly.
+        let latency = (q + s) + c;
+        rec.token((i % 7) as u32, start, q, s, c, latency);
+        sum_q += q;
+        sum_s += s;
+        sum_c += c;
+        start += latency;
+    }
+
+    let agg = rec.aggregate();
+    assert_eq!(agg.tokens(), n);
+    assert_eq!(agg.exact_closures(), n, "latency := accounted must close every token");
+    assert_eq!(
+        agg.accounted_ns().to_bits(),
+        agg.latency_ns().to_bits(),
+        "aggregate accounted and latency sums must agree bitwise"
+    );
+    for p in [Phase::RoundQueue, Phase::FlashQueue, Phase::Compute] {
+        assert_eq!(agg.phase_count(p), n);
+    }
+    assert_eq!(agg.phase_total_ns(Phase::RoundQueue).to_bits(), sum_q.to_bits());
+    assert_eq!(agg.phase_total_ns(Phase::FlashQueue).to_bits(), sum_s.to_bits());
+    assert_eq!(agg.phase_total_ns(Phase::Compute).to_bits(), sum_c.to_bits());
+    // token() emits three spans + one TokenDone mark per token.
+    assert_eq!(rec.spans_len() as u64 + rec.spans_dropped(), 3 * n);
+    assert_eq!(
+        rec.marks().filter(|m| m.kind == MarkKind::TokenDone).count() as u64,
+        n
+    );
+}
+
+// -----------------------------------------------------------------------
+// 2. Ring overflow
+// -----------------------------------------------------------------------
+
+#[test]
+fn ring_overwrites_oldest_and_counts_drops() {
+    let cap = 64usize;
+    let total = 200u64;
+    let mut ring: Ring<u64> = Ring::new(cap);
+    for i in 0..total {
+        ring.push(i);
+    }
+    assert_eq!(ring.len(), cap);
+    assert_eq!(ring.len() as u64 + ring.dropped(), total);
+    // Retained contents are exactly the newest suffix, oldest to newest.
+    let got: Vec<u64> = ring.iter().copied().collect();
+    let want: Vec<u64> = (total - cap as u64..total).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn aggregate_survives_span_ring_overflow() {
+    let cfg = TraceConfig {
+        span_capacity: 32,
+        mark_capacity: 16,
+        ..TraceConfig::default()
+    };
+    let mut rec = FlightRecorder::new(cfg);
+    let mut rng = Lcg::new(0xdead_beef);
+    let n = 300u64;
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let d = rng.dur(1e5);
+        rec.span(Track::Device, Phase::FlashService, i as f64, d);
+        total += d;
+    }
+    // The ring dropped most spans, but the aggregate counted every one.
+    assert_eq!(rec.spans_len(), 32);
+    assert_eq!(rec.spans_dropped(), n - 32);
+    let agg = rec.aggregate();
+    assert_eq!(agg.phase_count(Phase::FlashService), n);
+    assert_eq!(agg.phase_total_ns(Phase::FlashService).to_bits(), total.to_bits());
+    // The retained suffix is the newest 32 spans in order.
+    let starts: Vec<f64> = rec.spans().map(|s| s.t_ns).collect();
+    let want: Vec<f64> = (n - 32..n).map(|i| i as f64).collect();
+    assert_eq!(starts, want);
+}
+
+// -----------------------------------------------------------------------
+// 3. Tail sampling
+// -----------------------------------------------------------------------
+
+#[test]
+fn tail_sampler_matches_brute_force_top_k() {
+    let k = 8usize;
+    let mut tail = TailSampler::new(k);
+    let mut rng = Lcg::new(0x7a11_5eed);
+    let mut all: Vec<TokenChain> = Vec::new();
+    for i in 0..256u32 {
+        let c = TokenChain {
+            sid: i % 5,
+            start_ns: i as f64 * 1e3,
+            queue_ns: rng.dur(1e4),
+            stall_ns: rng.dur(1e5),
+            compute_ns: rng.dur(5e4),
+            latency_ns: rng.dur(1e6),
+        };
+        tail.offer(c);
+        all.push(c);
+    }
+    assert_eq!(tail.len(), k);
+    // Brute force: sort all offered chains slowest-first with the sampler's
+    // own tiebreak (earlier start, then lower sid) and take the top K.
+    all.sort_by(|a, b| {
+        b.latency_ns
+            .total_cmp(&a.latency_ns)
+            .then(a.start_ns.total_cmp(&b.start_ns))
+            .then(a.sid.cmp(&b.sid))
+    });
+    assert_eq!(tail.sorted(), all[..k].to_vec());
+}
+
+#[test]
+fn identical_token_streams_produce_identical_attribution() {
+    let run = || {
+        let mut rec = FlightRecorder::new(TraceConfig { tail_k: 4, ..TraceConfig::default() });
+        let mut rng = Lcg::new(42);
+        let mut start = 0.0f64;
+        for i in 0..128u32 {
+            let (q, s, c) = (rng.dur(1e4), rng.dur(2e5), rng.dur(9e4));
+            let latency = (q + s) + c;
+            rec.token(i % 3, start, q, s, c, latency);
+            start += latency;
+        }
+        rec.attribution(24.0)
+    };
+    assert_eq!(run(), run(), "same stream must yield an identical summary");
+}
+
+// -----------------------------------------------------------------------
+// 4. Flash integration: device busy time closes bitwise
+// -----------------------------------------------------------------------
+
+#[test]
+fn flash_service_spans_close_against_device_busy_time() {
+    let dev = ripple::config::devices()[0].clone();
+    let trace = TraceHandle::new(TraceConfig::default());
+    let mut sim = UfsSim::new(dev, 1 << 20);
+    sim.set_trace(Some(trace.clone()));
+
+    let mut rng = Lcg::new(0xf1a5_0001);
+    let mut waited = 0usize;
+    let mut dropped = 0usize;
+    let batches = 50usize;
+    for i in 0..batches {
+        let cmds: Vec<ReadCmd> = (0..1 + (rng.next_u64() % 4) as usize)
+            .map(|j| ReadCmd {
+                offset: ((i * 7 + j) as u64 * 4096) % (1 << 19),
+                len: 4096,
+            })
+            .collect();
+        let t = sim.submit_batch(&cmds);
+        sim.advance_compute(rng.dur(5e4));
+        // Mix synchronous waits with abandoned speculation: busy time is
+        // charged at submit either way, so the identity must still hold.
+        if i % 5 == 4 {
+            sim.drop_ticket(t);
+            dropped += 1;
+        } else {
+            sim.wait(t);
+            waited += 1;
+        }
+    }
+
+    let stats = sim.stats();
+    trace.with(|rec| {
+        let agg = rec.aggregate();
+        assert_eq!(agg.phase_count(Phase::FlashService), batches as u64);
+        assert_eq!(
+            agg.phase_total_ns(Phase::FlashService).to_bits(),
+            stats.total_busy_ns.to_bits(),
+            "device-track span durations must sum to FlashStats::total_busy_ns bitwise"
+        );
+        // Span-level cross-check on the retained ring (no overflow here).
+        assert_eq!(rec.spans_dropped(), 0);
+        let ring_sum_bits = rec
+            .spans()
+            .filter(|s| s.phase == Phase::FlashService)
+            .map(|s| s.dur_ns)
+            .sum::<f64>()
+            .to_bits();
+        assert_eq!(ring_sum_bits, stats.total_busy_ns.to_bits());
+        let count = |k: MarkKind| rec.marks().filter(|m| m.kind == k).count();
+        assert_eq!(count(MarkKind::FlashSubmit), batches);
+        assert_eq!(count(MarkKind::FlashComplete), waited);
+        assert_eq!(count(MarkKind::FlashDrop), dropped);
+        // Service spans live on the device track only.
+        assert!(rec
+            .spans()
+            .filter(|s| s.phase == Phase::FlashService)
+            .all(|s| s.track == Track::Device));
+    });
+}
+
+// -----------------------------------------------------------------------
+// 5. Serve integration: phase sums close against RunMetrics, export is
+//    deterministic
+// -----------------------------------------------------------------------
+
+fn traced_tiny_serve() -> (ServeOutcome, TraceHandle) {
+    let mut w = tiny_workload();
+    w.eval_tokens = 12;
+    let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+    let cfg = ServeConfig { sessions: 3, ..Default::default() };
+    let trace = TraceHandle::new(TraceConfig::default());
+    let out = run_serve_traced(&w, System::Ripple, spec, &cfg, Some(&trace)).unwrap();
+    (out, trace)
+}
+
+#[test]
+fn serve_phase_sums_close_against_run_metrics_bitwise() {
+    let (out, trace) = traced_tiny_serve();
+    trace.with(|rec| {
+        let agg = rec.aggregate();
+        assert_eq!(agg.tokens(), out.metrics.tokens);
+        // Both sides accumulate the same per-token f64s in the same order
+        // from 0.0, so the sums agree bit-for-bit, not just within epsilon.
+        assert_eq!(
+            agg.phase_total_ns(Phase::FlashQueue).to_bits(),
+            out.metrics.totals.stall_ns.to_bits(),
+            "Σ FlashQueue spans must equal RunMetrics.totals.stall_ns bitwise"
+        );
+        assert_eq!(
+            agg.phase_total_ns(Phase::Compute).to_bits(),
+            out.metrics.compute_ns.to_bits(),
+            "Σ Compute spans must equal RunMetrics.compute_ns bitwise"
+        );
+        // Serve latencies are measured off the shared clock rather than
+        // re-summed per phase, so closure is near-exact, not bitwise.
+        let err = (agg.latency_ns() - agg.accounted_ns()).abs();
+        let scale = agg.latency_ns().abs().max(1.0);
+        assert!(
+            err / scale < 1e-9,
+            "serve closure error too large: {err} ns over {scale} ns total"
+        );
+        // Every session decoded under the recorder: one track per session.
+        for sid in 0..3u32 {
+            assert!(
+                rec.spans().any(|s| s.track == Track::Session(sid)),
+                "session {sid} recorded no spans"
+            );
+        }
+    });
+}
+
+#[test]
+fn serve_trace_export_is_bit_identical_and_valid() {
+    let (_, ta) = traced_tiny_serve();
+    let (_, tb) = traced_tiny_serve();
+    let a = ta.with(|rec| chrome_trace_json(rec));
+    let b = tb.with(|rec| chrome_trace_json(rec));
+    assert_eq!(a, b, "identical traced runs must export identical bytes");
+
+    let check = validate_chrome_trace(&a).expect("exported trace must validate");
+    assert!(check.events > 0);
+    // At least the three session tracks; the device track joins once any
+    // demand read hits flash.
+    assert!(check.tracks >= 3, "expected >= 3 tracks, got {}", check.tracks);
+
+    // The attribution summary is equally deterministic across runs.
+    let at_a = ta.with(|rec| rec.attribution(24.0));
+    let at_b = tb.with(|rec| rec.attribution(24.0));
+    assert_eq!(at_a, at_b);
+}

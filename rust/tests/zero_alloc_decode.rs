@@ -8,7 +8,10 @@
 //! pooled speculation buffers together make the steady-state per-token
 //! path allocation- and hash-free. The same gate covers the
 //! multi-session serve round and the event-driven fleet step (whose
-//! heap, retired-event log and queues are all pre-sized).
+//! heap, retired-event log and queues are all pre-sized), and it holds
+//! with the flight recorder attached: the span/mark rings, histograms
+//! and tail sampler are all pre-sized at construction (DESIGN.md
+//! §Observability), so tracing is free of steady-state allocations too.
 //!
 //! This file is its own test binary on purpose: a `#[global_allocator]`
 //! is process-wide, and the counter must not race other test threads.
@@ -304,4 +307,74 @@ fn decode_step_is_allocation_free_after_warmup() {
         "steady-state arbitrated fleet step allocated {steady} times after warmup"
     );
     assert!(!fleet.is_done(), "the gated fleet step must be mid-run, not the finale");
+
+    // --- tracing attached: every recorder structure is pre-sized ---------
+    use ripple::obs::{TraceConfig, TraceHandle};
+
+    // synchronous single-stream with per-token span recording
+    let w = fig10_workload();
+    let (mut pipeline, mut cache, mut sim, eval) = build(&w);
+    let trace = TraceHandle::new(TraceConfig::default());
+    sim.set_trace(Some(trace.clone()));
+    pipeline.set_trace(Some(trace.clone()), 0);
+    let compute = w.compute_ns_per_layer * w.sim_layers as f64;
+    for tok in &eval.tokens {
+        let t0 = sim.clock_ns();
+        let io = pipeline.step_token(&mut cache, &mut sim, tok);
+        trace.with(|r| r.token(0, t0, 0.0, io.stall_ns, compute, io.stall_ns + compute));
+    }
+    let steady = count_allocs(|| {
+        for tok in &eval.tokens {
+            let t0 = sim.clock_ns();
+            let io = pipeline.step_token(&mut cache, &mut sim, tok);
+            trace
+                .with(|r| r.token(0, t0, 0.0, io.stall_ns, compute, io.stall_ns + compute));
+        }
+    });
+    assert_eq!(
+        steady, 0,
+        "traced synchronous decode allocated {steady} times after warmup"
+    );
+    assert!(trace.with(|r| r.spans_len()) > 0, "traced run recorded no spans");
+
+    // arbitrated serve round with the recorder on every layer
+    let mut w = fig10_workload();
+    w.prefetch.enabled = true;
+    w.prefetch.budget_bytes = 32 * w.model.bundle_bytes(w.precision);
+    let (mut manager, mut serve_sim) = build_serve(&w, 3);
+    let trace = TraceHandle::new(TraceConfig::default());
+    serve_sim.set_trace(Some(trace.clone()));
+    manager.set_trace(Some(trace.clone()));
+    for _ in 0..20 {
+        assert!(manager.step_round(&mut serve_sim), "traced warmup ended early");
+    }
+    let steady = count_allocs(|| {
+        manager.step_round(&mut serve_sim);
+    });
+    assert_eq!(
+        steady, 0,
+        "traced arbitrated serve round allocated {steady} times after warmup"
+    );
+    assert!(!manager.is_done(), "the gated round must be mid-run, not the finale");
+
+    // event-driven fleet step with the recorder on every layer
+    let mut w = fig10_workload();
+    w.prefetch.enabled = true;
+    w.prefetch.budget_bytes = 32 * w.model.bundle_bytes(w.precision);
+    let (mut fleet, mut fleet_sim) = build_fleet(&w, 4);
+    let trace = TraceHandle::new(TraceConfig::default());
+    fleet_sim.set_trace(Some(trace.clone()));
+    fleet.set_trace(Some(trace.clone()));
+    for _ in 0..20 {
+        assert!(fleet.step(&mut fleet_sim), "traced fleet warmup ended early");
+    }
+    let steady = count_allocs(|| {
+        fleet.step(&mut fleet_sim);
+    });
+    assert_eq!(
+        steady, 0,
+        "traced fleet step allocated {steady} times after warmup"
+    );
+    assert!(!fleet.is_done(), "the gated fleet step must be mid-run, not the finale");
+    assert!(trace.with(|r| r.spans_len()) > 0, "traced fleet recorded no spans");
 }
