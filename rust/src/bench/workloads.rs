@@ -24,7 +24,7 @@
 //! by `n_layers / sim_layers`. IOPS/bandwidth/access-length metrics are
 //! ratios and need no scaling.
 
-use crate::cache::{Admission, KeySpace, NeuronCache, S3Fifo};
+use crate::cache::{Admission, CacheParams, KeySpace, NeuronCache};
 use crate::config::{DeviceConfig, ModelConfig, Precision};
 use crate::flash::UfsSim;
 use crate::metrics::{FleetSummary, RunMetrics, ServeSummary};
@@ -329,9 +329,11 @@ pub fn pipeline_config(
 /// The single pipeline/cache/simulator construction every experiment
 /// path uses (shared with the harness's ablation runner, so ablation
 /// rows stay comparable with default-path rows). `admission` overrides
-/// the policy's admission layer (over an S3-FIFO base). The cache is
-/// returned as a separate value — pipelines borrow it per call, so
-/// multiple pipelines can share one cache (DESIGN.md §Serving).
+/// only the admission layer of the policy the spec names (the eviction
+/// core and its seed are untouched, so ablation rows stay bit-identical
+/// with default-path rows of the same policy). The cache is returned as
+/// a separate value — pipelines borrow it per call, so multiple
+/// pipelines can share one cache (DESIGN.md §Serving).
 pub fn pipeline_with(
     spec: SystemSpec,
     w: &Workload,
@@ -342,15 +344,16 @@ pub fn pipeline_with(
     let space = neuron_space(w);
     let cache_cap = cache_capacity(w);
     let keys = KeySpace::of(&space);
-    let cache = match admission {
-        Some(adm) => NeuronCache::new(
-            Box::new(S3Fifo::bounded(cache_cap, keys.bound())),
-            adm,
-            w.seed,
-            keys,
-        ),
-        None => NeuronCache::from_config(spec.cache_policy, cache_cap, keys, w.seed)?,
-    };
+    let mut cache = NeuronCache::from_config_with(
+        spec.cache_policy,
+        cache_cap,
+        keys,
+        w.seed,
+        spec.cache_params,
+    )?;
+    if let Some(adm) = admission {
+        cache.set_admission(adm);
+    }
     let cfg = pipeline_config(spec, w, fixed_threshold);
     let sim = UfsSim::new(w.device.clone(), space.image_bytes());
     Ok((IoPipeline::new(cfg, space, layouts), cache, sim))
@@ -366,6 +369,9 @@ pub struct SystemSpec {
     /// Dense (sparsity-oblivious) streaming, llama.cpp-style.
     pub dense: bool,
     pub sub_reads: usize,
+    /// Policy tuning knobs (associativity, linking-admission segment
+    /// gate); the defaults reproduce the pre-cachelab behaviour exactly.
+    pub cache_params: CacheParams,
 }
 
 impl SystemSpec {
@@ -377,6 +383,7 @@ impl SystemSpec {
                 cache_policy: "s3fifo",
                 dense: true,
                 sub_reads: ffn_linears,
+                cache_params: CacheParams::default(),
             },
             System::LlmFlash => Self {
                 ripple_placement: false,
@@ -384,6 +391,7 @@ impl SystemSpec {
                 cache_policy: "s3fifo",
                 dense: false,
                 sub_reads: 1,
+                cache_params: CacheParams::default(),
             },
             System::RippleOffline => Self {
                 ripple_placement: true,
@@ -391,6 +399,7 @@ impl SystemSpec {
                 cache_policy: "s3fifo",
                 dense: false,
                 sub_reads: 1,
+                cache_params: CacheParams::default(),
             },
             System::Ripple => Self {
                 ripple_placement: true,
@@ -398,6 +407,7 @@ impl SystemSpec {
                 cache_policy: "linking",
                 dense: false,
                 sub_reads: 1,
+                cache_params: CacheParams::default(),
             },
         }
     }

@@ -1,0 +1,279 @@
+//! Flash-cost-aware eviction: a bucketed LRU whose victim choice weighs
+//! how expensive each entry is to re-read from flash.
+//!
+//! The Neuralink-specific observation (ISSUE 9, paper §5): eviction cost
+//! is NOT uniform. A bundle that belongs to a long linked run re-reads
+//! for one amortized flash command (the run comes back as a single
+//! sequential extent), while a singleton neuron costs a whole
+//! command-latency round trip by itself. The admission path therefore
+//! tags every insert with a re-read cost ([`crate::cache::NeuronCache`]
+//! derives it from the run length) and eviction drains the CHEAPEST
+//! cost class first, least-recent first within the class — cheap linked
+//! runs leave before expensive singletons, and keys of one run share a
+//! class so runs evict coherently.
+//!
+//! With uniform costs every entry lands in one class and the policy
+//! degenerates to exact LRU — which is what the generic conformance
+//! battery (and the cost-oblivious default [`crate::cache::CachePolicy::
+//! insert`], pinned to [`DEFAULT_COST`]) exercises.
+//!
+//! §Perf: same intrusive-list-over-slab construction as [`super::Lru`]
+//! — a dense key index, a node slab with a free list, and fixed arrays
+//! of per-class list heads/tails. The eviction scan is at most
+//! [`N_CLASSES`] probes; steady state allocates nothing and hashes
+//! nothing.
+
+const NIL: u32 = u32::MAX;
+
+/// Cost classes: entries bucket by `floor(log2(cost))`, so 32 classes
+/// cover the whole `u32` cost range.
+pub const N_CLASSES: usize = 32;
+
+/// Cost assumed by the cost-oblivious [`crate::cache::CachePolicy::insert`]
+/// path: the most expensive (singleton) class, so un-costed inserts are
+/// protected exactly like LRU protects everything.
+pub const DEFAULT_COST: u32 = 256;
+
+#[inline]
+fn class_of(cost: u32) -> u8 {
+    (cost.max(1).ilog2() as u8).min(N_CLASSES as u8 - 1)
+}
+
+#[derive(Clone, Debug)]
+struct Node {
+    key: u64,
+    prev: u32,
+    next: u32,
+    class: u8,
+}
+
+#[derive(Debug)]
+pub struct CostAware {
+    /// key -> node index (dense slot table; `NIL` = absent).
+    index: Vec<u32>,
+    nodes: Vec<Node>,
+    free: Vec<u32>,
+    /// Per-class MRU / LRU list ends.
+    heads: [u32; N_CLASSES],
+    tails: [u32; N_CLASSES],
+    len: usize,
+    capacity: usize,
+}
+
+impl CostAware {
+    pub fn new(capacity: usize) -> Self {
+        Self::bounded(capacity, 0)
+    }
+
+    /// Capacity-aware construction (§Perf): sizing mirrors
+    /// [`super::Lru::bounded`] — with a real `key_bound` the dense index
+    /// and the slab are allocated once, up front.
+    pub fn bounded(capacity: usize, key_bound: usize) -> Self {
+        let slab = if key_bound > 0 {
+            capacity.min(key_bound)
+        } else {
+            capacity.min(1 << 20)
+        };
+        Self {
+            index: vec![NIL; key_bound],
+            nodes: Vec::with_capacity(slab),
+            free: Vec::with_capacity(slab),
+            heads: [NIL; N_CLASSES],
+            tails: [NIL; N_CLASSES],
+            len: 0,
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    fn slot(&self, key: u64) -> u32 {
+        self.index.get(key as usize).copied().unwrap_or(NIL)
+    }
+
+    #[inline]
+    fn set_slot(&mut self, key: u64, idx: u32) {
+        let k = key as usize;
+        if k >= self.index.len() {
+            if idx == NIL {
+                return;
+            }
+            // only keys past the construction-time bound grow the table
+            // (tests with unknown geometry); never on the bounded path
+            self.index.resize(k + 1, NIL);
+        }
+        self.index[k] = idx;
+    }
+
+    fn unlink(&mut self, idx: u32) {
+        let (p, n, c) = {
+            let node = &self.nodes[idx as usize];
+            (node.prev, node.next, node.class as usize)
+        };
+        if p != NIL {
+            self.nodes[p as usize].next = n;
+        } else {
+            self.heads[c] = n;
+        }
+        if n != NIL {
+            self.nodes[n as usize].prev = p;
+        } else {
+            self.tails[c] = p;
+        }
+    }
+
+    fn push_front(&mut self, idx: u32, class: u8) {
+        let c = class as usize;
+        self.nodes[idx as usize].class = class;
+        self.nodes[idx as usize].prev = NIL;
+        self.nodes[idx as usize].next = self.heads[c];
+        if self.heads[c] != NIL {
+            self.nodes[self.heads[c] as usize].prev = idx;
+        }
+        self.heads[c] = idx;
+        if self.tails[c] == NIL {
+            self.tails[c] = idx;
+        }
+    }
+
+    /// Lookup; a hit refreshes recency within the entry's cost class.
+    pub fn touch(&mut self, key: u64) -> bool {
+        let idx = self.slot(key);
+        if idx == NIL {
+            return false;
+        }
+        let class = self.nodes[idx as usize].class;
+        self.unlink(idx);
+        self.push_front(idx, class);
+        true
+    }
+
+    pub fn contains_untouched(&self, key: u64) -> bool {
+        self.slot(key) != NIL
+    }
+
+    /// Evict the least-recent entry of the cheapest non-empty cost
+    /// class (the entry whose flash re-read we charge the least for).
+    fn evict(&mut self) -> u64 {
+        let c = (0..N_CLASSES)
+            .find(|&c| self.tails[c] != NIL)
+            .expect("evict called on an empty cache");
+        let idx = self.tails[c];
+        let key = self.nodes[idx as usize].key;
+        self.unlink(idx);
+        self.set_slot(key, NIL);
+        self.free.push(idx);
+        self.len -= 1;
+        key
+    }
+
+    /// Insert a key with its estimated flash re-read cost; a resident
+    /// key is re-classed to the new cost and refreshed instead. Returns
+    /// the evicted key, if any.
+    pub fn insert_with_cost(&mut self, key: u64, cost: u32) -> Option<u64> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let class = class_of(cost);
+        let idx = self.slot(key);
+        if idx != NIL {
+            self.unlink(idx);
+            self.push_front(idx, class);
+            return None;
+        }
+        let evicted = (self.len >= self.capacity).then(|| self.evict());
+        let idx = if let Some(i) = self.free.pop() {
+            self.nodes[i as usize] = Node { key, prev: NIL, next: NIL, class };
+            i
+        } else {
+            self.nodes.push(Node { key, prev: NIL, next: NIL, class });
+            (self.nodes.len() - 1) as u32
+        };
+        self.push_front(idx, class);
+        self.set_slot(key, idx);
+        self.len += 1;
+        evicted
+    }
+
+    /// Cost-oblivious insert: everything lands in the [`DEFAULT_COST`]
+    /// (most-protected) class, which makes the policy exact LRU.
+    pub fn insert(&mut self, key: u64) -> Option<u64> {
+        self.insert_with_cost(key, DEFAULT_COST)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cheap_entries_evict_before_expensive_ones() {
+        let mut c = CostAware::new(2);
+        assert_eq!(c.insert_with_cost(1, 256), None); // expensive singleton
+        assert_eq!(c.insert_with_cost(2, 1), None); // cheap linked-run key
+        // 1 is older, but 2 is cheaper to re-read: 2 goes first
+        assert_eq!(c.insert_with_cost(3, 256), Some(2));
+        assert!(c.contains_untouched(1));
+        assert!(!c.contains_untouched(2));
+    }
+
+    #[test]
+    fn uniform_cost_is_exact_lru() {
+        let mut c = CostAware::new(2);
+        c.insert(1);
+        c.insert(2);
+        assert!(c.touch(1)); // 2 becomes LRU
+        assert_eq!(c.insert(3), Some(2));
+        assert!(c.touch(1) && c.touch(3) && !c.touch(2));
+    }
+
+    #[test]
+    fn within_class_eviction_is_lru_order() {
+        let mut c = CostAware::new(3);
+        c.insert_with_cost(1, 4);
+        c.insert_with_cost(2, 4);
+        c.insert_with_cost(3, 4);
+        assert!(c.touch(1));
+        assert_eq!(c.insert_with_cost(4, 4), Some(2), "least-recent of the class");
+    }
+
+    #[test]
+    fn reinsert_reclasses_without_eviction() {
+        let mut c = CostAware::new(2);
+        c.insert_with_cost(1, 1); // cheap
+        c.insert_with_cost(2, 256);
+        assert_eq!(c.insert_with_cost(1, 256), None, "re-class is not an eviction");
+        // both now expensive; 2 is least recent of the shared class
+        assert_eq!(c.insert_with_cost(3, 256), Some(2));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn cost_classes_are_log_bucketed() {
+        assert_eq!(class_of(0), 0);
+        assert_eq!(class_of(1), 0);
+        assert_eq!(class_of(2), 1);
+        assert_eq!(class_of(3), 1);
+        assert_eq!(class_of(256), 8);
+        assert_eq!(class_of(u32::MAX), 31);
+    }
+
+    #[test]
+    fn zero_capacity_stores_nothing() {
+        let mut c = CostAware::new(0);
+        assert_eq!(c.insert_with_cost(1, 1), None);
+        assert!(!c.touch(1));
+        assert_eq!(c.len(), 0);
+    }
+}

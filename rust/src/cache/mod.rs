@@ -1,5 +1,7 @@
-//! DRAM neuron cache: policy trait, S3-FIFO and LRU implementations, and
-//! RIPPLE's linking-aligned admission layer (paper §5.2).
+//! DRAM neuron cache: policy trait, the policy implementations (S3-FIFO,
+//! LRU, and the cache-lab trio — victim-buffered LRU, set-associative,
+//! flash-cost-aware; DESIGN.md §Cache-lab), and RIPPLE's linking-aligned
+//! admission layer (paper §5.2).
 //!
 //! §Perf (DESIGN.md): cache keys are **dense** — `(layer, slot)` maps to
 //! `layer * slots_per_layer + slot` via [`KeySpace`], so the whole key
@@ -9,11 +11,17 @@
 //! real key bound and the steady-state decode path never touches the
 //! allocator or a hash function.
 
+mod costaware;
 mod lru;
 mod s3fifo;
+mod setassoc;
+mod victim;
 
+pub use costaware::{CostAware, DEFAULT_COST};
 pub use lru::Lru;
 pub use s3fifo::S3Fifo;
+pub use setassoc::{SetAssoc, DEFAULT_WAYS};
+pub use victim::Victim;
 
 use crate::access::SlotRun;
 use crate::neuron::{NeuronSpace, Slot};
@@ -68,6 +76,16 @@ pub trait CachePolicy: Send {
     /// the resident set, if any — [`NeuronCache`] resets the evicted
     /// key's owner record on it.
     fn insert(&mut self, key: u64) -> Option<u64>;
+    /// Insert after a miss, carrying the caller's estimate of how
+    /// expensive this key would be to re-read from flash (higher =
+    /// costlier; [`NeuronCache::admit`] derives it from the read-run
+    /// length). Cost-oblivious policies ignore it — the default
+    /// delegates to [`CachePolicy::insert`], so existing policies and
+    /// their reports are bit-identical — while [`CostAware`] uses it to
+    /// evict cheap-to-refetch linked runs before expensive singletons.
+    fn insert_with_cost(&mut self, key: u64, _cost: u32) -> Option<u64> {
+        self.insert(key)
+    }
     /// Residency test with NO side effects (no recency/frequency bump) —
     /// used by speculative prefetch filtering, which must not distort
     /// the policy's view of real demand.
@@ -128,6 +146,72 @@ impl CachePolicy for S3Fifo {
     }
 }
 
+impl CachePolicy for Victim {
+    fn touch(&mut self, key: u64) -> bool {
+        Victim::touch(self, key)
+    }
+    fn insert(&mut self, key: u64) -> Option<u64> {
+        Victim::insert(self, key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        Victim::contains_untouched(self, key)
+    }
+    fn len(&self) -> usize {
+        Victim::len(self)
+    }
+    fn capacity(&self) -> usize {
+        Victim::capacity(self)
+    }
+    fn bounded(capacity: usize, key_bound: usize) -> Self {
+        Victim::bounded(capacity, key_bound)
+    }
+}
+
+impl CachePolicy for SetAssoc {
+    fn touch(&mut self, key: u64) -> bool {
+        SetAssoc::touch(self, key)
+    }
+    fn insert(&mut self, key: u64) -> Option<u64> {
+        SetAssoc::insert(self, key)
+    }
+    fn contains(&self, key: u64) -> bool {
+        SetAssoc::contains_untouched(self, key)
+    }
+    fn len(&self) -> usize {
+        SetAssoc::len(self)
+    }
+    fn capacity(&self) -> usize {
+        SetAssoc::capacity(self)
+    }
+    fn bounded(capacity: usize, key_bound: usize) -> Self {
+        SetAssoc::bounded(capacity, key_bound)
+    }
+}
+
+impl CachePolicy for CostAware {
+    fn touch(&mut self, key: u64) -> bool {
+        CostAware::touch(self, key)
+    }
+    fn insert(&mut self, key: u64) -> Option<u64> {
+        CostAware::insert(self, key)
+    }
+    fn insert_with_cost(&mut self, key: u64, cost: u32) -> Option<u64> {
+        CostAware::insert_with_cost(self, key, cost)
+    }
+    fn contains(&self, key: u64) -> bool {
+        CostAware::contains_untouched(self, key)
+    }
+    fn len(&self) -> usize {
+        CostAware::len(self)
+    }
+    fn capacity(&self) -> usize {
+        CostAware::capacity(self)
+    }
+    fn bounded(capacity: usize, key_bound: usize) -> Self {
+        CostAware::bounded(capacity, key_bound)
+    }
+}
+
 /// No-op cache (cache_ratio = 0 configurations).
 pub struct NullCache;
 
@@ -163,6 +247,47 @@ pub enum Admission {
     /// segment would fragment an optimized flash extent into
     /// discontinuous residue reads while burning DRAM on it.
     Linking { segment_min: u32, segment_p: f64 },
+}
+
+/// Policy-construction knobs beyond the policy name and capacity
+/// (threaded from `RunConfig` / the harness / the CLI). Defaults
+/// reproduce the historical hard-coded values bit-for-bit: `ways = 4`
+/// for the set-associative table, `segment_min = 4` / `segment_p = 0.5`
+/// for linking admission (tuned by benches/ablations.rs, Ablation C).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheParams {
+    /// Associativity of the `setassoc` policy (clamped to capacity).
+    pub ways: usize,
+    /// Linking admission: runs shorter than this always admit.
+    pub segment_min: u32,
+    /// Linking admission: all-or-nothing segment admission probability.
+    pub segment_p: f64,
+}
+
+impl Default for CacheParams {
+    fn default() -> Self {
+        Self { ways: DEFAULT_WAYS, segment_min: 4, segment_p: 0.5 }
+    }
+}
+
+/// Canonicalize a cache-policy name to the `&'static str` the
+/// [`NeuronCache::from_config`] family accepts — the single list every
+/// front end (CLI `--cache`, harness policy axis, `RunConfig`) checks
+/// against, so an unknown name fails loudly at parse time.
+pub fn policy_name(s: &str) -> anyhow::Result<&'static str> {
+    Ok(match s {
+        "linking" => "linking",
+        "s3fifo" => "s3fifo",
+        "lru" => "lru",
+        "victim" => "victim",
+        "setassoc" => "setassoc",
+        "costaware" => "costaware",
+        "none" => "none",
+        _ => anyhow::bail!(
+            "unknown cache policy `{s}` \
+             (linking|s3fifo|lru|victim|setassoc|costaware|none)"
+        ),
+    })
 }
 
 /// Owner-table sentinel: no session admitted this key.
@@ -237,20 +362,43 @@ impl NeuronCache {
         if self.hits == 0 { 0.0 } else { self.cross_hits as f64 / self.hits as f64 }
     }
 
-    /// Build from a RunConfig policy name. `keys` is the dense key
-    /// geometry of the workload (usually `KeySpace::of(&space)`); the
-    /// policy pre-sizes its slot tables from it so the steady-state
-    /// decode path never allocates.
+    /// Build from a RunConfig policy name with default [`CacheParams`]
+    /// (bit-identical to the historical hard-coded construction). `keys`
+    /// is the dense key geometry of the workload (usually
+    /// `KeySpace::of(&space)`); the policy pre-sizes its slot tables
+    /// from it so the steady-state decode path never allocates.
     pub fn from_config(
         policy: &str,
         capacity: usize,
         keys: KeySpace,
         seed: u64,
     ) -> anyhow::Result<Self> {
-        // segment_p tuned by benches/ablations.rs (Ablation C)
-        let linking = Admission::Linking { segment_min: 4, segment_p: 0.5 };
+        Self::from_config_with(policy, capacity, keys, seed, CacheParams::default())
+    }
+
+    /// [`NeuronCache::from_config`] with explicit construction knobs:
+    /// linking's admission segment parameters and the set-associative
+    /// table's associativity come from `params` instead of being
+    /// hard-coded (ISSUE 9 bugfix).
+    pub fn from_config_with(
+        policy: &str,
+        capacity: usize,
+        keys: KeySpace,
+        seed: u64,
+        params: CacheParams,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&params.segment_p),
+            "admission segment_p {} out of [0,1]",
+            params.segment_p
+        );
+        anyhow::ensure!(params.ways >= 1, "cache ways must be >= 1");
+        let linking = Admission::Linking {
+            segment_min: params.segment_min,
+            segment_p: params.segment_p,
+        };
         let bound = keys.bound();
-        Ok(match policy {
+        Ok(match policy_name(policy)? {
             "linking" => {
                 Self::new(Box::new(S3Fifo::bounded(capacity, bound)), linking, seed, keys)
             }
@@ -266,9 +414,46 @@ impl NeuronCache {
                 seed,
                 keys,
             ),
-            "none" => Self::new(Box::new(NullCache), Admission::All, seed, keys),
-            _ => anyhow::bail!("unknown cache policy `{policy}` (linking|s3fifo|lru|none)"),
+            // the three lab policies run admission-free on purpose:
+            // they are EVICTION comparisons against lru at equal DRAM,
+            // and an admission filter would confound the axis
+            "victim" => Self::new(
+                Box::new(Victim::bounded(capacity, bound)),
+                Admission::All,
+                seed,
+                keys,
+            ),
+            "setassoc" => Self::new(
+                Box::new(SetAssoc::with_ways(capacity, params.ways)),
+                Admission::All,
+                seed,
+                keys,
+            ),
+            "costaware" => Self::new(
+                Box::new(CostAware::bounded(capacity, bound)),
+                Admission::All,
+                seed,
+                keys,
+            ),
+            _ => Self::new(Box::new(NullCache), Admission::All, seed, keys), // "none"
         })
+    }
+
+    /// Override the admission layer (the harness's ablation axis: vary
+    /// `segment_min`/`segment_p` — or disable linking — over ANY base
+    /// policy). Policy state, RNG stream and statistics are untouched.
+    pub fn set_admission(&mut self, admission: Admission) {
+        self.admission = admission;
+    }
+
+    /// Zero the hit/miss/cross-hit counters (cache contents stay warm).
+    /// Call when a warm cache is reused across measurement windows —
+    /// e.g. the serving engine's post-calibration reset — so one row's
+    /// `cache_hit_ratio` never carries another row's counts.
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+        self.cross_hits = 0;
     }
 
     pub fn len(&self) -> usize {
@@ -342,8 +527,8 @@ impl NeuronCache {
     }
 
     #[inline]
-    fn insert_key(&mut self, k: u64) {
-        if let Some(evicted) = self.policy.insert(k) {
+    fn insert_key(&mut self, k: u64, cost: u32) {
+        if let Some(evicted) = self.policy.insert_with_cost(k, cost) {
             self.set_owner(evicted, NO_OWNER);
         }
         if let Some(me) = self.session {
@@ -351,28 +536,43 @@ impl NeuronCache {
         }
     }
 
+    /// Estimated flash re-read cost of one bundle of an `len`-bundle
+    /// read run. UFS latency is command-dominated (DESIGN.md
+    /// §Async-flash-timeline): re-reading a linked L-run costs one
+    /// command amortized over L bundles, while L singletons cost L
+    /// commands — so cost decays hyperbolically from [`DEFAULT_COST`]
+    /// (a singleton) toward 1 (a >=256-bundle run). Cost-oblivious
+    /// policies never see the value (their `insert_with_cost` drops it).
+    #[inline]
+    pub fn run_cost(len: u32) -> u32 {
+        (DEFAULT_COST / len.max(1)).max(1)
+    }
+
     /// Admit freshly-read runs according to the admission policy.
     /// `runs` are the *demanded* read runs (post-collapse is fine: the
     /// speculative gap slots arrived in DRAM too and are admitted with
-    /// their segment).
+    /// their segment). Every slot of a run is admitted with the run's
+    /// re-read cost ([`NeuronCache::run_cost`]), so a cost-aware policy
+    /// sees linked runs as cheap and singletons as expensive.
     pub fn admit(&mut self, layer: usize, runs: &[SlotRun]) {
         let keys = self.keys;
         for r in runs {
+            let cost = Self::run_cost(r.len);
             match self.admission {
                 Admission::All => {
                     for s in r.start..r.end() {
-                        self.insert_key(keys.key(layer, s));
+                        self.insert_key(keys.key(layer, s), cost);
                     }
                 }
                 Admission::Linking { segment_min, segment_p } => {
                     if r.len < segment_min {
                         for s in r.start..r.end() {
-                            self.insert_key(keys.key(layer, s));
+                            self.insert_key(keys.key(layer, s), cost);
                         }
                     } else if self.rng.chance(segment_p) {
                         // all-or-nothing segment admission
                         for s in r.start..r.end() {
-                            self.insert_key(keys.key(layer, s));
+                            self.insert_key(keys.key(layer, s), cost);
                         }
                     }
                 }
@@ -477,10 +677,91 @@ mod tests {
 
     #[test]
     fn from_config_names() {
-        for p in ["linking", "s3fifo", "lru", "none"] {
+        for p in ["linking", "s3fifo", "lru", "victim", "setassoc", "costaware", "none"] {
             assert!(NeuronCache::from_config(p, 16, keys(), 0).is_ok(), "{p}");
+            assert_eq!(policy_name(p).unwrap(), p);
         }
         assert!(NeuronCache::from_config("arc", 16, keys(), 0).is_err());
+        assert!(policy_name("arc").is_err());
+    }
+
+    #[test]
+    fn from_config_with_validates_params() {
+        let bad_p = CacheParams { segment_p: 1.5, ..CacheParams::default() };
+        assert!(NeuronCache::from_config_with("linking", 16, keys(), 0, bad_p).is_err());
+        let bad_w = CacheParams { ways: 0, ..CacheParams::default() };
+        assert!(NeuronCache::from_config_with("setassoc", 16, keys(), 0, bad_w).is_err());
+    }
+
+    #[test]
+    fn from_config_params_reach_the_admission_layer() {
+        // segment_p = 0 through CacheParams: long segments never admit
+        // (the hard-coded default 0.5 would admit about half of them)
+        let p0 = CacheParams { segment_p: 0.0, ..CacheParams::default() };
+        let mut c = NeuronCache::from_config_with("linking", 64, keys(), 3, p0).unwrap();
+        c.admit(0, &runs(&[0, 1, 2, 3, 4]));
+        let (hit, _) = c.filter(0, &[0, 1, 2, 3, 4]);
+        assert!(hit.is_empty());
+        // segment_min above the run length: the same run is "sporadic"
+        let pmin = CacheParams { segment_min: 16, ..CacheParams::default() };
+        let mut c =
+            NeuronCache::from_config_with("linking", 64, keys(), 3, pmin).unwrap();
+        c.admit(0, &runs(&[0, 1, 2, 3, 4]));
+        let (hit, _) = c.filter(0, &[0, 1, 2, 3, 4]);
+        assert_eq!(hit.len(), 5);
+    }
+
+    #[test]
+    fn set_admission_overrides_only_admission() {
+        let mut c = NeuronCache::from_config("linking", 64, keys(), 3).unwrap();
+        c.set_admission(Admission::All);
+        c.admit(0, &runs(&[0, 1, 2, 3, 4, 5, 6, 7]));
+        let (hit, _) = c.filter(0, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(hit.len(), 8, "Admission::All admits whole segments");
+    }
+
+    #[test]
+    fn reset_stats_zeroes_counters_but_keeps_contents() {
+        let mut c = NeuronCache::from_config("lru", 16, keys(), 0).unwrap();
+        c.set_session(0);
+        c.admit(0, &runs(&[1, 2, 3]));
+        c.set_session(1);
+        c.filter(0, &[1, 2, 9]);
+        assert!(c.hits == 2 && c.misses == 1 && c.cross_hits == 2);
+        c.reset_stats();
+        assert!(c.hits == 0 && c.misses == 0 && c.cross_hits == 0);
+        assert_eq!(c.hit_ratio(), 0.0);
+        // the cache itself stays warm: contents and ownership survive
+        let (hit, _) = c.filter(0, &[1, 2, 3]);
+        assert_eq!(hit.len(), 3);
+        assert_eq!(c.cross_hits, 3, "ownership survived the stats reset");
+    }
+
+    #[test]
+    fn run_cost_decays_with_run_length() {
+        assert_eq!(NeuronCache::run_cost(0), DEFAULT_COST); // defensive
+        assert_eq!(NeuronCache::run_cost(1), DEFAULT_COST);
+        assert_eq!(NeuronCache::run_cost(4), 64);
+        assert_eq!(NeuronCache::run_cost(256), 1);
+        assert_eq!(NeuronCache::run_cost(10_000), 1);
+    }
+
+    #[test]
+    fn costaware_cache_evicts_linked_runs_before_singletons() {
+        // capacity 8: admit 4 singletons, then an 8-run under pressure —
+        // the run's bundles (cheap to re-read) churn among themselves
+        // while every expensive singleton stays resident
+        let mut c = NeuronCache::from_config("costaware", 8, keys(), 0).unwrap();
+        c.admit(0, &runs(&[10, 20, 30, 40]));
+        c.admit(0, &runs(&[50, 51, 52, 53, 54, 55, 56, 57]));
+        let (hit, _) = c.filter(0, &[10, 20, 30, 40]);
+        assert_eq!(hit.len(), 4, "singletons must outlive the cheap run");
+        // ...whereas plain lru at the same capacity keeps only the run
+        let mut l = NeuronCache::from_config("lru", 8, keys(), 0).unwrap();
+        l.admit(0, &runs(&[10, 20, 30, 40]));
+        l.admit(0, &runs(&[50, 51, 52, 53, 54, 55, 56, 57]));
+        let (hit, _) = l.filter(0, &[10, 20, 30, 40]);
+        assert!(hit.is_empty(), "lru recency evicts the singletons");
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Set-associative slot table: a hardware-style N-way cache index as a
+//! cheaper-than-LRU policy for fleet-scale sweeps.
+//!
+//! The requested capacity is carved into `capacity / ways` sets of
+//! `ways` slots each (rounding the remainder down — the reported
+//! capacity stays the requested one, occupancy just never reaches the
+//! round-off). A key maps to set `key % sets`; within a set, slot 0 is
+//! the MRU way and eviction drops the last way — LRU order, but only
+//! across `ways` entries, so every operation is a bounded scan of one
+//! tiny slice.
+//!
+//! Modulo striping is deliberate: dense cache keys are
+//! `layer * slots_per_layer + slot` ([`crate::cache::KeySpace`]), so the
+//! contiguous co-activation runs the linking stage builds stripe
+//! perfectly across sets instead of colliding in one.
+//!
+//! §Perf: storage is a single flat `Vec<u64>` of `sets * ways` slots
+//! sized at construction — no per-key index at all, which is the selling
+//! point over [`super::Lru`]: memory is O(sets x ways), not O(key
+//! universe), and there is nothing to grow. `bounded` therefore ignores
+//! its `key_bound` and is identical to `new`.
+
+/// Empty-slot sentinel (dense keys are `< n_layers * slots_per_layer`,
+/// far below it).
+const EMPTY: u64 = u64::MAX;
+
+/// Associativity used when the policy is built through the plain
+/// [`crate::cache::CachePolicy::bounded`] constructor (the harness
+/// default; `--ways` overrides it via [`SetAssoc::with_ways`]).
+pub const DEFAULT_WAYS: usize = 4;
+
+#[derive(Debug)]
+pub struct SetAssoc {
+    /// `sets * ways` slots; set `s` owns `slots[s*ways .. (s+1)*ways]`
+    /// with way 0 = MRU and empty ways packed at the tail.
+    slots: Vec<u64>,
+    sets: usize,
+    ways: usize,
+    len: usize,
+    capacity: usize,
+}
+
+impl SetAssoc {
+    pub fn new(capacity: usize) -> Self {
+        Self::with_ways(capacity, DEFAULT_WAYS)
+    }
+
+    /// Identical to [`SetAssoc::new`]: there is no key-indexed table to
+    /// pre-size (see module docs), the constructor exists to satisfy the
+    /// uniform [`crate::cache::CachePolicy::bounded`] construction.
+    pub fn bounded(capacity: usize, _key_bound: usize) -> Self {
+        Self::new(capacity)
+    }
+
+    /// Construct with an explicit associativity. `ways` is clamped to
+    /// `[1, capacity]`; a zero capacity stores nothing.
+    pub fn with_ways(capacity: usize, ways: usize) -> Self {
+        let ways = ways.max(1).min(capacity.max(1));
+        let sets = capacity / ways;
+        Self { slots: vec![EMPTY; sets * ways], sets, ways, len: 0, capacity }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Associativity actually in effect (after clamping).
+    pub fn ways(&self) -> usize {
+        self.ways
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    fn set_range(&self, key: u64) -> std::ops::Range<usize> {
+        let set = (key % self.sets as u64) as usize * self.ways;
+        set..set + self.ways
+    }
+
+    pub fn touch(&mut self, key: u64) -> bool {
+        if self.sets == 0 {
+            return false;
+        }
+        let range = self.set_range(key);
+        let set = &mut self.slots[range];
+        match set.iter().position(|&k| k == key) {
+            Some(pos) => {
+                set[..=pos].rotate_right(1);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn contains_untouched(&self, key: u64) -> bool {
+        if self.sets == 0 {
+            return false;
+        }
+        self.slots[self.set_range(key)].contains(&key)
+    }
+
+    /// Insert a key, evicting its set's last (least-recent) way when the
+    /// set is full. Returns the evicted key, if any.
+    pub fn insert(&mut self, key: u64) -> Option<u64> {
+        if self.sets == 0 {
+            return None;
+        }
+        if self.touch(key) {
+            return None;
+        }
+        let range = self.set_range(key);
+        let set = &mut self.slots[range];
+        // empty ways are packed at the tail, so the first EMPTY (if any)
+        // is where the set stops being full
+        match set.iter().position(|&k| k == EMPTY) {
+            Some(first_empty) => {
+                set[..=first_empty].rotate_right(1);
+                set[0] = key;
+                self.len += 1;
+                None
+            }
+            None => {
+                let evicted = set[self.ways - 1];
+                set.rotate_right(1);
+                set[0] = key;
+                Some(evicted)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conflict_eviction_is_per_set() {
+        // capacity 8, 4 ways -> 2 sets; even keys collide in set 0
+        let mut c = SetAssoc::with_ways(8, 4);
+        for k in [0u64, 2, 4, 6] {
+            assert_eq!(c.insert(k), None);
+        }
+        // a fifth even key evicts the set-0 LRU (key 0)...
+        assert_eq!(c.insert(8), Some(0));
+        // ...while set 1 is untouched
+        assert_eq!(c.insert(1), None);
+        assert!(c.contains_untouched(1));
+        assert_eq!(c.len(), 5);
+    }
+
+    #[test]
+    fn touch_is_mru_within_the_set() {
+        let mut c = SetAssoc::with_ways(4, 4); // one set
+        for k in [10u64, 20, 30, 40] {
+            c.insert(k);
+        }
+        assert!(c.touch(10)); // refresh the would-be victim
+        assert_eq!(c.insert(50), Some(20));
+        assert!(c.contains_untouched(10));
+    }
+
+    #[test]
+    fn ways_clamp_and_round_down() {
+        let c = SetAssoc::with_ways(10, 4);
+        assert_eq!(c.capacity(), 10);
+        assert_eq!(c.ways(), 4);
+        assert_eq!(c.sets, 2); // 8 usable slots, capacity reported as 10
+        let d = SetAssoc::with_ways(2, 64);
+        assert_eq!(d.ways(), 2); // ways clamped to capacity
+        assert_eq!(d.sets, 1);
+    }
+
+    #[test]
+    fn zero_capacity_stores_nothing() {
+        let mut c = SetAssoc::new(0);
+        assert_eq!(c.insert(1), None);
+        assert!(!c.touch(1));
+        assert!(!c.contains_untouched(1));
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.capacity(), 0);
+    }
+
+    #[test]
+    fn direct_mapped_single_way() {
+        let mut c = SetAssoc::with_ways(4, 1); // 4 sets, 1 way each
+        assert_eq!(c.insert(0), None);
+        assert_eq!(c.insert(4), Some(0)); // same set, immediate conflict
+        assert_eq!(c.insert(1), None);
+        assert_eq!(c.len(), 2);
+    }
+}

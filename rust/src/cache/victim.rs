@@ -1,0 +1,193 @@
+//! LRU with a victim buffer: evicted-but-recently-hot entries park in a
+//! small FIFO side table and promote back on re-reference BEFORE any
+//! flash read is charged (the classic victim-cache trick, applied to the
+//! DRAM neuron cache).
+//!
+//! Geometry: of the requested capacity `C`, a small fixed slice
+//! (`C / 8`, clamped to `[1, 64]`, zero when `C < 2`) becomes the FIFO
+//! side table and the rest backs a plain [`Lru`] main table. The two
+//! are disjoint, so `len = main.len + fifo.len <= C` and the reported
+//! capacity is exactly the requested one.
+//!
+//! Promotion swaps rather than cascades: a re-referenced victim moves to
+//! the main table's MRU position and the key the main table demotes (if
+//! any) takes its place in the FIFO — net occupancy is unchanged and no
+//! eviction escapes unreported through `touch`'s bool-only interface.
+//!
+//! §Perf: the main table is the dense slot-indexed [`Lru`]; the FIFO is
+//! a pre-reserved ring of at most 64 keys scanned linearly (cheaper than
+//! any index at that size). Steady state allocates nothing.
+
+use std::collections::VecDeque;
+
+use super::lru::Lru;
+
+/// Largest victim FIFO regardless of capacity: a side table is a
+/// recency backstop, not a second cache, and linear scans must stay
+/// cheap.
+const MAX_VICTIMS: usize = 64;
+
+#[derive(Debug)]
+pub struct Victim {
+    main: Lru,
+    fifo: VecDeque<u64>,
+    victim_cap: usize,
+    capacity: usize,
+}
+
+impl Victim {
+    pub fn new(capacity: usize) -> Self {
+        Self::bounded(capacity, 0)
+    }
+
+    /// Capacity-aware construction (§Perf): pre-sizes the main table's
+    /// slot index for `key_bound` dense keys and reserves the FIFO ring
+    /// up front, so steady-state operation never allocates.
+    pub fn bounded(capacity: usize, key_bound: usize) -> Self {
+        let victim_cap =
+            if capacity >= 2 { (capacity / 8).clamp(1, MAX_VICTIMS) } else { 0 };
+        Self {
+            main: Lru::bounded(capacity - victim_cap, key_bound),
+            fifo: VecDeque::with_capacity(victim_cap + 1),
+            victim_cap,
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.main.len() + self.fifo.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn fifo_position(&self, key: u64) -> Option<usize> {
+        self.fifo.iter().position(|&k| k == key)
+    }
+
+    /// Move a key out of the FIFO into the main table's MRU slot; the
+    /// key the main table demotes backfills the freed FIFO slot.
+    fn promote(&mut self, pos: usize, key: u64) {
+        self.fifo.remove(pos);
+        if let Some(demoted) = self.main.insert(key) {
+            self.fifo.push_back(demoted);
+        }
+    }
+
+    pub fn touch(&mut self, key: u64) -> bool {
+        if self.main.touch(key) {
+            return true;
+        }
+        match self.fifo_position(key) {
+            Some(pos) => {
+                self.promote(pos, key);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn contains_untouched(&self, key: u64) -> bool {
+        self.main.contains_untouched(key) || self.fifo_position(key).is_some()
+    }
+
+    /// Insert a key; a cold insert under pressure demotes the main
+    /// table's LRU entry into the FIFO, and the FIFO's oldest victim is
+    /// what actually leaves the cache. Returns the evicted key, if any.
+    pub fn insert(&mut self, key: u64) -> Option<u64> {
+        if self.capacity == 0 {
+            return None;
+        }
+        if self.main.touch(key) {
+            return None;
+        }
+        if let Some(pos) = self.fifo_position(key) {
+            self.promote(pos, key);
+            return None;
+        }
+        let demoted = self.main.insert(key);
+        let Some(demoted) = demoted else { return None };
+        if self.victim_cap == 0 {
+            return Some(demoted);
+        }
+        self.fifo.push_back(demoted);
+        if self.fifo.len() > self.victim_cap {
+            self.fifo.pop_front()
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn victim_parks_and_promotes() {
+        // capacity 9 -> main 8, fifo 1
+        let mut c = Victim::new(9);
+        for k in 0..8u64 {
+            assert_eq!(c.insert(k), None);
+        }
+        // key 0 is the main LRU; a cold insert demotes it into the FIFO
+        assert_eq!(c.insert(100), None);
+        assert_eq!(c.len(), 9);
+        assert!(c.contains_untouched(0), "victim must still be resident");
+        // re-referencing the victim promotes it back without an eviction
+        assert!(c.touch(0));
+        assert_eq!(c.len(), 9);
+        assert!(c.contains_untouched(0));
+    }
+
+    #[test]
+    fn fifo_overflow_is_the_real_eviction() {
+        let mut c = Victim::new(9); // main 8, fifo 1
+        for k in 0..8u64 {
+            c.insert(k);
+        }
+        assert_eq!(c.insert(100), None); // demotes 0 into the fifo
+        assert_eq!(c.insert(101), Some(0)); // demotes 1; fifo overflow drops 0
+        assert!(!c.contains_untouched(0));
+        assert!(c.contains_untouched(1));
+        assert_eq!(c.len(), 9);
+    }
+
+    #[test]
+    fn tiny_capacities_degrade_to_plain_lru() {
+        let mut c = Victim::new(1); // victim slice is 0 below capacity 2
+        assert_eq!(c.insert(1), None);
+        assert_eq!(c.insert(2), Some(1));
+        assert!(c.touch(2) && !c.touch(1));
+        let mut z = Victim::new(0);
+        assert_eq!(z.insert(1), None);
+        assert!(!z.touch(1));
+        assert_eq!(z.len(), 0);
+    }
+
+    #[test]
+    fn promotion_swaps_instead_of_cascading() {
+        // full cache: promoting a victim must not change occupancy or
+        // silently drop a key
+        let mut c = Victim::new(9);
+        for k in 0..9u64 {
+            c.insert(k);
+        }
+        for k in 100..104u64 {
+            c.insert(k);
+        }
+        let len = c.len();
+        // some key now sits in the FIFO; touching it swaps, not evicts
+        let victim = (0..200u64)
+            .find(|&k| !Lru::contains_untouched(&c.main, k) && c.contains_untouched(k))
+            .expect("a parked victim");
+        assert!(c.touch(victim));
+        assert_eq!(c.len(), len);
+        assert!(c.main.contains_untouched(victim));
+    }
+}

@@ -2,6 +2,7 @@
 //! pipeline and prefetch knobs together. Loadable from JSON (examples/
 //! and the CLI).
 
+use crate::cache::CacheParams;
 use crate::prefetch::PrefetchConfig;
 use crate::util::json::Json;
 
@@ -18,8 +19,18 @@ pub struct RunConfig {
     pub collapse_threshold: usize,
     /// Enable RIPPLE's access collapse.
     pub collapse: bool,
-    /// Cache admission policy: "linking" (RIPPLE), "s3fifo", "lru", "none".
+    /// Cache eviction/admission policy: "linking" (RIPPLE), "s3fifo",
+    /// "lru", "victim", "setassoc", "costaware", "none".
     pub cache_policy: String,
+    /// Set-associativity for the "setassoc" policy (>= 1; other
+    /// policies ignore it).
+    pub cache_ways: usize,
+    /// Linking admission: runs shorter than this many bundles always
+    /// admit (they are sporadic, not linked segments).
+    pub admission_segment_min: u32,
+    /// Linking admission: all-or-nothing admission probability for
+    /// segments of at least `admission_segment_min` bundles, in [0, 1].
+    pub admission_segment_p: f64,
     /// Placement policy: "ripple", "structural", "frequency", "llmflash".
     pub placement: String,
     /// Speculative next-layer prefetch on the async flash timeline.
@@ -43,6 +54,9 @@ impl Default for RunConfig {
             collapse_threshold: 4,
             collapse: true,
             cache_policy: "linking".to_string(),
+            cache_ways: CacheParams::default().ways,
+            admission_segment_min: CacheParams::default().segment_min,
+            admission_segment_p: CacheParams::default().segment_p,
             placement: "ripple".to_string(),
             prefetch: pf.enabled,
             prefetch_budget_bytes: pf.budget_bytes,
@@ -75,7 +89,22 @@ impl RunConfig {
             cfg.collapse = *b;
         }
         if let Some(v) = j.get("cache_policy").and_then(Json::as_str) {
-            cfg.cache_policy = v.to_string();
+            // canonicalize early so a typo fails at load, not mid-run
+            cfg.cache_policy = crate::cache::policy_name(v)?.to_string();
+        }
+        if let Some(v) = j.get("cache_ways").and_then(Json::as_usize) {
+            anyhow::ensure!(v >= 1, "cache_ways must be >= 1");
+            cfg.cache_ways = v;
+        }
+        if let Some(v) = j.get("admission_segment_min").and_then(Json::as_usize) {
+            cfg.admission_segment_min = v as u32;
+        }
+        if let Some(v) = j.get("admission_segment_p").and_then(Json::as_f64) {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&v),
+                "admission_segment_p out of [0,1]"
+            );
+            cfg.admission_segment_p = v;
         }
         if let Some(v) = j.get("placement").and_then(Json::as_str) {
             cfg.placement = v.to_string();
@@ -107,6 +136,18 @@ impl RunConfig {
     /// DRAM cache capacity in bundles for this model.
     pub fn cache_capacity_bundles(&self) -> usize {
         (self.model.total_neurons() as f64 * self.cache_ratio) as usize
+    }
+
+    /// The cache tuning knobs as a `cache::CacheParams` — what
+    /// `NeuronCache::from_config_with` consumes. The defaults reproduce
+    /// the historically hard-coded `Admission::Linking { segment_min:
+    /// 4, segment_p: 0.5 }` and `DEFAULT_WAYS` exactly.
+    pub fn cache_params(&self) -> CacheParams {
+        CacheParams {
+            ways: self.cache_ways,
+            segment_min: self.admission_segment_min,
+            segment_p: self.admission_segment_p,
+        }
     }
 
     /// The prefetch knobs as a `prefetch::PrefetchConfig`.
@@ -154,6 +195,32 @@ mod tests {
         assert!(
             RunConfig::from_json_str(r#"{"prefetch_budget_bytes": 999999999999}"#).is_err()
         );
+        assert!(RunConfig::from_json_str(r#"{"cache_policy": "bogus"}"#).is_err());
+        assert!(RunConfig::from_json_str(r#"{"cache_ways": 0}"#).is_err());
+        assert!(
+            RunConfig::from_json_str(r#"{"admission_segment_p": 1.5}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn cache_knobs_parse_and_default_to_the_historical_values() {
+        // regression pin for the once-hard-coded admission constants:
+        // an empty config must still mean Linking{min 4, p 0.5}, ways 4
+        let d = RunConfig::default().cache_params();
+        assert_eq!(d, CacheParams::default());
+        assert_eq!(d.segment_min, 4);
+        assert!((d.segment_p - 0.5).abs() < 1e-12);
+        assert_eq!(d.ways, 4);
+        let c = RunConfig::from_json_str(
+            r#"{"cache_policy": "setassoc", "cache_ways": 8,
+                "admission_segment_min": 2, "admission_segment_p": 0.25}"#,
+        )
+        .unwrap();
+        assert_eq!(c.cache_policy, "setassoc");
+        let p = c.cache_params();
+        assert_eq!(p.ways, 8);
+        assert_eq!(p.segment_min, 2);
+        assert!((p.segment_p - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -279,8 +279,10 @@ fn worker_loop(
         if let Err(e) = engine.reset_sequence() {
             log::error!("worker {wid}: reset after calibration failed: {e:#}");
         }
-        engine.io_metrics = crate::metrics::RunMetrics::new();
-        engine.sim.reset_stats();
+        // all three stat families (run metrics, flash counters, cache
+        // hit/miss counters) — previously the cache counters leaked the
+        // calibration traffic into the serving-window hit ratio
+        engine.reset_io_stats();
     }
     while let Ok(WorkerMsg { batch }) = rx.recv() {
         let started = Instant::now();

@@ -487,7 +487,15 @@ pub fn run_serve_traced(
     };
     let keys = KeySpace::of(&space);
     let caches: Vec<NeuronCache> = (0..n_caches)
-        .map(|idx| NeuronCache::from_config(spec.cache_policy, cap_of(idx), keys, w.seed))
+        .map(|idx| {
+            NeuronCache::from_config_with(
+                spec.cache_policy,
+                cap_of(idx),
+                keys,
+                w.seed,
+                spec.cache_params,
+            )
+        })
         .collect::<anyhow::Result<_>>()?;
     let streams: Vec<(IoPipeline, Trace)> = (0..cfg.sessions)
         .map(|sid| {

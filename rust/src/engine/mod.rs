@@ -283,6 +283,18 @@ impl Engine {
         Ok(())
     }
 
+    /// Zero every per-run I/O statistic — the run metrics, the flash
+    /// simulator counters AND the cache hit/miss/cross-hit counters —
+    /// while keeping cache *contents* warm. Runners that reuse one
+    /// engine across measurement windows must call this between
+    /// windows; resetting only the first two silently carries cache
+    /// stats across rows (the ISSUE 9 stats-bleed bug).
+    pub fn reset_io_stats(&mut self) {
+        self.io_metrics = RunMetrics::new();
+        self.sim.reset_stats();
+        self.cache.reset_stats();
+    }
+
     /// Install new flash layouts (the offline stage's output): rewrites
     /// the flash image and rebuilds the pipeline (cache is cold after a
     /// re-placement, as in the paper's offline->online handoff).

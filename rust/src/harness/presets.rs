@@ -22,6 +22,7 @@ pub fn preset_names() -> &'static [&'static str] {
         "fig10",
         "fig18",
         "ablations",
+        "cachelab",
         "serve",
         "serve-prefetch",
         "fleet",
@@ -38,6 +39,7 @@ pub fn preset(name: &str) -> anyhow::Result<ScenarioMatrix> {
         "fig10" => fig10(),
         "fig18" => fig18(),
         "ablations" => ablations(),
+        "cachelab" => cachelab(),
         "serve" => serve(),
         "serve-prefetch" => serve_prefetch(),
         "fleet" => fleet(),
@@ -356,6 +358,46 @@ fn ablations() -> ScenarioMatrix {
     m
 }
 
+/// Cache-architecture lab (DESIGN.md §Cache-lab): the four eviction
+/// policies at equal DRAM — policy x capacity x device on RIPPLE over
+/// the fig14 cache-ratio axes, synchronous timeline. Extras add a
+/// set-associativity sweep (the only rows carrying the gated
+/// `cache_ways` JSON key) and the Llama2-7B headline pair whose
+/// cost-aware-vs-LRU e2e delta `rust/tests/harness_golden.rs` pins.
+fn cachelab() -> ScenarioMatrix {
+    let mut m = ScenarioMatrix::new("cachelab");
+    m.models = vec!["OPT-1.3B".to_string()];
+    m.devices = vec!["OnePlus 12".to_string(), "OnePlus Ace 2".to_string()];
+    m.systems = vec![System::Ripple];
+    m.cache_policies = vec![
+        Some("lru".to_string()),
+        Some("victim".to_string()),
+        Some("setassoc".to_string()),
+        Some("costaware".to_string()),
+    ];
+    // fig14's cache-ratio axis; 0.00 is the no-DRAM sanity anchor where
+    // every policy must coincide
+    m.cache_ratios = vec![0.0, 0.05, 0.1, 0.2, 0.3, 0.4];
+    for ways in [1usize, 8, 16] {
+        let mut s =
+            ScenarioSpec::new(&format!("ways{ways:02}"), "OPT-1.3B", System::Ripple);
+        s.cache_policy = Some("setassoc".to_string());
+        s.cache_ways = Some(ways);
+        m.extra.push(s);
+    }
+    for pol in ["lru", "costaware"] {
+        let mut s =
+            ScenarioSpec::new(&format!("headline-{pol}"), "Llama2-7B", System::Ripple);
+        s.cache_policy = Some(pol.to_string());
+        m.extra.push(s);
+    }
+    // CI-sized rows (the product is 48 rows); knn 32 keeps placement
+    // search cheap without collapsing the linked-run structure the
+    // cost model keys on
+    m.scale_down(128, 32, 2, 32);
+    m
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -520,6 +562,44 @@ mod tests {
         for s in &specs {
             s.workload().unwrap();
         }
+    }
+
+    #[test]
+    fn cachelab_sweeps_policies_at_equal_dram() {
+        let specs = preset("cachelab").unwrap().expand();
+        // 2 devices x 4 policies x 6 ratios + 3 ways extras + 2 headline
+        assert_eq!(specs.len(), 2 * 4 * 6 + 3 + 2);
+        assert!(specs.iter().all(|s| !s.prefetch.enabled && !s.trace));
+        // every policy appears at every ratio on every device: the
+        // equal-DRAM comparison the headline depends on
+        for pol in ["lru", "victim", "setassoc", "costaware"] {
+            for ratio in [0.0, 0.05, 0.1, 0.2, 0.3, 0.4] {
+                assert!(
+                    specs.iter().any(|s| s.cache_policy.as_deref() == Some(pol)
+                        && (s.cache_ratio - ratio).abs() < 1e-12),
+                    "missing {pol} at ratio {ratio}"
+                );
+            }
+        }
+        // only the ways extras carry the associativity override
+        let ways: Vec<_> =
+            specs.iter().filter(|s| s.cache_ways.is_some()).collect();
+        assert_eq!(ways.len(), 3);
+        assert!(ways
+            .iter()
+            .all(|s| s.cache_policy.as_deref() == Some("setassoc")));
+        // the headline pair differs only in eviction policy
+        let lru = specs.iter().find(|s| s.name == "headline-lru").unwrap();
+        let ca = specs.iter().find(|s| s.name == "headline-costaware").unwrap();
+        assert_eq!(lru.model, ca.model);
+        assert_eq!(lru.cache_ratio, ca.cache_ratio);
+        assert_eq!(lru.seed, ca.seed);
+        // every row passes workload + spec validation
+        for s in &specs {
+            s.workload().unwrap();
+            s.system_spec(2).unwrap();
+        }
+        assert_eq!(specs[0].seed, 7, "cachelab rows run on the bench seed");
     }
 
     #[test]

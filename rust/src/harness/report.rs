@@ -470,6 +470,9 @@ fn config_label(spec: &ScenarioSpec) -> String {
     if let Some(p) = &spec.cache_policy {
         parts.push(format!("pol={p}"));
     }
+    if let Some(ways) = spec.cache_ways {
+        parts.push(format!("ways={ways}"));
+    }
     if let Some(c) = spec.collapse {
         parts.push(format!("collapse={}", if c { "on" } else { "off" }));
     }
@@ -745,6 +748,12 @@ fn scenario_json(r: &ScenarioResult) -> Json {
         ("serve", serve_spec_json(spec)),
         ("serve_metrics", serve_metrics_json(r)),
     ];
+    // the cache_ways key exists only on rows that override the
+    // associativity (cachelab), so every pre-cachelab document is
+    // byte-identical under SCHEMA_VERSION 2
+    if let Some(ways) = spec.cache_ways {
+        fields.push(("cache_ways", json::num(ways as f64)));
+    }
     // fleet keys exist only on fleet rows (SCHEMA_VERSION stays 2:
     // non-fleet documents are byte-identical to pre-fleet builds)
     if spec.fleet.is_some() {
@@ -1197,6 +1206,7 @@ mod tests {
         assert!(!text.contains("\"fleet_metrics\""), "{text}");
         assert!(!text.contains("\"p999_ms\""), "{text}");
         assert!(!text.contains("\"attribution\""), "{text}");
+        assert!(!text.contains("\"cache_ways\""), "{text}");
         let md = report.to_markdown(None);
         assert!(!md.contains("## Fleet"), "{md}");
         assert!(!md.contains("Load ramp"), "{md}");
@@ -1212,6 +1222,20 @@ mod tests {
         assert!(!text.contains("\"slo_ms\""), "{text}");
         // single ramp member -> no ramp table
         assert!(!no_slo.to_markdown(None).contains("Load ramp"));
+    }
+
+    #[test]
+    fn cache_ways_serializes_only_when_overridden() {
+        // schema-v2 gating: the key appears exactly on cachelab rows
+        // that pin an associativity, and lands in the config label too
+        let mut r = fake_result("ways", 1e6);
+        r.spec.cache_policy = Some("setassoc".to_string());
+        r.spec.cache_ways = Some(8);
+        let report =
+            SweepReport { name: "cachelab".to_string(), results: vec![r] };
+        let text = report.json_string();
+        assert!(text.contains("\"cache_ways\":8"), "{text}");
+        assert!(config_label(&report.results[0].spec).contains("ways=8"));
     }
 
     #[test]

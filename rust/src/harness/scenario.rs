@@ -365,9 +365,14 @@ pub struct ScenarioSpec {
     /// Comparison system — bundles the placement strategy, read
     /// granularity and default collapse/cache settings.
     pub system: System,
-    /// Cache-policy override ("linking"|"s3fifo"|"lru"|"none"); `None`
-    /// keeps the system's default policy.
+    /// Cache-policy override ("linking"|"s3fifo"|"lru"|"victim"|
+    /// "setassoc"|"costaware"|"none"); `None` keeps the system's
+    /// default policy.
     pub cache_policy: Option<String>,
+    /// Set-associativity override for the `setassoc` policy; `None`
+    /// keeps `cache::DEFAULT_WAYS` (other policies ignore it). Rows
+    /// without it keep their names and JSON byte-identical.
+    pub cache_ways: Option<usize>,
     /// Access-collapse override; `None` keeps the system default.
     pub collapse: Option<bool>,
     /// Fraction of all FFN bundles that fit the DRAM cache.
@@ -415,6 +420,7 @@ impl ScenarioSpec {
             dataset: "alpaca".to_string(),
             system,
             cache_policy: None,
+            cache_ways: None,
             collapse: None,
             cache_ratio: 0.1,
             precision: Precision::Fp16,
@@ -536,31 +542,29 @@ impl ScenarioSpec {
     }
 
     /// Resolve the `SystemSpec` this scenario executes: the named
-    /// system's preset with the collapse / cache-policy overrides
-    /// applied.
+    /// system's preset with the collapse / cache-policy / ways
+    /// overrides applied.
     pub fn system_spec(&self, ffn_linears: usize) -> anyhow::Result<SystemSpec> {
         let mut spec = SystemSpec::of(self.system, ffn_linears);
         if let Some(c) = self.collapse {
             spec.collapse = c;
         }
         if let Some(p) = &self.cache_policy {
-            spec.cache_policy = static_policy(p)?;
+            // `policy_name` canonicalizes to the `'static` string
+            // `SystemSpec` carries and is where the name set lives —
+            // the harness accepts exactly what `from_config` builds.
+            spec.cache_policy = crate::cache::policy_name(p)?;
+        }
+        if let Some(ways) = self.cache_ways {
+            anyhow::ensure!(
+                ways >= 1,
+                "scenario `{}`: cache_ways must be >= 1",
+                self.name
+            );
+            spec.cache_params.ways = ways;
         }
         Ok(spec)
     }
-}
-
-/// Map a policy name to the `'static` string `SystemSpec` carries.
-/// Must stay in sync with `cache::NeuronCache::from_config`, which is
-/// where the name is ultimately interpreted.
-fn static_policy(name: &str) -> anyhow::Result<&'static str> {
-    Ok(match name {
-        "linking" => "linking",
-        "s3fifo" => "s3fifo",
-        "lru" => "lru",
-        "none" => "none",
-        _ => anyhow::bail!("unknown cache policy `{name}` (linking|s3fifo|lru|none)"),
-    })
 }
 
 /// Derive a per-scenario seed from a base seed and the scenario name
@@ -1003,6 +1007,24 @@ mod tests {
         assert_eq!(s.cache_policy, "s3fifo");
         assert!(s.ripple_placement);
         spec.cache_policy = Some("bogus".to_string());
+        assert!(spec.system_spec(2).is_err());
+    }
+
+    #[test]
+    fn system_spec_accepts_cachelab_policies_and_ways() {
+        let mut spec = ScenarioSpec::new("x", "OPT-350M", System::Ripple);
+        for p in ["victim", "setassoc", "costaware"] {
+            spec.cache_policy = Some(p.to_string());
+            assert_eq!(spec.system_spec(2).unwrap().cache_policy, p);
+        }
+        // default params reproduce the pre-cachelab spec exactly
+        assert_eq!(
+            spec.system_spec(2).unwrap().cache_params,
+            crate::cache::CacheParams::default()
+        );
+        spec.cache_ways = Some(8);
+        assert_eq!(spec.system_spec(2).unwrap().cache_params.ways, 8);
+        spec.cache_ways = Some(0);
         assert!(spec.system_spec(2).is_err());
     }
 }

@@ -84,6 +84,8 @@ fn print_help() {
          simulate: --model <name> --device <name> --dataset <name>\n\
                    --system <llamacpp|llmflash|ripple-offline|ripple>\n\
                    [--config <runconfig.json>] [--cache-ratio <f>] [--tokens <n>]\n\
+                   [--cache <linking|s3fifo|lru|victim|setassoc|costaware|none>]\n\
+                   [--ways <n>] (associativity for --cache setassoc)\n\
                    [--no-collapse] [--prefetch] [--prefetch-budget <bytes>]\n\
                    [--prefetch-lookahead <n>]\n\
                    --prefetch: overlap flash reads with modeled compute via\n\
@@ -265,11 +267,14 @@ fn simulate(args: &Args) -> Result<()> {
     let dataset = DatasetProfile::by_name(args.get_or("dataset", "alpaca"))?;
     let system = System::by_key(args.get_or("system", "ripple"))?;
     // --config <file.json> loads a RunConfig (model/device/precision/
-    // cache-ratio/seed + prefetch knobs); explicit flags still override.
+    // cache-ratio/seed + prefetch/cache knobs); explicit flags still
+    // override.
+    let mut cache_params = ripple::cache::CacheParams::default();
     let mut w = if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading config `{path}`: {e}"))?;
         let cfg = ripple::config::RunConfig::from_json_str(&text)?;
+        cache_params = cfg.cache_params();
         Workload::from_run(&cfg, dataset)
     } else {
         let model = model_by_name(args.get_or("model", "OPT-350M"))?;
@@ -296,15 +301,25 @@ fn simulate(args: &Args) -> Result<()> {
         !args.flag("sessions"),
         "--sessions needs a value (e.g. --sessions 4)"
     );
+    // --cache / --ways select the DRAM eviction policy (cache-lab,
+    // DESIGN.md §Cache-lab) on top of the system preset; every
+    // simulate path (single-stream, --sessions, --fleet) honours them
+    let mut sspec = SystemSpec::of(system, w.model.ffn_linears);
+    sspec.cache_params = cache_params;
+    if let Some(pol) = args.get("cache") {
+        sspec.cache_policy = ripple::cache::policy_name(pol)?;
+    }
+    let ways = args.get_usize("ways", sspec.cache_params.ways)?;
+    anyhow::ensure!(ways >= 1, "--ways must be >= 1");
+    sspec.cache_params.ways = ways;
     if args.flag("fleet") {
-        return simulate_fleet(args, &w, system);
+        return simulate_fleet(args, &w, system, sspec);
     }
     if args.get("sessions").is_some() {
-        return simulate_serve(args, &w, system);
+        return simulate_serve(args, &w, system, sspec);
     }
     let trace = trace_handle_from(args)?;
     let eval = w.dataset.clone();
-    let sspec = SystemSpec::of(system, w.model.ffn_linears);
     let r = workloads::run_spec_traced(&w, sspec, &eval, trace.as_ref())?;
     let mut t = Table::new(&[
         "system", "io ms/token", "e2e ms/token", "overlap", "IOPS", "eff bw MB/s",
@@ -388,7 +403,12 @@ fn trace_check(args: &Args) -> Result<()> {
 /// and one shared flash timeline (DESIGN.md §Serving). With
 /// `--prefetch` each stream decodes on the overlapped timeline and a
 /// per-round arbiter divides one global speculative byte budget.
-fn simulate_serve(args: &Args, w: &Workload, system: System) -> Result<()> {
+fn simulate_serve(
+    args: &Args,
+    w: &Workload,
+    system: System,
+    sspec: SystemSpec,
+) -> Result<()> {
     let arbiter = match args.get("arbiter") {
         None => None,
         Some("fair") => Some(ArbiterPolicy::FairShare),
@@ -425,7 +445,6 @@ fn simulate_serve(args: &Args, w: &Workload, system: System) -> Result<()> {
         cfg.prefetch_global_budget = Some(kb * 1024);
     }
     let trace = trace_handle_from(args)?;
-    let sspec = SystemSpec::of(system, w.model.ffn_linears);
     let out = run_serve_traced(w, system, sspec, &cfg, trace.as_ref())?;
     let scale = w.layer_scale();
     let ms = |ns: f64| ns * scale / 1e6;
@@ -494,7 +513,12 @@ fn simulate_serve(args: &Args, w: &Workload, system: System) -> Result<()> {
 /// (DESIGN.md §Fleet) — sessions arrive by a stochastic process, an
 /// admission bound may reject them, and a scheduler orders each decode
 /// round over one shared DRAM cache and one flash timeline.
-fn simulate_fleet(args: &Args, w: &Workload, system: System) -> Result<()> {
+fn simulate_fleet(
+    args: &Args,
+    w: &Workload,
+    system: System,
+    sspec: SystemSpec,
+) -> Result<()> {
     let rate = args.get_f64("arrival-rate", 1000.0)?;
     let arrival = match args.get_or("arrival", "poisson") {
         "fixed" => ArrivalProcess::Fixed {
@@ -552,7 +576,6 @@ fn simulate_fleet(args: &Args, w: &Workload, system: System) -> Result<()> {
         cfg.prefetch_global_budget = Some(kb * 1024);
     }
     let trace = trace_handle_from(args)?;
-    let sspec = SystemSpec::of(system, w.model.ffn_linears);
     let out = run_fleet_traced(w, system, sspec, &cfg, trace.as_ref())?;
     let fs = &out.fleet;
     let sv = &out.summary;

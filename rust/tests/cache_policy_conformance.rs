@@ -1,6 +1,8 @@
 //! Cache-policy conformance suite: one parameterized battery of
 //! trait-level contracts, run against every `CachePolicy` implementation
-//! (LRU and S3-FIFO; the zero-capacity contract also covers NullCache).
+//! (LRU, S3-FIFO, and the cache-lab trio — victim buffer,
+//! set-associative, cost-aware; the zero-capacity contract also covers
+//! NullCache).
 //!
 //! The battery asserts only what the *trait* promises — capacity
 //! invariants, touch/insert semantics, eviction under pressure, no
@@ -8,7 +10,7 @@
 //! (ARC, CLOCK, ...) can be added to `POLICIES` and inherit the whole
 //! suite.
 
-use ripple::cache::{CachePolicy, Lru, NullCache, S3Fifo};
+use ripple::cache::{CachePolicy, CostAware, Lru, NullCache, S3Fifo, SetAssoc, Victim};
 use ripple::util::rng::Rng;
 
 type Ctor = fn(usize) -> Box<dyn CachePolicy>;
@@ -17,6 +19,9 @@ type Ctor = fn(usize) -> Box<dyn CachePolicy>;
 const POLICIES: &[(&str, Ctor)] = &[
     ("lru", |cap| Box::new(Lru::new(cap))),
     ("s3fifo", |cap| Box::new(S3Fifo::new(cap))),
+    ("victim", |cap| Box::new(Victim::new(cap))),
+    ("setassoc", |cap| Box::new(SetAssoc::new(cap))),
+    ("costaware", |cap| Box::new(CostAware::new(cap))),
 ];
 
 fn for_each_policy(mut f: impl FnMut(&str, Ctor)) {
@@ -510,6 +515,226 @@ mod oracle {
             }
         }
     }
+
+    /// Victim-buffer model: `RefLru` main table plus an explicit FIFO
+    /// side deque, mirroring the documented geometry (a `C / 8` slice
+    /// clamped to `[1, 64]`, zero below capacity 2; promotion swaps the
+    /// re-referenced victim with the key the main table demotes; FIFO
+    /// overflow is the only real eviction).
+    pub struct RefVictim {
+        main: RefLru,
+        fifo: VecDeque<u64>,
+        victim_cap: usize,
+        capacity: usize,
+    }
+
+    impl RefVictim {
+        pub fn new(capacity: usize) -> Self {
+            let victim_cap =
+                if capacity >= 2 { (capacity / 8).clamp(1, 64) } else { 0 };
+            Self {
+                main: RefLru::new(capacity - victim_cap),
+                fifo: VecDeque::new(),
+                victim_cap,
+                capacity,
+            }
+        }
+
+        pub fn len(&self) -> usize {
+            self.main.len() + self.fifo.len()
+        }
+
+        fn fifo_pos(&self, key: u64) -> Option<usize> {
+            self.fifo.iter().position(|&k| k == key)
+        }
+
+        fn promote(&mut self, pos: usize, key: u64) {
+            self.fifo.remove(pos);
+            if let Some(demoted) = self.main.insert(key) {
+                self.fifo.push_back(demoted);
+            }
+        }
+
+        pub fn touch(&mut self, key: u64) -> bool {
+            if self.main.touch(key) {
+                return true;
+            }
+            match self.fifo_pos(key) {
+                Some(pos) => {
+                    self.promote(pos, key);
+                    true
+                }
+                None => false,
+            }
+        }
+
+        pub fn contains(&self, key: u64) -> bool {
+            self.main.contains(key) || self.fifo_pos(key).is_some()
+        }
+
+        pub fn insert(&mut self, key: u64) -> Option<u64> {
+            if self.capacity == 0 {
+                return None;
+            }
+            if self.main.touch(key) {
+                return None;
+            }
+            if let Some(pos) = self.fifo_pos(key) {
+                self.promote(pos, key);
+                return None;
+            }
+            let demoted = self.main.insert(key)?;
+            if self.victim_cap == 0 {
+                return Some(demoted);
+            }
+            self.fifo.push_back(demoted);
+            if self.fifo.len() > self.victim_cap {
+                self.fifo.pop_front()
+            } else {
+                None
+            }
+        }
+    }
+
+    /// Set-associative model: one recency deque per set (front = MRU),
+    /// `capacity / ways` sets with the remainder rounded down, a key
+    /// mapping to set `key % sets`, and conflict eviction dropping the
+    /// set's back (least-recent) entry.
+    pub struct RefSetAssoc {
+        sets: Vec<VecDeque<u64>>,
+        ways: usize,
+    }
+
+    impl RefSetAssoc {
+        pub fn with_ways(capacity: usize, ways: usize) -> Self {
+            let ways = ways.max(1).min(capacity.max(1));
+            Self { sets: vec![VecDeque::new(); capacity / ways], ways }
+        }
+
+        pub fn len(&self) -> usize {
+            self.sets.iter().map(|s| s.len()).sum()
+        }
+
+        fn set_of(&self, key: u64) -> usize {
+            (key % self.sets.len() as u64) as usize
+        }
+
+        pub fn touch(&mut self, key: u64) -> bool {
+            if self.sets.is_empty() {
+                return false;
+            }
+            let set = self.set_of(key);
+            let set = &mut self.sets[set];
+            match set.iter().position(|&k| k == key) {
+                Some(pos) => {
+                    set.remove(pos);
+                    set.push_front(key);
+                    true
+                }
+                None => false,
+            }
+        }
+
+        pub fn contains(&self, key: u64) -> bool {
+            !self.sets.is_empty() && self.sets[self.set_of(key)].contains(&key)
+        }
+
+        pub fn insert(&mut self, key: u64) -> Option<u64> {
+            if self.sets.is_empty() {
+                return None;
+            }
+            if self.touch(key) {
+                return None;
+            }
+            let ways = self.ways;
+            let set = self.set_of(key);
+            let set = &mut self.sets[set];
+            let evicted = if set.len() >= ways { set.pop_back() } else { None };
+            set.push_front(key);
+            evicted
+        }
+    }
+
+    /// Cost-aware model: a recency deque per log2 cost class (back =
+    /// MRU) plus a key -> class map; eviction pops the front
+    /// (least-recent) entry of the cheapest non-empty class, and
+    /// re-inserting a resident key re-classes it without evicting.
+    pub struct RefCostAware {
+        class_of_key: HashMap<u64, usize>,
+        classes: Vec<VecDeque<u64>>,
+        capacity: usize,
+    }
+
+    impl RefCostAware {
+        pub fn new(capacity: usize) -> Self {
+            Self {
+                class_of_key: HashMap::new(),
+                classes: vec![VecDeque::new(); 32],
+                capacity,
+            }
+        }
+
+        fn class_of(cost: u32) -> usize {
+            (cost.max(1).ilog2() as usize).min(31)
+        }
+
+        pub fn len(&self) -> usize {
+            self.class_of_key.len()
+        }
+
+        pub fn contains(&self, key: u64) -> bool {
+            self.class_of_key.contains_key(&key)
+        }
+
+        /// Remove `key` from its class deque, returning the class it
+        /// was in (resident keys only).
+        fn detach(&mut self, key: u64) -> Option<usize> {
+            let class = self.class_of_key.get(&key).copied()?;
+            let pos = self.classes[class]
+                .iter()
+                .position(|&k| k == key)
+                .expect("map and deques out of sync");
+            self.classes[class].remove(pos);
+            Some(class)
+        }
+
+        pub fn touch(&mut self, key: u64) -> bool {
+            match self.detach(key) {
+                Some(class) => {
+                    self.classes[class].push_back(key);
+                    true
+                }
+                None => false,
+            }
+        }
+
+        pub fn insert_with_cost(&mut self, key: u64, cost: u32) -> Option<u64> {
+            if self.capacity == 0 {
+                return None;
+            }
+            let class = Self::class_of(cost);
+            if self.detach(key).is_some() {
+                self.classes[class].push_back(key);
+                self.class_of_key.insert(key, class);
+                return None;
+            }
+            let evicted = if self.len() >= self.capacity {
+                let cheapest = self
+                    .classes
+                    .iter()
+                    .position(|q| !q.is_empty())
+                    .expect("full cache with no classed entries");
+                let victim = self.classes[cheapest].pop_front().unwrap();
+                self.class_of_key.remove(&victim);
+                Some(victim)
+            } else {
+                None
+            };
+            self.classes[class].push_back(key);
+            self.class_of_key.insert(key, class);
+            evicted
+        }
+    }
 }
 
 /// Drive a production policy and its oracle through the same randomized
@@ -610,6 +835,183 @@ fn dense_s3fifo_matches_hashmap_oracle_on_random_traces() {
             );
         }
     }
+}
+
+#[test]
+fn dense_victim_matches_reference_oracle_on_random_traces() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0x71C71A ^ seed);
+        let cap = rng.range(1, 24);
+        let bound = 40u64;
+        for bounded in [false, true] {
+            let dense: Box<dyn CachePolicy> = if bounded {
+                Box::new(Victim::bounded(cap, bound as usize))
+            } else {
+                Box::new(Victim::new(cap))
+            };
+            let mut oracle = oracle::RefVictim::new(cap);
+            let o = std::cell::RefCell::new(&mut oracle);
+            run_oracle_battery(
+                if bounded { "victim(bounded)" } else { "victim" },
+                dense,
+                |k| o.borrow_mut().touch(k),
+                |k| o.borrow_mut().insert(k),
+                |k| o.borrow().contains(k),
+                || o.borrow().len(),
+                seed,
+                bound,
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_setassoc_matches_reference_oracle_on_random_traces() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0x5E7A55 ^ seed);
+        let cap = rng.range(1, 24);
+        let bound = 40u64;
+        // direct-mapped, low-assoc, the harness default, fully-assoc —
+        // plus the `bounded` constructor (identical to `new` for this
+        // policy: there is no key-indexed table to pre-size)
+        for ways in [1usize, 2, ripple::cache::DEFAULT_WAYS, cap] {
+            let dense: Box<dyn CachePolicy> = Box::new(SetAssoc::with_ways(cap, ways));
+            let mut oracle = oracle::RefSetAssoc::with_ways(cap, ways);
+            let o = std::cell::RefCell::new(&mut oracle);
+            run_oracle_battery(
+                &format!("setassoc(ways={ways})"),
+                dense,
+                |k| o.borrow_mut().touch(k),
+                |k| o.borrow_mut().insert(k),
+                |k| o.borrow().contains(k),
+                || o.borrow().len(),
+                seed,
+                bound,
+            );
+        }
+        let dense: Box<dyn CachePolicy> = Box::new(SetAssoc::bounded(cap, bound as usize));
+        let mut oracle = oracle::RefSetAssoc::with_ways(cap, ripple::cache::DEFAULT_WAYS);
+        let o = std::cell::RefCell::new(&mut oracle);
+        run_oracle_battery(
+            "setassoc(bounded)",
+            dense,
+            |k| o.borrow_mut().touch(k),
+            |k| o.borrow_mut().insert(k),
+            |k| o.borrow().contains(k),
+            || o.borrow().len(),
+            seed,
+            bound,
+        );
+    }
+}
+
+/// With uniform (cost-oblivious) inserts every entry shares one cost
+/// class, so cost-aware eviction must degenerate to EXACT LRU — pinned
+/// against the independent `RefLru` oracle, not a mirror of itself.
+#[test]
+fn dense_costaware_with_uniform_costs_matches_the_lru_oracle() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0xC057A0 ^ seed);
+        let cap = rng.range(1, 24);
+        let bound = 40u64;
+        for bounded in [false, true] {
+            let dense: Box<dyn CachePolicy> = if bounded {
+                Box::new(CostAware::bounded(cap, bound as usize))
+            } else {
+                Box::new(CostAware::new(cap))
+            };
+            let mut oracle = oracle::RefLru::new(cap);
+            let o = std::cell::RefCell::new(&mut oracle);
+            run_oracle_battery(
+                if bounded { "costaware(bounded)" } else { "costaware" },
+                dense,
+                |k| o.borrow_mut().touch(k),
+                |k| o.borrow_mut().insert(k),
+                |k| o.borrow().contains(k),
+                || o.borrow().len(),
+                seed,
+                bound,
+            );
+        }
+    }
+}
+
+/// The cost-carrying battery: random re-read costs spanning the linked-
+/// run-to-singleton range drive `CachePolicy::insert_with_cost` through
+/// the trait (pinning the dispatch, not just the inherent method) and
+/// must match the class-bucketed reference model op for op.
+#[test]
+fn dense_costaware_matches_cost_class_oracle_under_mixed_costs() {
+    // cost spread mirrors `NeuronCache::run_cost`: 256 / run_len for
+    // runs of 1, 32, 4, and 256 bundles
+    const COSTS: [u32; 4] = [256, 8, 64, 1];
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0xC057C1 ^ seed);
+        let cap = rng.range(1, 24);
+        let bound = 40usize;
+        let mut dense: Box<dyn CachePolicy> = Box::new(CostAware::bounded(cap, bound));
+        let mut oracle = oracle::RefCostAware::new(cap);
+        for i in 0..2_500u64 {
+            let key = rng.below(bound) as u64;
+            if rng.chance(0.5) {
+                let cost = COSTS[rng.below(COSTS.len())];
+                assert_eq!(
+                    dense.insert_with_cost(key, cost),
+                    oracle.insert_with_cost(key, cost),
+                    "costaware: eviction diverged at op {i} (seed {seed}, cost {cost})"
+                );
+            } else {
+                assert_eq!(
+                    dense.touch(key),
+                    oracle.touch(key),
+                    "costaware: hit/miss diverged at op {i} (seed {seed})"
+                );
+            }
+            assert_eq!(dense.len(), oracle.len(), "costaware: len diverged at op {i}");
+            if i % 250 == 0 {
+                for k in 0..bound as u64 {
+                    assert_eq!(
+                        dense.contains(k),
+                        oracle.contains(k),
+                        "costaware: membership diverged at key {k}, op {i} (seed {seed})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// For every policy that does NOT specialize `insert_with_cost`, the
+/// trait default must route to plain `insert` — costs are advisory, and
+/// a cost-oblivious policy driven through the costed entry point has to
+/// behave byte-for-byte like one driven through `insert`.
+#[test]
+fn trait_default_insert_with_cost_is_cost_oblivious() {
+    for_each_policy(|name, ctor| {
+        if name == "costaware" {
+            return; // the one policy whose costs are load-bearing
+        }
+        let mut rng = Rng::new(0xDEFA);
+        let mut plain = ctor(8);
+        let mut costed = ctor(8);
+        for i in 0..600 {
+            let key = rng.below(24) as u64;
+            let cost = 1 + rng.below(512) as u32;
+            if rng.chance(0.5) {
+                assert_eq!(
+                    plain.insert(key),
+                    costed.insert_with_cost(key, cost),
+                    "{name}: default insert_with_cost diverged at op {i}"
+                );
+            } else {
+                assert_eq!(plain.touch(key), costed.touch(key), "{name} at op {i}");
+            }
+        }
+        assert_eq!(plain.len(), costed.len(), "{name}");
+        for k in 0..24u64 {
+            assert_eq!(plain.contains(k), costed.contains(k), "{name}: key {k}");
+        }
+    });
 }
 
 #[test]

@@ -342,6 +342,79 @@ fn fleet_json_byte_identical_across_thread_counts() {
     assert!(md.contains("### Load ramp `f6c4-fifo-slo40ms`"), "{md}");
 }
 
+/// The common shrink for the cache-lab pins below.
+fn cachelab_spec(name: &str, policy: &str, ratio: f64) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::new(name, "OPT-350M", System::Ripple);
+    spec.cache_ratio = ratio;
+    spec.cache_policy = Some(policy.to_string());
+    spec.calib_tokens = 96;
+    spec.eval_tokens = 24;
+    spec.sim_layers = 2;
+    spec.knn = 16;
+    spec
+}
+
+/// The cachelab headline pin (ISSUE 9): at matched DRAM budgets,
+/// flash-cost-aware eviction must not lose to plain LRU end to end —
+/// cheap linked-run keys leave first, so the misses that remain are the
+/// ones that amortize into fewer flash commands. The margin moves with
+/// cache geometry, so the pin quantifies over the pressured fig14
+/// ratios: cost-aware must meet-or-beat LRU somewhere on the sweep, and
+/// both rows must agree on the work done (same tokens, same demanded
+/// bundles — "equal DRAM" means only the eviction choice differs).
+#[test]
+fn cachelab_costaware_meets_lru_end_to_end_at_equal_dram() {
+    let mut met_or_beat = 0usize;
+    for ratio in [0.05, 0.1, 0.2, 0.3, 0.4] {
+        let lru = run_scenario(&cachelab_spec("pin-lru", "lru", ratio), 2).unwrap();
+        let ca =
+            run_scenario(&cachelab_spec("pin-costaware", "costaware", ratio), 2).unwrap();
+        assert_eq!(lru.metrics.tokens, ca.metrics.tokens, "ratio {ratio}");
+        assert_eq!(
+            lru.metrics.totals.demanded_bundles, ca.metrics.totals.demanded_bundles,
+            "equal DRAM rows must demand the same bundles (ratio {ratio})"
+        );
+        if ca.e2e_ms() <= lru.e2e_ms() {
+            met_or_beat += 1;
+        }
+    }
+    assert!(
+        met_or_beat > 0,
+        "cost-aware eviction lost to LRU at every pressured cache ratio"
+    );
+}
+
+/// The stats-reset regression (ISSUE 9): two back-to-back rows with the
+/// same spec must report the same `cache_hit_ratio` bit for bit — no
+/// counter state may bleed from one row into the next, whatever the
+/// policy. Runs the full policy roster so a future runner that reuses a
+/// cache (or an engine) across rows trips this immediately.
+#[test]
+fn back_to_back_identical_rows_report_identical_cache_hit_ratios() {
+    for policy in ["linking", "lru", "victim", "setassoc", "costaware"] {
+        let first = run_scenario(&cachelab_spec("row-a", policy, 0.1), 2).unwrap();
+        let second = run_scenario(&cachelab_spec("row-b", policy, 0.1), 2).unwrap();
+        assert_eq!(
+            first.metrics.cache_hit_ratio().to_bits(),
+            second.metrics.cache_hit_ratio().to_bits(),
+            "`{policy}`: back-to-back hit ratios diverged"
+        );
+        assert_eq!(
+            first.metrics.totals.cached_bundles, second.metrics.totals.cached_bundles,
+            "`{policy}`"
+        );
+        assert_eq!(
+            first.metrics.totals.demanded_bundles, second.metrics.totals.demanded_bundles,
+            "`{policy}`"
+        );
+        assert_eq!(
+            first.e2e_ms().to_bits(),
+            second.e2e_ms().to_bits(),
+            "`{policy}`: back-to-back e2e diverged"
+        );
+    }
+}
+
 #[test]
 fn smoke_report_baselines_against_itself_with_zero_deltas() {
     let mut m = preset("smoke").unwrap();

@@ -98,7 +98,19 @@ fn fig10_workload() -> Workload {
 }
 
 fn build(w: &Workload) -> (IoPipeline, NeuronCache, UfsSim, Trace) {
-    let spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+    build_with_policy(w, None)
+}
+
+/// `build`, with the DRAM eviction policy swapped out (the cache-lab
+/// gate runs the same workload under every ISSUE 9 policy).
+fn build_with_policy(
+    w: &Workload,
+    policy: Option<&'static str>,
+) -> (IoPipeline, NeuronCache, UfsSim, Trace) {
+    let mut spec = SystemSpec::of(System::Ripple, w.model.ffn_linears);
+    if let Some(p) = policy {
+        spec.cache_policy = p;
+    }
     let calib = w.calibration_trace();
     let (layouts, _) = layouts_for(System::Ripple, &calib, w.knn, w.threads);
     let (mut pipeline, cache, sim) = pipeline_with(spec, w, layouts, None, None).unwrap();
@@ -236,6 +248,28 @@ fn decode_step_is_allocation_free_after_warmup() {
         steady, 0,
         "overlapped decode hot path allocated {steady} times after warmup"
     );
+
+    // --- cache-lab policies on the synchronous decode path ---------------
+    // The victim buffer pre-reserves its FIFO ring, the set-associative
+    // table is one flat construction-time Vec, and the cost-aware policy
+    // reuses the LRU slab-and-freelist layout — so the warmup-then-replay
+    // discipline must hold with each of them swapped in for the default.
+    for policy in ["victim", "setassoc", "costaware"] {
+        let w = fig10_workload();
+        let (mut pipeline, mut cache, mut sim, eval) = build_with_policy(&w, Some(policy));
+        for tok in &eval.tokens {
+            pipeline.step_token(&mut cache, &mut sim, tok);
+        }
+        let steady = count_allocs(|| {
+            for tok in &eval.tokens {
+                pipeline.step_token(&mut cache, &mut sim, tok);
+            }
+        });
+        assert_eq!(
+            steady, 0,
+            "`{policy}` decode hot path allocated {steady} times after warmup"
+        );
+    }
 
     // --- steady-state multi-session serve round (synchronous) -----------
     // All manager loop state is hoisted and every recorder pre-sized, so
