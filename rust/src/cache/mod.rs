@@ -69,7 +69,12 @@ impl KeySpace {
 }
 
 /// Uniform policy interface over dense `(layer, slot)` keys.
-pub trait CachePolicy: Send {
+///
+/// `Sync` rides along with `Send` so a `NeuronCache` behind `&` can be
+/// probed from the parallel plan phase's scoped workers; the only
+/// shared-access entry point is [`contains`](Self::contains), which is
+/// side-effect free by contract.
+pub trait CachePolicy: Send + Sync {
     /// Lookup; a hit refreshes the entry's standing.
     fn touch(&mut self, key: u64) -> bool;
     /// Insert after a miss (may evict). Returns the key evicted from

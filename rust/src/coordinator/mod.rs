@@ -18,12 +18,14 @@
 pub mod arbiter;
 mod batcher;
 pub mod fleet;
+pub mod parallel;
 mod router;
 pub mod session;
 pub mod tcp;
 
 pub use arbiter::{ArbiterPolicy, PrefetchArbiter, SessionDemand};
 pub use batcher::{Batcher, BatcherConfig};
+pub use parallel::{with_decode_pool, DecodePool, DisjointSlice};
 pub use fleet::{
     run_fleet, run_fleet_traced, EventHeap, FleetConfig, FleetEvent, FleetManager, FleetOutcome,
     FleetScheduler, FleetStats,

@@ -1,0 +1,375 @@
+//! Persistent scoped worker pool for the parallel plan phase of a
+//! decode round (DESIGN.md §Parallel-decode).
+//!
+//! The serving and fleet simulators split every decode round into a
+//! **parallel plan phase** — each active session computes its own
+//! sorted slot lists and speculative predictions into per-session
+//! scratch, touching no shared state — and a **serial commit phase**
+//! that replays the round in canonical session order against the
+//! shared cache and flash timeline. The pool below runs phase 1; it is
+//! deliberately tiny and dependency-free:
+//!
+//! * [`with_decode_pool`] parks `threads - 1` workers inside a
+//!   `std::thread::scope`, so worker threads may borrow the caller's
+//!   stack (the session vectors live on it) and are always joined
+//!   before the scope returns — even on panic.
+//! * [`DecodePool::run`] publishes one round of `n` index jobs. The
+//!   publishing thread claims jobs too, so `threads == 1` with a pool
+//!   attached degenerates to the plain serial loop.
+//! * Rounds are claimed from a single packed atomic word
+//!   `(epoch << 32) | next_index`. The epoch tag makes a stale worker
+//!   (one that raced past the end of a previous round) fail its CAS
+//!   and go back to sleep instead of claiming an index of a round it
+//!   never saw.
+//! * The round handshake uses one mutex + two condvars (futex-backed
+//!   on Linux), so the steady state allocates nothing — the
+//!   zero-allocation decode gate runs a full pooled round under the
+//!   counting allocator.
+//!
+//! Determinism note: the pool only ever executes *pure per-index*
+//! work. Nothing about scheduling order can leak into results; the
+//! commit phase is the only writer of shared state and runs in fixed
+//! session order on the coordinator thread.
+
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// One published round: a type-erased `Fn(usize)` plus the number of
+/// index jobs. The closure is erased through a data pointer and a
+/// monomorphized trampoline rather than a `dyn` fat pointer so the
+/// word fits in a `Copy` struct the workers can lift out of the mutex.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    n: usize,
+}
+
+// Safety: `data` points at an `F: Sync` owned by the publishing
+// thread, which blocks until every index job finished; workers only
+// ever form `&F` from it (see `trampoline`).
+unsafe impl Send for Job {}
+
+unsafe fn trampoline<F: Fn(usize) + Sync>(data: *const (), idx: usize) {
+    let f = unsafe { &*(data as *const F) };
+    f(idx);
+}
+
+struct PoolState {
+    job: Option<Job>,
+    /// Round counter; bumped by the publisher before workers wake.
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers park here between rounds.
+    wake: Condvar,
+    /// The publisher parks here until `finished == n`.
+    done: Condvar,
+    /// Packed `(epoch & 0xFFFF_FFFF) << 32 | next_index` claim word.
+    claim: AtomicU64,
+    finished: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+fn lock(m: &Mutex<PoolState>) -> MutexGuard<'_, PoolState> {
+    // a worker panic already poisons nothing we rely on (all round
+    // state is atomics); keep going so the publisher can re-raise
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Shared {
+    fn new() -> Self {
+        Shared {
+            state: Mutex::new(PoolState { job: None, epoch: 0, shutdown: false }),
+            wake: Condvar::new(),
+            done: Condvar::new(),
+            claim: AtomicU64::new(0),
+            finished: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        }
+    }
+}
+
+/// Claim and execute index jobs of `epoch`'s round until the round is
+/// exhausted (or superseded). Runs on workers *and* the publisher.
+fn run_jobs(shared: &Shared, job: &Job, epoch: u64) {
+    let tag = (epoch & 0xFFFF_FFFF) << 32;
+    loop {
+        let cur = shared.claim.load(Ordering::Acquire);
+        if cur & !0xFFFF_FFFF != tag {
+            // a newer round was published; this thread is late — the
+            // epoch check means it can never claim into a round whose
+            // closure it did not lift out of the mutex itself
+            return;
+        }
+        let idx = (cur & 0xFFFF_FFFF) as usize;
+        if idx >= job.n {
+            return;
+        }
+        if shared
+            .claim
+            .compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            continue;
+        }
+        // keep draining the round even if one index panics: the
+        // finished count must still reach n for the handshake to
+        // complete; the publisher re-raises afterwards
+        if catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, idx) })).is_err() {
+            shared.panicked.store(true, Ordering::Release);
+        }
+        let done = shared.finished.fetch_add(1, Ordering::AcqRel) + 1;
+        if done == job.n {
+            // lock-then-notify: the publisher checks `finished` while
+            // holding the state lock, so acquiring it here cannot
+            // interleave between its check and its wait — no lost
+            // wakeup
+            drop(lock(&shared.state));
+            shared.done.notify_all();
+        }
+    }
+}
+
+fn worker(shared: &Shared) {
+    let mut seen: u64 = 0;
+    loop {
+        let (job, epoch) = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                match st.job {
+                    // `job` can be None with a fresh epoch when this
+                    // worker slept through an entire round (the
+                    // publisher clears it at round end) — keep waiting
+                    Some(j) if st.epoch != seen => break (j, st.epoch),
+                    _ => st = shared.wake.wait(st).unwrap_or_else(|e| e.into_inner()),
+                }
+            }
+        };
+        seen = epoch;
+        run_jobs(shared, &job, epoch);
+    }
+}
+
+/// Ensure workers are released even if the pool user panics: dropped
+/// inside the `thread::scope`, before the scope joins.
+struct Shutdown<'a>(&'a Shared);
+
+impl Drop for Shutdown<'_> {
+    fn drop(&mut self) {
+        let mut st = lock(&self.0.state);
+        st.shutdown = true;
+        drop(st);
+        self.0.wake.notify_all();
+    }
+}
+
+/// Handle to the plan-phase worker pool (or the inline no-pool stand-in).
+///
+/// Obtained from [`with_decode_pool`]; the coordinators thread it
+/// through their round loops and call [`run`](Self::run) once per
+/// parallel plan phase.
+pub struct DecodePool<'scope> {
+    shared: Option<&'scope Shared>,
+    threads: usize,
+}
+
+impl DecodePool<'_> {
+    /// A pool-less handle: [`run`](Self::run) executes jobs inline, in
+    /// index order, on the calling thread. This is the stand-in the
+    /// serial entry points (`step_round`, `run`) use, so the
+    /// single-threaded code path is *literally* the historical one.
+    pub fn inline() -> Self {
+        DecodePool { shared: None, threads: 1 }
+    }
+
+    /// Worker count this handle fans out to (1 for [`inline`](Self::inline)).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `f(0..n)` with every index running exactly once, then
+    /// return. `f` must be safe to call concurrently for *distinct*
+    /// indices (the coordinators guarantee index-disjoint data via
+    /// [`DisjointSlice`]). No result ordering exists — `f` must write
+    /// only to its own index's slot.
+    pub fn run<F: Fn(usize) + Sync>(&mut self, n: usize, f: F) {
+        let Some(shared) = self.shared else {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        };
+        if n == 0 {
+            return;
+        }
+        assert!(n < u32::MAX as usize, "round too large for the packed claim word");
+        let job = Job { data: (&f as *const F).cast::<()>(), call: trampoline::<F>, n };
+        let epoch;
+        {
+            let mut st = lock(&shared.state);
+            st.epoch = st.epoch.wrapping_add(1);
+            epoch = st.epoch;
+            st.job = Some(job);
+            shared.finished.store(0, Ordering::Release);
+            // publish the claim word last-ish (still under the lock):
+            // stale workers CAS against the old tag and fail
+            shared
+                .claim
+                .store((epoch & 0xFFFF_FFFF) << 32, Ordering::Release);
+        }
+        shared.wake.notify_all();
+        // the publishing thread is worker #0 of the round
+        run_jobs(shared, &job, epoch);
+        let mut st = lock(&shared.state);
+        while shared.finished.load(Ordering::Acquire) < n {
+            st = shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+        drop(st);
+        if shared.panicked.swap(false, Ordering::AcqRel) {
+            panic!("decode pool worker panicked");
+        }
+    }
+}
+
+/// Run `f` with a decode pool of `threads` total threads (the calling
+/// thread plus `threads - 1` scoped workers). `threads <= 1` skips
+/// thread creation entirely and hands `f` an inline pool, so callers
+/// can pass the configured `decode_threads` straight through.
+pub fn with_decode_pool<R>(threads: usize, f: impl FnOnce(&mut DecodePool<'_>) -> R) -> R {
+    if threads <= 1 {
+        return f(&mut DecodePool::inline());
+    }
+    let shared = Shared::new();
+    std::thread::scope(|scope| {
+        for _ in 0..threads - 1 {
+            scope.spawn(|| worker(&shared));
+        }
+        let _release = Shutdown(&shared);
+        let mut pool = DecodePool { shared: Some(&shared), threads };
+        f(&mut pool)
+    })
+}
+
+/// Shared view over a `&mut [T]` whose elements are written by at most
+/// one concurrent index job each.
+///
+/// The plan phase hands every session's `Session` + `TokenPrep` to
+/// exactly one pool job (sessions appear at most once in the active
+/// list — they are session *ids*), so per-index access is exclusive
+/// even though the jobs share one slice. `get` returns a raw pointer
+/// rather than `&mut T` so the aliasing obligation sits visibly on the
+/// caller's `unsafe` block.
+pub struct DisjointSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// Safety: access is index-disjoint by the caller's contract on `get`;
+// moving/sharing the view across the scoped workers is then no more
+// than sharing `&mut [T]` split element-wise.
+unsafe impl<T: Send> Send for DisjointSlice<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
+
+impl<'a, T> DisjointSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        DisjointSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    /// Pointer to element `idx` (bounds-checked).
+    ///
+    /// # Safety
+    /// The caller must guarantee no two concurrent users dereference
+    /// the same `idx`, and that dereferences do not outlive `'a`.
+    pub unsafe fn get(&self, idx: usize) -> *mut T {
+        assert!(idx < self.len, "DisjointSlice index out of bounds");
+        unsafe { self.ptr.add(idx) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inline_pool_runs_every_job_in_order() {
+        let mut pool = DecodePool::inline();
+        assert_eq!(pool.threads(), 1);
+        let log = Mutex::new(Vec::new());
+        pool.run(5, |i| log.lock().unwrap().push(i));
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn scoped_pool_runs_each_index_exactly_once_across_rounds() {
+        for threads in [2, 3, 8] {
+            with_decode_pool(threads, |pool| {
+                assert_eq!(pool.threads(), threads);
+                let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+                // epoch reuse: many rounds through one pool
+                for _round in 0..50 {
+                    for h in &hits {
+                        h.store(0, Ordering::Relaxed);
+                    }
+                    pool.run(hits.len(), |i| {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    });
+                    for (i, h) in hits.iter().enumerate() {
+                        assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} not exactly-once");
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn pool_handles_more_threads_than_jobs_and_empty_rounds() {
+        with_decode_pool(8, |pool| {
+            let hits: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(hits.len(), |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            pool.run(0, |_| unreachable!("empty round must not invoke jobs"));
+            for h in &hits {
+                assert_eq!(h.load(Ordering::Relaxed), 1);
+            }
+        });
+    }
+
+    #[test]
+    fn disjoint_slice_parallel_writes_all_land() {
+        let mut data = vec![0usize; 256];
+        with_decode_pool(4, |pool| {
+            let view = DisjointSlice::new(&mut data);
+            // Safety: each index is claimed exactly once per round.
+            pool.run(256, |i| unsafe { *view.get(i) = i * 3 });
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i * 3);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_publisher() {
+        let caught = catch_unwind(|| {
+            with_decode_pool(2, |pool| {
+                pool.run(4, |i| {
+                    if i == 2 {
+                        panic!("boom");
+                    }
+                });
+            });
+        });
+        assert!(caught.is_err(), "pool must re-raise worker panics");
+    }
+}

@@ -42,11 +42,12 @@ use crate::cache::{KeySpace, NeuronCache};
 use crate::flash::UfsSim;
 use crate::metrics::{RunMetrics, ServeMetrics, ServeSummary, SessionStats};
 use crate::obs::{MarkKind, Phase, TraceHandle, Track};
-use crate::pipeline::IoPipeline;
+use crate::pipeline::{IoPipeline, TokenPrep};
 use crate::prefetch::Prefetcher;
 use crate::trace::Trace;
 
 use super::arbiter::{ArbiterPolicy, PrefetchArbiter, SessionDemand};
+use super::parallel::{with_decode_pool, DecodePool, DisjointSlice};
 use super::{Batcher, BatcherConfig};
 
 /// Knobs of one serving simulation.
@@ -71,6 +72,12 @@ pub struct ServeConfig {
     /// the run reduces bit-for-bit to the single-stream overlapped
     /// experiment.
     pub prefetch_global_budget: Option<usize>,
+    /// Threads for the parallel plan phase of each decode round
+    /// (DESIGN.md §Parallel-decode). Results are decode-thread-count
+    /// invariant — the commit phase replays the round in canonical
+    /// session order — so this knob only changes wall-clock. 1 (the
+    /// default) runs the historical fully-serial loop.
+    pub decode_threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -82,6 +89,7 @@ impl Default for ServeConfig {
             shared_cache: true,
             arbiter: ArbiterPolicy::FairShare,
             prefetch_global_budget: None,
+            decode_threads: 1,
         }
     }
 }
@@ -105,6 +113,10 @@ pub struct ServeOutcome {
 }
 
 /// One decode session's live state inside the manager.
+///
+/// The parallel plan phase hands each active session (and its
+/// [`TokenPrep`]) to exactly one pool job, so a `Session` is only ever
+/// touched by one thread at a time.
 struct Session {
     trace: Trace,
     pipeline: IoPipeline,
@@ -123,6 +135,10 @@ struct Session {
 pub struct SessionManager {
     cfg: ServeConfig,
     sessions: Vec<Session>,
+    /// Phase-1 plan output, one per session (indexed by sid; kept off
+    /// `Session` so the plan phase can view sessions and preps as two
+    /// independently disjoint slices).
+    preps: Vec<TokenPrep>,
     /// One entry in shared mode; one per session in private mode.
     caches: Vec<NeuronCache>,
     compute_ns_per_token: f64,
@@ -203,9 +219,11 @@ impl SessionManager {
         });
         let active = Vec::with_capacity(cfg.sessions);
         let demands = Vec::with_capacity(cfg.sessions);
+        let preps = (0..cfg.sessions).map(|_| TokenPrep::default()).collect();
         Self {
             cfg,
             sessions,
+            preps,
             caches,
             compute_ns_per_token,
             bundle_bytes,
@@ -286,12 +304,54 @@ impl SessionManager {
         }
     }
 
+    /// Phase 1 of a decode round (DESIGN.md §Parallel-decode): every
+    /// active session computes its pure session-local plan — sorted
+    /// slot lists and, in overlapped mode, speculative predictions —
+    /// into its own [`TokenPrep`], concurrently on the pool. Touches
+    /// no shared state (no cache, no flash sim, no stats), so result
+    /// bytes cannot depend on scheduling. Skipped entirely on an
+    /// inline pool: the serial commit then computes everything in
+    /// place, which is the identical historical code path.
+    fn plan_round(&mut self, pool: &mut DecodePool<'_>) {
+        if pool.threads() <= 1 {
+            return;
+        }
+        let overlapped = self.overlapped;
+        let active = &self.active;
+        let sessions = DisjointSlice::new(&mut self.sessions);
+        let preps = DisjointSlice::new(&mut self.preps);
+        pool.run(active.len(), |i| {
+            let sid = active[i];
+            // Safety: `active` holds unique session ids and the pool
+            // runs each index exactly once, so this job is the sole
+            // accessor of session `sid` and its prep.
+            unsafe {
+                let sess = &mut *sessions.get(sid);
+                let prep = &mut *preps.get(sid);
+                let tok = &sess.trace.tokens[sess.next_token];
+                sess.pipeline.prepare_token(tok, overlapped, prep);
+            }
+        });
+    }
+
     /// Advance the simulation by one scheduler iteration: admit due
     /// arrivals, then either serve one decode round (one token per
     /// active session, serially on the shared device, start slot
     /// rotated round-robin) or jump the clock to the next arrival.
     /// Returns false once every session has finished.
     pub fn step_round(&mut self, sim: &mut UfsSim) -> bool {
+        self.step_round_pooled(sim, &mut DecodePool::inline())
+    }
+
+    /// [`step_round`](Self::step_round) with a plan-phase pool: the
+    /// round's session-local planning fans out over `pool`, then the
+    /// serial commit phase below replays the round **in the same fixed
+    /// session order as ever**, consuming prepared values only where
+    /// they provably match the inline computation — so hit/miss
+    /// outcomes, flash timelines, and every metric are bit-identical
+    /// across decode-thread counts (pinned by
+    /// `rust/tests/parallel_props.rs`).
+    pub fn step_round_pooled(&mut self, sim: &mut UfsSim, pool: &mut DecodePool<'_>) -> bool {
         let n = self.cfg.sessions;
         if self.done == n {
             return false;
@@ -336,6 +396,10 @@ impl SessionManager {
         if self.overlapped {
             self.arbitrate_round();
         }
+        // phase 1: parallel session-local planning (after the arbiter,
+        // so prepared predictions see their final grants)
+        self.plan_round(pool);
+        // phase 2: serial canonical commit, fixed session order
         let round_start = self.clock_ns;
         let k = self.active.len();
         let rot = self.round % k;
@@ -347,19 +411,21 @@ impl SessionManager {
                 cache.set_session(sid as u32);
             }
             let sess = &mut self.sessions[sid];
+            let prep = &mut self.preps[sid];
             let tok = &sess.trace.tokens[sess.next_token];
             // the i-th session's token starts only after its round
             // predecessors finish on the shared device
             let served_at = self.clock_ns;
             let io = if self.overlapped {
-                sess.pipeline.step_token_overlapped(
+                sess.pipeline.step_token_overlapped_prepared(
                     cache,
                     sim,
                     tok,
                     self.compute_ns_per_layer,
+                    prep,
                 )
             } else {
-                sess.pipeline.step_token(cache, sim, tok)
+                sess.pipeline.step_token_prepared(cache, sim, tok, prep)
             };
             self.clock_ns += io.stall_ns + self.compute_ns_per_token;
             let latency = self.clock_ns - round_start;
@@ -410,8 +476,19 @@ impl SessionManager {
 
     /// Run every session to completion against the shared flash
     /// timeline; returns (aggregate run metrics, serve metrics).
-    pub fn run(mut self, sim: &mut UfsSim) -> (RunMetrics, ServeMetrics) {
-        while self.step_round(sim) {}
+    pub fn run(self, sim: &mut UfsSim) -> (RunMetrics, ServeMetrics) {
+        self.run_pooled(sim, &mut DecodePool::inline())
+    }
+
+    /// [`run`](Self::run) with a plan-phase pool (see
+    /// [`step_round_pooled`](Self::step_round_pooled)); results are
+    /// identical for every pool size.
+    pub fn run_pooled(
+        mut self,
+        sim: &mut UfsSim,
+        pool: &mut DecodePool<'_>,
+    ) -> (RunMetrics, ServeMetrics) {
+        while self.step_round_pooled(sim, pool) {}
         self.finish()
     }
 }
@@ -521,7 +598,9 @@ pub fn run_serve_traced(
         manager.set_trace(Some(t.clone()));
     }
     let t_decode = Instant::now();
-    let (metrics, mut serve) = manager.run(&mut sim);
+    let (metrics, mut serve) = with_decode_pool(cfg.decode_threads, |pool| {
+        manager.run_pooled(&mut sim, pool)
+    });
     let decode_wall_secs = t_decode.elapsed().as_secs_f64();
     let mut summary = serve.summary(w.layer_scale(), metrics.cache_hit_ratio());
     if overlapped {
@@ -690,6 +769,41 @@ mod tests {
             a.summary.prefetch_hit_bundles + a.summary.prefetch_wasted_bundles,
             b.summary.prefetch_hit_bundles + b.summary.prefetch_wasted_bundles
         );
+    }
+
+    #[test]
+    fn pooled_serve_matches_serial_bit_for_bit() {
+        let base = ServeConfig { sessions: 5, max_concurrent: 3, ..Default::default() };
+        let a = tiny_serve(base.clone());
+        let b = tiny_serve(ServeConfig { decode_threads: 4, ..base });
+        assert_eq!(
+            a.metrics.totals.elapsed_ns.to_bits(),
+            b.metrics.totals.elapsed_ns.to_bits()
+        );
+        assert_eq!(a.metrics.totals.commands, b.metrics.totals.commands);
+        assert_eq!(a.metrics.totals.bytes, b.metrics.totals.bytes);
+        assert_eq!(a.summary.p99_ms.to_bits(), b.summary.p99_ms.to_bits());
+        assert_eq!(a.summary.makespan_ms.to_bits(), b.summary.makespan_ms.to_bits());
+        assert_eq!(a.summary.fairness.to_bits(), b.summary.fairness.to_bits());
+    }
+
+    #[test]
+    fn pooled_prefetch_serve_matches_serial_bit_for_bit() {
+        let base = ServeConfig {
+            sessions: 3,
+            prefetch_global_budget: Some(64 * 1024),
+            ..Default::default()
+        };
+        let a = tiny_prefetch_serve(base.clone());
+        let b = tiny_prefetch_serve(ServeConfig { decode_threads: 8, ..base });
+        assert_eq!(
+            a.metrics.totals.elapsed_ns.to_bits(),
+            b.metrics.totals.elapsed_ns.to_bits()
+        );
+        assert_eq!(a.metrics.totals.bytes, b.metrics.totals.bytes);
+        assert_eq!(a.summary.prefetch_hit_bundles, b.summary.prefetch_hit_bundles);
+        assert_eq!(a.summary.prefetch_wasted_bundles, b.summary.prefetch_wasted_bundles);
+        assert_eq!(a.summary.p99_ms.to_bits(), b.summary.p99_ms.to_bits());
     }
 
     #[test]

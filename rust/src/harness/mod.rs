@@ -33,7 +33,9 @@ pub mod scenario;
 pub use presets::{preset, preset_names};
 pub use report::{delta_pct, Baseline, BaselineMetrics, ScenarioResult, SweepReport};
 pub use report::{fmt_delta, SCHEMA_VERSION};
-pub use runner::{default_threads, run_matrix, run_scenario};
+pub use runner::{
+    default_threads, run_matrix, run_matrix_with, run_scenario, split_thread_budget,
+};
 pub use scenario::{
     derive_seed, ArrivalSpec, FleetPoint, PrefetchPoint, ScenarioMatrix, ScenarioSpec,
     ServePoint,

@@ -260,6 +260,14 @@ fn fleet() -> ScenarioMatrix {
 /// simulated metrics in `BENCH_perf.json` stay deterministic and
 /// byte-diffable; wall-clock simulated-tokens/sec appears ONLY in the
 /// Markdown report's "Decode throughput" section.
+///
+/// The `perf-fleet-dt{1,8}` pair is the parallel-decode speedup gauge
+/// (DESIGN.md §Parallel-decode): the fleet preset's 10k-session point
+/// widened to 32 concurrent overlapped-prefetch sessions, identical in
+/// every knob except the decode-thread count. Both rows report
+/// identical JSON (results are pool-invariant); the wall-clock
+/// tokens/sec ratio between them in the Markdown section is the
+/// speedup claim.
 fn perf() -> ScenarioMatrix {
     let mut m = ScenarioMatrix::new("perf");
     m.systems = vec![System::LlamaCpp, System::LlmFlash, System::Ripple];
@@ -272,6 +280,21 @@ fn perf() -> ScenarioMatrix {
     sv.eval_tokens = 128;
     sv.serve = Some(ServePoint::shared(4));
     m.extra.push(sv);
+    for dt in [1usize, 8] {
+        let mut s =
+            ScenarioSpec::new(&format!("perf-fleet-dt{dt}"), "opt-micro", System::Ripple);
+        s.calib_tokens = 96;
+        s.eval_tokens = 2;
+        s.sim_layers = 2;
+        s.knn = 16;
+        s.prefetch = PrefetchPoint::budget_kb(256);
+        s.fleet = Some(FleetPoint {
+            max_concurrent: 32,
+            ..FleetPoint::poisson(10_000, 20_000.0).with_bound(2_048).with_slo_ms(40.0)
+        });
+        s.decode_threads = dt;
+        m.extra.push(s);
+    }
     m
 }
 
@@ -532,13 +555,30 @@ mod tests {
     #[test]
     fn perf_preset_covers_every_decode_loop() {
         let specs = preset("perf").unwrap().expand();
-        // 3 synchronous systems + prefetch + serve extras
-        assert_eq!(specs.len(), 3 + 2);
+        // 3 synchronous systems + prefetch + serve + fleet-gauge extras
+        assert_eq!(specs.len(), 3 + 4);
         assert!(specs[..3].iter().all(|s| s.eval_tokens == 512 && !s.prefetch.enabled));
         let pf = specs.iter().find(|s| s.name == "perf-prefetch").unwrap();
         assert!(pf.prefetch.enabled);
         let sv = specs.iter().find(|s| s.name == "perf-serve").unwrap();
         assert_eq!(sv.serve.unwrap().sessions, 4);
+        // the speedup gauge pair differs ONLY in decode-thread count,
+        // so its JSON rows are byte-identical and the Markdown
+        // wall-clock ratio is a controlled comparison
+        let d1 = specs.iter().find(|s| s.name == "perf-fleet-dt1").unwrap();
+        let d8 = specs.iter().find(|s| s.name == "perf-fleet-dt8").unwrap();
+        assert_eq!(d1.decode_threads, 1);
+        assert_eq!(d8.decode_threads, 8);
+        let mut twin = d8.clone();
+        twin.name = d1.name.clone();
+        twin.decode_threads = 1;
+        assert_eq!(&twin, d1);
+        assert_eq!(d1.fleet.unwrap().sessions, 10_000);
+        assert_eq!(d1.fleet.unwrap().max_concurrent, 32);
+        assert!(d1.prefetch.enabled, "gauge rows exercise the overlapped planner");
+        for s in [d1, d8] {
+            s.workload().unwrap();
+        }
         assert_eq!(specs[0].seed, 7, "perf rows run on the bench seed");
     }
 

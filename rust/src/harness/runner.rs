@@ -7,6 +7,11 @@
 //! itself deterministic (seeded traces, no wall clock in any metric),
 //! which the golden test in `rust/tests/harness_golden.rs` pins down:
 //! `--threads 1` and `--threads 8` produce byte-identical JSON.
+//!
+//! The `threads` argument is the sweep's TOTAL budget: when rows carry
+//! `decode_threads > 1` (DESIGN.md §Parallel-decode), the sweep worker
+//! count shrinks via [`split_thread_budget`] so sweep workers times the
+//! widest decode pool never exceed the budget.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -27,19 +32,76 @@ use super::scenario::{FleetPoint, ScenarioMatrix, ScenarioSpec, ServePoint};
 /// comparability; never change it.
 const FLEET_ARRIVAL_SALT: u64 = 0xF1EE_7A11;
 
-/// Default sweep worker count: one per available core (4 when the
-/// parallelism query fails). Shared by the CLI and the bench wrappers.
+/// Default thread budget: one per available core, overridable with the
+/// `RIPPLE_THREADS` env var (useful under cgroup limits, where
+/// `available_parallelism` can over-report). Falls back to 4 — with a
+/// one-time warning — when the override is malformed or the parallelism
+/// query fails. Shared by the CLI and the bench wrappers.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map_or(4, |n| n.get())
+    if let Ok(v) = std::env::var("RIPPLE_THREADS") {
+        match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => return n,
+            _ => warn_once(&format!(
+                "RIPPLE_THREADS={v:?} is not a positive integer; ignoring it"
+            )),
+        }
+    }
+    match std::thread::available_parallelism() {
+        Ok(n) => n.get(),
+        Err(e) => {
+            warn_once(&format!(
+                "available_parallelism() failed ({e}); assuming 4 threads \
+                 (set RIPPLE_THREADS to override)"
+            ));
+            4
+        }
+    }
 }
 
-/// Expand a matrix and run every scenario, using up to `threads` sweep
-/// workers. Returns results in matrix expansion order; the whole sweep
-/// drains before errors are inspected, and the first failing scenario
-/// (in expansion order) is reported with its name.
+/// Print a thread-budget diagnostic at most once per process, so sweep
+/// loops calling `default_threads` per scenario don't spam stderr.
+fn warn_once(msg: &str) {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| eprintln!("warning: {msg}"));
+}
+
+/// Split a total thread budget between the sweep level and the decode
+/// pools nested inside each scenario: the returned sweep worker count
+/// guarantees `sweep_workers * max_decode <= budget` whenever the
+/// budget allows any parallelism at all (the floor is one sweep worker,
+/// so a budget smaller than `max_decode` degrades to serial sweeping
+/// rather than refusing to run). Also clamped to the job count — extra
+/// sweep workers past that would only idle.
+pub fn split_thread_budget(budget: usize, jobs: usize, max_decode: usize) -> usize {
+    (budget.max(1) / max_decode.max(1)).max(1).min(jobs.max(1))
+}
+
+/// Expand a matrix and run every scenario, treating `threads` as the
+/// TOTAL thread budget shared by the sweep workers and each scenario's
+/// decode pool (see [`split_thread_budget`]). Returns results in matrix
+/// expansion order; the whole sweep drains before errors are inspected,
+/// and the first failing scenario (in expansion order) is reported with
+/// its name.
 pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> anyhow::Result<SweepReport> {
-    let specs = matrix.expand();
+    run_matrix_with(matrix, threads, None)
+}
+
+/// [`run_matrix`] with an optional decode-thread override, applied
+/// AFTER expansion so scenario names (and therefore the JSON bytes)
+/// never change: overriding lets CI re-run an identical matrix at
+/// decode-thread counts 1 and 8 and byte-`cmp` the reports.
+pub fn run_matrix_with(
+    matrix: &ScenarioMatrix,
+    threads: usize,
+    decode_override: Option<usize>,
+) -> anyhow::Result<SweepReport> {
+    let mut specs = matrix.expand();
     anyhow::ensure!(!specs.is_empty(), "matrix `{}` expands to no scenarios", matrix.name);
+    if let Some(dt) = decode_override {
+        for s in &mut specs {
+            s.decode_threads = dt.max(1);
+        }
+    }
     {
         let mut names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
         names.sort_unstable();
@@ -47,9 +109,13 @@ pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> anyhow::Result<Swe
             anyhow::ensure!(w[0] != w[1], "duplicate scenario name `{}`", w[0]);
         }
     }
-    let threads = threads.max(1).min(specs.len());
-    // avoid oversubscription: the per-scenario placement scan gets the
-    // cores the sweep level is not using (results are thread-invariant)
+    // avoid oversubscription: the widest per-scenario decode pool and
+    // the sweep level split the one budget (when every row keeps the
+    // default decode_threads=1 this is the historical sweep clamp), and
+    // the per-scenario placement scan gets the cores the sweep level is
+    // not using (results are thread-invariant either way)
+    let max_decode = specs.iter().map(|s| s.decode_threads.max(1)).max().unwrap_or(1);
+    let threads = split_thread_budget(threads, specs.len(), max_decode);
     let inner_threads = (default_threads() / threads).max(1);
     let slots: Vec<Mutex<Option<anyhow::Result<ExperimentResult>>>> =
         specs.iter().map(|_| Mutex::new(None)).collect();
@@ -151,6 +217,7 @@ fn run_serve_point(
         max_concurrent: sv.max_concurrent,
         arrival_spacing_ns: sv.arrival_spacing_ms * 1e6,
         shared_cache: sv.shared_cache,
+        decode_threads: spec.decode_threads.max(1),
         ..ServeConfig::default()
     };
     if let Some(policy) = sv.arbiter {
@@ -193,6 +260,7 @@ fn run_fleet_point(
         // the point's SLO is full-model ms; the simulator compares raw
         // per-layer-scaled ns, so divide the scale back out
         slo_ns: fl.slo_ms.map_or(f64::INFINITY, |ms| ms * 1e6 / w.layer_scale()),
+        decode_threads: spec.decode_threads.max(1),
         ..FleetConfig::default()
     };
     let out = run_fleet_traced(w, spec.system, sspec, &cfg, trace)
@@ -432,6 +500,54 @@ mod tests {
         // bit-identical across repeated traced runs
         let r2 = run_scenario(&s, 1).unwrap();
         assert_eq!(r.attribution, r2.attribution);
+    }
+
+    #[test]
+    fn thread_budget_is_never_oversubscribed() {
+        // sweep workers x widest decode pool stays within the budget
+        // whenever the budget admits any parallelism at all
+        for budget in 1..=32usize {
+            for jobs in 1..=6usize {
+                for max_decode in 1..=16usize {
+                    let sweep = split_thread_budget(budget, jobs, max_decode);
+                    assert!(sweep >= 1, "always at least one sweep worker");
+                    assert!(sweep <= jobs, "no idle sweep workers");
+                    assert!(
+                        sweep == 1 || sweep * max_decode <= budget,
+                        "oversubscribed: budget {budget}, jobs {jobs}, \
+                         decode {max_decode} -> sweep {sweep}"
+                    );
+                }
+            }
+        }
+        // all-dt=1 rows reproduce the historical sweep clamp
+        assert_eq!(split_thread_budget(8, 3, 1), 3);
+        assert_eq!(split_thread_budget(2, 5, 1), 2);
+        // degenerate budgets degrade to serial sweeping, never zero
+        assert_eq!(split_thread_budget(0, 4, 8), 1);
+    }
+
+    #[test]
+    fn decode_override_keeps_names_and_results_byte_identical() {
+        let mut m = ScenarioMatrix::new("ovr");
+        let mut s = tiny_spec("serve-ovr");
+        s.serve = Some(ServePoint { max_concurrent: 2, ..ServePoint::shared(3) });
+        m.extra.push(s);
+        let base = run_matrix(&m, 1).unwrap();
+        let pooled = run_matrix_with(&m, 8, Some(4)).unwrap();
+        assert_eq!(base.results.len(), pooled.results.len());
+        for (a, b) in base.results.iter().zip(&pooled.results) {
+            // the override must never rename a row (CI byte-cmp's the
+            // dt=1 and dt=8 reports), and results are pool-invariant
+            assert_eq!(a.spec.name, b.spec.name);
+            assert_eq!(b.spec.decode_threads, 4);
+            assert_eq!(
+                a.outcome.metrics.totals.elapsed_ns.to_bits(),
+                b.outcome.metrics.totals.elapsed_ns.to_bits()
+            );
+            assert_eq!(a.outcome.metrics.totals.commands, b.outcome.metrics.totals.commands);
+            assert_eq!(a.outcome.serve, b.outcome.serve);
+        }
     }
 
     #[test]

@@ -408,6 +408,11 @@ pub struct ScenarioSpec {
     /// per-phase attribution. Off by default: untraced reports stay
     /// byte-identical to pre-tracing builds.
     pub trace: bool,
+    /// Plan-phase decode threads for serve/fleet rows (DESIGN.md
+    /// §Parallel-decode). Results are decode-thread-count invariant, so
+    /// this knob is wall-clock-only: it is NOT serialized to report
+    /// JSON, and rows at 1 (the default) keep their historical names.
+    pub decode_threads: usize,
 }
 
 impl ScenarioSpec {
@@ -435,6 +440,7 @@ impl ScenarioSpec {
             serve: None,
             fleet: None,
             trace: false,
+            decode_threads: 1,
         }
     }
 
@@ -454,6 +460,9 @@ impl ScenarioSpec {
         }
         if self.prefetch.lookahead < 1 {
             anyhow::bail!("scenario `{}`: prefetch lookahead must be >= 1", self.name);
+        }
+        if self.decode_threads < 1 {
+            anyhow::bail!("scenario `{}`: decode_threads must be >= 1", self.name);
         }
         // same bound RunConfig enforces on the JSON-config path
         if self.prefetch.budget_bytes > 64 << 20 {
@@ -604,8 +613,13 @@ pub struct ScenarioMatrix {
     /// `None`, so pre-serve baselines keep matching).
     pub serve: Vec<Option<ServePoint>>,
     /// Fleet axis (`None` = no fleet run; names stay unchanged for
-    /// `None`, so pre-fleet baselines keep matching). Innermost axis.
+    /// `None`, so pre-fleet baselines keep matching).
     pub fleet: Vec<Option<FleetPoint>>,
+    /// Plan-phase decode-thread axis (innermost). Rows at 1 keep their
+    /// historical names; other counts get a `/dt<n>` suffix. Results
+    /// are decode-thread-count invariant, so sweeping this axis only
+    /// changes wall-clock gauges, never the report JSON payload.
+    pub decode_threads: Vec<usize>,
     /// Calibration tokens applied to every product scenario.
     pub calib_tokens: usize,
     /// Eval tokens applied to every product scenario.
@@ -642,6 +656,7 @@ impl ScenarioMatrix {
             prefetch: vec![PrefetchPoint::sync()],
             serve: vec![None],
             fleet: vec![None],
+            decode_threads: vec![1],
             calib_tokens: 256,
             eval_tokens: 64,
             sim_layers: 2,
@@ -683,19 +698,22 @@ impl ScenarioMatrix {
                                     for &pf in &self.prefetch {
                                         for &sv in &self.serve {
                                             for &fl in &self.fleet {
-                                                let point = self.point(
-                                                    model,
-                                                    device,
-                                                    dataset,
-                                                    system,
-                                                    policy,
-                                                    collapse,
-                                                    ratio,
-                                                    pf,
-                                                    sv,
-                                                    fl,
-                                                );
-                                                out.push(point);
+                                                for &dt in &self.decode_threads {
+                                                    let point = self.point(
+                                                        model,
+                                                        device,
+                                                        dataset,
+                                                        system,
+                                                        policy,
+                                                        collapse,
+                                                        ratio,
+                                                        pf,
+                                                        sv,
+                                                        fl,
+                                                        dt,
+                                                    );
+                                                    out.push(point);
+                                                }
                                             }
                                         }
                                     }
@@ -723,6 +741,7 @@ impl ScenarioMatrix {
         pf: PrefetchPoint,
         sv: Option<ServePoint>,
         fl: Option<FleetPoint>,
+        dt: usize,
     ) -> ScenarioSpec {
         let pol = policy.as_deref().unwrap_or("default");
         let col = match collapse {
@@ -744,6 +763,11 @@ impl ScenarioMatrix {
             name.push('/');
             name.push_str(&fl.label());
         }
+        if dt != 1 {
+            // dt=1 rows keep their historical names, so every pre-pool
+            // baseline (and the CI byte-cmp against dt>1 runs) matches
+            name.push_str(&format!("/dt{dt}"));
+        }
         let mut s = ScenarioSpec::new(&name, model, system);
         s.device = device.to_string();
         s.dataset = dataset.to_string();
@@ -758,6 +782,7 @@ impl ScenarioMatrix {
         s.sim_layers = self.sim_layers;
         s.knn = self.knn;
         s.precision = self.precision;
+        s.decode_threads = dt;
         s.seed = if self.derive_seeds {
             derive_seed(self.base_seed, &name)
         } else {
@@ -793,6 +818,31 @@ mod tests {
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), specs.len());
+    }
+
+    #[test]
+    fn decode_thread_axis_expands_with_stable_labels() {
+        let mut m = ScenarioMatrix::new("t");
+        m.serve = vec![Some(ServePoint::shared(4))];
+        m.decode_threads = vec![1, 8];
+        let specs = m.expand();
+        assert_eq!(specs.len(), 2);
+        // dt=1 keeps the historical name so old baselines keep matching
+        assert!(!specs[0].name.contains("/dt"));
+        assert_eq!(specs[0].decode_threads, 1);
+        // dt>1 rows get a suffix and are otherwise the same point
+        assert!(specs[1].name.ends_with("/dt8"));
+        assert_eq!(specs[1].decode_threads, 8);
+        assert_eq!(
+            specs[1].name.strip_suffix("/dt8").unwrap(),
+            specs[0].name.as_str()
+        );
+        // both rows pass workload validation; dt=0 is rejected
+        specs[0].workload().unwrap();
+        specs[1].workload().unwrap();
+        let mut bad = specs[0].clone();
+        bad.decode_threads = 0;
+        assert!(bad.workload().is_err());
     }
 
     #[test]

@@ -116,6 +116,10 @@ fn print_help() {
                    [--scheduler <fifo|srt>] [--admission-bound <n>]\n\
                    [--slo-ms <f>]; with --prefetch the fleet decodes on\n\
                    the overlapped timeline under fair-share arbitration\n\
+                   [--decode-threads <n>] (serving and fleet paths):\n\
+                   plan each round's session I/O on an n-thread pool\n\
+                   before the serial commit phase — results are\n\
+                   bit-identical for every n, only wall-clock changes\n\
                    [--trace-out <trace.json>] [--trace-tail <k>]\n\
                    --trace-out: attach the flight recorder (observation-\n\
                    only, timeline stays bit-identical) and export a\n\
@@ -123,10 +127,14 @@ fn print_help() {
                    track per session plus device and arbiter tracks;\n\
                    --trace-tail keeps the K slowest token chains\n\
                    (default 32); works on all three simulate paths\n\
-         bench:    --preset <name> [--threads <n>] [--baseline <BENCH_x.json>]\n\
-                   [--out <dir>] | --list\n\
+         bench:    --preset <name> [--threads <n>] [--decode-threads <n>]\n\
+                   [--baseline <BENCH_x.json>] [--out <dir>] | --list\n\
                    runs a scenario matrix, prints the Markdown report and\n\
                    writes BENCH_<name>.json + .md under --out (default report/)\n\
+                   --threads is the TOTAL budget shared between sweep\n\
+                   workers and per-row decode pools; --decode-threads\n\
+                   forces every row's pool width after expansion (names\n\
+                   and JSON stay byte-identical across widths)\n\
                    --preset perf: decode-throughput proof — long eval\n\
                    streams whose wall-clock simulated-tokens/sec lands in\n\
                    the Markdown report only (JSON stays deterministic)\n\
@@ -247,8 +255,22 @@ fn bench(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    // --decode-threads N re-runs the identical matrix with every row's
+    // plan-phase pool forced to N (applied after expansion, so row
+    // names and the JSON bytes never change — CI byte-cmp's the
+    // reports across pool widths)
+    let decode_override = match args.get("decode-threads") {
+        None => None,
+        Some(v) => {
+            let n: usize = v.parse().map_err(|_| {
+                anyhow::anyhow!("--decode-threads expects a positive integer")
+            })?;
+            anyhow::ensure!(n >= 1, "--decode-threads must be >= 1");
+            Some(n)
+        }
+    };
     let out_dir = args.get_or("out", "report");
-    let report = harness::run_matrix(&matrix, threads)?;
+    let report = harness::run_matrix_with(&matrix, threads, decode_override)?;
     let md = report.to_markdown(baseline.as_ref());
     print!("{md}");
     std::fs::create_dir_all(out_dir)
@@ -428,11 +450,14 @@ fn simulate_serve(
             "--deadline-target-ms must be positive"
         );
     }
+    let decode_threads = args.get_usize("decode-threads", 1)?;
+    anyhow::ensure!(decode_threads >= 1, "--decode-threads must be >= 1");
     let mut cfg = ServeConfig {
         sessions: args.get_usize("sessions", 4)?,
         max_concurrent: args.get_usize("max-concurrent", 4)?,
         arrival_spacing_ns: args.get_f64("session-arrival-ms", 0.0)? * 1e6,
         shared_cache: !args.flag("private-cache"),
+        decode_threads,
         ..ServeConfig::default()
     };
     if let Some(policy) = arbiter {
@@ -543,12 +568,15 @@ fn simulate_fleet(
         other => anyhow::bail!("--scheduler expects fifo|srt, got `{other}`"),
     };
     let scale = w.layer_scale();
+    let decode_threads = args.get_usize("decode-threads", 1)?;
+    anyhow::ensure!(decode_threads >= 1, "--decode-threads must be >= 1");
     let mut cfg = FleetConfig {
         sessions: args.get_usize("sessions", 16)?,
         max_concurrent: args.get_usize("max-concurrent", 4)?,
         arrival,
         arrival_seed: w.seed,
         scheduler,
+        decode_threads,
         ..FleetConfig::default()
     };
     if let Some(b) = args.get("admission-bound") {

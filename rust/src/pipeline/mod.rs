@@ -133,6 +133,94 @@ impl OutstandingPrefetch {
     }
 }
 
+/// One lookahead prediction computed ahead of the serial commit,
+/// tagged with the inputs it was computed from so consumption can
+/// prove it equals what the inline path would compute.
+#[derive(Default)]
+struct PreparedPrediction {
+    /// Layer whose activations seeded the prediction (`cur_actives`).
+    issuer: usize,
+    /// Slot budget the prediction was capped at.
+    budget: usize,
+    /// Predicted bundles for the target layer.
+    predicted: Vec<BundleId>,
+    /// True until consumed (or never computed this token).
+    valid: bool,
+}
+
+/// Phase-1 planning work for one token (DESIGN.md §Parallel-decode):
+/// everything computable from per-stream state alone — the sorted
+/// demanded slot list per layer and the predictor's lookahead
+/// predictions — without touching the shared cache or flash timeline.
+///
+/// A prep is filled by [`IoPipeline::prepare_token`] (on a plan worker)
+/// and consumed by the `*_prepared` step variants during the serial
+/// commit. Consumption is validated: an entry whose inputs cannot be
+/// proven identical to what the inline path would use is recomputed
+/// inline, so stepping with a prep NEVER changes results — it only
+/// moves work off the commit thread. Buffers keep their capacity
+/// across tokens, so steady-state preparation is allocation-free.
+#[derive(Default)]
+pub struct TokenPrep {
+    /// Sorted demanded slots per layer (`slots_for_into` output).
+    slots: Vec<Vec<Slot>>,
+    /// Per-layer validity of `slots`.
+    slots_valid: Vec<bool>,
+    /// Prepared predictions, indexed by target layer.
+    preds: Vec<PreparedPrediction>,
+}
+
+impl TokenPrep {
+    /// Retarget at `n_layers`, keeping every buffer's capacity.
+    fn reset(&mut self, n_layers: usize) {
+        if self.slots.len() < n_layers {
+            self.slots.resize_with(n_layers, Vec::new);
+            self.slots_valid.resize(n_layers, false);
+            self.preds.resize_with(n_layers, PreparedPrediction::default);
+        }
+        for v in &mut self.slots_valid {
+            *v = false;
+        }
+        for p in &mut self.preds {
+            p.valid = false;
+        }
+    }
+
+    /// Swap the prepared slot list for `layer` into `dst`, if present.
+    /// The slot list is a pure function of the layout and the token's
+    /// activations, so the substitution is always exact.
+    fn take_slots(&mut self, layer: usize, dst: &mut Vec<Slot>) -> bool {
+        match self.slots_valid.get_mut(layer) {
+            Some(v) if *v => {
+                *v = false;
+                std::mem::swap(dst, &mut self.slots[layer]);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Swap the prepared prediction for `target` into `dst` — only when
+    /// its (issuer, budget) tag proves it was computed from the same
+    /// seeds and cap the inline path would use right now.
+    fn take_prediction(
+        &mut self,
+        issuer: usize,
+        target: usize,
+        budget: usize,
+        dst: &mut Vec<BundleId>,
+    ) -> bool {
+        match self.preds.get_mut(target) {
+            Some(p) if p.valid && p.issuer == issuer && p.budget == budget => {
+                p.valid = false;
+                std::mem::swap(dst, &mut p.predicted);
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
 /// Reusable per-token buffers (§Perf): every intermediate vector of the
 /// decode hot path lives here and is cleared between uses, never
 /// dropped — after warmup a token costs zero heap allocations
@@ -360,9 +448,32 @@ impl IoPipeline {
         actives: &[BundleId],
         plan: &mut LayerPlan,
     ) {
+        self.plan_layer_from(cache, layer, actives, plan, None);
+    }
+
+    /// [`plan_layer_into`](Self::plan_layer_into) with an optional
+    /// phase-1 prep: a valid prepared slot list replaces the in-commit
+    /// `slots_for_into` (a pure function of the layout and `actives`,
+    /// so the substitution is exact). Everything that touches the
+    /// shared cache — the residency filter, the speculation peel, the
+    /// admission downstream — stays in this serial call.
+    fn plan_layer_from(
+        &mut self,
+        cache: &mut NeuronCache,
+        layer: usize,
+        actives: &[BundleId],
+        plan: &mut LayerPlan,
+        prep: Option<&mut TokenPrep>,
+    ) {
         let threshold = self.threshold();
         plan.reset(layer);
-        self.layouts[layer].slots_for_into(actives, &mut self.scratch.slots);
+        let prepared = match prep {
+            Some(p) => p.take_slots(layer, &mut self.scratch.slots),
+            None => false,
+        };
+        if !prepared {
+            self.layouts[layer].slots_for_into(actives, &mut self.scratch.slots);
+        }
         cache.filter_into(
             layer,
             &self.scratch.slots,
@@ -422,6 +533,24 @@ impl IoPipeline {
         next_layer: usize,
         cur_actives: &[BundleId],
     ) {
+        self.prefetch_layer_from(cache, sim, next_layer, cur_actives, None);
+    }
+
+    /// [`prefetch_layer`](Self::prefetch_layer) with an optional
+    /// phase-1 prep: a prepared prediction whose (issuer, budget) tag
+    /// matches replaces the in-commit `predict_into` call (the
+    /// predictor is pure and its seeds are provably unchanged since
+    /// preparation — see [`prepare_token`](Self::prepare_token)); a
+    /// mismatch recomputes inline. The residency filter and the flash
+    /// submit stay in this serial call.
+    fn prefetch_layer_from(
+        &mut self,
+        cache: &NeuronCache,
+        sim: &mut UfsSim,
+        next_layer: usize,
+        cur_actives: &[BundleId],
+        mut prep: Option<&mut TokenPrep>,
+    ) {
         let Some(pf) = self.prefetcher.as_ref() else {
             return;
         };
@@ -436,19 +565,31 @@ impl IoPipeline {
         }
         let lookahead = pf.config().lookahead.max(1);
         let threshold = self.threshold();
+        let issuer = next_layer.saturating_sub(1);
         let last = next_layer.saturating_add(lookahead).min(self.space.n_layers);
         for target in next_layer..last {
             if self.outstanding[target].is_some() {
                 continue;
             }
-            let seeds: [&[BundleId]; 2] = [cur_actives, &self.last_actives[target]];
-            pf.predict_into(
-                target,
-                &seeds,
-                budget_slots,
-                &mut self.scratch.predict,
-                &mut self.scratch.predicted,
-            );
+            let prepared = match prep.as_deref_mut() {
+                Some(p) => p.take_prediction(
+                    issuer,
+                    target,
+                    budget_slots,
+                    &mut self.scratch.predicted,
+                ),
+                None => false,
+            };
+            if !prepared {
+                let seeds: [&[BundleId]; 2] = [cur_actives, &self.last_actives[target]];
+                pf.predict_into(
+                    target,
+                    &seeds,
+                    budget_slots,
+                    &mut self.scratch.predict,
+                    &mut self.scratch.predicted,
+                );
+            }
             if self.scratch.predicted.is_empty() {
                 continue;
             }
@@ -641,6 +782,74 @@ impl IoPipeline {
         }
     }
 
+    /// Phase-1 planning for one token (DESIGN.md §Parallel-decode):
+    /// compute everything the serial commit can be relieved of without
+    /// touching shared state — the sorted demanded slot list per layer
+    /// and, in overlapped mode, the predictor's lookahead predictions.
+    /// Reads only this pipeline's own state (layouts, predictor,
+    /// previous-token seeds, the already-installed prefetch grant), so
+    /// disjoint sessions can prepare concurrently while the shared
+    /// cache and flash timeline stay untouched.
+    pub fn prepare_token(
+        &mut self,
+        actives: &[Vec<BundleId>],
+        overlapped: bool,
+        prep: &mut TokenPrep,
+    ) {
+        assert_eq!(actives.len(), self.space.n_layers);
+        prep.reset(self.space.n_layers);
+        for (layer, act) in actives.iter().enumerate() {
+            self.layouts[layer].slots_for_into(act, &mut prep.slots[layer]);
+            prep.slots_valid[layer] = true;
+        }
+        if !overlapped {
+            return;
+        }
+        let Some(pf) = self.prefetcher.as_ref() else {
+            return;
+        };
+        // mirror `prefetch_layer`'s budget gate exactly — the grant is
+        // installed before the round serves (arbitrate_round), so it
+        // cannot change between preparation and commit
+        let mut budget_slots = pf.config().budget_slots(self.cfg.bundle_bytes);
+        if let Some(grant) = self.prefetch_grant {
+            let grant_slots =
+                if self.cfg.bundle_bytes == 0 { 0 } else { grant / self.cfg.bundle_bytes };
+            budget_slots = budget_slots.min(grant_slots);
+        }
+        if budget_slots == 0 {
+            return;
+        }
+        let lookahead = pf.config().lookahead.max(1);
+        // The deviation-free lookahead schedule: target T is first
+        // issued while layer max(T - lookahead, 0) computes (each
+        // issuing layer L covers targets L+1..=L+lookahead, earliest
+        // issuer wins). Its seeds are the issuer's activations of THIS
+        // token and the target's previous-token activations — the
+        // latter is refilled only when the commit plans the target
+        // layer itself, which is strictly after the issue point, so
+        // both seeds are exactly what the inline call would read. When
+        // the commit deviates (a target whose prediction came up empty
+        // or fully resident is retried by a later layer with different
+        // seeds), tag validation fails and the commit recomputes
+        // inline.
+        for target in 1..self.space.n_layers {
+            let issuer = target.saturating_sub(lookahead);
+            let p = &mut prep.preds[target];
+            let seeds: [&[BundleId]; 2] = [&actives[issuer], &self.last_actives[target]];
+            pf.predict_into(
+                target,
+                &seeds,
+                budget_slots,
+                &mut self.scratch.predict,
+                &mut p.predicted,
+            );
+            p.issuer = issuer;
+            p.budget = budget_slots;
+            p.valid = true;
+        }
+    }
+
     /// Trace-driven step: process all layers of one token against `sim`,
     /// fully synchronously (the historical model; bit-stable with seeds).
     /// Steady-state cost is zero heap allocations: the per-layer plan is
@@ -651,11 +860,35 @@ impl IoPipeline {
         sim: &mut UfsSim,
         actives: &[Vec<BundleId>],
     ) -> TokenIo {
+        self.step_token_from(cache, sim, actives, None)
+    }
+
+    /// [`step_token`](Self::step_token) consuming a phase-1
+    /// [`TokenPrep`] filled by [`prepare_token`](Self::prepare_token).
+    /// Bit-identical results: prepared values are used only when
+    /// provably equal to what the inline path computes.
+    pub fn step_token_prepared(
+        &mut self,
+        cache: &mut NeuronCache,
+        sim: &mut UfsSim,
+        actives: &[Vec<BundleId>],
+        prep: &mut TokenPrep,
+    ) -> TokenIo {
+        self.step_token_from(cache, sim, actives, Some(prep))
+    }
+
+    fn step_token_from(
+        &mut self,
+        cache: &mut NeuronCache,
+        sim: &mut UfsSim,
+        actives: &[Vec<BundleId>],
+        mut prep: Option<&mut TokenPrep>,
+    ) -> TokenIo {
         assert_eq!(actives.len(), self.space.n_layers);
         let mut tok = TokenIo::default();
         let mut plan = std::mem::take(&mut self.scratch.plan);
         for (layer, act) in actives.iter().enumerate() {
-            self.plan_layer_into(cache, layer, act, &mut plan);
+            self.plan_layer_from(cache, layer, act, &mut plan, prep.as_deref_mut());
             if self.trace.is_some() {
                 self.trace_mark(
                     MarkKind::Plan,
@@ -688,11 +921,40 @@ impl IoPipeline {
         actives: &[Vec<BundleId>],
         compute_ns_per_layer: f64,
     ) -> TokenIo {
+        self.step_token_overlapped_from(cache, sim, actives, compute_ns_per_layer, None)
+    }
+
+    /// [`step_token_overlapped`](Self::step_token_overlapped) consuming
+    /// a phase-1 [`TokenPrep`] filled by
+    /// [`prepare_token`](Self::prepare_token). Bit-identical results:
+    /// each prepared value carries a tag (layer, or issuer + budget)
+    /// and is consumed only when the commit path would have computed
+    /// the exact same inputs; on any mismatch the commit recomputes
+    /// inline.
+    pub fn step_token_overlapped_prepared(
+        &mut self,
+        cache: &mut NeuronCache,
+        sim: &mut UfsSim,
+        actives: &[Vec<BundleId>],
+        compute_ns_per_layer: f64,
+        prep: &mut TokenPrep,
+    ) -> TokenIo {
+        self.step_token_overlapped_from(cache, sim, actives, compute_ns_per_layer, Some(prep))
+    }
+
+    fn step_token_overlapped_from(
+        &mut self,
+        cache: &mut NeuronCache,
+        sim: &mut UfsSim,
+        actives: &[Vec<BundleId>],
+        compute_ns_per_layer: f64,
+        mut prep: Option<&mut TokenPrep>,
+    ) -> TokenIo {
         assert_eq!(actives.len(), self.space.n_layers);
         let mut tok = TokenIo::default();
         let mut plan = std::mem::take(&mut self.scratch.plan);
         for (layer, act) in actives.iter().enumerate() {
-            self.plan_layer_into(cache, layer, act, &mut plan);
+            self.plan_layer_from(cache, layer, act, &mut plan, prep.as_deref_mut());
             if self.trace.is_some() {
                 self.trace_mark(
                     MarkKind::Plan,
@@ -703,7 +965,7 @@ impl IoPipeline {
             }
             let ticket = self.submit_layer(&plan, sim);
             if layer + 1 < self.space.n_layers {
-                self.prefetch_layer(cache, sim, layer + 1, act);
+                self.prefetch_layer_from(cache, sim, layer + 1, act, prep.as_deref_mut());
             }
             tok.add(&self.complete_layer(cache, &plan, ticket, sim));
             if self.trace.is_some() {

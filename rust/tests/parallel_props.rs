@@ -1,0 +1,186 @@
+//! Parallel plan/commit determinism properties (DESIGN.md
+//! §Parallel-decode).
+//!
+//! The decode pool must be invisible in every reported number: a round
+//! plans session I/O in parallel but commits cache admissions, flash
+//! submits, prefetch grants and stats in fixed session order, so hit
+//! and miss outcomes, `UfsSim` timelines, and the report JSON are
+//! byte-identical at every decode-thread count. These tests pin that
+//! contract at widths {1, 2, 8} over randomized serve and fleet
+//! configurations (a seeded xorshift generator — the property is a
+//! sweep, not one golden point), and pin the report-level corollary CI
+//! relies on: `run_matrix_with` at different pool widths emits
+//! byte-identical JSON.
+
+use ripple::bench::workloads::{ExperimentResult, System};
+use ripple::coordinator::{ArbiterPolicy, FleetScheduler};
+use ripple::harness::{
+    run_matrix_with, run_scenario, ArrivalSpec, FleetPoint, PrefetchPoint,
+    ScenarioMatrix, ScenarioSpec, ServePoint,
+};
+
+/// Deterministic xorshift64 — the configs are random-looking but fixed,
+/// so a failure is reproducible from the test source alone.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    /// Uniform-ish pick in `lo..=hi`.
+    fn pick(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+
+    fn chance(&mut self) -> bool {
+        self.next() & 1 == 0
+    }
+}
+
+/// A CI-sized spec on the tiny AOT model.
+fn small_spec(name: &str) -> ScenarioSpec {
+    let mut s = ScenarioSpec::new(name, "opt-micro", System::Ripple);
+    s.calib_tokens = 64;
+    s.eval_tokens = 8;
+    s.sim_layers = 2;
+    s.knn = 8;
+    s
+}
+
+/// Assert two results agree bit-for-bit on everything the report
+/// serializes: aggregate totals, the serve summary, and (when present)
+/// the fleet summary.
+fn assert_bit_identical(a: &ExperimentResult, b: &ExperimentResult, what: &str) {
+    assert_eq!(
+        a.metrics.totals.elapsed_ns.to_bits(),
+        b.metrics.totals.elapsed_ns.to_bits(),
+        "{what}: elapsed_ns diverged"
+    );
+    assert_eq!(a.metrics.totals.commands, b.metrics.totals.commands, "{what}: commands");
+    assert_eq!(a.metrics.totals.bytes, b.metrics.totals.bytes, "{what}: bytes");
+    assert_eq!(
+        a.metrics.totals.cached_bundles, b.metrics.totals.cached_bundles,
+        "{what}: cache hits"
+    );
+    assert_eq!(
+        a.metrics.totals.prefetch_hit_bundles, b.metrics.totals.prefetch_hit_bundles,
+        "{what}: prefetch hits"
+    );
+    assert_eq!(
+        a.metrics.totals.prefetch_wasted_bundles,
+        b.metrics.totals.prefetch_wasted_bundles,
+        "{what}: prefetch waste"
+    );
+    assert_eq!(a.serve, b.serve, "{what}: serve summary diverged");
+    assert_eq!(a.fleet, b.fleet, "{what}: fleet summary diverged");
+}
+
+/// Run `spec` at decode-thread counts {1, 2, 8} and require bit
+/// identity against the serial baseline.
+fn assert_pool_invariant(mut spec: ScenarioSpec) {
+    spec.decode_threads = 1;
+    let base = run_scenario(&spec, 1).unwrap();
+    for dt in [2usize, 8] {
+        spec.decode_threads = dt;
+        let pooled = run_scenario(&spec, 1).unwrap();
+        assert_bit_identical(&base, &pooled, &format!("{} at dt={dt}", spec.name));
+    }
+}
+
+#[test]
+fn serve_rounds_are_decode_thread_invariant_on_randomized_configs() {
+    let mut rng = Rng(0x5EED_CAFE);
+    for i in 0..6 {
+        let sessions = rng.pick(2, 6);
+        let base = if rng.chance() {
+            ServePoint::shared(sessions)
+        } else {
+            ServePoint::private(sessions)
+        };
+        let mut point = ServePoint {
+            max_concurrent: rng.pick(1, sessions),
+            arrival_spacing_ms: if rng.chance() { 0.0 } else { 10.0 },
+            ..base
+        };
+        let mut spec = small_spec(&format!("serve-rand-{i}"));
+        // prefetch exercises the prepared-prediction path; the arbiter
+        // and a global budget vary the per-round grants the plan phase
+        // must agree with
+        if rng.chance() {
+            spec.prefetch = PrefetchPoint::budget_kb(64);
+            if rng.chance() {
+                point = point.with_arbiter(ArbiterPolicy::FairShare);
+            }
+            if rng.chance() {
+                point = point.with_global_budget(32 * 1024);
+            }
+        }
+        spec.serve = Some(point);
+        assert_pool_invariant(spec);
+    }
+}
+
+#[test]
+fn fleet_steps_are_decode_thread_invariant_on_randomized_configs() {
+    let mut rng = Rng(0xF1EE_7000_0000_0001);
+    for i in 0..6 {
+        let sessions = rng.pick(4, 10);
+        let arrival = match rng.pick(0, 2) {
+            0 => ArrivalSpec::Fixed { spacing_ms: 0.0 },
+            1 => ArrivalSpec::Poisson { per_s: 1000.0 },
+            _ => ArrivalSpec::Bursty { per_s: 1000.0, burst: 3 },
+        };
+        let mut point = FleetPoint {
+            max_concurrent: rng.pick(2, 4),
+            arrival,
+            ..FleetPoint::fixed(sessions, 0.0)
+        };
+        if rng.chance() {
+            point = point.with_scheduler(FleetScheduler::ShortestRemaining);
+        }
+        if rng.chance() {
+            point = point.with_bound(sessions.div_ceil(2));
+        }
+        if rng.chance() {
+            point = point.with_slo_ms(40.0);
+        }
+        let mut spec = small_spec(&format!("fleet-rand-{i}"));
+        if rng.chance() {
+            spec.prefetch = PrefetchPoint::budget_kb(64);
+        }
+        spec.fleet = Some(point);
+        assert_pool_invariant(spec);
+    }
+}
+
+#[test]
+fn report_json_is_byte_identical_across_pool_widths() {
+    // the exact property the CI parallel-determinism job byte-cmp's:
+    // one matrix, re-run with every row's pool forced to 1 / 2 / 8,
+    // must serialize to the same JSON bytes (wall-clock gauges live in
+    // the Markdown only)
+    let mut m = ScenarioMatrix::new("pool-cmp");
+    m.models.clear(); // every row is a hand-written tiny extra
+    let mut single = small_spec("single");
+    single.prefetch = PrefetchPoint::budget_kb(64);
+    m.extra.push(single);
+    let mut sv = small_spec("serve");
+    sv.prefetch = PrefetchPoint::budget_kb(64);
+    sv.serve =
+        Some(ServePoint::shared(4).with_arbiter(ArbiterPolicy::FairShare));
+    m.extra.push(sv);
+    let mut fl = small_spec("fleet");
+    fl.fleet = Some(FleetPoint::poisson(6, 1000.0).with_slo_ms(40.0));
+    m.extra.push(fl);
+    let base = run_matrix_with(&m, 1, Some(1)).unwrap().json_string();
+    for dt in [2usize, 8] {
+        let pooled = run_matrix_with(&m, 2, Some(dt)).unwrap().json_string();
+        assert_eq!(base, pooled, "report JSON diverged at decode_threads={dt}");
+    }
+}

@@ -12,6 +12,8 @@
 //! with the flight recorder attached: the span/mark rings, histograms
 //! and tail sampler are all pre-sized at construction (DESIGN.md
 //! §Observability), so tracing is free of steady-state allocations too.
+//! The parallel plan/commit rounds (DESIGN.md §Parallel-decode) are
+//! gated last: a pooled round on live worker threads must match.
 //!
 //! This file is its own test binary on purpose: a `#[global_allocator]`
 //! is process-wide, and the counter must not race other test threads.
@@ -411,4 +413,55 @@ fn decode_step_is_allocation_free_after_warmup() {
     );
     assert!(!fleet.is_done(), "the gated fleet step must be mid-run, not the finale");
     assert!(trace.with(|r| r.spans_len()) > 0, "traced fleet recorded no spans");
+
+    // --- steady-state PARALLEL serve round (DESIGN.md §Parallel-decode) ---
+    // The plan phase writes into per-session `TokenPrep` buffers that
+    // warm up like every other scratch arena, the pool's workers park on
+    // a futex-backed condvar between rounds, and publishing a round is a
+    // lock + two atomic stores — so a pooled round must be as
+    // allocation-free as the serial one it bit-matches.
+    use ripple::coordinator::with_decode_pool;
+
+    let mut w = fig10_workload();
+    w.prefetch.enabled = true;
+    w.prefetch.budget_bytes = 32 * w.model.bundle_bytes(w.precision);
+    let (mut manager, mut serve_sim) = build_serve(&w, 3);
+    with_decode_pool(2, |pool| {
+        for _ in 0..20 {
+            assert!(
+                manager.step_round_pooled(&mut serve_sim, pool),
+                "pooled warmup ended early"
+            );
+        }
+        let steady = count_allocs(|| {
+            manager.step_round_pooled(&mut serve_sim, pool);
+        });
+        assert_eq!(
+            steady, 0,
+            "steady-state pooled serve round allocated {steady} times after warmup"
+        );
+    });
+    assert!(!manager.is_done(), "the gated pooled round must be mid-run, not the finale");
+
+    // event-driven fleet on the same two-phase pool
+    let mut w = fig10_workload();
+    w.prefetch.enabled = true;
+    w.prefetch.budget_bytes = 32 * w.model.bundle_bytes(w.precision);
+    let (mut fleet, mut fleet_sim) = build_fleet(&w, 4);
+    with_decode_pool(2, |pool| {
+        for _ in 0..20 {
+            assert!(
+                fleet.step_pooled(&mut fleet_sim, pool),
+                "pooled fleet warmup ended early"
+            );
+        }
+        let steady = count_allocs(|| {
+            fleet.step_pooled(&mut fleet_sim, pool);
+        });
+        assert_eq!(
+            steady, 0,
+            "steady-state pooled fleet step allocated {steady} times after warmup"
+        );
+    });
+    assert!(!fleet.is_done(), "the gated pooled fleet step must be mid-run, not the finale");
 }
